@@ -1,0 +1,145 @@
+"""AOT build: lower every L2 variant to HLO text + write the manifest.
+
+Interchange format is HLO *text*, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+  <name>.hlo.txt     one per variant in model.variants()
+  manifest.json      name -> {file, inputs: [{shape, dtype}], outputs: [...]}
+  golden/*.npz       (with --golden) full-tensor spMTTKRP + CPD references
+                     consumed by the Rust integration tests.
+
+Usage:  cd python && python -m compile.aot [--out-dir DIR] [--golden]
+"""
+
+import argparse
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_json(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def build_artifacts(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"block_p": model.P, "ranks": list(model.RANKS), "entries": {}}
+    for name, fn, args in model.variants():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        outs = [
+            spec_json(jax.ShapeDtypeStruct(o.shape, o.dtype))
+            for o in jax.eval_shape(fn, *args)
+        ]
+        manifest["entries"][name] = {
+            "file": fname,
+            "inputs": [spec_json(a) for a in args],
+            "outputs": outs,
+        }
+        print(f"  {name}: {len(text)} chars, {len(args)} inputs")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(manifest['entries'])} artifacts to {out_dir}")
+    return manifest
+
+
+# ------------------------------------------------------------- golden dumps
+
+def _random_coo(rng, dims, nnz):
+    """Random COO with duplicate coordinates collapsed (set semantics)."""
+    idx = np.stack([rng.integers(0, d, size=nnz) for d in dims], axis=1)
+    # collapse duplicates so rust and numpy agree on accumulation order
+    _, uniq = np.unique(idx, axis=0, return_index=True)
+    idx = idx[np.sort(uniq)]
+    vals = rng.standard_normal(len(idx)).astype(np.float32)
+    return idx.astype(np.uint32), vals
+
+
+def dump_golden(out_dir: str):
+    """Full-tensor references the Rust integration tests load and compare."""
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    rng = np.random.default_rng(7)
+    cases = [
+        ("n3_r16", [50, 37, 29], 16, 900),
+        ("n3_r32", [120, 8, 64], 32, 2000),
+        ("n4_r16", [30, 21, 17, 13], 16, 1200),
+        ("n5_r16", [19, 11, 9, 7, 23], 16, 800),
+    ]
+    for tag, dims, r, nnz in cases:
+        idx, vals = _random_coo(rng, dims, nnz)
+        factors = [
+            rng.standard_normal((d, r)).astype(np.float32) for d in dims
+        ]
+        payload = {"indices": idx, "vals": vals, "dims": np.array(dims)}
+        for w, f in enumerate(factors):
+            payload[f"factor_{w}"] = f
+        for mode in range(len(dims)):
+            m = ref.spmttkrp_coo_ref(idx, vals, factors, mode)
+            payload[f"mttkrp_mode{mode}"] = m.astype(np.float32)
+        weights = np.ones(r, dtype=np.float64)
+        norm_x_sq = float(np.sum(vals.astype(np.float64) ** 2))
+        payload["fit"] = np.array(
+            ref.cpd_fit_ref(idx, vals, factors, weights, norm_x_sq),
+            dtype=np.float64,
+        )
+        np.savez(os.path.join(gdir, f"{tag}.npz"), **payload)
+        # Flat binary sidecars: the Rust tests read these without an npz dep.
+        _dump_flat(os.path.join(gdir, tag), payload, len(dims))
+    print(f"wrote {len(cases)} golden cases to {gdir}")
+
+
+def _dump_flat(prefix, payload, n_modes):
+    """<prefix>.meta.json + raw little-endian binaries for Rust."""
+    meta = {
+        "dims": payload["dims"].tolist(),
+        "nnz": int(len(payload["vals"])),
+        "rank": int(payload["factor_0"].shape[1]),
+        "fit": float(payload["fit"]),
+    }
+    with open(prefix + ".meta.json", "w") as f:
+        json.dump(meta, f)
+    payload["indices"].astype("<u4").tofile(prefix + ".indices.bin")
+    payload["vals"].astype("<f4").tofile(prefix + ".vals.bin")
+    for w in range(n_modes):
+        payload[f"factor_{w}"].astype("<f4").tofile(prefix + f".factor{w}.bin")
+        payload[f"mttkrp_mode{w}"].astype("<f4").tofile(
+            prefix + f".mttkrp{w}.bin"
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--golden", action="store_true", help="also dump golden refs")
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)  # legacy
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    build_artifacts(out_dir)
+    dump_golden(out_dir)
+
+
+if __name__ == "__main__":
+    main()

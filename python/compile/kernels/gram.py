@@ -1,0 +1,65 @@
+"""L1 Pallas kernels for the dense ALS side computations.
+
+CPD-ALS needs, besides spMTTKRP, the Gram matrices G_w = Y_w^T Y_w of every
+factor matrix and their Hadamard product V = had_{w != d} G_w. Factor
+matrices have data-dependent row counts, so the Rust coordinator streams
+them through these fixed-shape block kernels:
+
+* ``gram_block``      -- (P, R)^T (P, R) partial Gram, MXU-shaped matmul;
+                         the coordinator sums partials over row blocks.
+* ``hadamard_grams``  -- elementwise product of a stack of Gram matrices
+                         plus Tikhonov damping, producing the ALS
+                         normal-equation matrix V + lambda*I.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(y_ref, out_ref):
+    y = y_ref[...]
+    # MXU-shaped contraction: (R, P) @ (P, R). f32 on the interpret path;
+    # on a real TPU this is the bf16 systolic-array case.
+    out_ref[...] = jnp.dot(y.T, y, preferred_element_type=jnp.float32)
+
+
+def gram_block(y_blk):
+    """Partial Gram matrix of one (P, R) row block: y_blk^T @ y_blk."""
+    p, r = y_blk.shape
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(),
+        in_specs=[pl.BlockSpec((p, r), lambda: (0, 0))],
+        out_specs=pl.BlockSpec((r, r), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, r), jnp.float32),
+        interpret=True,
+    )(y_blk)
+
+
+def _hadamard_kernel(grams_ref, damp_ref, out_ref):
+    g = grams_ref[...]  # (n, R, R)
+    v = jnp.prod(g, axis=0)
+    r = v.shape[0]
+    out_ref[...] = v + damp_ref[0] * jnp.eye(r, dtype=v.dtype)
+
+
+def hadamard_grams(grams, damp):
+    """V = had_w grams[w] + damp * I.
+
+    Args:
+      grams: f32[n, R, R] stacked Gram matrices of the input modes.
+      damp:  f32[1] Tikhonov damping (0 for the paper's plain ALS).
+    """
+    n, r, _ = grams.shape
+    return pl.pallas_call(
+        _hadamard_kernel,
+        grid=(),
+        in_specs=[
+            pl.BlockSpec((n, r, r), lambda: (0, 0, 0)),
+            pl.BlockSpec((1,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec((r, r), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, r), jnp.float32),
+        interpret=True,
+    )(grams, damp)

@@ -1,0 +1,128 @@
+"""L1 Pallas kernels for the paper's elementwise spMTTKRP computation.
+
+The paper (Alg. 2) maps an R x P thread block onto P nonzero tensor
+elements: each column owns one nonzero, each row owns one rank column, and
+the block computes
+
+    l(t, r) = val_t * prod_{w in input modes} Y_w(c_w^t, r)
+
+before accumulating l into the output factor matrix row Y_d(c_d^t, :).
+
+TPU adaptation (DESIGN.md section Hardware-Adaptation): the Rust coordinator
+performs the index gathers (it owns factor-matrix memory, playing the role
+of "SM loads rows from global memory"), so the kernel receives *dense*
+gathered row blocks ``rows_w[P, R]`` and the nonzero values ``vals[P]``.
+The grid walks ``P / TILE_P`` tiles; BlockSpec expresses the HBM->VMEM
+schedule the paper expressed with thread-block scheduling. R is the lane
+dimension (VPU lanes), P the sublane dimension.
+
+Two kernels:
+
+* ``mttkrp_block``   -- the plain elementwise product block.
+* ``mttkrp_block_seg`` -- same, followed by an in-kernel *segmented scan*
+  along P. When the coordinator sorts a partition's nonzeros by output
+  index (which the mode-specific format guarantees), every output row's
+  partial sum is fully reduced inside the kernel: only one row per output
+  index ever leaves "VMEM". This is the paper's "intermediate values are
+  never communicated to global memory" property, expressed as a segmented
+  reduction instead of L1-cache-resident accumulators.
+
+All kernels are lowered with ``interpret=True``: real-TPU lowering emits a
+Mosaic custom call that the CPU PJRT plugin cannot execute.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile size along the nonzero (P) dimension. 64 rows x 32 lanes x 4 B =
+# 8 KiB per operand tile -- small enough that vals + n_in row tiles + out
+# stay far under a 16 MiB VMEM budget for every supported variant.
+TILE_P = 64
+
+
+def _elementwise_kernel(vals_ref, *refs):
+    """out[t, r] = vals[t] * prod_w rows_w[t, r] for one (TILE_P, R) tile."""
+    *rows_refs, out_ref = refs
+    acc = vals_ref[...][:, None]  # (TILE_P, 1) broadcast over lanes
+    for r in rows_refs:
+        acc = acc * r[...]
+    out_ref[...] = acc
+
+
+def mttkrp_block(vals, *rows):
+    """Elementwise block computation l = vals * hadamard(rows...).
+
+    Args:
+      vals: f32[P] nonzero values of the tile of tensor elements.
+      rows: n_in arrays f32[P, R]; ``rows[w][t]`` is the gathered row of the
+        w-th input factor matrix for nonzero t.
+
+    Returns:
+      f32[P, R] partial contributions, one row per nonzero.
+    """
+    assert rows, "need at least one input-mode row block"
+    p, r = rows[0].shape
+    assert p % TILE_P == 0, f"P={p} must be a multiple of TILE_P={TILE_P}"
+    grid = (p // TILE_P,)
+    row_spec = pl.BlockSpec((TILE_P, r), lambda i: (i, 0))
+    return pl.pallas_call(
+        _elementwise_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_P,), lambda i: (i,))]
+        + [row_spec] * len(rows),
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((p, r), jnp.float32),
+        interpret=True,
+    )(vals, *rows)
+
+
+def _seg_combine(a, b):
+    """Associative operator for the segmented inclusive scan.
+
+    Elements are (value, segment-start flag). A set flag on the right
+    operand cuts the running sum.
+    """
+    va, fa = a
+    vb, fb = b
+    return vb + (1.0 - fb) * va, jnp.maximum(fa, fb)
+
+
+def _segscan_kernel(vals_ref, flags_ref, *refs):
+    *rows_refs, out_ref = refs
+    acc = vals_ref[...][:, None]
+    for r in rows_refs:
+        acc = acc * r[...]
+    flags = flags_ref[...][:, None] * jnp.ones_like(acc)
+    summed, _ = jax.lax.associative_scan(_seg_combine, (acc, flags), axis=0)
+    out_ref[...] = summed
+
+
+def mttkrp_block_seg(vals, seg_starts, *rows):
+    """Elementwise block computation + in-kernel segmented inclusive scan.
+
+    ``seg_starts`` is f32[P] with 1.0 at each position where a new output
+    index begins (position 0 must be a start). The returned array holds, at
+    each segment's *last* position, the fully-reduced contribution for that
+    output row; the coordinator reads exactly those rows and writes each
+    output row once -- no partial sums ever leave the kernel.
+
+    The scan runs over the whole P block (single grid step): segments may
+    span tile boundaries, so a tiled scan would need a cross-tile carry.
+    P*R*(n_in+2)*4 bytes tops out at ~1.5 MiB for the largest variant,
+    comfortably inside VMEM.
+    """
+    assert rows
+    p, r = rows[0].shape
+    spec = pl.BlockSpec((p, r), lambda: (0, 0))
+    vspec = pl.BlockSpec((p,), lambda: (0,))
+    return pl.pallas_call(
+        _segscan_kernel,
+        grid=(),
+        in_specs=[vspec, vspec] + [spec] * len(rows),
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((p, r), jnp.float32),
+        interpret=True,
+    )(vals, seg_starts, *rows)

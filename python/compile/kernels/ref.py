@@ -1,0 +1,103 @@
+"""Pure-jnp / numpy oracles for every kernel and for full spMTTKRP.
+
+These are the correctness ground truth: pytest checks every Pallas kernel
+and every lowered L2 function against them, and ``aot.py --golden`` dumps
+full-tensor references that the Rust integration tests load.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- kernels
+
+def mttkrp_block_ref(vals, *rows):
+    """l[t, r] = vals[t] * prod_w rows[w][t, r]."""
+    acc = vals[:, None] * jnp.ones_like(rows[0])
+    for r in rows:
+        acc = acc * r
+    return acc
+
+
+def segscan_ref(l, seg_starts):
+    """Segmented inclusive scan along axis 0 (numpy, sequential)."""
+    l = np.asarray(l, dtype=np.float64)
+    out = np.zeros_like(l)
+    run = np.zeros(l.shape[1], dtype=np.float64)
+    for t in range(l.shape[0]):
+        if seg_starts[t] > 0.5:
+            run = np.zeros(l.shape[1], dtype=np.float64)
+        run = run + l[t]
+        out[t] = run
+    return out.astype(np.float32)
+
+
+def mttkrp_block_seg_ref(vals, seg_starts, *rows):
+    return segscan_ref(np.asarray(mttkrp_block_ref(vals, *rows)), seg_starts)
+
+
+def gram_block_ref(y_blk):
+    return y_blk.T @ y_blk
+
+
+def hadamard_grams_ref(grams, damp):
+    v = jnp.prod(grams, axis=0)
+    return v + damp[0] * jnp.eye(v.shape[0], dtype=v.dtype)
+
+
+def solve_block_ref(v, m_blk):
+    return m_blk @ jnp.linalg.inv(v)
+
+
+def inner_block_ref(a_blk, b_blk):
+    return jnp.sum(a_blk * b_blk)[None]
+
+
+def weighted_gram_ref(grams, weights):
+    v = jnp.prod(grams, axis=0)
+    return jnp.sum(v * jnp.outer(weights, weights))[None]
+
+
+# ------------------------------------------------------ full-tensor oracle
+
+def spmttkrp_coo_ref(indices, vals, factors, mode):
+    """Full sparse MTTKRP oracle in float64 numpy.
+
+    Args:
+      indices: int array [nnz, N] COO coordinates.
+      vals:    float array [nnz].
+      factors: list of N dense arrays, factors[w] has shape (I_w, R).
+      mode:    output mode d.
+
+    Returns:
+      float64 array (I_mode, R). Computed elementwise (the paper's Fig. 1),
+      so the Khatri-Rao column-ordering convention never arises.
+    """
+    indices = np.asarray(indices)
+    vals = np.asarray(vals, dtype=np.float64)
+    n = indices.shape[1]
+    r = factors[0].shape[1]
+    out = np.zeros((factors[mode].shape[0], r), dtype=np.float64)
+    contrib = vals[:, None] * np.ones((1, r))
+    for w in range(n):
+        if w == mode:
+            continue
+        contrib = contrib * np.asarray(factors[w], dtype=np.float64)[indices[:, w]]
+    np.add.at(out, indices[:, mode], contrib)
+    return out
+
+
+def cpd_fit_ref(indices, vals, factors, weights, norm_x_sq):
+    """CPD fit oracle: 1 - ||X - Xhat|| / ||X||, float64."""
+    n = len(factors)
+    r = factors[0].shape[1]
+    v = np.ones((r, r), dtype=np.float64)
+    for f in factors:
+        f = np.asarray(f, dtype=np.float64)
+        v = v * (f.T @ f)
+    w = np.asarray(weights, dtype=np.float64)
+    norm_model_sq = float(np.sum(v * np.outer(w, w)))
+    m_last = spmttkrp_coo_ref(indices, vals, factors, n - 1)
+    inner = float(np.sum(m_last * (np.asarray(factors[n - 1]) * w[None, :])))
+    resid_sq = max(norm_x_sq + norm_model_sq - 2.0 * inner, 0.0)
+    return 1.0 - np.sqrt(resid_sq) / np.sqrt(norm_x_sq)

@@ -1,0 +1,82 @@
+"""L1/L2 kernels for the ALS solve and fit computations.
+
+After spMTTKRP produces M = X_(d) (khatri-rao of the other factors), ALS
+updates the factor matrix as  Y_d = M @ pinv(V)  with
+V = had_{w != d} (Y_w^T Y_w).  V is R x R (tiny), M is I_d x R (row count is
+data dependent), so the coordinator streams M through a fixed (P, R) block
+solve.
+
+``fit`` pieces: CPD fit = 1 - ||X - Xhat|| / ||X|| is evaluated without
+materialising Xhat using the standard identities
+
+    ||Xhat||^2      = sum( had_w G_w * (lambda lambda^T) )
+    <X, Xhat>       = sum( M_d * Y_d )          (any mode d)
+    ||X - Xhat||^2  = ||X||^2 + ||Xhat||^2 - 2 <X, Xhat>
+
+where M_d is the mode-d MTTKRP result. ``inner_block`` and ``weighted_gram``
+compute the streamed reductions.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def gauss_jordan_inverse(v):
+    """Explicit Gauss-Jordan inverse of an R x R matrix, unrolled over R.
+
+    jnp.linalg.solve / cholesky lower to LAPACK custom-calls tagged
+    API_VERSION_TYPED_FFI, which xla_extension 0.5.1 (the version the
+    published ``xla`` crate links) cannot compile — so the solve must be
+    expressed in plain HLO ops. V is SPD + Tikhonov damping in ALS, where
+    diagonal pivoting is numerically adequate; R <= 64 keeps the unrolled
+    program small (~R fused row updates).
+    """
+    r = v.shape[0]
+    a = jnp.concatenate([v, jnp.eye(r, dtype=v.dtype)], axis=1)  # (R, 2R)
+    for i in range(r):
+        row = a[i] / a[i, i]
+        a = a - jnp.outer(a[:, i], row)
+        a = a.at[i].set(row)
+    return a[:, r:]
+
+
+def solve_block(v, m_blk):
+    """One (P, R) block of the ALS update: m_blk @ inv(v).
+
+    ``v`` is symmetric positive definite by construction (Hadamard of
+    Grams + damping); see ``gauss_jordan_inverse`` for why this avoids
+    jnp.linalg.
+    """
+    return jnp.dot(
+        m_blk, gauss_jordan_inverse(v), preferred_element_type=jnp.float32
+    )
+
+
+def _inner_kernel(a_ref, b_ref, out_ref):
+    out_ref[...] = jnp.sum(a_ref[...] * b_ref[...])[None]
+
+
+def inner_block(a_blk, b_blk):
+    """sum(a * b) over one (P, R) block pair -> f32[1]."""
+    p, r = a_blk.shape
+    spec = pl.BlockSpec((p, r), lambda: (0, 0))
+    return pl.pallas_call(
+        _inner_kernel,
+        grid=(),
+        in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((1,), lambda: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=True,
+    )(a_blk, b_blk)
+
+
+def weighted_gram(grams, weights):
+    """||Xhat||^2 = sum( had_w grams[w] * weights weights^T ) -> f32[1].
+
+    Args:
+      grams:   f32[n, R, R] Gram matrices of ALL modes' factors.
+      weights: f32[R] column norms (lambda) absorbed during normalisation.
+    """
+    v = jnp.prod(grams, axis=0)
+    return jnp.sum(v * jnp.outer(weights, weights))[None]

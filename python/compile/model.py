@@ -1,0 +1,101 @@
+"""L2: the jax compute-graph functions the Rust coordinator executes.
+
+Every function here is shape-static (HLO requires it), assembled from the
+L1 Pallas kernels, and lowered once by ``aot.py`` into
+``artifacts/<name>.hlo.txt``. The Rust runtime loads each artifact at
+startup and calls it from the hot path; Python never runs at request time.
+
+Variant axes:
+  * n_in -- number of *input* modes (tensor modes N = n_in + 1); the paper
+    supports N >= 3 and explicitly advertises N > 4, so we ship
+    n_in in {2, 3, 4} (N in {3, 4, 5}).
+  * R    -- factor-matrix rank (paper default 32; 16 for cheap tests).
+  * P    -- nonzeros per block, fixed at 256 (= 8 paper-size thread blocks
+    of P=32 fused per dispatch to amortise PJRT call overhead).
+
+Naming convention (mirrored in artifacts/manifest.json and in
+rust/src/runtime/manifest.rs):
+  mttkrp_n{n_in}_r{R}       vals[P], rows_0..rows_{n_in-1}[P,R] -> l[P,R]
+  mttkrp_seg_n{n_in}_r{R}   + seg_starts[P] -> segmented-scanned l[P,R]
+  gram_r{R}                 y[P,R] -> g[R,R]
+  hadamard_n{n}_r{R}        grams[n,R,R], damp[1] -> v[R,R]
+  solve_r{R}                v[R,R], m[P,R] -> y[P,R]
+  inner_r{R}                a[P,R], b[P,R] -> s[1]
+  wgram_n{n}_r{R}           grams[n,R,R], w[R] -> s[1]
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mttkrp_block as mk
+from .kernels import gram as gk
+from .kernels import solve as sk
+
+P = 256
+RANKS = (16, 32)
+N_INS = (2, 3, 4)
+
+
+# --------------------------------------------------------------- L2 graphs
+
+def mttkrp_fn(vals, *rows):
+    """Block elementwise MTTKRP contribution (wraps the Pallas kernel)."""
+    return (mk.mttkrp_block(vals, *rows),)
+
+
+def mttkrp_seg_fn(vals, seg_starts, *rows):
+    """Block contribution with in-kernel segmented reduction."""
+    return (mk.mttkrp_block_seg(vals, seg_starts, *rows),)
+
+
+def gram_fn(y_blk):
+    return (gk.gram_block(y_blk),)
+
+
+def hadamard_fn(grams, damp):
+    return (gk.hadamard_grams(grams, damp),)
+
+
+def solve_fn(v, m_blk):
+    return (sk.solve_block(v, m_blk),)
+
+
+def inner_fn(a_blk, b_blk):
+    return (sk.inner_block(a_blk, b_blk),)
+
+
+def wgram_fn(grams, weights):
+    return (sk.weighted_gram(grams, weights),)
+
+
+# ------------------------------------------------------------ variant table
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def variants():
+    """Yield (name, fn, example_args) for every artifact to build."""
+    for r in RANKS:
+        for n_in in N_INS:
+            rows = [_f32(P, r) for _ in range(n_in)]
+            yield (f"mttkrp_n{n_in}_r{r}", mttkrp_fn, [_f32(P)] + rows)
+            yield (
+                f"mttkrp_seg_n{n_in}_r{r}",
+                mttkrp_seg_fn,
+                [_f32(P), _f32(P)] + rows,
+            )
+        # hadamard/wgram over n matrices: n_in for the solve path and
+        # n_in + 1 (all modes) for the fit path.
+        for n in sorted({n for n_in in N_INS for n in (n_in, n_in + 1)}):
+            yield (
+                f"hadamard_n{n}_r{r}",
+                hadamard_fn,
+                [_f32(n, r, r), _f32(1)],
+            )
+            yield (f"wgram_n{n}_r{r}", wgram_fn, [_f32(n, r, r), _f32(r)])
+        yield (f"gram_r{r}", gram_fn, [_f32(P, r)])
+        yield (f"solve_r{r}", solve_fn, [_f32(r, r), _f32(P, r)])
+        yield (f"inner_r{r}", inner_fn, [_f32(P, r), _f32(P, r)])

@@ -1,0 +1,220 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp/numpy oracle.
+
+hypothesis sweeps shapes, ranks and segment patterns; fixed seeds keep the
+suite deterministic.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mttkrp_block as mk
+from compile.kernels import gram as gk
+from compile.kernels import solve as sk
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def rand(*shape):
+    return RNG.standard_normal(shape).astype(np.float32)
+
+
+# ------------------------------------------------------------ mttkrp_block
+
+@pytest.mark.parametrize("n_in", [1, 2, 3, 4])
+@pytest.mark.parametrize("p,r", [(64, 8), (128, 16), (256, 32)])
+def test_mttkrp_block_matches_ref(n_in, p, r):
+    vals = rand(p)
+    rows = [rand(p, r) for _ in range(n_in)]
+    got = np.asarray(mk.mttkrp_block(vals, *rows))
+    want = np.asarray(ref.mttkrp_block_ref(vals, *rows))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(1, 6),
+    r=st.sampled_from([4, 8, 16, 32, 64]),
+    n_in=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mttkrp_block_hypothesis(tiles, r, n_in, seed):
+    rng = np.random.default_rng(seed)
+    p = tiles * mk.TILE_P
+    vals = rng.standard_normal(p).astype(np.float32)
+    rows = [rng.standard_normal((p, r)).astype(np.float32) for _ in range(n_in)]
+    got = np.asarray(mk.mttkrp_block(vals, *rows))
+    want = np.asarray(ref.mttkrp_block_ref(vals, *rows))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_mttkrp_block_zero_vals_gives_zeros():
+    vals = np.zeros(64, dtype=np.float32)
+    rows = [rand(64, 8)]
+    got = np.asarray(mk.mttkrp_block(vals, *rows))
+    assert np.all(got == 0.0)
+
+
+def test_mttkrp_block_identity_rows_passthrough():
+    vals = rand(64)
+    ones = np.ones((64, 8), dtype=np.float32)
+    got = np.asarray(mk.mttkrp_block(vals, ones))
+    np.testing.assert_allclose(got, np.repeat(vals[:, None], 8, axis=1))
+
+
+def test_mttkrp_block_rejects_untiled_p():
+    with pytest.raises(AssertionError):
+        mk.mttkrp_block(rand(65), rand(65, 8))
+
+
+# -------------------------------------------------------- segmented variant
+
+def random_seg_starts(rng, p):
+    s = (rng.random(p) < 0.2).astype(np.float32)
+    s[0] = 1.0
+    return s
+
+
+@pytest.mark.parametrize("n_in", [1, 2, 3])
+@pytest.mark.parametrize("p,r", [(64, 8), (256, 32)])
+def test_mttkrp_block_seg_matches_ref(n_in, p, r):
+    rng = np.random.default_rng(p * r + n_in)
+    vals = rng.standard_normal(p).astype(np.float32)
+    rows = [rng.standard_normal((p, r)).astype(np.float32) for _ in range(n_in)]
+    seg = random_seg_starts(rng, p)
+    got = np.asarray(mk.mttkrp_block_seg(vals, seg, *rows))
+    want = ref.mttkrp_block_seg_ref(vals, seg, *rows)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), r=st.sampled_from([4, 8, 16]))
+def test_mttkrp_block_seg_hypothesis(seed, r):
+    rng = np.random.default_rng(seed)
+    p = 128
+    vals = rng.standard_normal(p).astype(np.float32)
+    rows = [rng.standard_normal((p, r)).astype(np.float32)]
+    seg = random_seg_starts(rng, p)
+    got = np.asarray(mk.mttkrp_block_seg(vals, seg, *rows))
+    want = ref.mttkrp_block_seg_ref(vals, seg, *rows)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_seg_single_segment_is_cumsum():
+    p, r = 64, 4
+    vals = np.ones(p, dtype=np.float32)
+    rows = [np.ones((p, r), dtype=np.float32)]
+    seg = np.zeros(p, dtype=np.float32)
+    seg[0] = 1.0
+    got = np.asarray(mk.mttkrp_block_seg(vals, seg, *rows))
+    want = np.cumsum(np.ones((p, r)), axis=0)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_seg_all_starts_is_identity():
+    p, r = 64, 4
+    vals = rand(p)
+    rows = [rand(p, r)]
+    seg = np.ones(p, dtype=np.float32)
+    got = np.asarray(mk.mttkrp_block_seg(vals, seg, *rows))
+    want = np.asarray(ref.mttkrp_block_ref(vals, *rows))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_seg_last_row_of_each_segment_equals_dense_accumulation():
+    """The rows the coordinator actually reads carry the full segment sums."""
+    rng = np.random.default_rng(3)
+    p, r = 128, 8
+    vals = rng.standard_normal(p).astype(np.float32)
+    rows = [rng.standard_normal((p, r)).astype(np.float32)]
+    seg = random_seg_starts(rng, p)
+    out = np.asarray(mk.mttkrp_block_seg(vals, seg, *rows))
+    l = np.asarray(ref.mttkrp_block_ref(vals, *rows), dtype=np.float64)
+    starts = np.flatnonzero(seg > 0.5)
+    ends = np.append(starts[1:], p) - 1
+    for s, e in zip(starts, ends):
+        np.testing.assert_allclose(
+            out[e], l[s : e + 1].sum(axis=0), rtol=1e-4, atol=1e-4
+        )
+
+
+# -------------------------------------------------------------------- gram
+
+@pytest.mark.parametrize("p,r", [(64, 8), (256, 16), (256, 32)])
+def test_gram_block_matches_ref(p, r):
+    y = rand(p, r)
+    got = np.asarray(gk.gram_block(y))
+    np.testing.assert_allclose(got, ref.gram_block_ref(y), rtol=1e-4, atol=1e-4)
+
+
+def test_gram_block_symmetry_and_psd():
+    y = rand(256, 16)
+    g = np.asarray(gk.gram_block(y))
+    np.testing.assert_allclose(g, g.T, rtol=1e-5, atol=1e-5)
+    evals = np.linalg.eigvalsh(g.astype(np.float64))
+    assert evals.min() > -1e-3
+
+
+@pytest.mark.parametrize("n,r", [(2, 8), (3, 16), (4, 32), (5, 16)])
+def test_hadamard_grams_matches_ref(n, r):
+    grams = rand(n, r, r)
+    damp = np.array([0.25], dtype=np.float32)
+    got = np.asarray(gk.hadamard_grams(grams, damp))
+    want = np.asarray(ref.hadamard_grams_ref(grams, damp))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_hadamard_zero_damp_is_plain_product():
+    grams = rand(3, 8, 8)
+    got = np.asarray(gk.hadamard_grams(grams, np.zeros(1, np.float32)))
+    np.testing.assert_allclose(got, np.prod(grams, axis=0), rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------- solve
+
+def spd(r, rng):
+    a = rng.standard_normal((r, r))
+    return (a @ a.T + r * np.eye(r)).astype(np.float32)
+
+
+@pytest.mark.parametrize("p,r", [(64, 8), (256, 32)])
+def test_solve_block_matches_ref(p, r):
+    rng = np.random.default_rng(p + r)
+    v = spd(r, rng)
+    m = rng.standard_normal((p, r)).astype(np.float32)
+    got = np.asarray(sk.solve_block(v, m))
+    want = np.asarray(ref.solve_block_ref(v, m))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_solve_block_identity_v():
+    m = rand(64, 8)
+    got = np.asarray(sk.solve_block(np.eye(8, dtype=np.float32), m))
+    np.testing.assert_allclose(got, m, rtol=1e-5, atol=1e-6)
+
+
+def test_solve_roundtrip():
+    """solve(V, M) @ V recovers M."""
+    rng = np.random.default_rng(11)
+    v = spd(16, rng)
+    m = rng.standard_normal((128, 16)).astype(np.float32)
+    y = np.asarray(sk.solve_block(v, m), dtype=np.float64)
+    np.testing.assert_allclose(y @ v.astype(np.float64), m, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("p,r", [(64, 8), (256, 32)])
+def test_inner_block_matches_ref(p, r):
+    a, b = rand(p, r), rand(p, r)
+    got = np.asarray(sk.inner_block(a, b))
+    want = np.asarray(ref.inner_block_ref(a, b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,r", [(3, 8), (4, 16), (5, 32)])
+def test_weighted_gram_matches_ref(n, r):
+    grams = rand(n, r, r)
+    w = rand(r)
+    got = np.asarray(sk.weighted_gram(grams, w))
+    want = np.asarray(ref.weighted_gram_ref(grams, w))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,230 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!   seg        in-kernel segmented reduction on/off (the "no intermediate
+//!              values to global memory" mechanism)
+//!   assign     cyclic (paper) vs greedy-LPT vertex dealing in Scheme 1
+//!   kappa      SM-count sweep (κ = 8..256): occupancy vs partition overhead
+//!   blockp     native block size P sweep (kernel dispatch granularity)
+//!   runtime    native vs PJRT backend on identical work (dispatch overhead
+//!              of the AOT/XLA hot path)
+//!
+//!     cargo bench --bench ablations [-- seg|assign|kappa|blockp|runtime]
+
+use spmttkrp::baselines::MttkrpExecutor;
+use spmttkrp::bench_support::{bench_reps, print_table, time, Workload};
+use spmttkrp::coordinator::{Engine, EngineConfig};
+use spmttkrp::partition::{LoadBalance, VertexAssign};
+use spmttkrp::runtime::NativeBackend;
+use spmttkrp::tensor::synth::DatasetProfile;
+use spmttkrp::util::human_bytes;
+
+fn cfg(rank: usize) -> EngineConfig {
+    EngineConfig {
+        sm_count: 82,
+        rank,
+        ..Default::default()
+    }
+}
+
+fn ablate_seg(reps: usize, rank: usize) {
+    let mut rows = Vec::new();
+    for w in Workload::all(rank) {
+        let mk = |seg: bool| {
+            Engine::with_native_backend(
+                &w.tensor,
+                EngineConfig {
+                    use_seg_kernel: seg,
+                    ..cfg(rank)
+                },
+            )
+            .unwrap()
+        };
+        let (on, off) = (mk(true), mk(false));
+        let t_on = time(reps, || {
+            std::hint::black_box(on.execute_all_modes(&w.factors).unwrap());
+        });
+        let t_off = time(reps, || {
+            std::hint::black_box(off.execute_all_modes(&w.factors).unwrap());
+        });
+        let (_, rep_on) = on.execute_all_modes(&w.factors).unwrap();
+        let (_, rep_off) = off.execute_all_modes(&w.factors).unwrap();
+        rows.push(vec![
+            w.profile.name.to_string(),
+            format!("{:.2}", t_on.median * 1e3),
+            format!("{:.2}", t_off.median * 1e3),
+            format!("{:.2}x", t_off.median / t_on.median),
+            human_bytes(rep_on.total_traffic().intermediate_bytes),
+            human_bytes(rep_off.total_traffic().intermediate_bytes),
+        ]);
+    }
+    print_table(
+        "ablation: in-kernel segmented reduction (ms median)",
+        &["tensor", "seg-on", "seg-off", "speedup", "spill-on", "spill-off"],
+        &rows,
+    );
+}
+
+fn ablate_assign(reps: usize, rank: usize) {
+    let mut rows = Vec::new();
+    for w in Workload::all(rank) {
+        let mut medians = Vec::new();
+        let mut imb = Vec::new();
+        for assign in [VertexAssign::Cyclic, VertexAssign::Greedy] {
+            let e = Engine::with_native_backend(
+                &w.tensor,
+                EngineConfig {
+                    assign,
+                    ..cfg(rank)
+                },
+            )
+            .unwrap();
+            let s = time(reps, || {
+                std::hint::black_box(e.execute_all_modes(&w.factors).unwrap());
+            });
+            medians.push(s.median);
+            let worst = e
+                .format
+                .copies
+                .iter()
+                .map(|c| {
+                    spmttkrp::partition::stats::evaluate(&c.partitioning, 0)
+                        .imbalance
+                        .factor
+                })
+                .fold(0.0f64, f64::max);
+            imb.push(worst);
+        }
+        rows.push(vec![
+            w.profile.name.to_string(),
+            format!("{:.2}", medians[0] * 1e3),
+            format!("{:.2}", medians[1] * 1e3),
+            format!("{:.3}", imb[0]),
+            format!("{:.3}", imb[1]),
+        ]);
+    }
+    print_table(
+        "ablation: cyclic (paper) vs greedy-LPT vertex dealing",
+        &["tensor", "cyclic-ms", "greedy-ms", "imb-cyclic", "imb-greedy"],
+        &rows,
+    );
+}
+
+fn ablate_kappa(reps: usize, rank: usize) {
+    let w = Workload::prepare(
+        DatasetProfile::uber(),
+        spmttkrp::bench_support::bench_scale(),
+        rank,
+        7,
+    );
+    let mut rows = Vec::new();
+    for kappa in [8usize, 16, 32, 82, 128, 256] {
+        let e = Engine::with_native_backend(
+            &w.tensor,
+            EngineConfig {
+                sm_count: kappa,
+                ..cfg(rank)
+            },
+        )
+        .unwrap();
+        let s = time(reps, || {
+            std::hint::black_box(e.execute_all_modes(&w.factors).unwrap());
+        });
+        let (_, rep) = e.execute_all_modes(&w.factors).unwrap();
+        rows.push(vec![
+            format!("{kappa}"),
+            format!("{:.2}", s.median * 1e3),
+            format!("{}", rep.total_traffic().global_atomics),
+        ]);
+    }
+    print_table(
+        "ablation: κ sweep (uber profile, total ms)",
+        &["kappa", "ms", "global-atomics"],
+        &rows,
+    );
+}
+
+fn ablate_blockp(reps: usize, rank: usize) {
+    let w = Workload::prepare(
+        DatasetProfile::uber(),
+        spmttkrp::bench_support::bench_scale(),
+        rank,
+        7,
+    );
+    let mut rows = Vec::new();
+    for p in [32usize, 64, 128, 256, 512, 1024] {
+        let e = Engine::new(
+            &w.tensor,
+            Box::new(NativeBackend::new(p)),
+            cfg(rank),
+        )
+        .unwrap();
+        let s = time(reps, || {
+            std::hint::black_box(e.execute_all_modes(&w.factors).unwrap());
+        });
+        rows.push(vec![format!("{p}"), format!("{:.2}", s.median * 1e3)]);
+    }
+    print_table(
+        "ablation: block size P sweep (uber, native backend)",
+        &["P", "ms"],
+        &rows,
+    );
+}
+
+fn ablate_runtime(reps: usize, rank: usize) {
+    let w = Workload::prepare(DatasetProfile::uber(), 0.01, rank, 7);
+    let native = Engine::with_native_backend(&w.tensor, cfg(rank)).unwrap();
+    let t_native = time(reps, || {
+        std::hint::black_box(native.execute_all_modes(&w.factors).unwrap());
+    });
+    let mut rows = vec![vec![
+        "native".to_string(),
+        format!("{:.2}", t_native.median * 1e3),
+        "1.00x".to_string(),
+    ]];
+    match Engine::with_pjrt_backend(&w.tensor, cfg(rank)) {
+        Ok(pjrt) => {
+            pjrt.mttkrp_all_modes(&w.factors).unwrap(); // compile outside timing
+            let t_pjrt = time(reps, || {
+                std::hint::black_box(pjrt.execute_all_modes(&w.factors).unwrap());
+            });
+            rows.push(vec![
+                "pjrt".to_string(),
+                format!("{:.2}", t_pjrt.median * 1e3),
+                format!("{:.2}x", t_pjrt.median / t_native.median),
+            ]);
+        }
+        Err(e) => println!("(pjrt unavailable: {e:#} — run `make artifacts`)"),
+    }
+    print_table(
+        "ablation: backend dispatch (uber @ 1% scale, total ms)",
+        &["backend", "ms", "vs-native"],
+        &rows,
+    );
+}
+
+fn main() {
+    let rank = 32;
+    let reps = bench_reps();
+    let which: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let all = which.is_empty();
+    let has = |k: &str| all || which.iter().any(|w| w == k);
+    println!(
+        "ablations: rank {rank}, reps {reps}, scale {}",
+        spmttkrp::bench_support::bench_scale()
+    );
+    if has("seg") {
+        ablate_seg(reps, rank);
+    }
+    if has("assign") {
+        ablate_assign(reps, rank);
+    }
+    if has("kappa") {
+        ablate_kappa(reps, rank);
+    }
+    if has("blockp") {
+        ablate_blockp(reps, rank);
+    }
+    if has("runtime") {
+        ablate_runtime(reps, rank);
+    }
+}

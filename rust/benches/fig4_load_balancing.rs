@@ -1,0 +1,76 @@
+//! Bench: Fig. 4 — the adaptive load-balancing ablation (adaptive vs
+//! scheme-1-only vs scheme-2-only), with the per-mode breakdown the
+//! paper's §V-B narrates: scheme-1-only loses on small-mode tensors
+//! (idle SMs), scheme-2-only loses on large-mode tensors (global atomics).
+//!
+//!     cargo bench --bench fig4_load_balancing
+
+use spmttkrp::baselines::MttkrpExecutor;
+use spmttkrp::bench_support::{bench_reps, paper_engine, print_table, time_sim, Workload};
+use spmttkrp::partition::LoadBalance;
+use spmttkrp::util::geomean;
+
+fn main() {
+    let rank = 32;
+    let reps = bench_reps();
+    let workloads = Workload::all(rank);
+    println!(
+        "fig4 bench: rank {rank}, reps {reps}, scale {}",
+        spmttkrp::bench_support::bench_scale()
+    );
+    let mut rows = Vec::new();
+    let (mut sp1, mut sp2) = (Vec::new(), Vec::new());
+    for w in &workloads {
+        let mut medians = Vec::new();
+        let mut atomics = Vec::new();
+        let mut idle = Vec::new();
+        for lb in [
+            LoadBalance::Adaptive,
+            LoadBalance::ForceScheme1,
+            LoadBalance::ForceScheme2,
+        ] {
+            let engine = paper_engine(&w.tensor, rank, lb);
+            let s = time_sim(reps, &engine, &w.factors);
+            medians.push(s.median);
+            let (_, rep) = engine.execute_all_modes(&w.factors).unwrap();
+            atomics.push(rep.total_traffic().global_atomics);
+            idle.push(
+                engine
+                    .format
+                    .copies
+                    .iter()
+                    .map(|c| {
+                        spmttkrp::partition::stats::evaluate(&c.partitioning, 0)
+                            .idle_partitions
+                    })
+                    .sum::<usize>(),
+            );
+        }
+        sp1.push(medians[1] / medians[0]);
+        sp2.push(medians[2] / medians[0]);
+        rows.push(vec![
+            w.profile.name.to_string(),
+            format!("{:.2}", medians[0] * 1e3),
+            format!("{:.2}", medians[1] * 1e3),
+            format!("{:.2}", medians[2] * 1e3),
+            format!("{:.2}x", medians[1] / medians[0]),
+            format!("{:.2}x", medians[2] / medians[0]),
+            format!("{}", idle[1]),
+            format!("{}", atomics[0]),
+            format!("{}", atomics[2]),
+        ]);
+    }
+    print_table(
+        "Fig. 4 — adaptive vs forced schemes (simulated κ-SM total time, ms median)",
+        &[
+            "tensor", "adaptive", "s1-only", "s2-only", "sp-vs-s1", "sp-vs-s2",
+            "idle-s1", "atomics-adpt", "atomics-s2",
+        ],
+        &rows,
+    );
+    println!(
+        "\ngeomean: adaptive vs scheme-1-only {:.2}x (paper 2.2x) | vs scheme-2-only {:.2}x (paper 1.3x)",
+        geomean(&sp1),
+        geomean(&sp2)
+    );
+}

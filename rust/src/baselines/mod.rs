@@ -1,0 +1,75 @@
+//! Baseline spMTTKRP implementations for Fig. 3.
+//!
+//! Algorithmic re-implementations (not CUDA ports — DESIGN.md §5,
+//! substitution 3) of the three systems the paper compares against, all
+//! running on the same worker-pool substrate and reporting the same
+//! [`TrafficCounters`], so "who wins and why" is an apples-to-apples
+//! question:
+//!
+//! * [`parti::PartiExecutor`] — ParTI-GPU-like: HiCOO blocks, per-nonzero
+//!   global-atomic accumulation.
+//! * [`mmcsf::MmCsfExecutor`] — MM-CSF-like: per-mode CSF trees with
+//!   fiber reuse, naive (non-degree-aware) root partitioning.
+//! * [`blco_exec::BlcoExecutor`] — BLCO-like: one linearized copy for all
+//!   modes, per-element decode + global-atomic conflict resolution.
+//!
+//! The benches run "ours" (the [`Engine`]) and the baselines on the same
+//! native arithmetic so wallclock differences come from the *algorithms*
+//! (memory layout, synchronisation, balance), not from PJRT dispatch
+//! overhead; the PJRT-vs-native delta is measured separately in
+//! `benches/ablations.rs`.
+
+pub mod blco_exec;
+pub mod mmcsf;
+pub mod parti;
+
+use anyhow::Result;
+
+use crate::coordinator::Engine;
+use crate::metrics::{ExecReport, ModeExecReport};
+use crate::tensor::FactorSet;
+
+/// Uniform interface over "ours" and every baseline.
+pub trait MttkrpExecutor {
+    fn name(&self) -> &'static str;
+
+    /// spMTTKRP along `mode`: returns the `(I_mode, R)` output row-major.
+    fn execute_mode(
+        &self,
+        factors: &FactorSet,
+        mode: usize,
+    ) -> Result<(Vec<f32>, ModeExecReport)>;
+
+    fn n_modes(&self) -> usize;
+
+    /// Total execution time across all modes (the paper's Fig. 3 metric:
+    /// "execute mode by mode, sum the execution times").
+    fn execute_all_modes(&self, factors: &FactorSet) -> Result<(Vec<Vec<f32>>, ExecReport)> {
+        let mut outs = Vec::with_capacity(self.n_modes());
+        let mut modes = Vec::with_capacity(self.n_modes());
+        for d in 0..self.n_modes() {
+            let (o, r) = self.execute_mode(factors, d)?;
+            outs.push(o);
+            modes.push(r);
+        }
+        Ok((outs, ExecReport { modes }))
+    }
+}
+
+impl MttkrpExecutor for Engine {
+    fn name(&self) -> &'static str {
+        "ours"
+    }
+
+    fn execute_mode(
+        &self,
+        factors: &FactorSet,
+        mode: usize,
+    ) -> Result<(Vec<f32>, ModeExecReport)> {
+        self.mttkrp_mode(factors, mode)
+    }
+
+    fn n_modes(&self) -> usize {
+        Engine::n_modes(self)
+    }
+}

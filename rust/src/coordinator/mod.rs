@@ -1,0 +1,676 @@
+//! The execution engine — the paper's parallel algorithm (Alg. 1 + Alg. 2)
+//! on the simulated-GPU substrate.
+//!
+//! Roles (DESIGN.md §Hardware-Adaptation):
+//!
+//! * GPU **SM** → a tensor partition processed by a worker thread from the
+//!   pool (`κ` partitions; `threads ≤ κ` OS threads drain them from a
+//!   shared counter — SM *semantics* are per-partition, so counters and
+//!   correctness are independent of the OS thread count).
+//! * **Thread block (R × P)** → one `(P, R)` block streamed through the
+//!   [`Backend`] (the AOT Pallas kernel under PJRT, or the native mirror).
+//! * **`Local_Update`** → unsynchronised accumulation into output rows the
+//!   partition *owns* (Scheme 1 guarantees ownership).
+//! * **`Global_Update`** → sharded-lock accumulation (Scheme 2 rows may be
+//!   shared between partitions), counted as global atomics.
+//! * **Global barrier between modes** → `mttkrp_all_modes` joins the pool
+//!   after each mode (Alg. 1 line 8).
+//!
+//! The engine also offloads the dense ALS-side computations (Gram,
+//! Hadamard+solve, fit reductions) through the same backend so the PJRT
+//! path covers the complete CPD iteration.
+
+pub mod shared;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::format::mode_specific::ModeSpecificFormat;
+use crate::metrics::{ExecReport, ModeExecReport, TrafficCounters};
+use crate::partition::{LoadBalance, VertexAssign};
+use crate::runtime::{Backend, NativeBackend, PjrtBackend};
+use crate::tensor::factor::Factor;
+use crate::tensor::{FactorSet, SparseTensorCOO};
+use crate::util::stats::Imbalance;
+use shared::SharedRows;
+
+/// How output-row accumulation is synchronised (derived from the scheme).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdatePolicy {
+    /// Rows owned by one partition — no cross-SM synchronisation.
+    Local,
+    /// Rows may be shared — global (sharded-lock) accumulation.
+    Global,
+}
+
+/// Engine configuration. Defaults mirror the paper's RTX 3090 setup where
+/// meaningful (`κ = 82`, rank 32) and this machine elsewhere.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Number of tensor partitions = simulated SMs (paper: 82).
+    pub sm_count: usize,
+    /// OS threads draining partitions (defaults to available parallelism).
+    pub threads: usize,
+    /// Factor-matrix rank (paper: 32).
+    pub rank: usize,
+    pub lb: LoadBalance,
+    pub assign: VertexAssign,
+    /// Use the in-kernel segmented-reduction kernel (the paper's
+    /// "no intermediate values to global memory" path). Disabling it is
+    /// the `ablate_segreduce` baseline: one update per nonzero.
+    pub use_seg_kernel: bool,
+    /// Lock shards for Global_Update.
+    pub lock_shards: usize,
+    /// Fuse gather+compute+reduce into one register-resident loop when the
+    /// backend supports it (native only — PJRT needs staged `(P, R)` block
+    /// buffers). This *is* the paper's SM loop: rows multiplied as they
+    /// are loaded, the running row accumulated on-chip. §Perf iteration 1.
+    pub fused: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            sm_count: 82,
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            rank: 32,
+            lb: LoadBalance::Adaptive,
+            assign: VertexAssign::Cyclic,
+            use_seg_kernel: true,
+            lock_shards: 64,
+            fused: true,
+        }
+    }
+}
+
+/// The spMTTKRP execution engine over the mode-specific format.
+pub struct Engine {
+    pub format: ModeSpecificFormat,
+    pub config: EngineConfig,
+    backend: Box<dyn Backend>,
+    /// Bytes per stored nonzero of this tensor (for the traffic model).
+    elem_bytes: u64,
+}
+
+impl Engine {
+    pub fn new(
+        tensor: &SparseTensorCOO,
+        backend: Box<dyn Backend>,
+        config: EngineConfig,
+    ) -> Result<Engine> {
+        ensure!(config.sm_count > 0 && config.rank > 0);
+        ensure!(
+            backend.block_p() % 2 == 0,
+            "block_p must be even, got {}",
+            backend.block_p()
+        );
+        let format = ModeSpecificFormat::build(
+            tensor,
+            config.sm_count,
+            config.lb,
+            config.assign,
+        );
+        let elem_bytes = (tensor.n_modes() * 4 + 4) as u64;
+        Ok(Engine {
+            format,
+            config,
+            backend,
+            elem_bytes,
+        })
+    }
+
+    /// Engine over the pure-Rust backend (no artifacts needed).
+    pub fn with_native_backend(
+        tensor: &SparseTensorCOO,
+        config: EngineConfig,
+    ) -> Result<Engine> {
+        Engine::new(tensor, Box::new(NativeBackend::new(256)), config)
+    }
+
+    /// Engine over the PJRT backend (artifacts must be built).
+    pub fn with_pjrt_backend(
+        tensor: &SparseTensorCOO,
+        config: EngineConfig,
+    ) -> Result<Engine> {
+        let be = PjrtBackend::load_default()?;
+        ensure!(
+            be.manifest().has_rank(config.rank),
+            "no artifacts for rank {} (have {:?})",
+            config.rank,
+            be.manifest().ranks
+        );
+        Engine::new(tensor, Box::new(be), config)
+    }
+
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
+    }
+
+    pub fn n_modes(&self) -> usize {
+        self.format.n_modes()
+    }
+
+    /// The update policy mode `d` will execute with.
+    pub fn update_policy(&self, mode: usize) -> UpdatePolicy {
+        if self.format.copies[mode].needs_global_update() {
+            UpdatePolicy::Global
+        } else {
+            UpdatePolicy::Local
+        }
+    }
+
+    /// spMTTKRP along one mode (Alg. 2 over all partitions of the mode's
+    /// tensor copy). Returns the `(I_d, R)` output row-major and a report.
+    pub fn mttkrp_mode(
+        &self,
+        factors: &FactorSet,
+        mode: usize,
+    ) -> Result<(Vec<f32>, ModeExecReport)> {
+        ensure!(mode < self.n_modes(), "mode {mode} out of range");
+        ensure!(
+            factors.rank() == self.config.rank,
+            "factor rank {} != engine rank {}",
+            factors.rank(),
+            self.config.rank
+        );
+        let copy = &self.format.copies[mode];
+        let tensor = &copy.tensor;
+        let rank = self.config.rank;
+        let dim = tensor.dims[mode] as usize;
+        let policy = self.update_policy(mode);
+        let mut out = vec![0.0f32; dim * rank];
+        let shared = SharedRows::new(&mut out, rank);
+        let locks: Vec<Mutex<()>> =
+            (0..self.config.lock_shards).map(|_| Mutex::new(())).collect();
+        let next = AtomicUsize::new(0);
+        let kappa = self.config.sm_count;
+        let n_threads = self.config.threads.clamp(1, kappa);
+        let start = Instant::now();
+        type PartCosts = Vec<(usize, std::time::Duration, u64)>;
+        let traffic_parts: Vec<Result<(TrafficCounters, PartCosts)>> =
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(n_threads);
+                for _ in 0..n_threads {
+                    let shared = &shared;
+                    let locks = &locks;
+                    let next = &next;
+                    handles.push(scope.spawn(move || {
+                        let mut worker = Worker::new(self, mode, policy);
+                        let mut local = TrafficCounters::default();
+                        let mut costs: PartCosts = Vec::new();
+                        loop {
+                            let z = next.fetch_add(1, Ordering::Relaxed);
+                            if z >= kappa {
+                                break;
+                            }
+                            let before_atomics = local.global_atomics;
+                            let t0 = Instant::now();
+                            worker.run_partition(
+                                z, factors, shared, locks, &mut local,
+                            )?;
+                            costs.push((
+                                z,
+                                t0.elapsed(),
+                                local.global_atomics - before_atomics,
+                            ));
+                        }
+                        Ok((local, costs))
+                    }));
+                }
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+        let mut traffic = TrafficCounters::default();
+        let mut part_costs = vec![std::time::Duration::ZERO; kappa];
+        for part in traffic_parts {
+            let (tr, costs) = part?;
+            traffic.add(&tr);
+            for (z, dur, atomics) in costs {
+                // simulated SM cost: measured serial time + modeled global
+                // atomic penalty (local updates are L1-resident, free)
+                let penalty = std::time::Duration::from_nanos(
+                    (atomics as f64 * crate::metrics::global_atomic_penalty_ns())
+                        as u64,
+                );
+                part_costs[z] = dur + penalty;
+            }
+        }
+        let wall = start.elapsed();
+        let report = ModeExecReport {
+            mode,
+            wall,
+            sim: crate::metrics::makespan(&part_costs),
+            part_costs,
+            traffic,
+            imbalance: Imbalance::of(&copy.partitioning.loads()),
+        };
+        Ok((out, report))
+    }
+
+    /// Alg. 1: spMTTKRP along every mode with a barrier in between.
+    /// Returns the per-mode `(I_d, R)` outputs (factors are *not* updated —
+    /// that is the ALS driver's job).
+    pub fn mttkrp_all_modes(&self, factors: &FactorSet) -> Result<Vec<Vec<f32>>> {
+        let (outs, _) = self.mttkrp_all_modes_with_report(factors)?;
+        Ok(outs)
+    }
+
+    pub fn mttkrp_all_modes_with_report(
+        &self,
+        factors: &FactorSet,
+    ) -> Result<(Vec<Vec<f32>>, ExecReport)> {
+        let mut outs = Vec::with_capacity(self.n_modes());
+        let mut modes = Vec::with_capacity(self.n_modes());
+        for d in 0..self.n_modes() {
+            // the scope join in mttkrp_mode is the global barrier
+            let (o, r) = self.mttkrp_mode(factors, d)?;
+            outs.push(o);
+            modes.push(r);
+        }
+        Ok((outs, ExecReport { modes }))
+    }
+
+    // ------------------------------------------------- dense ALS helpers
+
+    /// Gram matrix `Y^T Y` (R×R, f32) streamed through the backend's
+    /// `gram_r{R}` block kernel.
+    pub fn gram(&self, factor: &Factor) -> Result<Vec<f32>> {
+        let rank = factor.rank;
+        let p = self.backend.block_p();
+        let mut acc = vec![0.0f64; rank * rank];
+        let mut blk = vec![0.0f32; p * rank];
+        let mut g = vec![0.0f32; rank * rank];
+        let mut row = 0;
+        while row < factor.rows {
+            let take = (factor.rows - row).min(p);
+            blk[..take * rank]
+                .copy_from_slice(&factor.data[row * rank..(row + take) * rank]);
+            blk[take * rank..].fill(0.0); // zero rows contribute nothing
+            self.backend.gram_block(rank, &blk, &mut g)?;
+            for (a, &x) in acc.iter_mut().zip(&g) {
+                *a += x as f64;
+            }
+            row += take;
+        }
+        Ok(acc.into_iter().map(|x| x as f32).collect())
+    }
+
+    /// `V = hadamard(grams) + damp I` via the backend.
+    pub fn hadamard(&self, grams: &[Vec<f32>], damp: f32) -> Result<Vec<f32>> {
+        let rank = self.config.rank;
+        let n = grams.len();
+        let mut stacked = Vec::with_capacity(n * rank * rank);
+        for g in grams {
+            ensure!(g.len() == rank * rank);
+            stacked.extend_from_slice(g);
+        }
+        let mut out = vec![0.0f32; rank * rank];
+        self.backend
+            .hadamard_grams(rank, n, &stacked, damp, &mut out)?;
+        Ok(out)
+    }
+
+    /// ALS update: `Y = M @ inv(V)` streamed block-wise; `m` is `(rows, R)`.
+    pub fn solve(&self, v: &[f32], m: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let rank = self.config.rank;
+        ensure!(m.len() == rows * rank);
+        let p = self.backend.block_p();
+        let mut out = vec![0.0f32; rows * rank];
+        let mut blk_in = vec![0.0f32; p * rank];
+        let mut blk_out = vec![0.0f32; p * rank];
+        let mut row = 0;
+        while row < rows {
+            let take = (rows - row).min(p);
+            blk_in[..take * rank].copy_from_slice(&m[row * rank..(row + take) * rank]);
+            blk_in[take * rank..].fill(0.0);
+            self.backend.solve_block(rank, v, &blk_in, &mut blk_out)?;
+            out[row * rank..(row + take) * rank]
+                .copy_from_slice(&blk_out[..take * rank]);
+            row += take;
+        }
+        Ok(out)
+    }
+
+    /// `sum(a * b)` over equal-length `(rows, R)` buffers, streamed.
+    pub fn inner(&self, a: &[f32], b: &[f32]) -> Result<f64> {
+        ensure!(a.len() == b.len());
+        let rank = self.config.rank;
+        let p = self.backend.block_p();
+        let chunk = p * rank;
+        let mut acc = 0.0f64;
+        let mut pa = vec![0.0f32; chunk];
+        let mut pb = vec![0.0f32; chunk];
+        let mut off = 0;
+        while off < a.len() {
+            let take = (a.len() - off).min(chunk);
+            pa[..take].copy_from_slice(&a[off..off + take]);
+            pa[take..].fill(0.0);
+            pb[..take].copy_from_slice(&b[off..off + take]);
+            pb[take..].fill(0.0);
+            acc += self.backend.inner_block(rank, &pa, &pb)? as f64;
+            off += take;
+        }
+        Ok(acc)
+    }
+
+    /// `sum(hadamard(grams) * w w^T)` via the backend.
+    pub fn weighted_gram(&self, grams: &[Vec<f32>], weights: &[f32]) -> Result<f64> {
+        let rank = self.config.rank;
+        let n = grams.len();
+        let mut stacked = Vec::with_capacity(n * rank * rank);
+        for g in grams {
+            stacked.extend_from_slice(g);
+        }
+        Ok(self
+            .backend
+            .weighted_gram(rank, n, &stacked, weights)
+            .context("weighted_gram")? as f64)
+    }
+}
+
+/// Per-worker scratch buffers + the Alg. 2 inner loop.
+struct Worker<'e> {
+    engine: &'e Engine,
+    mode: usize,
+    policy: UpdatePolicy,
+    input_modes: Vec<usize>,
+    vals: Vec<f32>,
+    seg: Vec<f32>,
+    rows: Vec<Vec<f32>>,
+    lout: Vec<f32>,
+}
+
+impl<'e> Worker<'e> {
+    fn new(engine: &'e Engine, mode: usize, policy: UpdatePolicy) -> Worker<'e> {
+        let p = engine.backend.block_p();
+        let rank = engine.config.rank;
+        let n = engine.n_modes();
+        let input_modes: Vec<usize> = (0..n).filter(|&w| w != mode).collect();
+        Worker {
+            engine,
+            mode,
+            policy,
+            vals: vec![0.0f32; p],
+            seg: vec![0.0f32; p],
+            rows: (0..n - 1).map(|_| vec![0.0f32; p * rank]).collect(),
+            lout: vec![0.0f32; p * rank],
+            input_modes,
+        }
+    }
+
+    fn run_partition(
+        &mut self,
+        z: usize,
+        factors: &FactorSet,
+        shared: &SharedRows,
+        locks: &[Mutex<()>],
+        traffic: &mut TrafficCounters,
+    ) -> Result<()> {
+        let engine = self.engine;
+        let copy = &engine.format.copies[self.mode];
+        let tensor = &copy.tensor;
+        let (lo, hi) = (
+            copy.partitioning.bounds[z],
+            copy.partitioning.bounds[z + 1],
+        );
+        if lo == hi {
+            return Ok(());
+        }
+        if engine.config.fused && engine.backend.name() == "native" {
+            return self.run_partition_fused(z, factors, shared, locks, traffic);
+        }
+        let p = engine.backend.block_p();
+        let rank = engine.config.rank;
+        let out_col = &tensor.inds[self.mode];
+        let mut t = lo;
+        while t < hi {
+            let take = (hi - t).min(p);
+            // ---- gather (the "SM loads rows from global memory" step)
+            for i in 0..take {
+                self.vals[i] = tensor.vals[t + i];
+                self.seg[i] = if t + i == lo || out_col[t + i] != out_col[t + i - 1]
+                {
+                    1.0
+                } else {
+                    0.0
+                };
+            }
+            self.vals[take..].fill(0.0);
+            self.seg[take..].fill(0.0);
+            for (slot, &w) in self.input_modes.iter().enumerate() {
+                let fac = &factors[w];
+                let col = &tensor.inds[w];
+                let buf = &mut self.rows[slot];
+                for i in 0..take {
+                    let r = fac.row(col[t + i] as usize);
+                    buf[i * rank..(i + 1) * rank].copy_from_slice(r);
+                }
+                // padding rows: stale finite values are harmless (vals = 0)
+            }
+            traffic.tensor_bytes_read += take as u64 * engine.elem_bytes;
+            traffic.factor_bytes_read +=
+                (take * self.input_modes.len() * rank * 4) as u64;
+            // ---- compute (the R×P thread block)
+            // The segmented reduction only applies under Local_Update:
+            // Scheme 1 owns its output rows, so the block can fully reduce
+            // a row before the single write (the paper's L1-resident
+            // accumulation). Under Scheme 2 the paper's Alg. 2 (lines
+            // 21-22) performs a Global_Update per nonzero — merging there
+            // would under-model its atomic traffic.
+            let row_refs: Vec<&[f32]> =
+                self.rows.iter().map(|r| r.as_slice()).collect();
+            let use_seg = engine.config.use_seg_kernel
+                && matches!(self.policy, UpdatePolicy::Local);
+            if use_seg {
+                engine.backend.mttkrp_block_seg(
+                    rank,
+                    &self.vals,
+                    &self.seg,
+                    &row_refs,
+                    &mut self.lout,
+                )?;
+                // one update per block-local segment run
+                let mut i = 0;
+                while i < take {
+                    let idx = out_col[t + i];
+                    let mut j = i;
+                    while j + 1 < take && out_col[t + j + 1] == idx {
+                        j += 1;
+                    }
+                    let row = &self.lout[j * rank..(j + 1) * rank];
+                    self.update(shared, locks, idx as usize, row, traffic);
+                    i = j + 1;
+                }
+            } else {
+                engine.backend.mttkrp_block(
+                    rank,
+                    &self.vals,
+                    &row_refs,
+                    &mut self.lout,
+                )?;
+                // one update per nonzero. Under Local policy with the seg
+                // kernel disabled (ablation) these are partial sums
+                // spilled to "global memory" — intermediate traffic the
+                // paper's format exists to eliminate. Under Global policy
+                // they are Alg. 2's per-nonzero Global_Updates.
+                for i in 0..take {
+                    let row = &self.lout[i * rank..(i + 1) * rank];
+                    self.update(
+                        shared,
+                        locks,
+                        out_col[t + i] as usize,
+                        row,
+                        traffic,
+                    );
+                    if matches!(self.policy, UpdatePolicy::Local) {
+                        traffic.intermediate_bytes += (rank * 4) as u64;
+                    }
+                }
+            }
+            t += take;
+        }
+        Ok(())
+    }
+
+    /// Fused SM loop (native backend): for every nonzero, multiply the
+    /// input-mode factor rows directly out of factor storage into a
+    /// register-resident accumulator; write each output row once per
+    /// segment (Local) or per nonzero (Global, Alg. 2 lines 21-22). No
+    /// staging buffers, no second pass — this is the faithful rendering of
+    /// the paper's thread-block inner loop on a CPU.
+    fn run_partition_fused(
+        &mut self,
+        z: usize,
+        factors: &FactorSet,
+        shared: &SharedRows,
+        locks: &[Mutex<()>],
+        traffic: &mut TrafficCounters,
+    ) -> Result<()> {
+        let engine = self.engine;
+        let copy = &engine.format.copies[self.mode];
+        let tensor = &copy.tensor;
+        let (lo, hi) = (
+            copy.partitioning.bounds[z],
+            copy.partitioning.bounds[z + 1],
+        );
+        let rank = engine.config.rank;
+        let out_col = &tensor.inds[self.mode];
+        let n_in = self.input_modes.len();
+        let local = matches!(self.policy, UpdatePolicy::Local)
+            && engine.config.use_seg_kernel;
+        // acc reuses the first `rank` slots of the (otherwise unused)
+        // block-output scratch buffer.
+        let (acc, contrib_buf) = self.lout.split_at_mut(rank);
+        let contrib = &mut contrib_buf[..rank];
+        let mut cur_idx = out_col[lo];
+        acc.fill(0.0);
+        for t in lo..hi {
+            let v = tensor.vals[t];
+            match n_in {
+                2 => {
+                    let ra = factors[self.input_modes[0]]
+                        .row(tensor.inds[self.input_modes[0]][t] as usize);
+                    let rb = factors[self.input_modes[1]]
+                        .row(tensor.inds[self.input_modes[1]][t] as usize);
+                    for r in 0..rank {
+                        contrib[r] = v * ra[r] * rb[r];
+                    }
+                }
+                3 => {
+                    let ra = factors[self.input_modes[0]]
+                        .row(tensor.inds[self.input_modes[0]][t] as usize);
+                    let rb = factors[self.input_modes[1]]
+                        .row(tensor.inds[self.input_modes[1]][t] as usize);
+                    let rc = factors[self.input_modes[2]]
+                        .row(tensor.inds[self.input_modes[2]][t] as usize);
+                    for r in 0..rank {
+                        contrib[r] = v * ra[r] * rb[r] * rc[r];
+                    }
+                }
+                _ => {
+                    contrib.fill(v);
+                    for &w in &self.input_modes {
+                        let row = factors[w].row(tensor.inds[w][t] as usize);
+                        for r in 0..rank {
+                            contrib[r] *= row[r];
+                        }
+                    }
+                }
+            }
+            if local {
+                let idx = out_col[t];
+                if idx != cur_idx {
+                    // segment boundary: single on-chip-reduced write
+                    push_row(
+                        shared, locks, self.policy, locks.len(),
+                        cur_idx as usize, acc, traffic,
+                    );
+                    acc.fill(0.0);
+                    cur_idx = idx;
+                }
+                for r in 0..rank {
+                    acc[r] += contrib[r];
+                }
+            } else {
+                push_row(
+                    shared, locks, self.policy, locks.len(),
+                    out_col[t] as usize, contrib, traffic,
+                );
+                if matches!(self.policy, UpdatePolicy::Local) {
+                    // seg reduction disabled (ablation): partials spill
+                    traffic.intermediate_bytes += (rank * 4) as u64;
+                }
+            }
+        }
+        if local {
+            push_row(
+                shared, locks, self.policy, locks.len(),
+                cur_idx as usize, acc, traffic,
+            );
+        }
+        traffic.tensor_bytes_read += (hi - lo) as u64 * engine.elem_bytes;
+        traffic.factor_bytes_read += ((hi - lo) * n_in * rank * 4) as u64;
+        Ok(())
+    }
+
+    #[inline]
+    fn update(
+        &self,
+        shared: &SharedRows,
+        locks: &[Mutex<()>],
+        idx: usize,
+        row: &[f32],
+        traffic: &mut TrafficCounters,
+    ) {
+        let rank = row.len();
+        match self.policy {
+            UpdatePolicy::Local => {
+                // SAFETY (exclusivity): Scheme-1 partitions own disjoint
+                // output indices (proptested in rust/tests/), and a single
+                // partition is processed by one worker at a time.
+                unsafe { shared.add_row_exclusive(idx, row) };
+                traffic.local_updates += rank as u64;
+            }
+            UpdatePolicy::Global => {
+                let _g = locks[idx % locks.len()].lock().unwrap();
+                // SAFETY: all writers of rows hashing to this shard hold
+                // the same lock.
+                unsafe { shared.add_row_exclusive(idx, row) };
+                traffic.global_atomics += rank as u64;
+            }
+        }
+        traffic.output_bytes_written += (rank * 4) as u64;
+    }
+}
+
+/// Row update shared by the fused path (same semantics as `Worker::update`).
+#[inline]
+fn push_row(
+    shared: &SharedRows,
+    locks: &[Mutex<()>],
+    policy: UpdatePolicy,
+    n_locks: usize,
+    idx: usize,
+    row: &[f32],
+    traffic: &mut TrafficCounters,
+) {
+    let rank = row.len();
+    match policy {
+        UpdatePolicy::Local => {
+            // SAFETY: Scheme-1 partitions own disjoint output indices.
+            unsafe { shared.add_row_exclusive(idx, row) };
+            traffic.local_updates += rank as u64;
+        }
+        UpdatePolicy::Global => {
+            let _g = locks[idx % n_locks].lock().unwrap();
+            // SAFETY: shard lock held for this row.
+            unsafe { shared.add_row_exclusive(idx, row) };
+            traffic.global_atomics += rank as u64;
+        }
+    }
+    traffic.output_bytes_written += (rank * 4) as u64;
+}

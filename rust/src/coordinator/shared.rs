@@ -1,0 +1,109 @@
+//! Shared output-factor rows written concurrently by the worker pool.
+//!
+//! The paper's accumulation paths map to two disciplines over one shared
+//! `(I_d, R)` buffer:
+//!
+//! * `Local_Update` (Scheme 1): each output row is owned by exactly one
+//!   partition, so writes are exclusive by construction.
+//! * `Global_Update` (Scheme 2): callers serialize through a sharded lock
+//!   before touching a row.
+//!
+//! Either way the raw add is [`SharedRows::add_row_exclusive`]; safety is
+//! the *caller's* obligation, matching how the GPU code relies on block
+//! ownership vs `atomicAdd`.
+
+use std::marker::PhantomData;
+
+/// A `(rows, rank)` f32 buffer writable from many threads under the
+/// ownership/locking disciplines described above.
+pub struct SharedRows<'a> {
+    ptr: *mut f32,
+    len: usize,
+    rank: usize,
+    _marker: PhantomData<&'a mut [f32]>,
+}
+
+// SAFETY: access discipline documented on `add_row_exclusive`; the struct
+// itself only carries the pointer.
+unsafe impl Send for SharedRows<'_> {}
+unsafe impl Sync for SharedRows<'_> {}
+
+impl<'a> SharedRows<'a> {
+    pub fn new(buf: &'a mut [f32], rank: usize) -> SharedRows<'a> {
+        assert!(rank > 0 && buf.len() % rank == 0);
+        SharedRows {
+            ptr: buf.as_mut_ptr(),
+            len: buf.len(),
+            rank,
+            _marker: PhantomData,
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.len / self.rank
+    }
+
+    /// `buf[idx, :] += row`.
+    ///
+    /// # Safety
+    /// No other thread may concurrently access row `idx`: either the
+    /// caller's partition owns `idx` (Scheme 1) or the caller holds the
+    /// lock shard covering `idx` (Scheme 2).
+    #[inline]
+    pub unsafe fn add_row_exclusive(&self, idx: usize, row: &[f32]) {
+        debug_assert!(idx < self.n_rows());
+        debug_assert_eq!(row.len(), self.rank);
+        let dst = self.ptr.add(idx * self.rank);
+        for (k, &v) in row.iter().enumerate() {
+            *dst.add(k) += v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn single_thread_adds() {
+        let mut buf = vec![0.0f32; 6];
+        let s = SharedRows::new(&mut buf, 2);
+        unsafe {
+            s.add_row_exclusive(1, &[1.0, 2.0]);
+            s.add_row_exclusive(1, &[0.5, 0.5]);
+            s.add_row_exclusive(2, &[9.0, 9.0]);
+        }
+        assert_eq!(buf, vec![0.0, 0.0, 1.5, 2.5, 9.0, 9.0]);
+    }
+
+    #[test]
+    fn disjoint_rows_from_many_threads() {
+        let rows = 64;
+        let rank = 8;
+        let mut buf = vec![0.0f32; rows * rank];
+        let s = SharedRows::new(&mut buf, rank);
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let s = &s;
+                let next = &next;
+                scope.spawn(move || loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= rows {
+                        break;
+                    }
+                    let row = vec![i as f32; rank];
+                    for _ in 0..10 {
+                        unsafe { s.add_row_exclusive(i, &row) };
+                    }
+                });
+            }
+        });
+        for i in 0..rows {
+            for k in 0..rank {
+                assert_eq!(buf[i * rank + k], 10.0 * i as f32);
+            }
+        }
+    }
+}

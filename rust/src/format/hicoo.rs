@@ -1,0 +1,179 @@
+//! HiCOO: hierarchical block-compressed COO (Li et al., SC'18) — the
+//! substrate of the ParTI-GPU baseline.
+//!
+//! Nonzeros are grouped into aligned 2^sb-sized cubical blocks; each block
+//! stores its base coordinates once (wide ints) and per-element offsets in
+//! narrow ints (u8 here, sb ≤ 8). Saves memory vs COO when blocks are
+//! dense; execution walks blocks and decodes base+offset.
+//!
+//! Algorithmic skeleton, not a CUDA port (DESIGN.md §5 substitution 3).
+
+use crate::tensor::SparseTensorCOO;
+
+/// One HiCOO block.
+#[derive(Clone, Debug)]
+pub struct HicooBlock {
+    /// Block base coordinate per mode (already shifted, i.e. actual coord
+    /// = `base[w] + off[w][e]`).
+    pub base: Vec<u32>,
+    /// Per-mode element offsets within the block (`off[w].len() == nnz`).
+    pub off: Vec<Vec<u8>>,
+    pub vals: Vec<f32>,
+}
+
+impl HicooBlock {
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    #[inline]
+    pub fn coord(&self, e: usize, w: usize) -> u32 {
+        self.base[w] + self.off[w][e] as u32
+    }
+}
+
+/// The complete HiCOO tensor.
+#[derive(Clone, Debug)]
+pub struct HicooTensor {
+    /// log2 of the block edge length.
+    pub sb: u32,
+    pub blocks: Vec<HicooBlock>,
+    pub dims: Vec<u32>,
+}
+
+impl HicooTensor {
+    /// Build with block edge `2^sb` (paper default sb=7 → 128; we default
+    /// to sb=7 in the baseline executor).
+    pub fn build(tensor: &SparseTensorCOO, sb: u32) -> HicooTensor {
+        assert!(sb <= 8, "u8 offsets require sb <= 8");
+        let n = tensor.n_modes();
+        let nnz = tensor.nnz();
+        // Sort by block key (lexicographic on block coords), then by
+        // in-block offset — the Z-order variant of the original paper is
+        // unnecessary for our purposes.
+        let mut perm: Vec<u32> = (0..nnz as u32).collect();
+        let block_of = |t: u32, w: usize| tensor.inds[w][t as usize] >> sb;
+        perm.sort_unstable_by(|&a, &b| {
+            for w in 0..n {
+                match block_of(a, w).cmp(&block_of(b, w)) {
+                    std::cmp::Ordering::Equal => continue,
+                    o => return o,
+                }
+            }
+            for w in 0..n {
+                match tensor.inds[w][a as usize].cmp(&tensor.inds[w][b as usize]) {
+                    std::cmp::Ordering::Equal => continue,
+                    o => return o,
+                }
+            }
+            std::cmp::Ordering::Equal
+        });
+        let mut blocks: Vec<HicooBlock> = Vec::new();
+        for &t in &perm {
+            let same = blocks.last().is_some_and(|b| {
+                (0..n).all(|w| b.base[w] >> sb == block_of(t, w))
+            });
+            if !same {
+                blocks.push(HicooBlock {
+                    base: (0..n).map(|w| block_of(t, w) << sb).collect(),
+                    off: vec![Vec::new(); n],
+                    vals: Vec::new(),
+                });
+            }
+            let b = blocks.last_mut().unwrap();
+            for w in 0..n {
+                b.off[w].push((tensor.inds[w][t as usize] - b.base[w]) as u8);
+            }
+            b.vals.push(tensor.vals[t as usize]);
+        }
+        HicooTensor {
+            sb,
+            blocks,
+            dims: tensor.dims.clone(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.blocks.iter().map(|b| b.nnz()).sum()
+    }
+
+    /// Stored bytes: per block, N u32 bases + per element N u8 offsets +
+    /// f32 value.
+    pub fn stored_bytes(&self) -> u64 {
+        let n = self.dims.len() as u64;
+        self.blocks
+            .iter()
+            .map(|b| n * 4 + b.nnz() as u64 * (n + 4))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::synth::DatasetProfile;
+
+    #[test]
+    fn roundtrip_coordinates() {
+        let t = DatasetProfile::uber().scaled(0.005).generate(21);
+        let h = HicooTensor::build(&t, 7);
+        assert_eq!(h.nnz(), t.nnz());
+        let n = t.n_modes();
+        let mut got: Vec<(Vec<u32>, f32)> = h
+            .blocks
+            .iter()
+            .flat_map(|b| {
+                (0..b.nnz()).map(move |e| {
+                    ((0..n).map(|w| b.coord(e, w)).collect(), b.vals[e])
+                })
+            })
+            .collect();
+        let mut want: Vec<(Vec<u32>, f32)> =
+            (0..t.nnz()).map(|e| (t.coords(e), t.vals[e])).collect();
+        got.sort_by(|a, b| a.0.cmp(&b.0));
+        want.sort_by(|a, b| a.0.cmp(&b.0));
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn offsets_fit_block_edge() {
+        let t = DatasetProfile::chicago().scaled(0.005).generate(22);
+        let h = HicooTensor::build(&t, 6);
+        for b in &h.blocks {
+            for col in &b.off {
+                assert!(col.iter().all(|&o| (o as u32) < (1 << 6)));
+            }
+            for (w, &base) in b.base.iter().enumerate() {
+                assert_eq!(base % (1 << 6), 0, "unaligned base in mode {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_blocks_compress_vs_coo() {
+        // A tensor concentrated in one 128³ corner → 1 block, heavy saving.
+        let mut inds = vec![Vec::new(), Vec::new(), Vec::new()];
+        let mut vals = Vec::new();
+        let mut rng = crate::util::rng::Rng::new(5);
+        for _ in 0..2000 {
+            for col in inds.iter_mut() {
+                col.push(rng.next_below(128) as u32);
+            }
+            vals.push(1.0f32);
+        }
+        let t = SparseTensorCOO::new(vec![1000, 1000, 1000], inds, vals)
+            .unwrap()
+            .collapse_duplicates();
+        let h = HicooTensor::build(&t, 7);
+        assert_eq!(h.blocks.len(), 1);
+        let coo_bytes = (t.nnz() * (3 * 4 + 4)) as u64;
+        assert!(h.stored_bytes() < coo_bytes / 2);
+    }
+
+    #[test]
+    fn rejects_large_sb() {
+        let t = DatasetProfile::uber().scaled(0.002).generate(1);
+        let r = std::panic::catch_unwind(|| HicooTensor::build(&t, 9));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,122 @@
+//! Memory accounting for Fig. 5 ("GPU Global Memory Requirement").
+//!
+//! The paper's model (§III-C): one COO copy per mode, each nonzero costing
+//! `|x|_bits = sum_w ceil(log2(I_w)) + beta_float` bits, so all copies cost
+//! `N * |X| * |x|_bits` bits, plus the factor matrices. Fig. 5's point is
+//! that for *small tensors* (the paper's scope) this total fits the 24 GB
+//! of an RTX 3090. We report both the paper-scale numbers (Table III nnz)
+//! and this repo's generated-scale numbers.
+
+use crate::tensor::synth::DatasetProfile;
+
+/// Byte budget of the reference GPU (RTX 3090, Table II).
+pub const RTX3090_BYTES: u64 = 24 * 1024 * 1024 * 1024;
+
+#[derive(Clone, Debug)]
+pub struct MemoryReport {
+    pub name: String,
+    pub n_modes: usize,
+    pub nnz: u64,
+    pub rank: usize,
+    /// Bits per nonzero under the paper's packed model.
+    pub bits_per_nnz: u32,
+    /// All N mode-specific copies, paper's packed-bits model.
+    pub copies_bytes: u64,
+    /// All factor matrices at f32.
+    pub factors_bytes: u64,
+}
+
+impl MemoryReport {
+    /// Paper model for arbitrary dims/nnz (use `profile.paper_nnz` for the
+    /// Fig. 5 reproduction, `tensor.nnz()` for this repo's runs).
+    pub fn model(name: &str, dims: &[u32], nnz: u64, rank: usize) -> MemoryReport {
+        let bits_per_nnz: u32 = dims
+            .iter()
+            .map(|&d| 32 - (d.max(2) - 1).leading_zeros())
+            .sum::<u32>()
+            + 32; // beta_float = 32 (f32 values, like the baselines)
+        let n = dims.len();
+        let copies_bits = n as u64 * nnz * bits_per_nnz as u64;
+        let factors_bytes: u64 = dims.iter().map(|&d| d as u64 * rank as u64 * 4).sum();
+        MemoryReport {
+            name: name.to_string(),
+            n_modes: n,
+            nnz,
+            rank,
+            bits_per_nnz,
+            copies_bytes: copies_bits.div_ceil(8),
+            factors_bytes,
+        }
+    }
+
+    /// Fig. 5 row at the paper's full Table III scale.
+    pub fn paper_scale(profile: &DatasetProfile, rank: usize) -> MemoryReport {
+        Self::model(profile.name, &profile.paper_dims, profile.paper_nnz as u64, rank)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.copies_bytes + self.factors_bytes
+    }
+
+    /// Does the whole working set fit the reference GPU? (The paper's
+    /// *definition* of a small tensor.)
+    pub fn fits_rtx3090(&self) -> bool {
+        self.total_bytes() <= RTX3090_BYTES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_matches_hand_computation() {
+        // dims [4, 8]: bits = 2 + 3 + 32 = 37; 2 copies × 10 nnz × 37 bits
+        // = 740 bits = 93 bytes (rounded up). factors: (4+8)*2*4 = 96 B.
+        let m = MemoryReport::model("toy", &[4, 8], 10, 2);
+        assert_eq!(m.bits_per_nnz, 37);
+        assert_eq!(m.copies_bytes, 93);
+        assert_eq!(m.factors_bytes, 96);
+        assert_eq!(m.total_bytes(), 189);
+    }
+
+    #[test]
+    fn all_paper_tensors_fit_rtx3090_at_r32() {
+        // This is exactly Fig. 5's claim.
+        for p in DatasetProfile::all() {
+            let m = MemoryReport::paper_scale(&p, 32);
+            assert!(
+                m.fits_rtx3090(),
+                "{}: {} bytes exceeds 24 GB",
+                p.name,
+                m.total_bytes()
+            );
+        }
+    }
+
+    #[test]
+    fn nell1_is_the_biggest() {
+        let totals: Vec<(String, u64)> = DatasetProfile::all()
+            .iter()
+            .map(|p| {
+                let m = MemoryReport::paper_scale(p, 32);
+                (p.name.to_string(), m.total_bytes())
+            })
+            .collect();
+        let max = totals.iter().max_by_key(|(_, b)| *b).unwrap();
+        assert_eq!(max.0, "nell-1");
+        // Nell-1: 3 copies × 143.6M × (22+21+25+32 bits = 100 bits) ≈ 5.4 GB
+        // + factors (30.5M rows × 32 × 4 ≈ 3.9 GB) — still under 24 GB.
+        let nell = MemoryReport::paper_scale(&DatasetProfile::nell1(), 32);
+        assert!(nell.total_bytes() > 4 * 1024 * 1024 * 1024u64);
+        assert!(nell.fits_rtx3090());
+    }
+
+    #[test]
+    fn copies_scale_linearly_with_modes() {
+        let m3 = MemoryReport::model("a", &[100, 100, 100], 1000, 8);
+        let m4 = MemoryReport::model("b", &[100, 100, 100, 100], 1000, 8);
+        // 4 modes: more copies AND more bits per nnz.
+        assert!(m4.copies_bytes > m3.copies_bytes * 4 / 3);
+    }
+}

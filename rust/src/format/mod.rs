@@ -1,0 +1,17 @@
+//! Tensor formats.
+//!
+//! * [`mode_specific`] — the paper's contribution: one partition-ordered
+//!   tensor copy per mode (§III-C), with precomputed segment tables.
+//! * [`csf`] — compressed sparse fiber trees (the MM-CSF baseline's
+//!   substrate).
+//! * [`blco`] — blocked linearized COO (the BLCO baseline's substrate).
+//! * [`hicoo`] — block-compressed COO (the ParTI-GPU baseline's substrate).
+//! * [`memory`] — byte accounting for Fig. 5.
+
+pub mod blco;
+pub mod csf;
+pub mod hicoo;
+pub mod memory;
+pub mod mode_specific;
+
+pub use mode_specific::{ModeCopy, ModeSpecificFormat};

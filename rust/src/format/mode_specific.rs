@@ -1,0 +1,214 @@
+//! The paper's mode-specific tensor format (§III-C).
+//!
+//! One COO copy per mode. Copy `d` is ordered partition-major (per the
+//! mode-`d` load-balancing result) and by output index within each
+//! partition, and carries a precomputed **segment table**: the contiguous
+//! run of nonzeros sharing each output index. Those runs are what let the
+//! execution engine (and the L1 segmented kernel) fully reduce an output
+//! row on-chip and write it to "global memory" exactly once — the paper's
+//! "eliminates communication of intermediate values" property.
+
+use crate::hypergraph::Hypergraph;
+use crate::partition::{
+    partition_mode, LoadBalance, ModePartitioning, SchemeUsed, VertexAssign,
+};
+use crate::tensor::SparseTensorCOO;
+
+/// One contiguous run of nonzeros sharing an output index, inside one
+/// partition of one mode copy. Offsets are absolute into the copy's arrays.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Segment {
+    pub out_index: u32,
+    pub start: u32,
+    pub end: u32, // exclusive
+}
+
+/// The tensor copy specialised for one output mode.
+#[derive(Clone, Debug)]
+pub struct ModeCopy {
+    pub partitioning: ModePartitioning,
+    /// The permuted tensor (same dims/vals, partition-major nonzero order).
+    pub tensor: SparseTensorCOO,
+    /// `segments[z]` = runs of partition `z`, in order.
+    pub segments: Vec<Vec<Segment>>,
+}
+
+impl ModeCopy {
+    pub fn build(
+        original: &SparseTensorCOO,
+        hg: &Hypergraph,
+        mode: usize,
+        kappa: usize,
+        lb: LoadBalance,
+        assign: VertexAssign,
+    ) -> ModeCopy {
+        let partitioning = partition_mode(original, hg, mode, kappa, lb, assign);
+        let tensor = original.permuted(&partitioning.perm);
+        let col = &tensor.inds[mode];
+        let mut segments = Vec::with_capacity(kappa);
+        for z in 0..kappa {
+            let (lo, hi) = (partitioning.bounds[z], partitioning.bounds[z + 1]);
+            let mut runs = Vec::new();
+            let mut t = lo;
+            while t < hi {
+                let idx = col[t];
+                let start = t;
+                while t < hi && col[t] == idx {
+                    t += 1;
+                }
+                runs.push(Segment {
+                    out_index: idx,
+                    start: start as u32,
+                    end: t as u32,
+                });
+            }
+            segments.push(runs);
+        }
+        ModeCopy {
+            partitioning,
+            tensor,
+            segments,
+        }
+    }
+
+    pub fn mode(&self) -> usize {
+        self.partitioning.mode
+    }
+
+    /// Whether this copy's accumulation can use `Local_Update` (owned
+    /// output rows — Scheme 1) or needs `Global_Update` (Scheme 2).
+    pub fn needs_global_update(&self) -> bool {
+        self.partitioning.scheme == SchemeUsed::ElementPartitioned
+    }
+
+    /// Total segments (= output-row writes the engine will perform).
+    pub fn n_segments(&self) -> usize {
+        self.segments.iter().map(|s| s.len()).sum()
+    }
+}
+
+/// All `N` mode copies of a tensor — the complete mode-specific format.
+#[derive(Clone, Debug)]
+pub struct ModeSpecificFormat {
+    pub copies: Vec<ModeCopy>,
+    pub kappa: usize,
+    pub lb: LoadBalance,
+}
+
+impl ModeSpecificFormat {
+    pub fn build(
+        tensor: &SparseTensorCOO,
+        kappa: usize,
+        lb: LoadBalance,
+        assign: VertexAssign,
+    ) -> ModeSpecificFormat {
+        let hg = Hypergraph::of(tensor);
+        let copies = (0..tensor.n_modes())
+            .map(|d| ModeCopy::build(tensor, &hg, d, kappa, lb, assign))
+            .collect();
+        ModeSpecificFormat {
+            copies,
+            kappa,
+            lb,
+        }
+    }
+
+    pub fn n_modes(&self) -> usize {
+        self.copies.len()
+    }
+
+    /// Actual bytes of all copies as stored by this implementation
+    /// (u32 per coordinate + f32 value, × N copies).
+    pub fn stored_bytes(&self) -> u64 {
+        self.copies
+            .iter()
+            .map(|c| {
+                let n = c.tensor.n_modes() as u64;
+                c.tensor.nnz() as u64 * (n * 4 + 4)
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::synth::DatasetProfile;
+
+    fn fmt(scale: f64) -> (SparseTensorCOO, ModeSpecificFormat) {
+        let t = DatasetProfile::uber().scaled(scale).generate(5);
+        let f = ModeSpecificFormat::build(&t, 8, LoadBalance::Adaptive, VertexAssign::Cyclic);
+        (t, f)
+    }
+
+    #[test]
+    fn one_copy_per_mode() {
+        let (t, f) = fmt(0.005);
+        assert_eq!(f.n_modes(), t.n_modes());
+        for (d, c) in f.copies.iter().enumerate() {
+            assert_eq!(c.mode(), d);
+            assert_eq!(c.tensor.nnz(), t.nnz());
+            assert_eq!(c.tensor.dims, t.dims);
+        }
+    }
+
+    #[test]
+    fn segments_tile_each_partition() {
+        let (_, f) = fmt(0.005);
+        for c in &f.copies {
+            for z in 0..f.kappa {
+                let (lo, hi) = (c.partitioning.bounds[z], c.partitioning.bounds[z + 1]);
+                let mut cursor = lo as u32;
+                for s in &c.segments[z] {
+                    assert_eq!(s.start, cursor, "gap in partition {z}");
+                    assert!(s.end > s.start);
+                    cursor = s.end;
+                }
+                assert_eq!(cursor as usize, hi, "partition {z} not covered");
+            }
+        }
+    }
+
+    #[test]
+    fn segments_have_uniform_out_index() {
+        let (_, f) = fmt(0.005);
+        for c in &f.copies {
+            let col = &c.tensor.inds[c.mode()];
+            for runs in &c.segments {
+                for s in runs {
+                    for t in s.start..s.end {
+                        assert_eq!(col[t as usize], s.out_index);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn segment_out_indices_unique_per_partition() {
+        let (_, f) = fmt(0.005);
+        for c in &f.copies {
+            for runs in &c.segments {
+                for w in runs.windows(2) {
+                    assert!(w[0].out_index < w[1].out_index);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn update_policy_follows_scheme() {
+        // uber: mode 1 has 24 indices < κ=82 → global; others local.
+        let t = DatasetProfile::uber().scaled(0.005).generate(5);
+        let f = ModeSpecificFormat::build(&t, 82, LoadBalance::Adaptive, VertexAssign::Cyclic);
+        assert!(!f.copies[0].needs_global_update());
+        assert!(f.copies[1].needs_global_update());
+    }
+
+    #[test]
+    fn stored_bytes_formula() {
+        let (t, f) = fmt(0.005);
+        // 4 modes: each copy stores 4 u32 coords + 1 f32 = 20 B per nnz.
+        assert_eq!(f.stored_bytes(), (t.nnz() * 20 * 4) as u64);
+    }
+}

@@ -1,0 +1,117 @@
+//! Hypergraph view of a sparse tensor (§III-A of the paper).
+//!
+//! The tensor `X` maps to a hypergraph `G(I, Υ)`: one vertex per index of
+//! every mode, one hyperedge per nonzero (connecting its N coordinates).
+//! The partitioner only ever needs two derived quantities, so that is all
+//! we materialise:
+//!
+//! * the per-mode **vertex degrees** (hyperedges incident on each mode-`d`
+//!   vertex = nonzeros whose mode-`d` coordinate is that index), and
+//! * the **degree-ordered vertex list** `I_d-ordered` used by load
+//!   balancing Scheme 1.
+
+use crate::tensor::SparseTensorCOO;
+
+/// Per-mode degree table of the tensor's hypergraph.
+#[derive(Clone, Debug)]
+pub struct Hypergraph {
+    /// `degrees[d][i]` = number of hyperedges incident on vertex `i` of
+    /// mode `d`.
+    pub degrees: Vec<Vec<u32>>,
+}
+
+impl Hypergraph {
+    pub fn of(tensor: &SparseTensorCOO) -> Hypergraph {
+        let degrees = tensor
+            .dims
+            .iter()
+            .zip(&tensor.inds)
+            .map(|(&dim, col)| {
+                let mut deg = vec![0u32; dim as usize];
+                for &i in col {
+                    deg[i as usize] += 1;
+                }
+                deg
+            })
+            .collect();
+        Hypergraph { degrees }
+    }
+
+    pub fn n_modes(&self) -> usize {
+        self.degrees.len()
+    }
+
+    /// Number of vertices of mode `d` with at least one incident hyperedge.
+    pub fn active_vertices(&self, d: usize) -> usize {
+        self.degrees[d].iter().filter(|&&x| x > 0).count()
+    }
+
+    /// The paper's `I_d-ordered`: vertices of mode `d` sorted by descending
+    /// degree (ties by index for determinism). Zero-degree vertices are
+    /// included at the tail — they cost nothing to assign.
+    pub fn ordered_vertices(&self, d: usize) -> Vec<u32> {
+        let deg = &self.degrees[d];
+        let mut order: Vec<u32> = (0..deg.len() as u32).collect();
+        order.sort_unstable_by(|&a, &b| {
+            deg[b as usize]
+                .cmp(&deg[a as usize])
+                .then(a.cmp(&b))
+        });
+        order
+    }
+
+    /// Maximum degree of mode `d` (the heaviest fiber — a lower bound on
+    /// any index-exclusive partitioning's makespan).
+    pub fn max_degree(&self, d: usize) -> u32 {
+        self.degrees[d].iter().copied().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> SparseTensorCOO {
+        SparseTensorCOO::new(
+            vec![3, 2],
+            vec![vec![0, 0, 2, 0], vec![0, 1, 1, 0]],
+            vec![1.0; 4],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn degrees_count_incidences() {
+        let h = Hypergraph::of(&t());
+        assert_eq!(h.degrees[0], vec![3, 0, 1]);
+        assert_eq!(h.degrees[1], vec![2, 2]);
+    }
+
+    #[test]
+    fn degrees_sum_to_nnz_per_mode() {
+        let tensor = crate::tensor::synth::DatasetProfile::uber()
+            .scaled(0.005)
+            .generate(1);
+        let h = Hypergraph::of(&tensor);
+        for d in 0..tensor.n_modes() {
+            let total: u64 = h.degrees[d].iter().map(|&x| x as u64).sum();
+            assert_eq!(total, tensor.nnz() as u64);
+        }
+    }
+
+    #[test]
+    fn ordered_vertices_descending() {
+        let h = Hypergraph::of(&t());
+        assert_eq!(h.ordered_vertices(0), vec![0, 2, 1]);
+        // tie in mode 1 broken by index
+        assert_eq!(h.ordered_vertices(1), vec![0, 1]);
+    }
+
+    #[test]
+    fn active_and_max() {
+        let h = Hypergraph::of(&t());
+        assert_eq!(h.active_vertices(0), 2);
+        assert_eq!(h.max_degree(0), 3);
+        assert_eq!(h.max_degree(1), 2);
+    }
+}

@@ -1,0 +1,54 @@
+//! # spmttkrp — sparse MTTKRP for small tensor decomposition
+//!
+//! Reproduction of *"Accelerating Sparse MTTKRP for Small Tensor
+//! Decomposition on GPU"* (Wijeratne, Kannan, Prasanna; CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: the
+//!   mode-specific tensor format, the adaptive hypergraph load-balancing
+//!   schemes, and the SM-pool execution engine that plays the role of the
+//!   GPU (82 SMs → `κ` worker threads, thread blocks → `(P, R)` tiles,
+//!   local/global atomic updates → owned buffers / sharded accumulation).
+//! * **L2/L1 (python/, build time only)** — the elementwise MTTKRP block
+//!   computation, Gram/solve/fit blocks as JAX functions wrapping Pallas
+//!   kernels, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **runtime** — a PJRT CPU client that loads the HLO artifacts once and
+//!   executes them from the hot path. Python never runs at request time.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use spmttkrp::prelude::*;
+//!
+//! let tensor = synth::DatasetProfile::uber().scaled(0.05).generate(42);
+//! let cfg = EngineConfig { sm_count: 8, rank: 16, ..Default::default() };
+//! let engine = Engine::with_native_backend(&tensor, cfg).unwrap();
+//! let factors = FactorSet::random(&tensor.dims, 16, 7);
+//! let out = engine.mttkrp_all_modes(&factors).unwrap();
+//! assert_eq!(out.len(), tensor.n_modes());
+//! ```
+//!
+//! See `examples/` for the figure-reproduction drivers and `DESIGN.md` for
+//! the experiment index.
+
+pub mod baselines;
+pub mod bench_support;
+pub mod coordinator;
+pub mod cpd;
+pub mod format;
+pub mod hypergraph;
+pub mod metrics;
+pub mod partition;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Most-used types, re-exported for `use spmttkrp::prelude::*`.
+pub mod prelude {
+    pub use crate::coordinator::{Engine, EngineConfig, UpdatePolicy};
+    pub use crate::cpd::{CpdConfig, CpdResult, als};
+    pub use crate::format::{ModeSpecificFormat, memory::MemoryReport};
+    pub use crate::partition::{LoadBalance, ModePartitioning};
+    pub use crate::runtime::{Backend, NativeBackend, PjrtBackend};
+    pub use crate::tensor::{FactorSet, SparseTensorCOO, synth};
+}

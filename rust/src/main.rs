@@ -1,0 +1,294 @@
+//! `spmttkrp` — CLI leader for the spMTTKRP engine.
+//!
+//! Subcommands:
+//!   gen        generate a synthetic Table III tensor to a .tns file
+//!   info       tensor + partitioning + memory report
+//!   mttkrp     run spMTTKRP along all modes, print per-mode reports
+//!   cpd        run CPD-ALS, print the fit curve
+//!   warmup     compile all PJRT artifacts (smoke check of the AOT path)
+//!
+//! Arg parsing is in-tree (no clap in the vendored crate set); flags are
+//! `--key value`.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{bail, Context, Result};
+
+use spmttkrp::coordinator::{Engine, EngineConfig};
+use spmttkrp::cpd::{als, CpdConfig};
+use spmttkrp::format::memory::MemoryReport;
+use spmttkrp::partition::{LoadBalance, VertexAssign};
+use spmttkrp::runtime::PjrtBackend;
+use spmttkrp::tensor::synth::DatasetProfile;
+use spmttkrp::tensor::{io, FactorSet, SparseTensorCOO};
+use spmttkrp::util::human_bytes;
+
+const USAGE: &str = "\
+spmttkrp — sparse MTTKRP for small tensor decomposition
+
+USAGE: spmttkrp <COMMAND> [--key value ...]
+
+COMMANDS:
+  gen      --dataset <name|all> [--scale F] [--seed N] [--out DIR]
+  info     --dataset <name> [--scale F] [--kappa N] [--rank N]
+  mttkrp   --dataset <name> [--scale F] [--kappa N] [--rank N]
+           [--backend native|pjrt] [--lb adaptive|scheme1|scheme2]
+           [--threads N] [--seg true|false]
+  cpd      --dataset <name> [--scale F] [--rank N] [--iters N]
+           [--backend native|pjrt] [--kappa N] [--tol F]
+  warmup   (compile every artifact on the PJRT client)
+
+datasets: chicago enron nell-1 nips uber vast
+";
+
+struct Args {
+    cmd: String,
+    kv: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut kv = HashMap::new();
+        while let Some(k) = it.next() {
+            let key = k
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got '{k}'"))?
+                .to_string();
+            let v = it
+                .next()
+                .with_context(|| format!("missing value for --{key}"))?;
+            kv.insert(key, v);
+        }
+        Ok(Args { cmd, kv })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.kv.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad value for --{key}: '{s}'")),
+        }
+    }
+
+    fn str_opt(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(|s| s.as_str())
+    }
+}
+
+fn dataset(args: &Args) -> Result<SparseTensorCOO> {
+    if let Some(path) = args.str_opt("tns") {
+        return io::read_tns(&PathBuf::from(path), None);
+    }
+    let name = args
+        .str_opt("dataset")
+        .context("--dataset required (chicago|enron|nell-1|nips|uber|vast)")?;
+    let scale: f64 = args.get("scale", 0.05)?;
+    let seed: u64 = args.get("seed", 42)?;
+    let profile =
+        DatasetProfile::by_name(name).with_context(|| format!("unknown dataset '{name}'"))?;
+    Ok(profile.scaled(scale).generate(seed))
+}
+
+fn lb_of(s: &str) -> Result<LoadBalance> {
+    Ok(match s {
+        "adaptive" => LoadBalance::Adaptive,
+        "scheme1" => LoadBalance::ForceScheme1,
+        "scheme2" => LoadBalance::ForceScheme2,
+        _ => bail!("bad --lb '{s}'"),
+    })
+}
+
+fn engine_of(args: &Args, tensor: &SparseTensorCOO) -> Result<Engine> {
+    let cfg = EngineConfig {
+        sm_count: args.get("kappa", 82)?,
+        threads: args.get(
+            "threads",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        )?,
+        rank: args.get("rank", 32)?,
+        lb: lb_of(args.str_opt("lb").unwrap_or("adaptive"))?,
+        assign: VertexAssign::Cyclic,
+        use_seg_kernel: args.get("seg", true)?,
+        lock_shards: 64,
+        fused: args.get("fused", true)?,
+    };
+    match args.str_opt("backend").unwrap_or("native") {
+        "native" => Engine::with_native_backend(tensor, cfg),
+        "pjrt" => Engine::with_pjrt_backend(tensor, cfg),
+        other => bail!("bad --backend '{other}'"),
+    }
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let out: PathBuf = args.get("out", PathBuf::from("data"))?;
+    std::fs::create_dir_all(&out)?;
+    let scale: f64 = args.get("scale", 0.05)?;
+    let seed: u64 = args.get("seed", 42)?;
+    let which = args.str_opt("dataset").unwrap_or("all");
+    let profiles = if which == "all" {
+        DatasetProfile::all()
+    } else {
+        vec![DatasetProfile::by_name(which).context("unknown dataset")?]
+    };
+    for p in profiles {
+        let scaled = p.clone().scaled(scale);
+        let t = scaled.generate(seed);
+        let path = out.join(format!("{}.tns", p.name));
+        io::write_tns(&t, &path)?;
+        println!(
+            "{}: {} nnz (paper {} — scale {:.5}) -> {}",
+            p.name,
+            t.nnz(),
+            p.paper_nnz,
+            scaled.scale_vs_paper(),
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let t = dataset(args)?;
+    let rank: usize = args.get("rank", 32)?;
+    let kappa: usize = args.get("kappa", 82)?;
+    println!(
+        "dims {:?}  nnz {}  density {:.3e}  bits/nnz {}",
+        t.dims,
+        t.nnz(),
+        t.density(),
+        t.bits_per_nnz(32)
+    );
+    let engine = Engine::with_native_backend(
+        &t,
+        EngineConfig {
+            sm_count: kappa,
+            rank,
+            ..Default::default()
+        },
+    )?;
+    for (d, copy) in engine.format.copies.iter().enumerate() {
+        let st = spmttkrp::partition::stats::evaluate(&copy.partitioning, 0);
+        println!(
+            "mode {d}: I_d={:<9} scheme={:?} segments={} imbalance={:.3} idle={}",
+            t.dims[d],
+            copy.partitioning.scheme,
+            copy.n_segments(),
+            st.imbalance.factor,
+            st.idle_partitions
+        );
+    }
+    let m = MemoryReport::model("this-run", &t.dims, t.nnz() as u64, rank);
+    println!(
+        "memory (paper model): copies {} + factors {} = {}",
+        human_bytes(m.copies_bytes),
+        human_bytes(m.factors_bytes),
+        human_bytes(m.total_bytes())
+    );
+    println!(
+        "memory (as stored): {}",
+        human_bytes(engine.format.stored_bytes())
+    );
+    Ok(())
+}
+
+fn cmd_mttkrp(args: &Args) -> Result<()> {
+    let t = dataset(args)?;
+    let engine = engine_of(args, &t)?;
+    let factors = FactorSet::random(&t.dims, engine.config.rank, args.get("seed", 42)?);
+    let (_, report) = engine.mttkrp_all_modes_with_report(&factors)?;
+    for m in &report.modes {
+        println!(
+            "mode {}: {:>9.3} ms  traffic {}  atomics {}  local {}  imbalance {:.3}",
+            m.mode,
+            m.wall.as_secs_f64() * 1e3,
+            human_bytes(m.traffic.total_bytes()),
+            m.traffic.global_atomics,
+            m.traffic.local_updates,
+            m.imbalance.factor
+        );
+    }
+    let total = report.total_wall();
+    println!(
+        "total: {:.3} ms ({} modes, backend {})",
+        total.as_secs_f64() * 1e3,
+        report.modes.len(),
+        engine.backend().name()
+    );
+    Ok(())
+}
+
+fn cmd_cpd(args: &Args) -> Result<()> {
+    let t = dataset(args)?;
+    let engine = engine_of(args, &t)?;
+    let cfg = CpdConfig {
+        rank: engine.config.rank,
+        max_iters: args.get("iters", 10)?,
+        tol: args.get("tol", 1e-5)?,
+        damp: args.get("damp", 1e-6)?,
+        seed: args.get("seed", 42)?,
+    };
+    let t0 = std::time::Instant::now();
+    let res = als(&engine, &t, &cfg)?;
+    let wall = t0.elapsed();
+    for (i, f) in res.fits.iter().enumerate() {
+        println!("iter {:>3}: fit {f:.6}", i + 1);
+    }
+    println!(
+        "converged={} iters={} final_fit={:.6} wall={:.2}s backend={}",
+        res.iterations < cfg.max_iters,
+        res.iterations,
+        res.final_fit(),
+        wall.as_secs_f64(),
+        engine.backend().name()
+    );
+    Ok(())
+}
+
+fn cmd_warmup() -> Result<()> {
+    let be = PjrtBackend::load_default()?;
+    let n = be.manifest().entries.len();
+    let t0 = std::time::Instant::now();
+    be.warmup()?;
+    println!(
+        "compiled {} artifacts in {:.2}s (P={}, ranks {:?})",
+        n,
+        t0.elapsed().as_secs_f64(),
+        be.manifest().block_p,
+        be.manifest().ranks
+    );
+    Ok(())
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "gen" => cmd_gen(&args),
+        "info" => cmd_info(&args),
+        "mttkrp" => cmd_mttkrp(&args),
+        "cpd" => cmd_cpd(&args),
+        "warmup" => cmd_warmup(),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprint!("unknown command '{other}'\n\n{USAGE}");
+            bail!("bad usage")
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! Execution metrics and the simulated global-memory traffic model.
+//!
+//! The paper's wins are architectural: fewer bytes moved between SMs and
+//! GPU global memory, no global atomics on Scheme-1 modes, no idle SMs on
+//! Scheme-2 modes. Since our "GPU" is a worker pool, we *count* those
+//! quantities explicitly — every executor (ours and the baselines) reports
+//! a [`TrafficCounters`] so Fig. 3/4 can be compared on both wallclock and
+//! modeled traffic.
+
+use std::time::Duration;
+
+use crate::util::stats::Imbalance;
+
+/// Modeled cost of one *scalar* global atomic update (`atomicAdd` visible
+/// to all SMs), added to a partition's simulated time. Local (block-
+/// resident) updates are free, like L1-cache accumulators on the GPU.
+///
+/// Calibration: on Ampere an *uncontended* global atomicAdd has roughly
+/// the throughput of a coalesced global write, i.e. ≈ 1× the cost of the
+/// scalar FMA feeding it — so the penalty is set to ≈ 1× this substrate's
+/// measured per-scalar fused-loop cost (~2 ns on this host). Setting it
+/// much higher over-weights Scheme 2's atomics relative to Scheme 1's
+/// idle SMs and inverts the paper's Fig. 4 crossover (the adaptive rule
+/// exists precisely because idle SMs cost *more* than atomics when
+/// `I_d < κ`). Override with `SPMTTKRP_ATOMIC_NS`.
+pub fn global_atomic_penalty_ns() -> f64 {
+    static CACHE: std::sync::OnceLock<f64> = std::sync::OnceLock::new();
+    *CACHE.get_or_init(|| {
+        std::env::var("SPMTTKRP_ATOMIC_NS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(2.0)
+    })
+}
+
+/// Simulated SM-parallel execution time of one mode: each of the κ
+/// partitions is what one SM executes serially, so the mode's time on a
+/// κ-SM device is the *makespan* — the maximum over partitions of
+/// (measured serial partition time + modeled atomic penalty). This is the
+/// quantity the paper's figures plot; single-threaded wallclock (the sum)
+/// cannot exhibit idle-SM effects.
+pub fn makespan(partition_costs: &[Duration]) -> Duration {
+    partition_costs.iter().copied().max().unwrap_or_default()
+}
+
+/// Modeled external-memory traffic and synchronization counts for one
+/// spMTTKRP execution (one mode or summed over all modes).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TrafficCounters {
+    /// Bytes of tensor elements streamed in from "global memory".
+    pub tensor_bytes_read: u64,
+    /// Bytes of factor-matrix rows gathered from "global memory".
+    pub factor_bytes_read: u64,
+    /// Bytes of output rows written back.
+    pub output_bytes_written: u64,
+    /// Bytes of *intermediate* (partial-accumulation) values spilled to
+    /// global memory and re-read. Zero for the paper's format — nonzero
+    /// for baselines that keep partials in global buffers.
+    pub intermediate_bytes: u64,
+    /// Atomic updates visible to all SMs (Scheme 2 / conflict resolution).
+    pub global_atomics: u64,
+    /// Updates resolved inside one SM/thread block (Local_Update).
+    pub local_updates: u64,
+}
+
+impl TrafficCounters {
+    pub fn total_bytes(&self) -> u64 {
+        self.tensor_bytes_read
+            + self.factor_bytes_read
+            + self.output_bytes_written
+            + self.intermediate_bytes
+    }
+
+    pub fn add(&mut self, o: &TrafficCounters) {
+        self.tensor_bytes_read += o.tensor_bytes_read;
+        self.factor_bytes_read += o.factor_bytes_read;
+        self.output_bytes_written += o.output_bytes_written;
+        self.intermediate_bytes += o.intermediate_bytes;
+        self.global_atomics += o.global_atomics;
+        self.local_updates += o.local_updates;
+    }
+}
+
+/// Result of executing spMTTKRP along one mode.
+#[derive(Clone, Debug)]
+pub struct ModeExecReport {
+    pub mode: usize,
+    /// Wallclock on this machine (sums partition work over OS threads).
+    pub wall: Duration,
+    /// Simulated κ-SM-parallel time: see [`makespan`]. The figure benches
+    /// plot this.
+    pub sim: Duration,
+    /// Per-partition (per-SM) simulated costs, `len == κ`; `sim` is their
+    /// max. Exposed so repeated runs can de-noise with an element-wise min
+    /// before taking the makespan (`bench_support::time_sim`).
+    pub part_costs: Vec<Duration>,
+    pub traffic: TrafficCounters,
+    /// Per-SM load imbalance (max/mean of per-partition nnz).
+    pub imbalance: Imbalance,
+}
+
+/// Result of a full all-modes execution (Algorithm 1).
+#[derive(Clone, Debug)]
+pub struct ExecReport {
+    pub modes: Vec<ModeExecReport>,
+}
+
+impl ExecReport {
+    pub fn total_wall(&self) -> Duration {
+        self.modes.iter().map(|m| m.wall).sum()
+    }
+
+    /// Total simulated SM-parallel time across modes (Fig. 3's metric:
+    /// per-mode times summed — modes are separated by a global barrier).
+    pub fn total_sim(&self) -> Duration {
+        self.modes.iter().map(|m| m.sim).sum()
+    }
+
+    pub fn total_traffic(&self) -> TrafficCounters {
+        let mut t = TrafficCounters::default();
+        for m in &self.modes {
+            t.add(&m.traffic);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_add() {
+        let mut a = TrafficCounters {
+            tensor_bytes_read: 10,
+            factor_bytes_read: 20,
+            output_bytes_written: 5,
+            intermediate_bytes: 0,
+            global_atomics: 2,
+            local_updates: 7,
+        };
+        let b = a;
+        a.add(&b);
+        assert_eq!(a.tensor_bytes_read, 20);
+        assert_eq!(a.global_atomics, 4);
+        assert_eq!(a.total_bytes(), 70);
+    }
+
+    #[test]
+    fn report_totals() {
+        let m = |mode| ModeExecReport {
+            mode,
+            wall: Duration::from_millis(10),
+            sim: Duration::from_millis(3),
+            part_costs: vec![Duration::from_millis(3); 2],
+            traffic: TrafficCounters {
+                tensor_bytes_read: 100,
+                ..Default::default()
+            },
+            imbalance: Imbalance::of(&[1, 1]),
+        };
+        let r = ExecReport {
+            modes: vec![m(0), m(1), m(2)],
+        };
+        assert_eq!(r.total_wall(), Duration::from_millis(30));
+        assert_eq!(r.total_sim(), Duration::from_millis(9));
+        assert_eq!(r.total_traffic().tensor_bytes_read, 300);
+    }
+}
+
+#[cfg(test)]
+mod makespan_tests {
+    use super::*;
+
+    #[test]
+    fn makespan_is_max() {
+        let costs = [
+            Duration::from_micros(5),
+            Duration::from_micros(9),
+            Duration::from_micros(1),
+        ];
+        assert_eq!(makespan(&costs), Duration::from_micros(9));
+        assert_eq!(makespan(&[]), Duration::ZERO);
+    }
+
+    #[test]
+    fn atomic_penalty_positive() {
+        assert!(global_atomic_penalty_ns() >= 0.0);
+    }
+}

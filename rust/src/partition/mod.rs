@@ -1,0 +1,303 @@
+//! Tensor partitioning / load balancing (§III-B of the paper).
+//!
+//! For each output mode `d` the tensor is split into `κ` partitions, one
+//! per (simulated) streaming multiprocessor:
+//!
+//! * **Scheme 1** (`I_d ≥ κ`, [`scheme1`]) — vertices of `I_d-ordered`
+//!   (descending degree) are dealt to partitions; every partition then
+//!   collects the hyperedges incident on its vertices. Output indices are
+//!   *owned* by exactly one partition, so accumulation needs no global
+//!   atomics (`Local_Update`).
+//! * **Scheme 2** (`I_d < κ`, [`scheme2`]) — hyperedges sorted by output
+//!   vertex are split into `κ` equal-size chunks. Keeps every SM busy but
+//!   an output row may span chunks → `Global_Update` (global atomics).
+//! * **Adaptive** ([`partition_mode`]) — pick per the `I_d ≥ κ` test. The
+//!   paper's Fig. 4 ablation toggles this choice; [`LoadBalance`] exposes
+//!   `ForceScheme1` / `ForceScheme2` for exactly that.
+//!
+//! Vertex dealing supports both the paper's cyclic assignment and the
+//! classical LPT greedy (least-loaded bin) that realises Graham's 4/3
+//! bound; `VertexAssign` selects, `stats::graham_check` verifies.
+
+pub mod stats;
+
+use crate::hypergraph::Hypergraph;
+use crate::tensor::SparseTensorCOO;
+
+/// Which load-balancing scheme to use when partitioning a mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoadBalance {
+    /// The paper's adaptive choice: Scheme 1 iff `I_d >= κ`.
+    Adaptive,
+    /// Fig. 4 ablation: always distribute output indices (Scheme 1).
+    ForceScheme1,
+    /// Fig. 4 ablation: always distribute nonzeros (Scheme 2).
+    ForceScheme2,
+}
+
+/// How Scheme 1 deals ordered vertices to partitions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum VertexAssign {
+    /// Round-robin over the degree-ordered list (the paper's description).
+    #[default]
+    Cyclic,
+    /// Least-loaded bin (LPT greedy, Graham's 4/3-bound construction).
+    Greedy,
+}
+
+/// Which scheme a mode partitioning actually used.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchemeUsed {
+    IndexPartitioned, // Scheme 1
+    ElementPartitioned, // Scheme 2
+}
+
+/// The partitioning of one tensor mode into `κ` SM-sized pieces.
+///
+/// `perm` reorders the tensor's nonzeros (partition-major, and by output
+/// index within each partition); `bounds[z]..bounds[z+1]` is partition `z`'s
+/// range in the permuted order. For Scheme 1, `owner[i]` is the partition
+/// owning output index `i` (guaranteeing atomic-free accumulation).
+#[derive(Clone, Debug)]
+pub struct ModePartitioning {
+    pub mode: usize,
+    pub scheme: SchemeUsed,
+    pub kappa: usize,
+    /// Permutation: position `t` in the partition-ordered layout holds
+    /// original nonzero `perm[t]`.
+    pub perm: Vec<u32>,
+    /// `κ + 1` offsets into `perm`.
+    pub bounds: Vec<usize>,
+    /// Scheme 1 only: output-index → owning partition.
+    pub owner: Option<Vec<u32>>,
+}
+
+impl ModePartitioning {
+    /// nnz assigned to partition `z`.
+    pub fn partition_len(&self, z: usize) -> usize {
+        self.bounds[z + 1] - self.bounds[z]
+    }
+
+    /// Per-partition nnz loads (for imbalance reporting).
+    pub fn loads(&self) -> Vec<u64> {
+        (0..self.kappa)
+            .map(|z| self.partition_len(z) as u64)
+            .collect()
+    }
+}
+
+/// Partition mode `d` with the adaptive rule (or a forced scheme).
+pub fn partition_mode(
+    tensor: &SparseTensorCOO,
+    hg: &Hypergraph,
+    mode: usize,
+    kappa: usize,
+    lb: LoadBalance,
+    assign: VertexAssign,
+) -> ModePartitioning {
+    let use_scheme1 = match lb {
+        LoadBalance::Adaptive => tensor.dims[mode] as usize >= kappa,
+        LoadBalance::ForceScheme1 => true,
+        LoadBalance::ForceScheme2 => false,
+    };
+    if use_scheme1 {
+        scheme1(tensor, hg, mode, kappa, assign)
+    } else {
+        scheme2(tensor, mode, kappa)
+    }
+}
+
+/// Scheme 1: equal distribution of output-mode *indices* among partitions.
+pub fn scheme1(
+    tensor: &SparseTensorCOO,
+    hg: &Hypergraph,
+    mode: usize,
+    kappa: usize,
+    assign: VertexAssign,
+) -> ModePartitioning {
+    let dim = tensor.dims[mode] as usize;
+    let ordered = hg.ordered_vertices(mode);
+    let deg = &hg.degrees[mode];
+    let mut owner = vec![0u32; dim];
+    match assign {
+        VertexAssign::Cyclic => {
+            for (pos, &v) in ordered.iter().enumerate() {
+                owner[v as usize] = (pos % kappa) as u32;
+            }
+        }
+        VertexAssign::Greedy => {
+            // LPT: heaviest vertex to the currently least-loaded partition.
+            // Binary heap of (load, partition) would be O(I log κ); κ is
+            // tiny (≤ a few hundred) so a linear scan is fine and avoids
+            // Reverse-ordering noise.
+            let mut loads = vec![0u64; kappa];
+            for &v in &ordered {
+                let z = (0..kappa).min_by_key(|&z| loads[z]).unwrap();
+                owner[v as usize] = z as u32;
+                loads[z] += deg[v as usize] as u64;
+            }
+        }
+    }
+    // Bucket nonzeros by owning partition, ordering by (partition, output
+    // index, original position): within a partition all hyperedges of one
+    // output index are contiguous — the property the segmented kernel and
+    // the "no intermediate values to global memory" claim rely on.
+    let nnz = tensor.nnz();
+    let col = &tensor.inds[mode];
+    let mut perm: Vec<u32> = (0..nnz as u32).collect();
+    perm.sort_unstable_by_key(|&t| {
+        let i = col[t as usize];
+        ((owner[i as usize] as u64) << 32) | i as u64
+    });
+    let mut bounds = vec![0usize; kappa + 1];
+    for &t in &perm {
+        bounds[owner[col[t as usize] as usize] as usize + 1] += 1;
+    }
+    for z in 0..kappa {
+        bounds[z + 1] += bounds[z];
+    }
+    ModePartitioning {
+        mode,
+        scheme: SchemeUsed::IndexPartitioned,
+        kappa,
+        perm,
+        bounds,
+        owner: Some(owner),
+    }
+}
+
+/// Scheme 2: equal distribution of *nonzeros* among partitions.
+pub fn scheme2(tensor: &SparseTensorCOO, mode: usize, kappa: usize) -> ModePartitioning {
+    let nnz = tensor.nnz();
+    let col = &tensor.inds[mode];
+    // Υ_d-ordered: hyperedges sorted by output vertex id (stable on
+    // original position for determinism).
+    let mut perm: Vec<u32> = (0..nnz as u32).collect();
+    perm.sort_unstable_by_key(|&t| ((col[t as usize] as u64) << 32) | t as u64);
+    // κ near-equal chunks: first `nnz % κ` partitions get one extra.
+    let base = nnz / kappa;
+    let extra = nnz % kappa;
+    let mut bounds = Vec::with_capacity(kappa + 1);
+    let mut acc = 0usize;
+    bounds.push(0);
+    for z in 0..kappa {
+        acc += base + usize::from(z < extra);
+        bounds.push(acc);
+    }
+    ModePartitioning {
+        mode,
+        scheme: SchemeUsed::ElementPartitioned,
+        kappa,
+        perm,
+        bounds,
+        owner: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::synth::DatasetProfile;
+
+    fn setup(profile: DatasetProfile, scale: f64) -> (SparseTensorCOO, Hypergraph) {
+        let t = profile.scaled(scale).generate(11);
+        let h = Hypergraph::of(&t);
+        (t, h)
+    }
+
+    fn check_is_permutation(p: &ModePartitioning, nnz: usize) {
+        assert_eq!(p.perm.len(), nnz);
+        let mut seen = vec![false; nnz];
+        for &t in &p.perm {
+            assert!(!seen[t as usize], "duplicate nnz {t}");
+            seen[t as usize] = true;
+        }
+        assert_eq!(*p.bounds.last().unwrap(), nnz);
+        assert!(p.bounds.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn scheme1_partitions_own_disjoint_indices() {
+        let (t, h) = setup(DatasetProfile::uber(), 0.01);
+        for assign in [VertexAssign::Cyclic, VertexAssign::Greedy] {
+            let p = scheme1(&t, &h, 2, 8, assign);
+            check_is_permutation(&p, t.nnz());
+            let owner = p.owner.as_ref().unwrap();
+            // every nonzero lands in the partition owning its output index
+            for z in 0..p.kappa {
+                for &e in &p.perm[p.bounds[z]..p.bounds[z + 1]] {
+                    let i = t.inds[2][e as usize] as usize;
+                    assert_eq!(owner[i] as usize, z);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scheme1_segments_contiguous_within_partition() {
+        let (t, h) = setup(DatasetProfile::uber(), 0.01);
+        let p = scheme1(&t, &h, 0, 8, VertexAssign::Cyclic);
+        for z in 0..p.kappa {
+            let seg = &p.perm[p.bounds[z]..p.bounds[z + 1]];
+            let ids: Vec<u32> = seg.iter().map(|&e| t.inds[0][e as usize]).collect();
+            assert!(ids.windows(2).all(|w| w[0] <= w[1]), "partition {z} unsorted");
+        }
+    }
+
+    #[test]
+    fn scheme2_chunks_near_equal() {
+        let (t, _) = setup(DatasetProfile::nips(), 0.01);
+        let p = scheme2(&t, 3, 7);
+        check_is_permutation(&p, t.nnz());
+        let loads = p.loads();
+        let max = *loads.iter().max().unwrap();
+        let min = *loads.iter().min().unwrap();
+        assert!(max - min <= 1, "loads {loads:?}");
+    }
+
+    #[test]
+    fn scheme2_sorted_by_output_index_globally() {
+        let (t, _) = setup(DatasetProfile::nips(), 0.01);
+        let p = scheme2(&t, 3, 7);
+        let ids: Vec<u32> = p.perm.iter().map(|&e| t.inds[3][e as usize]).collect();
+        assert!(ids.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn adaptive_picks_by_dimension_vs_kappa() {
+        let (t, h) = setup(DatasetProfile::uber(), 0.01);
+        // uber dims: [183, 24, 1140, 1717], κ=82 → modes 0,2,3 scheme 1; mode 1 scheme 2
+        let kappa = 82;
+        for (mode, want) in [
+            (0, SchemeUsed::IndexPartitioned),
+            (1, SchemeUsed::ElementPartitioned),
+            (2, SchemeUsed::IndexPartitioned),
+            (3, SchemeUsed::IndexPartitioned),
+        ] {
+            let p = partition_mode(&t, &h, mode, kappa, LoadBalance::Adaptive, VertexAssign::Cyclic);
+            assert_eq!(p.scheme, want, "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn forced_schemes_override_adaptive() {
+        let (t, h) = setup(DatasetProfile::uber(), 0.005);
+        let p1 = partition_mode(&t, &h, 1, 82, LoadBalance::ForceScheme1, VertexAssign::Cyclic);
+        assert_eq!(p1.scheme, SchemeUsed::IndexPartitioned);
+        // forcing scheme 1 on a 24-index mode leaves ≥ κ-24 partitions empty
+        let empties = (0..82).filter(|&z| p1.partition_len(z) == 0).count();
+        assert!(empties >= 82 - 24);
+        let p2 = partition_mode(&t, &h, 0, 82, LoadBalance::ForceScheme2, VertexAssign::Cyclic);
+        assert_eq!(p2.scheme, SchemeUsed::ElementPartitioned);
+    }
+
+    #[test]
+    fn greedy_no_worse_than_cyclic_on_skewed_data() {
+        let (t, h) = setup(DatasetProfile::chicago(), 0.02);
+        let pc = scheme1(&t, &h, 0, 16, VertexAssign::Cyclic);
+        let pg = scheme1(&t, &h, 0, 16, VertexAssign::Greedy);
+        let max_c = *pc.loads().iter().max().unwrap();
+        let max_g = *pg.loads().iter().max().unwrap();
+        assert!(max_g <= max_c, "greedy {max_g} vs cyclic {max_c}");
+    }
+}

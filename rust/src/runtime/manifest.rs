@@ -1,0 +1,173 @@
+//! `artifacts/manifest.json` loader: the contract between `aot.py` (which
+//! writes it) and the PJRT backend (which resolves artifact names and
+//! validates shapes before compiling).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape+dtype of one input or output of an artifact.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled-function entry.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    /// Block size `P` every mttkrp/gram/solve artifact was lowered with.
+    pub block_p: usize,
+    /// Ranks available in the artifact set.
+    pub ranks: Vec<usize>,
+    pub entries: BTreeMap<String, ManifestEntry>,
+}
+
+fn parse_spec(v: &Json) -> Result<TensorSpec> {
+    Ok(TensorSpec {
+        shape: v
+            .get("shape")
+            .and_then(|s| s.as_usize_vec())
+            .context("spec.shape")?,
+        dtype: v
+            .get("dtype")
+            .and_then(|s| s.as_str())
+            .context("spec.dtype")?
+            .to_string(),
+    })
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "read {} — run `make artifacts` to build the AOT kernels",
+                path.display()
+            )
+        })?;
+        let root = Json::parse(&text).context("parse manifest.json")?;
+        let block_p = root
+            .get("block_p")
+            .and_then(|v| v.as_usize())
+            .context("manifest.block_p")?;
+        let ranks = root
+            .get("ranks")
+            .and_then(|v| v.as_usize_vec())
+            .context("manifest.ranks")?;
+        let mut entries = BTreeMap::new();
+        for (name, e) in root
+            .get("entries")
+            .and_then(|v| v.as_obj())
+            .context("manifest.entries")?
+        {
+            let file = dir.join(
+                e.get("file")
+                    .and_then(|v| v.as_str())
+                    .context("entry.file")?,
+            );
+            if !file.exists() {
+                bail!("artifact {} missing file {}", name, file.display());
+            }
+            let inputs = e
+                .get("inputs")
+                .and_then(|v| v.as_arr())
+                .context("entry.inputs")?
+                .iter()
+                .map(parse_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")
+                .and_then(|v| v.as_arr())
+                .context("entry.outputs")?
+                .iter()
+                .map(parse_spec)
+                .collect::<Result<Vec<_>>>()?;
+            entries.insert(
+                name.clone(),
+                ManifestEntry {
+                    name: name.clone(),
+                    file,
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            block_p,
+            ranks,
+            entries,
+        })
+    }
+
+    /// Default artifacts directory: `$SPMTTKRP_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("SPMTTKRP_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ManifestEntry> {
+        self.entries.get(name).with_context(|| {
+            format!(
+                "artifact '{name}' not in manifest (have: {:?}) — re-run `make artifacts`",
+                self.entries.keys().take(8).collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn has_rank(&self, rank: usize) -> bool {
+        self.ranks.contains(&rank)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.block_p, 256);
+        assert!(m.has_rank(16) && m.has_rank(32));
+        let e = m.get("mttkrp_n2_r32").unwrap();
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.inputs[0].shape, vec![256]);
+        assert_eq!(e.inputs[1].shape, vec![256, 32]);
+        assert_eq!(e.outputs[0].shape, vec![256, 32]);
+        assert!(m.get("nonexistent").is_err());
+    }
+
+    #[test]
+    fn missing_dir_errors_with_hint() {
+        let err = Manifest::load(Path::new("/definitely/not/here")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,98 @@
+//! Execution backends for the block kernels.
+//!
+//! The coordinator streams fixed-shape `(P, R)` blocks through a
+//! [`Backend`]:
+//!
+//! * [`PjrtBackend`] — the production path: loads the AOT-lowered HLO
+//!   artifacts (`artifacts/*.hlo.txt`, built once by `make artifacts`),
+//!   compiles them on the PJRT CPU client at startup, and executes them on
+//!   the hot path. This is the L1 Pallas kernel running under the Rust
+//!   coordinator; Python is never invoked.
+//! * [`NativeBackend`] — a pure-Rust implementation of the same block
+//!   semantics. Used as the perf A/B reference (isolates PJRT dispatch
+//!   overhead) and to keep unit tests independent of the artifact build.
+//!
+//! Both produce bit-comparable f32 results for the elementwise ops; tests
+//! cross-check them.
+
+pub mod manifest;
+pub mod native;
+pub mod pjrt;
+
+pub use manifest::Manifest;
+pub use native::NativeBackend;
+pub use pjrt::PjrtBackend;
+
+use anyhow::Result;
+
+/// A provider of the fixed-shape block computations (L1/L2 kernels).
+///
+/// All `rows`/`out` buffers are row-major `(P, R)` flattened; `grams` are
+/// `(n, R, R)` flattened. Implementations must be callable from multiple
+/// worker threads concurrently.
+pub trait Backend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Block size `P` the backend was built for.
+    fn block_p(&self) -> usize;
+
+    /// `out[t, r] = vals[t] * prod_w rows[w][t, r]` (paper Fig. 1 / Alg. 2
+    /// elementwise computation for a block of `P` nonzeros).
+    fn mttkrp_block(
+        &self,
+        rank: usize,
+        vals: &[f32],
+        rows: &[&[f32]],
+        out: &mut [f32],
+    ) -> Result<()>;
+
+    /// Elementwise block + in-kernel segmented inclusive scan along P
+    /// (`seg_starts[t] == 1.0` marks a new output index). At each
+    /// segment's last position `out` holds the fully reduced row.
+    fn mttkrp_block_seg(
+        &self,
+        rank: usize,
+        vals: &[f32],
+        seg_starts: &[f32],
+        rows: &[&[f32]],
+        out: &mut [f32],
+    ) -> Result<()>;
+
+    /// Partial Gram: `out = y_blk^T @ y_blk`, `(R, R)`.
+    fn gram_block(&self, rank: usize, y_blk: &[f32], out: &mut [f32]) -> Result<()>;
+
+    /// `out = hadamard(grams) + damp * I`, `(R, R)`; `grams` is `(n, R, R)`.
+    fn hadamard_grams(
+        &self,
+        rank: usize,
+        n: usize,
+        grams: &[f32],
+        damp: f32,
+        out: &mut [f32],
+    ) -> Result<()>;
+
+    /// ALS block solve: `out = m_blk @ inv(v)`, shapes `(P, R)` and `(R, R)`.
+    fn solve_block(&self, rank: usize, v: &[f32], m_blk: &[f32], out: &mut [f32])
+        -> Result<()>;
+
+    /// `sum(a * b)` over one `(P, R)` block pair.
+    fn inner_block(&self, rank: usize, a: &[f32], b: &[f32]) -> Result<f32>;
+
+    /// `sum(hadamard(grams) * (w w^T))`; `grams` is `(n, R, R)`.
+    fn weighted_gram(
+        &self,
+        rank: usize,
+        n: usize,
+        grams: &[f32],
+        weights: &[f32],
+    ) -> Result<f32>;
+}
+
+/// Construct the backend named by a CLI string.
+pub fn backend_by_name(name: &str, block_p: usize) -> Result<Box<dyn Backend>> {
+    match name {
+        "native" => Ok(Box::new(NativeBackend::new(block_p))),
+        "pjrt" => Ok(Box::new(PjrtBackend::load_default()?)),
+        other => anyhow::bail!("unknown backend '{other}' (native|pjrt)"),
+    }
+}

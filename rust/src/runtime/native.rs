@@ -1,0 +1,381 @@
+//! Pure-Rust reference backend. Implements exactly the block semantics of
+//! the Pallas kernels (same shapes, same f32 arithmetic order where it
+//! matters) so PJRT and native results cross-validate, and so the perf
+//! suite can separate PJRT dispatch overhead from algorithmic cost.
+
+use anyhow::{ensure, Result};
+
+use super::Backend;
+
+#[derive(Debug)]
+pub struct NativeBackend {
+    block_p: usize,
+}
+
+impl NativeBackend {
+    pub fn new(block_p: usize) -> NativeBackend {
+        NativeBackend { block_p }
+    }
+}
+
+/// Solve `X * V = M` for X given symmetric positive-definite `V` (R×R) and
+/// `M` (P×R): Gaussian elimination with partial pivoting on `V^T` in f64.
+/// R ≤ 64, so the cubic cost is negligible next to the streaming ops.
+fn solve_xv_eq_m(rank: usize, v: &[f32], m: &[f32], out: &mut [f32]) -> Result<()> {
+    let r = rank;
+    let p = m.len() / r;
+    // A = V^T as f64 (row-major r×r); B = M^T (r×p) so A X^T = B.
+    let mut a = vec![0.0f64; r * r];
+    for i in 0..r {
+        for j in 0..r {
+            a[i * r + j] = v[j * r + i] as f64;
+        }
+    }
+    let mut b = vec![0.0f64; r * p];
+    for t in 0..p {
+        for j in 0..r {
+            b[j * p + t] = m[t * r + j] as f64;
+        }
+    }
+    // LU with partial pivoting, in place.
+    for col in 0..r {
+        let (piv, piv_val) = (col..r)
+            .map(|i| (i, a[i * r + col].abs()))
+            .max_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
+            .unwrap();
+        ensure!(piv_val > 1e-30, "singular normal-equation matrix");
+        if piv != col {
+            for j in 0..r {
+                a.swap(col * r + j, piv * r + j);
+            }
+            for t in 0..p {
+                b.swap(col * p + t, piv * p + t);
+            }
+        }
+        let d = a[col * r + col];
+        for i in col + 1..r {
+            let f = a[i * r + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..r {
+                a[i * r + j] -= f * a[col * r + j];
+            }
+            for t in 0..p {
+                b[i * p + t] -= f * b[col * p + t];
+            }
+        }
+    }
+    // Back substitution.
+    for col in (0..r).rev() {
+        let d = a[col * r + col];
+        for t in 0..p {
+            let mut acc = b[col * p + t];
+            for j in col + 1..r {
+                acc -= a[col * r + j] * b[j * p + t];
+            }
+            b[col * p + t] = acc / d;
+        }
+    }
+    for t in 0..p {
+        for j in 0..r {
+            out[t * r + j] = b[j * p + t] as f32;
+        }
+    }
+    Ok(())
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn block_p(&self) -> usize {
+        self.block_p
+    }
+
+    fn mttkrp_block(
+        &self,
+        rank: usize,
+        vals: &[f32],
+        rows: &[&[f32]],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let p = vals.len();
+        ensure!(out.len() == p * rank);
+        for w in rows {
+            ensure!(w.len() == p * rank);
+        }
+        for t in 0..p {
+            let o = &mut out[t * rank..(t + 1) * rank];
+            let v = vals[t];
+            match rows {
+                [a] => {
+                    let ra = &a[t * rank..(t + 1) * rank];
+                    for r in 0..rank {
+                        o[r] = v * ra[r];
+                    }
+                }
+                [a, b] => {
+                    let ra = &a[t * rank..(t + 1) * rank];
+                    let rb = &b[t * rank..(t + 1) * rank];
+                    for r in 0..rank {
+                        o[r] = v * ra[r] * rb[r];
+                    }
+                }
+                _ => {
+                    o.fill(v);
+                    for w in rows {
+                        let rw = &w[t * rank..(t + 1) * rank];
+                        for r in 0..rank {
+                            o[r] *= rw[r];
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn mttkrp_block_seg(
+        &self,
+        rank: usize,
+        vals: &[f32],
+        seg_starts: &[f32],
+        rows: &[&[f32]],
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.mttkrp_block(rank, vals, rows, out)?;
+        let p = vals.len();
+        ensure!(seg_starts.len() == p);
+        // Sequential segmented inclusive scan (matches the kernel's
+        // associative_scan semantics).
+        for t in 1..p {
+            if seg_starts[t] < 0.5 {
+                let (prev, cur) = out.split_at_mut(t * rank);
+                let prev = &prev[(t - 1) * rank..];
+                for r in 0..rank {
+                    cur[r] += prev[r];
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn gram_block(&self, rank: usize, y_blk: &[f32], out: &mut [f32]) -> Result<()> {
+        let p = y_blk.len() / rank;
+        ensure!(out.len() == rank * rank);
+        let mut acc = vec![0.0f64; rank * rank];
+        for t in 0..p {
+            let row = &y_blk[t * rank..(t + 1) * rank];
+            for a in 0..rank {
+                let ra = row[a] as f64;
+                for b in a..rank {
+                    acc[a * rank + b] += ra * row[b] as f64;
+                }
+            }
+        }
+        for a in 0..rank {
+            for b in 0..rank {
+                out[a * rank + b] = if b >= a {
+                    acc[a * rank + b] as f32
+                } else {
+                    acc[b * rank + a] as f32
+                };
+            }
+        }
+        Ok(())
+    }
+
+    fn hadamard_grams(
+        &self,
+        rank: usize,
+        n: usize,
+        grams: &[f32],
+        damp: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        ensure!(grams.len() == n * rank * rank && out.len() == rank * rank);
+        out.fill(1.0);
+        for w in 0..n {
+            let g = &grams[w * rank * rank..(w + 1) * rank * rank];
+            for (o, &x) in out.iter_mut().zip(g) {
+                *o *= x;
+            }
+        }
+        for d in 0..rank {
+            out[d * rank + d] += damp;
+        }
+        Ok(())
+    }
+
+    fn solve_block(
+        &self,
+        rank: usize,
+        v: &[f32],
+        m_blk: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        ensure!(v.len() == rank * rank && m_blk.len() == out.len());
+        solve_xv_eq_m(rank, v, m_blk, out)
+    }
+
+    fn inner_block(&self, _rank: usize, a: &[f32], b: &[f32]) -> Result<f32> {
+        ensure!(a.len() == b.len());
+        Ok(a.iter()
+            .zip(b)
+            .map(|(&x, &y)| x as f64 * y as f64)
+            .sum::<f64>() as f32)
+    }
+
+    fn weighted_gram(
+        &self,
+        rank: usize,
+        n: usize,
+        grams: &[f32],
+        weights: &[f32],
+    ) -> Result<f32> {
+        let mut had = vec![0.0f32; rank * rank];
+        self.hadamard_grams(rank, n, grams, 0.0, &mut had)?;
+        let mut acc = 0.0f64;
+        for a in 0..rank {
+            for b in 0..rank {
+                acc += had[a * rank + b] as f64
+                    * weights[a] as f64
+                    * weights[b] as f64;
+            }
+        }
+        Ok(acc as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.next_normal() as f32).collect()
+    }
+
+    #[test]
+    fn mttkrp_block_two_modes() {
+        let be = NativeBackend::new(4);
+        let vals = [2.0f32, 1.0, 0.5, -1.0];
+        let a = [1.0f32; 8]; // (4,2) of ones
+        let b: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let mut out = vec![0.0f32; 8];
+        be.mttkrp_block(2, &vals, &[&a, &b], &mut out).unwrap();
+        for t in 0..4 {
+            for r in 0..2 {
+                assert_eq!(out[t * 2 + r], vals[t] * b[t * 2 + r]);
+            }
+        }
+    }
+
+    #[test]
+    fn seg_scan_matches_manual() {
+        let be = NativeBackend::new(4);
+        let vals = [1.0f32, 2.0, 3.0, 4.0];
+        let ones = [1.0f32; 4];
+        let seg = [1.0f32, 0.0, 1.0, 0.0];
+        let mut out = vec![0.0f32; 4];
+        be.mttkrp_block_seg(1, &vals, &seg, &[&ones], &mut out).unwrap();
+        assert_eq!(out, vec![1.0, 3.0, 3.0, 7.0]);
+    }
+
+    #[test]
+    fn gram_symmetric() {
+        let be = NativeBackend::new(8);
+        let mut rng = Rng::new(1);
+        let y = rand_vec(&mut rng, 8 * 3);
+        let mut g = vec![0.0f32; 9];
+        be.gram_block(3, &y, &mut g).unwrap();
+        for a in 0..3 {
+            for b in 0..3 {
+                assert_eq!(g[a * 3 + b], g[b * 3 + a]);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_recovers_identity() {
+        let be = NativeBackend::new(4);
+        let r = 3;
+        let v: Vec<f32> = (0..9)
+            .map(|i| if i % 4 == 0 { 2.0 } else { 0.0 })
+            .collect(); // 2I
+        let m = vec![2.0f32; 4 * 3];
+        let mut out = vec![0.0f32; 12];
+        be.solve_block(r, &v, &m, &mut out).unwrap();
+        for &x in &out {
+            assert!((x - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn solve_roundtrip_random_spd() {
+        let be = NativeBackend::new(8);
+        let mut rng = Rng::new(2);
+        let r = 5;
+        // V = A A^T + r I
+        let a = rand_vec(&mut rng, r * r);
+        let mut v = vec![0.0f32; r * r];
+        for i in 0..r {
+            for j in 0..r {
+                let mut acc = if i == j { r as f64 } else { 0.0 };
+                for k in 0..r {
+                    acc += a[i * r + k] as f64 * a[j * r + k] as f64;
+                }
+                v[i * r + j] = acc as f32;
+            }
+        }
+        let m = rand_vec(&mut rng, 8 * r);
+        let mut x = vec![0.0f32; 8 * r];
+        be.solve_block(r, &v, &m, &mut x).unwrap();
+        // x @ v ≈ m
+        for t in 0..8 {
+            for j in 0..r {
+                let mut acc = 0.0f64;
+                for k in 0..r {
+                    acc += x[t * r + k] as f64 * v[k * r + j] as f64;
+                }
+                assert!(
+                    (acc - m[t * r + j] as f64).abs() < 1e-3,
+                    "t={t} j={j}: {acc} vs {}",
+                    m[t * r + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn solve_rejects_singular() {
+        let be = NativeBackend::new(4);
+        let v = vec![0.0f32; 4];
+        let m = vec![1.0f32; 8];
+        let mut out = vec![0.0f32; 8];
+        assert!(be.solve_block(2, &v, &m, &mut out).is_err());
+    }
+
+    #[test]
+    fn hadamard_and_weighted_gram() {
+        let be = NativeBackend::new(4);
+        let r = 2;
+        let grams = vec![1.0, 2.0, 3.0, 4.0, 2.0, 0.5, 1.0, 2.0]; // two 2x2
+        let mut out = vec![0.0f32; 4];
+        be.hadamard_grams(r, 2, &grams, 0.5, &mut out).unwrap();
+        assert_eq!(out, vec![2.5, 1.0, 3.0, 8.5]);
+        let s = be.weighted_gram(r, 2, &grams, &[1.0, 2.0]).unwrap();
+        // had = [2,1,3,8]; w w^T = [1,2,2,4]; sum = 2+2+6+32 = 42
+        assert!((s - 42.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn inner_block() {
+        let be = NativeBackend::new(4);
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![4.0f32, 5.0, 6.0];
+        assert_eq!(be.inner_block(1, &a, &b).unwrap(), 32.0);
+    }
+}

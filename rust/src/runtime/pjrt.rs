@@ -1,0 +1,241 @@
+//! PJRT backend: loads the AOT-lowered HLO artifacts and runs them on the
+//! XLA CPU client. This is the production hot path — the L1 Pallas kernels
+//! (lowered with `interpret=True` into plain HLO) executing under the Rust
+//! coordinator with no Python anywhere.
+//!
+//! Executables are compiled once (lazily, on first use of each artifact)
+//! and cached. PJRT call sites are serialized per-executable with a mutex:
+//! the underlying CPU client is thread-safe, but the `xla` crate's wrappers
+//! hold raw pointers, so we keep the conservative locking and let the
+//! worker pool overlap *gather* work with at most one in-flight dispatch
+//! per executable.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{ensure, Context, Result};
+
+use super::manifest::{Manifest, ManifestEntry};
+use super::Backend;
+
+struct SyncExe {
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+}
+
+// SAFETY: PjRtLoadedExecutable wraps a PJRT CPU executable handle. The
+// TFRT CPU client supports concurrent Execute calls; we additionally
+// serialize all access through the mutex above, so the handle is never
+// used from two threads at once.
+unsafe impl Send for SyncExe {}
+unsafe impl Sync for SyncExe {}
+
+struct SyncClient(xla::PjRtClient);
+// SAFETY: same argument as SyncExe; the client handle is only used for
+// `compile`, which we serialize via the exes write lock.
+unsafe impl Send for SyncClient {}
+unsafe impl Sync for SyncClient {}
+
+pub struct PjrtBackend {
+    client: SyncClient,
+    manifest: Manifest,
+    exes: RwLock<HashMap<String, Arc<SyncExe>>>,
+}
+
+fn f32_bytes(xs: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no invalid bit patterns and alignment of u8 is 1.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, xs.len() * 4) }
+}
+
+impl PjrtBackend {
+    /// Load from the default artifacts directory (`$SPMTTKRP_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn load_default() -> Result<PjrtBackend> {
+        Self::load(&Manifest::default_dir())
+    }
+
+    pub fn load(dir: &std::path::Path) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(PjrtBackend {
+            client: SyncClient(client),
+            manifest,
+            exes: RwLock::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile every artifact eagerly (moves compile latency to startup;
+    /// used by the CLI before entering the measurement loop).
+    pub fn warmup(&self) -> Result<()> {
+        let names: Vec<String> = self.manifest.entries.keys().cloned().collect();
+        for n in names {
+            self.executable(&n)?;
+        }
+        Ok(())
+    }
+
+    fn executable(&self, name: &str) -> Result<Arc<SyncExe>> {
+        if let Some(e) = self.exes.read().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let mut w = self.exes.write().unwrap();
+        if let Some(e) = w.get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.get(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&entry.file)
+            .with_context(|| format!("parse HLO text {}", entry.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .0
+            .compile(&comp)
+            .with_context(|| format!("compile artifact {name}"))?;
+        let arc = Arc::new(SyncExe {
+            exe: Mutex::new(exe),
+        });
+        w.insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Execute `name` on f32 inputs, writing the (single, tupled) f32
+    /// output into `out`. Shapes are validated against the manifest.
+    fn call(&self, name: &str, inputs: &[&[f32]], out: &mut [f32]) -> Result<()> {
+        let entry: &ManifestEntry = self.manifest.get(name)?;
+        ensure!(
+            inputs.len() == entry.inputs.len(),
+            "{name}: {} inputs given, manifest says {}",
+            inputs.len(),
+            entry.inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, spec) in inputs.iter().zip(&entry.inputs) {
+            ensure!(
+                data.len() == spec.numel(),
+                "{name}: input numel {} vs spec {:?}",
+                data.len(),
+                spec.shape
+            );
+            literals.push(
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &spec.shape,
+                    f32_bytes(data),
+                )
+                .context("create input literal")?,
+            );
+        }
+        ensure!(
+            out.len() == entry.outputs[0].numel(),
+            "{name}: output numel {} vs spec {:?}",
+            out.len(),
+            entry.outputs[0].shape
+        );
+        let exe = self.executable(name)?;
+        let guard = exe.exe.lock().unwrap();
+        let result = guard.execute::<xla::Literal>(&literals)?;
+        drop(guard);
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?
+            .to_tuple1()
+            .context("unwrap 1-tuple result")?;
+        lit.copy_raw_to::<f32>(out).context("copy result to host")?;
+        Ok(())
+    }
+
+    fn mttkrp_name(&self, n_in: usize, rank: usize, seg: bool) -> String {
+        if seg {
+            format!("mttkrp_seg_n{n_in}_r{rank}")
+        } else {
+            format!("mttkrp_n{n_in}_r{rank}")
+        }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn block_p(&self) -> usize {
+        self.manifest.block_p
+    }
+
+    fn mttkrp_block(
+        &self,
+        rank: usize,
+        vals: &[f32],
+        rows: &[&[f32]],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let name = self.mttkrp_name(rows.len(), rank, false);
+        let mut inputs: Vec<&[f32]> = Vec::with_capacity(rows.len() + 1);
+        inputs.push(vals);
+        inputs.extend_from_slice(rows);
+        self.call(&name, &inputs, out)
+    }
+
+    fn mttkrp_block_seg(
+        &self,
+        rank: usize,
+        vals: &[f32],
+        seg_starts: &[f32],
+        rows: &[&[f32]],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let name = self.mttkrp_name(rows.len(), rank, true);
+        let mut inputs: Vec<&[f32]> = Vec::with_capacity(rows.len() + 2);
+        inputs.push(vals);
+        inputs.push(seg_starts);
+        inputs.extend_from_slice(rows);
+        self.call(&name, &inputs, out)
+    }
+
+    fn gram_block(&self, rank: usize, y_blk: &[f32], out: &mut [f32]) -> Result<()> {
+        self.call(&format!("gram_r{rank}"), &[y_blk], out)
+    }
+
+    fn hadamard_grams(
+        &self,
+        rank: usize,
+        n: usize,
+        grams: &[f32],
+        damp: f32,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let d = [damp];
+        self.call(&format!("hadamard_n{n}_r{rank}"), &[grams, &d], out)
+    }
+
+    fn solve_block(
+        &self,
+        rank: usize,
+        v: &[f32],
+        m_blk: &[f32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.call(&format!("solve_r{rank}"), &[v, m_blk], out)
+    }
+
+    fn inner_block(&self, rank: usize, a: &[f32], b: &[f32]) -> Result<f32> {
+        let mut out = [0.0f32];
+        self.call(&format!("inner_r{rank}"), &[a, b], &mut out)?;
+        Ok(out[0])
+    }
+
+    fn weighted_gram(
+        &self,
+        rank: usize,
+        n: usize,
+        grams: &[f32],
+        weights: &[f32],
+    ) -> Result<f32> {
+        let mut out = [0.0f32];
+        self.call(&format!("wgram_n{n}_r{rank}"), &[grams, weights], &mut out)?;
+        Ok(out[0])
+    }
+}

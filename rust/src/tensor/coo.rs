@@ -1,0 +1,213 @@
+//! N-mode sparse tensor in COOrdinate format (§III-C of the paper).
+//!
+//! Storage is mode-major SoA: `inds[w][t]` is the mode-`w` coordinate of
+//! nonzero `t`. SoA keeps the per-mode gather loops of the execution engine
+//! sequential in memory, which matters because the coordinator plays the
+//! role of the GPU memory system.
+
+use anyhow::{bail, ensure, Result};
+
+/// A sparse tensor with `n_modes` modes and `nnz` nonzero elements.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseTensorCOO {
+    /// Extent of each mode (`I_0 .. I_{N-1}`).
+    pub dims: Vec<u32>,
+    /// Mode-major coordinates: `inds[w].len() == nnz` for every mode `w`.
+    pub inds: Vec<Vec<u32>>,
+    /// Nonzero values, `vals.len() == nnz`.
+    pub vals: Vec<f32>,
+}
+
+impl SparseTensorCOO {
+    /// Build and validate. Duplicate coordinates are allowed here (they sum
+    /// on execution); `collapse_duplicates` removes them.
+    pub fn new(dims: Vec<u32>, inds: Vec<Vec<u32>>, vals: Vec<f32>) -> Result<Self> {
+        ensure!(dims.len() >= 2, "need at least 2 modes, got {}", dims.len());
+        ensure!(
+            inds.len() == dims.len(),
+            "inds has {} modes, dims has {}",
+            inds.len(),
+            dims.len()
+        );
+        ensure!(dims.iter().all(|&d| d > 0), "zero-extent mode");
+        for (w, col) in inds.iter().enumerate() {
+            ensure!(
+                col.len() == vals.len(),
+                "mode {w}: {} coords vs {} vals",
+                col.len(),
+                vals.len()
+            );
+            if let Some(&bad) = col.iter().find(|&&i| i >= dims[w]) {
+                bail!("mode {w}: coordinate {bad} out of range (dim {})", dims[w]);
+            }
+        }
+        Ok(SparseTensorCOO { dims, inds, vals })
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn n_modes(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Coordinates of nonzero `t` as a small vec (test/debug convenience).
+    pub fn coords(&self, t: usize) -> Vec<u32> {
+        self.inds.iter().map(|col| col[t]).collect()
+    }
+
+    /// Density = nnz / prod(dims), computed in f64 (dims overflow u64 for
+    /// tensors like Nell-1).
+    pub fn density(&self) -> f64 {
+        let cells: f64 = self.dims.iter().map(|&d| d as f64).product();
+        self.nnz() as f64 / cells
+    }
+
+    /// Bits per nonzero under the paper's §III-C model:
+    /// `sum_w ceil(log2(I_w)) + beta_float`.
+    pub fn bits_per_nnz(&self, beta_float: u32) -> u32 {
+        self.dims
+            .iter()
+            .map(|&d| 32 - (d.max(2) - 1).leading_zeros())
+            .sum::<u32>()
+            + beta_float
+    }
+
+    /// Sum values of nonzeros that share coordinates, producing a tensor
+    /// with set-semantics coordinates (sorted lexicographically).
+    pub fn collapse_duplicates(&self) -> SparseTensorCOO {
+        let n = self.nnz();
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_unstable_by(|&a, &b| {
+            for col in &self.inds {
+                match col[a].cmp(&col[b]) {
+                    std::cmp::Ordering::Equal => continue,
+                    o => return o,
+                }
+            }
+            std::cmp::Ordering::Equal
+        });
+        let mut inds: Vec<Vec<u32>> = vec![Vec::new(); self.n_modes()];
+        let mut vals: Vec<f32> = Vec::new();
+        for &t in &order {
+            let same = !vals.is_empty()
+                && self
+                    .inds
+                    .iter()
+                    .enumerate()
+                    .all(|(w, col)| col[t] == inds[w][vals.len() - 1]);
+            if same {
+                *vals.last_mut().unwrap() += self.vals[t];
+            } else {
+                for (w, col) in self.inds.iter().enumerate() {
+                    inds[w].push(col[t]);
+                }
+                vals.push(self.vals[t]);
+            }
+        }
+        SparseTensorCOO {
+            dims: self.dims.clone(),
+            inds,
+            vals,
+        }
+    }
+
+    /// Apply a permutation to the nonzero ordering: `out[t] = self[perm[t]]`.
+    pub fn permuted(&self, perm: &[u32]) -> SparseTensorCOO {
+        assert_eq!(perm.len(), self.nnz());
+        let inds = self
+            .inds
+            .iter()
+            .map(|col| perm.iter().map(|&t| col[t as usize]).collect())
+            .collect();
+        let vals = perm.iter().map(|&t| self.vals[t as usize]).collect();
+        SparseTensorCOO {
+            dims: self.dims.clone(),
+            inds,
+            vals,
+        }
+    }
+
+    /// Frobenius norm squared of the tensor (= sum of squared nonzeros,
+    /// assuming set-semantics coordinates).
+    pub fn norm_sq(&self) -> f64 {
+        self.vals.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t3() -> SparseTensorCOO {
+        SparseTensorCOO::new(
+            vec![4, 3, 2],
+            vec![vec![0, 1, 3, 1], vec![0, 2, 1, 2], vec![0, 1, 1, 1]],
+            vec![1.0, 2.0, 3.0, 4.0],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn new_validates_ranges() {
+        assert!(SparseTensorCOO::new(
+            vec![2, 2],
+            vec![vec![0], vec![2]], // 2 out of range
+            vec![1.0],
+        )
+        .is_err());
+        assert!(SparseTensorCOO::new(vec![2], vec![vec![0]], vec![1.0]).is_err());
+        assert!(SparseTensorCOO::new(
+            vec![2, 2],
+            vec![vec![0, 1], vec![0]], // ragged
+            vec![1.0, 2.0],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn accessors() {
+        let t = t3();
+        assert_eq!(t.nnz(), 4);
+        assert_eq!(t.n_modes(), 3);
+        assert_eq!(t.coords(2), vec![3, 1, 1]);
+        assert!((t.density() - 4.0 / 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bits_per_nnz_matches_formula() {
+        let t = t3();
+        // ceil(log2(4)) + ceil(log2(3)) + ceil(log2(2)) + 32 = 2+2+1+32
+        assert_eq!(t.bits_per_nnz(32), 37);
+    }
+
+    #[test]
+    fn collapse_duplicates_sums() {
+        let t = SparseTensorCOO::new(
+            vec![2, 2],
+            vec![vec![0, 0, 1], vec![1, 1, 0]],
+            vec![1.0, 2.5, 4.0],
+        )
+        .unwrap();
+        let c = t.collapse_duplicates();
+        assert_eq!(c.nnz(), 2);
+        // sorted lexicographically: (0,1) then (1,0)
+        assert_eq!(c.inds[0], vec![0, 1]);
+        assert_eq!(c.vals, vec![3.5, 4.0]);
+    }
+
+    #[test]
+    fn permuted_reorders() {
+        let t = t3();
+        let p = t.permuted(&[3, 2, 1, 0]);
+        assert_eq!(p.vals, vec![4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(p.coords(0), t.coords(3));
+        assert_eq!(p.dims, t.dims);
+    }
+
+    #[test]
+    fn norm_sq() {
+        assert!((t3().norm_sq() - (1.0 + 4.0 + 9.0 + 16.0)).abs() < 1e-12);
+    }
+}

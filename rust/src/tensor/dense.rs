@@ -1,0 +1,112 @@
+//! Tiny dense tensor used as the brute-force oracle in tests: materialise
+//! the sparse tensor, compute MTTKRP by definition (loop over every cell),
+//! and compare against the engine. Only sensible for small dims.
+
+use super::{FactorSet, SparseTensorCOO};
+
+/// Dense N-mode tensor, row-major with mode-0 slowest.
+#[derive(Clone, Debug)]
+pub struct DenseTensor {
+    pub dims: Vec<u32>,
+    pub data: Vec<f64>,
+}
+
+impl DenseTensor {
+    pub fn from_coo(t: &SparseTensorCOO) -> DenseTensor {
+        let cells: usize = t.dims.iter().map(|&d| d as usize).product();
+        assert!(cells <= 1 << 24, "dense oracle limited to small tensors");
+        let mut data = vec![0.0f64; cells];
+        for e in 0..t.nnz() {
+            data[Self::offset_of(&t.dims, &t.coords(e))] += t.vals[e] as f64;
+        }
+        DenseTensor {
+            dims: t.dims.clone(),
+            data,
+        }
+    }
+
+    fn offset_of(dims: &[u32], coords: &[u32]) -> usize {
+        let mut off = 0usize;
+        for (w, &c) in coords.iter().enumerate() {
+            off = off * dims[w] as usize + c as usize;
+        }
+        off
+    }
+
+    /// MTTKRP along `mode` by definition: for every tensor cell, multiply
+    /// by the input-mode factor rows and accumulate into the output row.
+    pub fn mttkrp(&self, factors: &FactorSet, mode: usize) -> Vec<f64> {
+        let rank = factors.rank();
+        let n = self.dims.len();
+        let mut out = vec![0.0f64; self.dims[mode] as usize * rank];
+        let mut coords = vec![0u32; n];
+        for (off, &v) in self.data.iter().enumerate() {
+            if v != 0.0 {
+                // decode off -> coords
+                let mut rem = off;
+                for w in (0..n).rev() {
+                    coords[w] = (rem % self.dims[w] as usize) as u32;
+                    rem /= self.dims[w] as usize;
+                }
+                for r in 0..rank {
+                    let mut acc = v;
+                    for w in 0..n {
+                        if w != mode {
+                            acc *= factors[w].row(coords[w] as usize)[r] as f64;
+                        }
+                    }
+                    out[coords[mode] as usize * rank + r] += acc;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_coo_places_values() {
+        let t = SparseTensorCOO::new(
+            vec![2, 2],
+            vec![vec![0, 1], vec![1, 0]],
+            vec![3.0, 4.0],
+        )
+        .unwrap();
+        let d = DenseTensor::from_coo(&t);
+        assert_eq!(d.data, vec![0.0, 3.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn from_coo_sums_duplicates() {
+        let t = SparseTensorCOO::new(
+            vec![2, 2],
+            vec![vec![0, 0], vec![0, 0]],
+            vec![1.5, 2.5],
+        )
+        .unwrap();
+        assert_eq!(DenseTensor::from_coo(&t).data[0], 4.0);
+    }
+
+    #[test]
+    fn mttkrp_hand_example() {
+        // X = [[1, 0], [0, 2]] (2x2 "matrix tensor"), factors rank 1:
+        // A = [[1],[1]], B = [[3],[5]].
+        // MTTKRP mode 0: out[i] = sum_j X[i,j] * B[j] = [3, 10].
+        let t = SparseTensorCOO::new(
+            vec![2, 2],
+            vec![vec![0, 1], vec![0, 1]],
+            vec![1.0, 2.0],
+        )
+        .unwrap();
+        let mut fs = FactorSet::zeros(&[2, 2], 1);
+        fs[0].data.copy_from_slice(&[1.0, 1.0]);
+        fs[1].data.copy_from_slice(&[3.0, 5.0]);
+        let d = DenseTensor::from_coo(&t);
+        assert_eq!(d.mttkrp(&fs, 0), vec![3.0, 10.0]);
+        // mode 1: out[j] = sum_i X[i,j] * A[i] = [1, 2].
+        assert_eq!(d.mttkrp(&fs, 1), vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,208 @@
+//! Dense factor matrices. One `(I_w, R)` row-major matrix per mode; the
+//! execution engine gathers rows from these, mirroring the paper's "SM
+//! loads factor rows from GPU global memory" step.
+
+use crate::util::rng::Rng;
+
+/// A single dense factor matrix, row-major `(rows, rank)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Factor {
+    pub rows: usize,
+    pub rank: usize,
+    pub data: Vec<f32>,
+}
+
+impl Factor {
+    pub fn zeros(rows: usize, rank: usize) -> Factor {
+        Factor {
+            rows,
+            rank,
+            data: vec![0.0; rows * rank],
+        }
+    }
+
+    pub fn random(rows: usize, rank: usize, rng: &mut Rng) -> Factor {
+        let data = (0..rows * rank)
+            .map(|_| (rng.next_f32() + 0.1) / 1.1) // positive, well-conditioned init
+            .collect();
+        Factor { rows, rank, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.rank..(i + 1) * self.rank]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.rank..(i + 1) * self.rank]
+    }
+
+    /// Gram matrix `Y^T Y` in f64, `(rank, rank)` row-major. Reference/CPU
+    /// path; the runtime offloads this to the `gram_r{R}` artifact.
+    pub fn gram(&self) -> Vec<f64> {
+        let r = self.rank;
+        let mut g = vec![0.0f64; r * r];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for a in 0..r {
+                let ra = row[a] as f64;
+                for b in a..r {
+                    g[a * r + b] += ra * row[b] as f64;
+                }
+            }
+        }
+        for a in 0..r {
+            for b in 0..a {
+                g[a * r + b] = g[b * r + a];
+            }
+        }
+        g
+    }
+
+    /// Normalise every column to unit L2 norm, returning the norms
+    /// (the CPD lambda weights).
+    pub fn normalize_columns(&mut self) -> Vec<f64> {
+        let r = self.rank;
+        let mut norms = vec![0.0f64; r];
+        for i in 0..self.rows {
+            for (c, &v) in self.row(i).iter().enumerate() {
+                norms[c] += (v as f64) * (v as f64);
+            }
+        }
+        for n in norms.iter_mut() {
+            *n = n.sqrt();
+            if *n == 0.0 {
+                *n = 1.0;
+            }
+        }
+        for i in 0..self.rows {
+            let row = self.row_mut(i);
+            for c in 0..r {
+                row[c] = (row[c] as f64 / norms[c]) as f32;
+            }
+        }
+        norms
+    }
+}
+
+/// The full set of factor matrices for an N-mode tensor.
+#[derive(Clone, Debug)]
+pub struct FactorSet {
+    pub factors: Vec<Factor>,
+}
+
+impl FactorSet {
+    pub fn zeros(dims: &[u32], rank: usize) -> FactorSet {
+        FactorSet {
+            factors: dims
+                .iter()
+                .map(|&d| Factor::zeros(d as usize, rank))
+                .collect(),
+        }
+    }
+
+    pub fn random(dims: &[u32], rank: usize, seed: u64) -> FactorSet {
+        let mut rng = Rng::new(seed);
+        FactorSet {
+            factors: dims
+                .iter()
+                .map(|&d| Factor::random(d as usize, rank, &mut rng))
+                .collect(),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.factors.first().map(|f| f.rank).unwrap_or(0)
+    }
+
+    pub fn n_modes(&self) -> usize {
+        self.factors.len()
+    }
+
+    /// Total bytes of all factor matrices at f32 (Fig. 5 accounting).
+    pub fn bytes(&self) -> u64 {
+        self.factors
+            .iter()
+            .map(|f| (f.rows * f.rank * 4) as u64)
+            .sum()
+    }
+}
+
+impl std::ops::Index<usize> for FactorSet {
+    type Output = Factor;
+    fn index(&self, i: usize) -> &Factor {
+        &self.factors[i]
+    }
+}
+
+impl std::ops::IndexMut<usize> for FactorSet {
+    fn index_mut(&mut self, i: usize) -> &mut Factor {
+        &mut self.factors[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_access_is_row_major() {
+        let mut f = Factor::zeros(3, 2);
+        f.row_mut(1).copy_from_slice(&[5.0, 6.0]);
+        assert_eq!(f.data, vec![0.0, 0.0, 5.0, 6.0, 0.0, 0.0]);
+        assert_eq!(f.row(1), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn gram_matches_hand_example() {
+        let f = Factor {
+            rows: 2,
+            rank: 2,
+            data: vec![1.0, 2.0, 3.0, 4.0],
+        };
+        // [[1,2],[3,4]]^T [[1,2],[3,4]] = [[10,14],[14,20]]
+        assert_eq!(f.gram(), vec![10.0, 14.0, 14.0, 20.0]);
+    }
+
+    #[test]
+    fn gram_is_symmetric_psd() {
+        let mut rng = Rng::new(4);
+        let f = Factor::random(50, 8, &mut rng);
+        let g = f.gram();
+        for a in 0..8 {
+            assert!(g[a * 8 + a] >= 0.0);
+            for b in 0..8 {
+                assert!((g[a * 8 + b] - g[b * 8 + a]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn normalize_columns_unit_norm() {
+        let mut rng = Rng::new(5);
+        let mut f = Factor::random(40, 4, &mut rng);
+        let norms = f.normalize_columns();
+        assert!(norms.iter().all(|&n| n > 0.0));
+        let g = f.gram();
+        for c in 0..4 {
+            assert!((g[c * 4 + c] - 1.0).abs() < 1e-4, "col {c}: {}", g[c * 4 + c]);
+        }
+    }
+
+    #[test]
+    fn factor_set_shapes() {
+        let fs = FactorSet::random(&[10, 20, 30], 8, 1);
+        assert_eq!(fs.n_modes(), 3);
+        assert_eq!(fs.rank(), 8);
+        assert_eq!(fs[1].rows, 20);
+        assert_eq!(fs.bytes(), (10 + 20 + 30) * 8 * 4);
+    }
+
+    #[test]
+    fn random_is_seed_deterministic() {
+        let a = FactorSet::random(&[5, 5], 4, 9);
+        let b = FactorSet::random(&[5, 5], 4, 9);
+        assert_eq!(a[0].data, b[0].data);
+    }
+}

@@ -1,0 +1,239 @@
+//! Tensor file IO.
+//!
+//! * FROSTT `.tns` text format (1-based coordinates, whitespace separated,
+//!   value last) — read and write, so real FROSTT downloads drop in when
+//!   network access exists.
+//! * Flat little-endian binary sidecars (`*.indices.bin`, `*.vals.bin`,
+//!   `*.meta.json`) as dumped by `python/compile/aot.py --golden`; the
+//!   integration tests load these to cross-check the engine against the
+//!   jnp oracle.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{FactorSet, SparseTensorCOO};
+use crate::tensor::factor::Factor;
+use crate::util::json::Json;
+
+/// Read a FROSTT `.tns` file: each line `i_0 i_1 ... i_{N-1} value` with
+/// 1-based indices; `#` comments and blank lines ignored. Mode extents are
+/// the max index seen per mode unless `dims` is given.
+pub fn read_tns(path: &Path, dims: Option<Vec<u32>>) -> Result<SparseTensorCOO> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut inds: Vec<Vec<u32>> = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        if toks.len() < 3 {
+            bail!("{}:{}: need >= 2 indices + value", path.display(), lineno + 1);
+        }
+        let n = toks.len() - 1;
+        if inds.is_empty() {
+            inds = vec![Vec::new(); n];
+        } else if inds.len() != n {
+            bail!(
+                "{}:{}: inconsistent mode count {} vs {}",
+                path.display(),
+                lineno + 1,
+                n,
+                inds.len()
+            );
+        }
+        for (w, tok) in toks[..n].iter().enumerate() {
+            let i: u64 = tok
+                .parse()
+                .with_context(|| format!("{}:{}: bad index", path.display(), lineno + 1))?;
+            if i == 0 {
+                bail!("{}:{}: .tns indices are 1-based", path.display(), lineno + 1);
+            }
+            inds[w].push((i - 1) as u32);
+        }
+        vals.push(toks[n].parse().with_context(|| {
+            format!("{}:{}: bad value", path.display(), lineno + 1)
+        })?);
+    }
+    if vals.is_empty() {
+        bail!("{}: empty tensor", path.display());
+    }
+    let dims = dims.unwrap_or_else(|| {
+        inds.iter()
+            .map(|col| col.iter().max().map(|&m| m + 1).unwrap_or(1))
+            .collect()
+    });
+    SparseTensorCOO::new(dims, inds, vals)
+}
+
+/// Write a FROSTT `.tns` file (1-based indices).
+pub fn write_tns(t: &SparseTensorCOO, path: &Path) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    for e in 0..t.nnz() {
+        for col in &t.inds {
+            write!(w, "{} ", col[e] + 1)?;
+        }
+        writeln!(w, "{}", t.vals[e])?;
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------- golden sidecars
+
+/// One golden case dumped by `aot.py --golden`: the tensor, its factors,
+/// the per-mode MTTKRP reference outputs, and the CPD fit reference.
+#[derive(Debug)]
+pub struct GoldenCase {
+    pub tensor: SparseTensorCOO,
+    pub factors: FactorSet,
+    /// `mttkrp[d]` is the f32 reference output for output mode `d`,
+    /// row-major `(I_d, rank)`.
+    pub mttkrp: Vec<Vec<f32>>,
+    pub rank: usize,
+    pub fit: f64,
+}
+
+fn read_f32s(path: &Path) -> Result<Vec<f32>> {
+    let mut buf = Vec::new();
+    File::open(path)
+        .with_context(|| format!("open {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    if buf.len() % 4 != 0 {
+        bail!("{}: length not a multiple of 4", path.display());
+    }
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn read_u32s(path: &Path) -> Result<Vec<u32>> {
+    let mut buf = Vec::new();
+    File::open(path)
+        .with_context(|| format!("open {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    if buf.len() % 4 != 0 {
+        bail!("{}: length not a multiple of 4", path.display());
+    }
+    Ok(buf
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Load `<dir>/<tag>.{meta.json,indices.bin,vals.bin,factor*.bin,mttkrp*.bin}`.
+pub fn read_golden(dir: &Path, tag: &str) -> Result<GoldenCase> {
+    let prefix = dir.join(tag);
+    let meta_text = std::fs::read_to_string(prefix.with_extension("meta.json"))
+        .with_context(|| format!("golden case {tag}"))?;
+    let meta = Json::parse(&meta_text).context("parse meta.json")?;
+    let dims: Vec<usize> = meta
+        .get("dims")
+        .and_then(|d| d.as_usize_vec())
+        .context("meta.dims")?;
+    let nnz = meta.get("nnz").and_then(|v| v.as_usize()).context("meta.nnz")?;
+    let rank = meta.get("rank").and_then(|v| v.as_usize()).context("meta.rank")?;
+    let fit = meta.get("fit").and_then(|v| v.as_f64()).context("meta.fit")?;
+    let n = dims.len();
+
+    let flat = read_u32s(&prefix.with_extension("indices.bin"))?;
+    if flat.len() != nnz * n {
+        bail!("{tag}: indices.bin has {} u32s, want {}", flat.len(), nnz * n);
+    }
+    // python dumps row-major [nnz, n]; convert to mode-major SoA
+    let mut inds = vec![Vec::with_capacity(nnz); n];
+    for t in 0..nnz {
+        for (w, col) in inds.iter_mut().enumerate() {
+            col.push(flat[t * n + w]);
+        }
+    }
+    let vals = read_f32s(&prefix.with_extension("vals.bin"))?;
+    let dims_u32: Vec<u32> = dims.iter().map(|&d| d as u32).collect();
+    let tensor = SparseTensorCOO::new(dims_u32.clone(), inds, vals)?;
+
+    let mut factors = Vec::with_capacity(n);
+    let mut mttkrp = Vec::with_capacity(n);
+    for w in 0..n {
+        let fd = read_f32s(&dir.join(format!("{tag}.factor{w}.bin")))?;
+        if fd.len() != dims[w] * rank {
+            bail!("{tag}: factor{w} wrong size");
+        }
+        factors.push(Factor {
+            rows: dims[w],
+            rank,
+            data: fd,
+        });
+        let md = read_f32s(&dir.join(format!("{tag}.mttkrp{w}.bin")))?;
+        if md.len() != dims[w] * rank {
+            bail!("{tag}: mttkrp{w} wrong size");
+        }
+        mttkrp.push(md);
+    }
+    Ok(GoldenCase {
+        tensor,
+        factors: FactorSet { factors },
+        mttkrp,
+        rank,
+        fit,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::synth::DatasetProfile;
+
+    #[test]
+    fn tns_roundtrip() {
+        let t = DatasetProfile::uber().scaled(0.002).generate(3);
+        let dir = std::env::temp_dir().join("spmttkrp_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.tns");
+        write_tns(&t, &path).unwrap();
+        let t2 = read_tns(&path, Some(t.dims.clone())).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn tns_infers_dims() {
+        let dir = std::env::temp_dir().join("spmttkrp_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("infer.tns");
+        std::fs::write(&path, "# comment\n1 1 1 2.0\n3 2 4 1.5\n").unwrap();
+        let t = read_tns(&path, None).unwrap();
+        assert_eq!(t.dims, vec![3, 2, 4]);
+        assert_eq!(t.nnz(), 2);
+        assert_eq!(t.coords(1), vec![2, 1, 3]);
+    }
+
+    #[test]
+    fn tns_rejects_zero_based() {
+        let dir = std::env::temp_dir().join("spmttkrp_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("zero.tns");
+        std::fs::write(&path, "0 1 1 2.0\n").unwrap();
+        assert!(read_tns(&path, None).is_err());
+    }
+
+    #[test]
+    fn tns_rejects_ragged() {
+        let dir = std::env::temp_dir().join("spmttkrp_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ragged.tns");
+        std::fs::write(&path, "1 1 1 2.0\n1 1 3.0\n").unwrap();
+        assert!(read_tns(&path, None).is_err());
+    }
+
+    #[test]
+    fn golden_loads_if_built() {
+        // Exercised for real in rust/tests/; here just check the error path.
+        let missing = read_golden(Path::new("/nonexistent"), "nope");
+        assert!(missing.is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Sparse-tensor substrate: COO storage, factor matrices, FROSTT `.tns`
+//! text IO, synthetic dataset generators (Table III profiles), and a small
+//! dense oracle used by tests.
+
+pub mod coo;
+pub mod dense;
+pub mod factor;
+pub mod io;
+pub mod synth;
+
+pub use coo::SparseTensorCOO;
+pub use dense::DenseTensor;
+pub use factor::FactorSet;

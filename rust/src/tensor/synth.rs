@@ -1,0 +1,347 @@
+//! Synthetic dataset generators standing in for the paper's FROSTT
+//! tensors (Table III). FROSTT is network-gated in this environment, so we
+//! generate shape-faithful synthetic tensors instead (substitution #2 in
+//! DESIGN.md §5):
+//!
+//! * mode count matches Table III; extents match exactly for the small
+//!   tensors and are degree-preservingly scaled for the three largest
+//!   (see [`DatasetProfile`] docs);
+//! * nnz matches, scaled down for the three largest tensors (the full
+//!   Nell-1 at 143.6M nonzeros does not fit a CI-sized run) — scale factors
+//!   are recorded in [`DatasetProfile::paper_nnz`] vs [`DatasetProfile::nnz`];
+//! * per-mode index popularity follows a power law (`u^alpha` transform),
+//!   because the degree skew of real tensors is precisely what the paper's
+//!   LPT-style partitioner and the baselines' load imbalance respond to;
+//! * duplicate coordinates are collapsed (set semantics, like FROSTT).
+//!
+//! What the substitution preserves: `I_d` vs `κ` relationships (drives the
+//! adaptive scheme choice — e.g. Chicago/Uber/Nips/Vast have modes with
+//! `I_d < 82` exactly as in the paper), skewed fiber sizes (drives
+//! imbalance), N > 3 mode counts. What it does not preserve: the exact
+//! clustering structure of real data, hence absolute runtimes differ from
+//! the paper's — we compare *shapes* of results, not milliseconds.
+
+use super::SparseTensorCOO;
+use crate::util::rng::Rng;
+
+/// A named dataset profile mirroring one Table III row.
+///
+/// `dims` are the *generation* extents; for the three largest tensors
+/// (Enron, Nell-1, Vast) they are scaled down alongside nnz so that the
+/// per-index degree distribution (nnz / I_d) stays in the paper's regime —
+/// generating 2M nonzeros into Nell-1's true 25.5M-wide mode would make
+/// every fiber singleton, which is *less* sparse-structured than the real
+/// data, and allocating 25.5M×R output rows would measure `memset`, not
+/// MTTKRP. `paper_dims` keeps the exact Table III extents for the Fig. 5
+/// memory model. Every scaled mode remains ≫ κ = 82 and every small mode
+/// is kept exact, so the adaptive-scheme decisions are unchanged.
+#[derive(Clone, Debug)]
+pub struct DatasetProfile {
+    pub name: &'static str,
+    /// Extents used for generation (see struct docs).
+    pub dims: Vec<u32>,
+    /// Exact Table III extents (Fig. 5 memory accounting).
+    pub paper_dims: Vec<u32>,
+    /// nnz this profile generates (post-scaling, pre-dedup target).
+    pub nnz: usize,
+    /// nnz reported in the paper's Table III.
+    pub paper_nnz: usize,
+    /// Power-law skew per mode (alpha for `Rng::next_power_law`).
+    pub skew: f64,
+}
+
+impl DatasetProfile {
+    /// Chicago crime: 6.2K x 24 x 77 x 32, 5.3M nnz. Three of four modes
+    /// are smaller than κ=82 — the paper's poster child for Scheme 2.
+    pub fn chicago() -> Self {
+        DatasetProfile {
+            name: "chicago",
+            dims: vec![6_186, 24, 77, 32],
+            paper_dims: vec![6_186, 24, 77, 32],
+            nnz: 1_000_000,
+            paper_nnz: 5_330_673,
+            skew: 1.8,
+        }
+    }
+
+    /// Enron emails: 6.1K x 5.7K x 244.3K x 1.2K, 54.2M nnz (scaled to 1.5M).
+    /// Skew 1.8 (not the raw Zipf of the full corpus): at the paper's 54.2M
+    /// nnz the heaviest fiber is far below the per-SM mean load (54.2M/82),
+    /// so Scheme 1 balances; reproducing that regime at 1.5M nnz requires a
+    /// head fiber below ~nnz/82 too, which skew 1.8 gives.
+    pub fn enron() -> Self {
+        DatasetProfile {
+            name: "enron",
+            dims: vec![6_066, 5_699, 61_067, 1_176],
+            paper_dims: vec![6_066, 5_699, 244_268, 1_176],
+            nnz: 1_500_000,
+            paper_nnz: 54_202_099,
+            skew: 1.8,
+        }
+    }
+
+    /// Nell-1: 2.9M x 2.1M x 25.5M, 143.6M nnz (scaled to 2M). Hyper-sparse
+    /// with huge mode extents — every mode takes Scheme 1.
+    pub fn nell1() -> Self {
+        DatasetProfile {
+            name: "nell-1",
+            dims: vec![181_396, 133_961, 1_593_462],
+            paper_dims: vec![2_902_330, 2_143_368, 25_495_389],
+            nnz: 2_000_000,
+            paper_nnz: 143_599_552,
+            skew: 2.2,
+        }
+    }
+
+    /// NIPS papers: 2.5K x 2.9K x 14K x 17, 3.1M nnz. The 17-extent mode
+    /// forces Scheme 2.
+    pub fn nips() -> Self {
+        DatasetProfile {
+            name: "nips",
+            dims: vec![2_482, 2_862, 14_036, 17],
+            paper_dims: vec![2_482, 2_862, 14_036, 17],
+            nnz: 1_000_000,
+            paper_nnz: 3_101_609,
+            skew: 1.6,
+        }
+    }
+
+    /// Uber pickups: 183 x 24 x 1.1K x 1.7K, 3.3M nnz. Two modes < κ.
+    pub fn uber() -> Self {
+        DatasetProfile {
+            name: "uber",
+            dims: vec![183, 24, 1_140, 1_717],
+            paper_dims: vec![183, 24, 1_140, 1_717],
+            nnz: 1_000_000,
+            paper_nnz: 3_309_490,
+            skew: 1.4,
+        }
+    }
+
+    /// VAST 2015 challenge: 165.4K x 11.4K x 2 x 100 x 89, 26M nnz (scaled
+    /// to 1M). Five modes, three of them < κ — exercises the N=5 path.
+    pub fn vast() -> Self {
+        DatasetProfile {
+            name: "vast",
+            dims: vec![41_357, 11_374, 2, 100, 89],
+            paper_dims: vec![165_427, 11_374, 2, 100, 89],
+            nnz: 1_000_000,
+            paper_nnz: 26_021_945,
+            skew: 1.3,
+        }
+    }
+
+    /// All six Table III profiles in paper order.
+    pub fn all() -> Vec<DatasetProfile> {
+        vec![
+            Self::chicago(),
+            Self::enron(),
+            Self::nell1(),
+            Self::nips(),
+            Self::uber(),
+            Self::vast(),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<DatasetProfile> {
+        Self::all().into_iter().find(|p| p.name == name)
+    }
+
+    /// Scale the generated nnz, scaling *large* mode extents along with it
+    /// so the per-index degree distribution (nnz / I_d) — what the
+    /// partitioners and the baselines' fiber reuse respond to — stays in
+    /// the profile's regime at any benchmark scale. Small modes (≤ 1000)
+    /// are kept exact and every scaled mode is floored at 1000 ≫ κ = 82,
+    /// so the adaptive-scheme decisions are identical at every scale.
+    pub fn scaled(mut self, factor: f64) -> Self {
+        self.nnz = ((self.nnz as f64 * factor) as usize).max(64);
+        for d in self.dims.iter_mut() {
+            if *d > 1_000 {
+                *d = ((*d as f64 * factor) as u32).max(1_000);
+            }
+        }
+        self
+    }
+
+    /// nnz scale vs the paper (documentation / reporting).
+    pub fn scale_vs_paper(&self) -> f64 {
+        self.nnz as f64 / self.paper_nnz as f64
+    }
+
+    /// Generate a tensor with planted low-rank structure: coordinates are
+    /// drawn like [`generate`], but values are
+    /// `sum_r prod_w A_w(c_w, r) + noise` for hidden random factors of the
+    /// given rank. CPD at rank >= `true_rank` recovers a high fit, making
+    /// the end-to-end example's fit curve meaningful (a pure-noise tensor
+    /// has no low-rank structure to find).
+    pub fn generate_low_rank(
+        &self,
+        seed: u64,
+        true_rank: usize,
+        noise: f64,
+    ) -> SparseTensorCOO {
+        let base = self.generate(seed);
+        let hidden = crate::tensor::FactorSet::random(
+            &base.dims,
+            true_rank,
+            seed ^ 0x10ab_c0de,
+        );
+        let mut rng = Rng::new(seed ^ 0x7a11);
+        let mut vals = Vec::with_capacity(base.nnz());
+        for t in 0..base.nnz() {
+            let mut v = 0.0f64;
+            for r in 0..true_rank {
+                let mut p = 1.0f64;
+                for w in 0..base.n_modes() {
+                    p *= hidden[w].row(base.inds[w][t] as usize)[r] as f64;
+                }
+                v += p;
+            }
+            vals.push((v + noise * rng.next_normal()) as f32);
+        }
+        SparseTensorCOO {
+            dims: base.dims,
+            inds: base.inds,
+            vals,
+        }
+    }
+
+    /// Generate the synthetic tensor. Deterministic in `seed`.
+    ///
+    /// Indices are drawn per mode with a power-law transform and a
+    /// per-mode random permutation, so popular indices are scattered over
+    /// the index space (real tensors are not sorted by popularity);
+    /// duplicates are collapsed with summed values, matching FROSTT's set
+    /// semantics. Values are standard-normal.
+    pub fn generate(&self, seed: u64) -> SparseTensorCOO {
+        let mut rng = Rng::new(seed ^ 0x5f4d_5454_4b52_5000);
+        let n = self.dims.len();
+        // Per-mode permutations via hashing: perm[w](i) = hash(w, i) ordering
+        // would need O(I) memory for 25M-extent modes; instead use an
+        // affine permutation i -> (a * i + b) mod I with a coprime to I.
+        let perms: Vec<(u64, u64)> = (0..n)
+            .map(|w| {
+                let m = self.dims[w] as u64;
+                let mut a = rng.next_below(m.max(2) - 1) + 1;
+                while gcd(a, m) != 1 {
+                    a = rng.next_below(m.max(2) - 1) + 1;
+                }
+                (a, rng.next_below(m))
+            })
+            .collect();
+        let mut inds: Vec<Vec<u32>> = vec![Vec::with_capacity(self.nnz); n];
+        let mut vals: Vec<f32> = Vec::with_capacity(self.nnz);
+        for _ in 0..self.nnz {
+            for w in 0..n {
+                let m = self.dims[w] as u64;
+                let raw = rng.next_power_law(m, self.skew);
+                let (a, b) = perms[w];
+                inds[w].push(((raw.wrapping_mul(a).wrapping_add(b)) % m) as u32);
+            }
+            vals.push(rng.next_normal() as f32);
+        }
+        SparseTensorCOO::new(self.dims.clone(), inds, vals)
+            .expect("generator produces valid coordinates")
+            .collapse_duplicates()
+    }
+}
+
+fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        (a, b) = (b, a % b);
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_match_table_iii_shapes() {
+        let all = DatasetProfile::all();
+        assert_eq!(all.len(), 6);
+        assert_eq!(DatasetProfile::chicago().dims, vec![6_186, 24, 77, 32]);
+        assert_eq!(
+            DatasetProfile::nell1().paper_dims,
+            vec![2_902_330, 2_143_368, 25_495_389]
+        );
+        assert_eq!(DatasetProfile::nell1().dims.len(), 3);
+        assert_eq!(DatasetProfile::vast().dims.len(), 5);
+        for p in &all {
+            assert!(p.nnz <= p.paper_nnz);
+            assert!(p.scale_vs_paper() <= 1.0);
+            assert_eq!(p.dims.len(), p.paper_dims.len());
+            for (d, pd) in p.dims.iter().zip(&p.paper_dims) {
+                assert!(d <= pd, "{}: generation dims exceed paper dims", p.name);
+                // scheme decisions preserved: small modes exact, big modes big
+                if (*pd as usize) < 82 {
+                    assert_eq!(d, pd);
+                } else {
+                    assert!(*d as usize >= 82);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generate_is_deterministic() {
+        let p = DatasetProfile::uber().scaled(0.01);
+        assert_eq!(p.generate(1), p.generate(1));
+    }
+
+    #[test]
+    fn generate_respects_dims_and_dedups() {
+        let p = DatasetProfile::nips().scaled(0.01);
+        let t = p.generate(2);
+        assert_eq!(t.dims, p.dims);
+        assert!(t.nnz() > 0 && t.nnz() <= p.nnz);
+        // set semantics: collapsing again changes nothing
+        assert_eq!(t.nnz(), t.collapse_duplicates().nnz());
+    }
+
+    #[test]
+    fn generate_covers_small_modes() {
+        // Mode 1 of uber has 24 indices; a 10k-sample tensor should hit all.
+        let t = DatasetProfile::uber().scaled(0.01).generate(3);
+        let mut seen = vec![false; 24];
+        for &i in &t.inds[1] {
+            seen[i as usize] = true;
+        }
+        assert!(seen.iter().filter(|&&s| s).count() >= 20);
+    }
+
+    #[test]
+    fn skew_produces_imbalanced_degrees() {
+        let t = DatasetProfile::chicago().scaled(0.02).generate(4);
+        // mode 0 has 6186 indices with skew 1.8: max degree should be well
+        // above the mean degree.
+        let mut deg = vec![0u32; t.dims[0] as usize];
+        for &i in &t.inds[0] {
+            deg[i as usize] += 1;
+        }
+        let max = *deg.iter().max().unwrap() as f64;
+        let mean = t.nnz() as f64 / t.dims[0] as f64;
+        assert!(max > 4.0 * mean, "max={max} mean={mean}");
+    }
+
+    #[test]
+    fn low_rank_generate_has_structure() {
+        let p = DatasetProfile::uber().scaled(0.002);
+        let t = p.generate_low_rank(5, 4, 0.0);
+        assert_eq!(t.dims, p.dims);
+        assert!(t.nnz() > 0);
+        // deterministic
+        assert_eq!(t, p.generate_low_rank(5, 4, 0.0));
+        // same coords as plain generate, different values
+        let base = p.generate(5);
+        assert_eq!(t.inds, base.inds);
+        assert_ne!(t.vals, base.vals);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert_eq!(DatasetProfile::by_name("uber").unwrap().name, "uber");
+        assert!(DatasetProfile::by_name("nope").is_none());
+    }
+}

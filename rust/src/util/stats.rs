@@ -1,0 +1,103 @@
+//! Summary statistics over timing samples, shared by the in-tree bench
+//! harness (rust/benches/) and the metrics module.
+
+/// Simple summary of a sample set (nanoseconds or any unit).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+    /// 95th percentile (nearest-rank).
+    pub p95: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of on empty sample set");
+        let n = samples.len();
+        let mut sorted: Vec<f64> = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            sorted.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let pct = |q: f64| sorted[(((n as f64) * q).ceil() as usize).clamp(1, n) - 1];
+        Summary {
+            n,
+            mean,
+            median: pct(0.5),
+            min: sorted[0],
+            max: sorted[n - 1],
+            stddev: var.sqrt(),
+            p95: pct(0.95),
+        }
+    }
+}
+
+/// Load-imbalance statistics over per-worker loads (nnz or bytes).
+#[derive(Clone, Debug)]
+pub struct Imbalance {
+    pub max: u64,
+    pub min: u64,
+    pub mean: f64,
+    /// max / mean; 1.0 is perfectly balanced. This is the quantity Graham's
+    /// bound controls for the LPT-style scheme-1 partitioner.
+    pub factor: f64,
+}
+
+impl Imbalance {
+    pub fn of(loads: &[u64]) -> Imbalance {
+        assert!(!loads.is_empty());
+        let max = *loads.iter().max().unwrap();
+        let min = *loads.iter().min().unwrap();
+        let mean = loads.iter().sum::<u64>() as f64 / loads.len() as f64;
+        Imbalance {
+            max,
+            min,
+            mean,
+            factor: if mean > 0.0 { max as f64 / mean } else { 1.0 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant() {
+        let s = Summary::of(&[5.0; 10]);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.median, 5.0);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.p95, 5.0);
+    }
+
+    #[test]
+    fn summary_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.median, 50.0);
+        assert_eq!(s.p95, 95.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn imbalance_balanced_is_one() {
+        let im = Imbalance::of(&[10, 10, 10, 10]);
+        assert!((im.factor - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_detects_skew() {
+        let im = Imbalance::of(&[30, 10, 10, 10]);
+        assert!((im.factor - 2.0).abs() < 1e-12);
+        assert_eq!(im.max, 30);
+    }
+}

@@ -1,0 +1,154 @@
+//! Integration: CPD-ALS end-to-end against the jnp oracle's fit value and
+//! convergence behaviour, on both backends.
+
+use spmttkrp::coordinator::{Engine, EngineConfig};
+use spmttkrp::cpd::{als, CpdConfig};
+use spmttkrp::tensor::io::read_golden;
+use spmttkrp::tensor::synth::DatasetProfile;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// The golden `fit` field is the CPD fit of the *initial random factors*
+/// (weights = 1). Recompute it through the engine's fit machinery (grams,
+/// weighted gram, mode-(N-1) MTTKRP, inner product) and compare.
+#[test]
+fn engine_fit_pieces_match_oracle_fit() {
+    for tag in ["n3_r16", "n4_r16", "n5_r16"] {
+        let case = read_golden(&artifacts_dir().join("golden"), tag).unwrap();
+        let t = &case.tensor;
+        let n = t.n_modes();
+        let engine = Engine::with_native_backend(
+            t,
+            EngineConfig {
+                sm_count: 8,
+                threads: 2,
+                rank: case.rank,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let grams: Vec<Vec<f32>> = case
+            .factors
+            .factors
+            .iter()
+            .map(|f| engine.gram(f).unwrap())
+            .collect();
+        let w = vec![1.0f32; case.rank];
+        let norm_model_sq = engine.weighted_gram(&grams, &w).unwrap();
+        let (m_last, _) = engine.mttkrp_mode(&case.factors, n - 1).unwrap();
+        let inner = engine
+            .inner(&m_last, &case.factors[n - 1].data)
+            .unwrap();
+        let norm_x_sq = t.norm_sq();
+        let resid_sq = (norm_x_sq + norm_model_sq - 2.0 * inner).max(0.0);
+        let fit = 1.0 - resid_sq.sqrt() / norm_x_sq.sqrt();
+        assert!(
+            (fit - case.fit).abs() < 5e-3 * (1.0 + case.fit.abs()),
+            "{tag}: engine fit {fit} vs oracle {}",
+            case.fit
+        );
+    }
+}
+
+#[test]
+fn als_improves_fit_on_golden_tensors() {
+    let case = read_golden(&artifacts_dir().join("golden"), "n3_r16").unwrap();
+    let engine = Engine::with_native_backend(
+        &case.tensor,
+        EngineConfig {
+            sm_count: 8,
+            threads: 2,
+            rank: 16,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let cfg = CpdConfig {
+        rank: 16,
+        max_iters: 6,
+        tol: 0.0,
+        damp: 1e-4,
+        seed: 5,
+    };
+    let res = als(&engine, &case.tensor, &cfg).unwrap();
+    assert_eq!(res.fits.len(), 6);
+    assert!(
+        res.final_fit() > res.fits[0],
+        "ALS should improve fit: {:?}",
+        res.fits
+    );
+    for w in res.fits.windows(2) {
+        assert!(w[1] >= w[0] - 1e-3, "fit regressed: {:?}", res.fits);
+    }
+    // weights positive, factors finite
+    assert!(res.weights.iter().all(|&w| w > 0.0));
+    for f in &res.factors.factors {
+        assert!(f.data.iter().all(|x| x.is_finite()));
+    }
+}
+
+#[test]
+fn als_pjrt_and_native_agree() {
+    std::env::set_var("SPMTTKRP_ARTIFACTS", artifacts_dir());
+    let t = DatasetProfile::uber().scaled(0.001).generate(3);
+    let mk = |backend: &str| {
+        let cfg = EngineConfig {
+            sm_count: 6,
+            threads: 2,
+            rank: 16,
+            ..Default::default()
+        };
+        let engine = match backend {
+            "native" => Engine::with_native_backend(&t, cfg).unwrap(),
+            _ => Engine::with_pjrt_backend(&t, cfg).unwrap(),
+        };
+        let cfg = CpdConfig {
+            rank: 16,
+            max_iters: 3,
+            tol: 0.0,
+            damp: 1e-4,
+            seed: 11,
+        };
+        als(&engine, &t, &cfg).unwrap()
+    };
+    let a = mk("native");
+    let b = mk("pjrt");
+    for (fa, fb) in a.fits.iter().zip(&b.fits) {
+        assert!(
+            (fa - fb).abs() < 5e-3,
+            "fits diverged: native {:?} pjrt {:?}",
+            a.fits,
+            b.fits
+        );
+    }
+}
+
+#[test]
+fn als_reports_cover_all_modes_every_iteration() {
+    let t = DatasetProfile::nips().scaled(0.001).generate(9);
+    let engine = Engine::with_native_backend(
+        &t,
+        EngineConfig {
+            sm_count: 8,
+            threads: 2,
+            rank: 16,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let cfg = CpdConfig {
+        rank: 16,
+        max_iters: 2,
+        tol: 0.0,
+        damp: 1e-5,
+        seed: 2,
+    };
+    let res = als(&engine, &t, &cfg).unwrap();
+    assert_eq!(res.reports.len(), res.iterations);
+    for rep in &res.reports {
+        assert_eq!(rep.modes.len(), t.n_modes());
+        assert!(rep.total_traffic().total_bytes() > 0);
+    }
+}

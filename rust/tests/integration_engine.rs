@@ -1,0 +1,175 @@
+//! Integration: the full engine (and every baseline) against the golden
+//! spMTTKRP references dumped by the jnp oracle (`aot.py --golden`), across
+//! backends, load-balancing modes and kernel variants.
+
+use spmttkrp::baselines::{
+    blco_exec::BlcoExecutor, mmcsf::MmCsfExecutor, parti::PartiExecutor, MttkrpExecutor,
+};
+use spmttkrp::coordinator::{Engine, EngineConfig};
+use spmttkrp::partition::{LoadBalance, VertexAssign};
+use spmttkrp::tensor::io::{read_golden, GoldenCase};
+
+fn golden(tag: &str) -> GoldenCase {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .join("golden");
+    read_golden(&dir, tag).expect("golden cases: run `make artifacts`")
+}
+
+fn assert_matches_golden(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: shape");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let scale = 1.0 + w.abs();
+        assert!(
+            (g - w).abs() <= 1e-3 * scale,
+            "{what}[{i}]: got {g}, golden {w}"
+        );
+    }
+}
+
+fn check_engine(case: &GoldenCase, cfg: EngineConfig, label: &str) {
+    let engine = Engine::with_native_backend(&case.tensor, cfg).unwrap();
+    for mode in 0..case.tensor.n_modes() {
+        let (got, _) = engine.mttkrp_mode(&case.factors, mode).unwrap();
+        assert_matches_golden(
+            &got,
+            &case.mttkrp[mode],
+            &format!("{label} mode {mode}"),
+        );
+    }
+}
+
+#[test]
+fn engine_matches_golden_all_cases() {
+    for tag in ["n3_r16", "n4_r16", "n5_r16", "n3_r32"] {
+        let case = golden(tag);
+        let cfg = EngineConfig {
+            sm_count: 8,
+            threads: 2,
+            rank: case.rank,
+            ..Default::default()
+        };
+        check_engine(&case, cfg, tag);
+    }
+}
+
+#[test]
+fn engine_matches_golden_forced_schemes_and_kernels() {
+    let case = golden("n3_r16");
+    for lb in [
+        LoadBalance::Adaptive,
+        LoadBalance::ForceScheme1,
+        LoadBalance::ForceScheme2,
+    ] {
+        for seg in [true, false] {
+            for assign in [VertexAssign::Cyclic, VertexAssign::Greedy] {
+                let cfg = EngineConfig {
+                    sm_count: 13,
+                    threads: 3,
+                    rank: case.rank,
+                    lb,
+                    assign,
+                    use_seg_kernel: seg,
+                    ..Default::default()
+                };
+                check_engine(&case, cfg, &format!("{lb:?}/seg={seg}/{assign:?}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_matches_golden_extreme_kappa() {
+    let case = golden("n4_r16");
+    for kappa in [1usize, 2, 37, 82, 256] {
+        let cfg = EngineConfig {
+            sm_count: kappa,
+            threads: 4,
+            rank: case.rank,
+            ..Default::default()
+        };
+        check_engine(&case, cfg, &format!("kappa={kappa}"));
+    }
+}
+
+#[test]
+fn engine_pjrt_backend_matches_golden() {
+    let case = golden("n3_r32");
+    std::env::set_var(
+        "SPMTTKRP_ARTIFACTS",
+        std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    );
+    let cfg = EngineConfig {
+        sm_count: 8,
+        threads: 2,
+        rank: case.rank,
+        ..Default::default()
+    };
+    let engine = Engine::with_pjrt_backend(&case.tensor, cfg).unwrap();
+    for mode in 0..case.tensor.n_modes() {
+        let (got, rep) = engine.mttkrp_mode(&case.factors, mode).unwrap();
+        assert_matches_golden(&got, &case.mttkrp[mode], &format!("pjrt mode {mode}"));
+        assert!(rep.traffic.total_bytes() > 0);
+    }
+}
+
+#[test]
+fn all_baselines_match_golden() {
+    for tag in ["n3_r16", "n4_r16", "n5_r16"] {
+        let case = golden(tag);
+        let execs: Vec<Box<dyn MttkrpExecutor>> = vec![
+            Box::new(PartiExecutor::new(&case.tensor, 8, 2, case.rank)),
+            Box::new(MmCsfExecutor::new(&case.tensor, 8, 2, case.rank)),
+            Box::new(BlcoExecutor::new(&case.tensor, 8, 2, case.rank)),
+        ];
+        for ex in &execs {
+            for mode in 0..case.tensor.n_modes() {
+                let (got, _) = ex.execute_mode(&case.factors, mode).unwrap();
+                assert_matches_golden(
+                    &got,
+                    &case.mttkrp[mode],
+                    &format!("{} {tag} mode {mode}", ex.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn traffic_model_ours_has_no_intermediate_bytes() {
+    let case = golden("n3_r16");
+    let engine = Engine::with_native_backend(
+        &case.tensor,
+        EngineConfig {
+            sm_count: 8,
+            threads: 2,
+            rank: case.rank,
+            use_seg_kernel: true,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let (_, rep) = engine
+        .mttkrp_all_modes_with_report(&case.factors)
+        .map(|(o, r)| (o, r))
+        .unwrap();
+    let t = rep.total_traffic();
+    assert_eq!(
+        t.intermediate_bytes, 0,
+        "mode-specific format must not spill partials"
+    );
+    // Baseline with the plain kernel *does* spill.
+    let engine2 = Engine::with_native_backend(
+        &case.tensor,
+        EngineConfig {
+            sm_count: 8,
+            threads: 2,
+            rank: case.rank,
+            use_seg_kernel: false,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let (_, rep2) = engine2.mttkrp_all_modes_with_report(&case.factors).unwrap();
+    assert!(rep2.total_traffic().intermediate_bytes > 0);
+}

@@ -1,0 +1,170 @@
+//! Integration: the PJRT backend (AOT Pallas kernels under XLA) must agree
+//! with the native backend op-by-op, for every rank in the artifact set.
+//! This is the numerical contract between L1/L2 (python) and L3 (rust).
+
+use spmttkrp::runtime::{Backend, NativeBackend, PjrtBackend};
+use spmttkrp::util::rng::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn backends() -> (PjrtBackend, NativeBackend) {
+    let pjrt = PjrtBackend::load(&artifacts_dir())
+        .expect("artifacts must be built: run `make artifacts`");
+    let native = NativeBackend::new(pjrt.block_p());
+    (pjrt, native)
+}
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.next_normal() as f32).collect()
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0 + x.abs().max(y.abs());
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "{what}[{i}]: pjrt {x} vs native {y}"
+        );
+    }
+}
+
+#[test]
+fn mttkrp_block_all_variants_agree() {
+    let (pjrt, native) = backends();
+    let p = pjrt.block_p();
+    let mut rng = Rng::new(100);
+    for &rank in &[16usize, 32] {
+        for n_in in 2..=4usize {
+            let vals = rand_vec(&mut rng, p);
+            let rows: Vec<Vec<f32>> =
+                (0..n_in).map(|_| rand_vec(&mut rng, p * rank)).collect();
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let mut got = vec![0.0f32; p * rank];
+            let mut want = vec![0.0f32; p * rank];
+            pjrt.mttkrp_block(rank, &vals, &refs, &mut got).unwrap();
+            native.mttkrp_block(rank, &vals, &refs, &mut want).unwrap();
+            assert_close(&got, &want, 1e-5, &format!("mttkrp n{n_in} r{rank}"));
+        }
+    }
+}
+
+#[test]
+fn mttkrp_seg_all_variants_agree() {
+    let (pjrt, native) = backends();
+    let p = pjrt.block_p();
+    let mut rng = Rng::new(200);
+    for &rank in &[16usize, 32] {
+        for n_in in 2..=4usize {
+            let vals = rand_vec(&mut rng, p);
+            let mut seg: Vec<f32> = (0..p)
+                .map(|_| if rng.next_f64() < 0.25 { 1.0 } else { 0.0 })
+                .collect();
+            seg[0] = 1.0;
+            let rows: Vec<Vec<f32>> =
+                (0..n_in).map(|_| rand_vec(&mut rng, p * rank)).collect();
+            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let mut got = vec![0.0f32; p * rank];
+            let mut want = vec![0.0f32; p * rank];
+            pjrt.mttkrp_block_seg(rank, &vals, &seg, &refs, &mut got)
+                .unwrap();
+            native
+                .mttkrp_block_seg(rank, &vals, &seg, &refs, &mut want)
+                .unwrap();
+            // segmented sums accumulate: slightly looser tolerance
+            assert_close(&got, &want, 1e-4, &format!("seg n{n_in} r{rank}"));
+        }
+    }
+}
+
+#[test]
+fn gram_hadamard_solve_agree() {
+    let (pjrt, native) = backends();
+    let p = pjrt.block_p();
+    let mut rng = Rng::new(300);
+    for &rank in &[16usize, 32] {
+        // gram
+        let y = rand_vec(&mut rng, p * rank);
+        let mut g1 = vec![0.0f32; rank * rank];
+        let mut g2 = vec![0.0f32; rank * rank];
+        pjrt.gram_block(rank, &y, &mut g1).unwrap();
+        native.gram_block(rank, &y, &mut g2).unwrap();
+        assert_close(&g1, &g2, 1e-3, &format!("gram r{rank}"));
+
+        // hadamard over n = 2..5
+        for n in 2..=5usize {
+            let grams = rand_vec(&mut rng, n * rank * rank);
+            let mut h1 = vec![0.0f32; rank * rank];
+            let mut h2 = vec![0.0f32; rank * rank];
+            pjrt.hadamard_grams(rank, n, &grams, 0.5, &mut h1).unwrap();
+            native.hadamard_grams(rank, n, &grams, 0.5, &mut h2).unwrap();
+            assert_close(&h1, &h2, 1e-4, &format!("hadamard n{n} r{rank}"));
+        }
+
+        // solve on an SPD V
+        let a = rand_vec(&mut rng, rank * rank);
+        let mut v = vec![0.0f32; rank * rank];
+        for i in 0..rank {
+            for j in 0..rank {
+                let mut acc = if i == j { rank as f64 } else { 0.0 };
+                for k in 0..rank {
+                    acc += a[i * rank + k] as f64 * a[j * rank + k] as f64;
+                }
+                v[i * rank + j] = acc as f32;
+            }
+        }
+        let m = rand_vec(&mut rng, p * rank);
+        let mut s1 = vec![0.0f32; p * rank];
+        let mut s2 = vec![0.0f32; p * rank];
+        pjrt.solve_block(rank, &v, &m, &mut s1).unwrap();
+        native.solve_block(rank, &v, &m, &mut s2).unwrap();
+        assert_close(&s1, &s2, 5e-3, &format!("solve r{rank}"));
+    }
+}
+
+#[test]
+fn reductions_agree() {
+    let (pjrt, native) = backends();
+    let p = pjrt.block_p();
+    let mut rng = Rng::new(400);
+    for &rank in &[16usize, 32] {
+        let a = rand_vec(&mut rng, p * rank);
+        let b = rand_vec(&mut rng, p * rank);
+        let i1 = pjrt.inner_block(rank, &a, &b).unwrap();
+        let i2 = native.inner_block(rank, &a, &b).unwrap();
+        assert!(
+            (i1 - i2).abs() <= 1e-3 * (1.0 + i2.abs()),
+            "inner r{rank}: {i1} vs {i2}"
+        );
+        for n in 2..=5usize {
+            let grams = rand_vec(&mut rng, n * rank * rank);
+            let w = rand_vec(&mut rng, rank);
+            let w1 = pjrt.weighted_gram(rank, n, &grams, &w).unwrap();
+            let w2 = native.weighted_gram(rank, n, &grams, &w).unwrap();
+            assert!(
+                (w1 - w2).abs() <= 1e-2 * (1.0 + w2.abs()),
+                "wgram n{n} r{rank}: {w1} vs {w2}"
+            );
+        }
+    }
+}
+
+#[test]
+fn manifest_rejects_bad_shapes() {
+    let (pjrt, _) = backends();
+    let p = pjrt.block_p();
+    // wrong vals length
+    let vals = vec![0.0f32; p / 2];
+    let rows = vec![0.0f32; p * 16];
+    let refs: Vec<&[f32]> = vec![&rows, &rows];
+    let mut out = vec![0.0f32; p * 16];
+    assert!(pjrt.mttkrp_block(16, &vals, &refs, &mut out).is_err());
+    // unknown rank
+    let vals = vec![0.0f32; p];
+    let rows9 = vec![0.0f32; p * 9];
+    let refs9: Vec<&[f32]> = vec![&rows9, &rows9];
+    let mut out9 = vec![0.0f32; p * 9];
+    assert!(pjrt.mttkrp_block(9, &vals, &refs9, &mut out9).is_err());
+}
