@@ -5,7 +5,6 @@
 //!
 //!     cargo run --release --example fig4_ablation
 
-use spmttkrp::baselines::MttkrpExecutor;
 use spmttkrp::bench_support::{bench_reps, paper_engine, print_table, time_sim, Workload};
 use spmttkrp::partition::LoadBalance;
 use spmttkrp::util::geomean;

@@ -5,8 +5,8 @@
 //!
 //!     cargo run --release --example fig5_memory
 
-use spmttkrp::format::memory::{MemoryReport, RTX3090_BYTES};
 use spmttkrp::bench_support::print_table;
+use spmttkrp::format::memory::{MemoryReport, RTX3090_BYTES};
 use spmttkrp::tensor::synth::DatasetProfile;
 use spmttkrp::util::human_bytes;
 

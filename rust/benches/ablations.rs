@@ -13,7 +13,7 @@
 use spmttkrp::baselines::MttkrpExecutor;
 use spmttkrp::bench_support::{bench_reps, print_table, time, Workload};
 use spmttkrp::coordinator::{Engine, EngineConfig};
-use spmttkrp::partition::{LoadBalance, VertexAssign};
+use spmttkrp::partition::VertexAssign;
 use spmttkrp::runtime::NativeBackend;
 use spmttkrp::tensor::synth::DatasetProfile;
 use spmttkrp::util::human_bytes;

@@ -51,7 +51,12 @@ impl MemoryReport {
 
     /// Fig. 5 row at the paper's full Table III scale.
     pub fn paper_scale(profile: &DatasetProfile, rank: usize) -> MemoryReport {
-        Self::model(profile.name, &profile.paper_dims, profile.paper_nnz as u64, rank)
+        Self::model(
+            profile.name,
+            &profile.paper_dims,
+            profile.paper_nnz as u64,
+            rank,
+        )
     }
 
     pub fn total_bytes(&self) -> u64 {

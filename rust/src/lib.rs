@@ -46,9 +46,9 @@ pub mod util;
 /// Most-used types, re-exported for `use spmttkrp::prelude::*`.
 pub mod prelude {
     pub use crate::coordinator::{Engine, EngineConfig, UpdatePolicy};
-    pub use crate::cpd::{CpdConfig, CpdResult, als};
-    pub use crate::format::{ModeSpecificFormat, memory::MemoryReport};
+    pub use crate::cpd::{als, CpdConfig, CpdResult};
+    pub use crate::format::{memory::MemoryReport, ModeSpecificFormat};
     pub use crate::partition::{LoadBalance, ModePartitioning};
     pub use crate::runtime::{Backend, NativeBackend, PjrtBackend};
-    pub use crate::tensor::{FactorSet, SparseTensorCOO, synth};
+    pub use crate::tensor::{synth, FactorSet, SparseTensorCOO};
 }

@@ -147,6 +147,22 @@ mod tests {
     }
 
     #[test]
+    fn makespan_is_max() {
+        let costs = [
+            Duration::from_micros(5),
+            Duration::from_micros(9),
+            Duration::from_micros(1),
+        ];
+        assert_eq!(makespan(&costs), Duration::from_micros(9));
+        assert_eq!(makespan(&[]), Duration::ZERO);
+    }
+
+    #[test]
+    fn atomic_penalty_positive() {
+        assert!(global_atomic_penalty_ns() >= 0.0);
+    }
+
+    #[test]
     fn report_totals() {
         let m = |mode| ModeExecReport {
             mode,
@@ -165,26 +181,5 @@ mod tests {
         assert_eq!(r.total_wall(), Duration::from_millis(30));
         assert_eq!(r.total_sim(), Duration::from_millis(9));
         assert_eq!(r.total_traffic().tensor_bytes_read, 300);
-    }
-}
-
-#[cfg(test)]
-mod makespan_tests {
-    use super::*;
-
-    #[test]
-    fn makespan_is_max() {
-        let costs = [
-            Duration::from_micros(5),
-            Duration::from_micros(9),
-            Duration::from_micros(1),
-        ];
-        assert_eq!(makespan(&costs), Duration::from_micros(9));
-        assert_eq!(makespan(&[]), Duration::ZERO);
-    }
-
-    #[test]
-    fn atomic_penalty_positive() {
-        assert!(global_atomic_penalty_ns() >= 0.0);
     }
 }

@@ -17,7 +17,9 @@
 //!
 //! Vertex dealing supports both the paper's cyclic assignment and the
 //! classical LPT greedy (least-loaded bin) that realises Graham's 4/3
-//! bound; `VertexAssign` selects, `stats::graham_check` verifies.
+//! bound; `VertexAssign` selects, and property P4 in
+//! `rust/tests/prop_coordinator.rs` verifies the bound against brute-forced
+//! optima.
 
 pub mod stats;
 
@@ -274,7 +276,14 @@ mod tests {
             (2, SchemeUsed::IndexPartitioned),
             (3, SchemeUsed::IndexPartitioned),
         ] {
-            let p = partition_mode(&t, &h, mode, kappa, LoadBalance::Adaptive, VertexAssign::Cyclic);
+            let p = partition_mode(
+                &t,
+                &h,
+                mode,
+                kappa,
+                LoadBalance::Adaptive,
+                VertexAssign::Cyclic,
+            );
             assert_eq!(p.scheme, want, "mode {mode}");
         }
     }
@@ -282,12 +291,26 @@ mod tests {
     #[test]
     fn forced_schemes_override_adaptive() {
         let (t, h) = setup(DatasetProfile::uber(), 0.005);
-        let p1 = partition_mode(&t, &h, 1, 82, LoadBalance::ForceScheme1, VertexAssign::Cyclic);
+        let p1 = partition_mode(
+            &t,
+            &h,
+            1,
+            82,
+            LoadBalance::ForceScheme1,
+            VertexAssign::Cyclic,
+        );
         assert_eq!(p1.scheme, SchemeUsed::IndexPartitioned);
         // forcing scheme 1 on a 24-index mode leaves ≥ κ-24 partitions empty
         let empties = (0..82).filter(|&z| p1.partition_len(z) == 0).count();
         assert!(empties >= 82 - 24);
-        let p2 = partition_mode(&t, &h, 0, 82, LoadBalance::ForceScheme2, VertexAssign::Cyclic);
+        let p2 = partition_mode(
+            &t,
+            &h,
+            0,
+            82,
+            LoadBalance::ForceScheme2,
+            VertexAssign::Cyclic,
+        );
         assert_eq!(p2.scheme, SchemeUsed::ElementPartitioned);
     }
 

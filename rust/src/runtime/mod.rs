@@ -72,8 +72,7 @@ pub trait Backend: Send + Sync {
     ) -> Result<()>;
 
     /// ALS block solve: `out = m_blk @ inv(v)`, shapes `(P, R)` and `(R, R)`.
-    fn solve_block(&self, rank: usize, v: &[f32], m_blk: &[f32], out: &mut [f32])
-        -> Result<()>;
+    fn solve_block(&self, rank: usize, v: &[f32], m_blk: &[f32], out: &mut [f32]) -> Result<()>;
 
     /// `sum(a * b)` over one `(P, R)` block pair.
     fn inner_block(&self, rank: usize, a: &[f32], b: &[f32]) -> Result<f32>;

@@ -169,7 +169,7 @@ impl DatasetProfile {
     }
 
     /// Generate a tensor with planted low-rank structure: coordinates are
-    /// drawn like [`generate`], but values are
+    /// drawn like [`DatasetProfile::generate`], but values are
     /// `sum_r prod_w A_w(c_w, r) + noise` for hidden random factors of the
     /// given rank. CPD at rank >= `true_rank` recovers a high fit, making
     /// the end-to-end example's fit curve meaningful (a pure-noise tensor

@@ -1,0 +1,40 @@
+//! Helpers shared by the integration suites (each test file is its own
+//! crate, so this is included via `mod common;`).
+#![allow(dead_code)] // not every test crate uses every helper
+
+use std::path::PathBuf;
+
+use spmttkrp::tensor::io::{read_golden, GoldenCase};
+
+/// `rust/artifacts` — where `make artifacts` puts the AOT kernel set.
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// True when the AOT artifact set (`manifest.json`) is available; prints a
+/// visible skip note naming `what` and returns false otherwise.
+pub fn pjrt_available(what: &str) -> bool {
+    if artifacts_dir().join("manifest.json").exists() {
+        return true;
+    }
+    eprintln!(
+        "skipping {what}: artifacts not built \
+         (run `make artifacts` to enable this test)"
+    );
+    false
+}
+
+/// Load a golden case, or `None` (with a visible skip note) when that case
+/// has not been built — the suites must pass on a machine with no
+/// `artifacts/` directory and no Python toolchain.
+pub fn golden(tag: &str) -> Option<GoldenCase> {
+    let dir = artifacts_dir().join("golden");
+    if !dir.join(format!("{tag}.meta.json")).exists() {
+        eprintln!(
+            "skipping golden case '{tag}': artifacts not built \
+             (run `make artifacts` to enable this test)"
+        );
+        return None;
+    }
+    Some(read_golden(&dir, tag).expect("golden artifacts present but unreadable"))
+}

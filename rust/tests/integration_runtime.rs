@@ -5,15 +5,20 @@
 use spmttkrp::runtime::{Backend, NativeBackend, PjrtBackend};
 use spmttkrp::util::rng::Rng;
 
-fn artifacts_dir() -> std::path::PathBuf {
-    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
+mod common;
 
-fn backends() -> (PjrtBackend, NativeBackend) {
-    let pjrt = PjrtBackend::load(&artifacts_dir())
-        .expect("artifacts must be built: run `make artifacts`");
+use common::{artifacts_dir, pjrt_available};
+
+/// Build both backends, or `None` (with a visible skip note) when the
+/// artifact set has not been built — the suite must pass on a machine with
+/// no `artifacts/` directory and no Python toolchain.
+fn backends() -> Option<(PjrtBackend, NativeBackend)> {
+    if !pjrt_available("PJRT/native cross-check") {
+        return None;
+    }
+    let pjrt = PjrtBackend::load(&artifacts_dir()).expect("manifest present but unloadable");
     let native = NativeBackend::new(pjrt.block_p());
-    (pjrt, native)
+    Some((pjrt, native))
 }
 
 fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
@@ -33,7 +38,7 @@ fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
 
 #[test]
 fn mttkrp_block_all_variants_agree() {
-    let (pjrt, native) = backends();
+    let Some((pjrt, native)) = backends() else { return };
     let p = pjrt.block_p();
     let mut rng = Rng::new(100);
     for &rank in &[16usize, 32] {
@@ -53,7 +58,7 @@ fn mttkrp_block_all_variants_agree() {
 
 #[test]
 fn mttkrp_seg_all_variants_agree() {
-    let (pjrt, native) = backends();
+    let Some((pjrt, native)) = backends() else { return };
     let p = pjrt.block_p();
     let mut rng = Rng::new(200);
     for &rank in &[16usize, 32] {
@@ -81,7 +86,7 @@ fn mttkrp_seg_all_variants_agree() {
 
 #[test]
 fn gram_hadamard_solve_agree() {
-    let (pjrt, native) = backends();
+    let Some((pjrt, native)) = backends() else { return };
     let p = pjrt.block_p();
     let mut rng = Rng::new(300);
     for &rank in &[16usize, 32] {
@@ -126,7 +131,7 @@ fn gram_hadamard_solve_agree() {
 
 #[test]
 fn reductions_agree() {
-    let (pjrt, native) = backends();
+    let Some((pjrt, native)) = backends() else { return };
     let p = pjrt.block_p();
     let mut rng = Rng::new(400);
     for &rank in &[16usize, 32] {
@@ -153,7 +158,7 @@ fn reductions_agree() {
 
 #[test]
 fn manifest_rejects_bad_shapes() {
-    let (pjrt, _) = backends();
+    let Some((pjrt, _)) = backends() else { return };
     let p = pjrt.block_p();
     // wrong vals length
     let vals = vec![0.0f32; p / 2];
