@@ -19,6 +19,10 @@ fn main() -> anyhow::Result<()> {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(0.1);
+    let max_iters: usize = std::env::var("SPMTTKRP_E2E_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
     let profile = synth::DatasetProfile::uber().scaled(scale);
     // planted rank-8 structure + 10% noise: the fit curve has something to
     // recover (decomposing pure noise would plateau near zero fit)
@@ -57,7 +61,7 @@ fn main() -> anyhow::Result<()> {
 
     let cpd_cfg = CpdConfig {
         rank: 32,
-        max_iters: 10,
+        max_iters,
         tol: 1e-5,
         damp: 1e-6,
         seed: 7,

@@ -5,7 +5,12 @@
 //!
 //!     cargo run --release --example fig4_ablation
 
-use spmttkrp::bench_support::{bench_reps, paper_engine, print_table, time_sim, Workload};
+use std::sync::Arc;
+
+use spmttkrp::bench_support::{
+    bench_reps, paper_engine_on_pool, print_table, time_sim, Workload,
+};
+use spmttkrp::exec::SmPool;
 use spmttkrp::partition::LoadBalance;
 use spmttkrp::util::geomean;
 
@@ -13,6 +18,8 @@ fn main() -> anyhow::Result<()> {
     let rank = 32;
     let reps = bench_reps();
     let workloads = Workload::all(rank);
+    // one persistent SM pool serves every engine variant in the sweep
+    let pool = Arc::new(SmPool::with_default_threads());
     let mut rows = Vec::new();
     let mut sp1 = Vec::new();
     let mut sp2 = Vec::new();
@@ -24,7 +31,7 @@ fn main() -> anyhow::Result<()> {
             LoadBalance::ForceScheme1,
             LoadBalance::ForceScheme2,
         ] {
-            let engine = paper_engine(&w.tensor, rank, lb);
+            let engine = paper_engine_on_pool(&w.tensor, rank, lb, Arc::clone(&pool));
             let s = time_sim(reps, &engine, &w.factors);
             times.push(s.median);
             // idle SMs summed over modes (the scheme-1-only failure mode)

@@ -10,9 +10,12 @@
 //!
 //!     cargo bench --bench ablations [-- seg|assign|kappa|blockp|runtime]
 
+use std::sync::Arc;
+
 use spmttkrp::baselines::MttkrpExecutor;
 use spmttkrp::bench_support::{bench_reps, print_table, time, Workload};
 use spmttkrp::coordinator::{Engine, EngineConfig};
+use spmttkrp::exec::SmPool;
 use spmttkrp::partition::VertexAssign;
 use spmttkrp::runtime::NativeBackend;
 use spmttkrp::tensor::synth::DatasetProfile;
@@ -26,16 +29,17 @@ fn cfg(rank: usize) -> EngineConfig {
     }
 }
 
-fn ablate_seg(reps: usize, rank: usize) {
+fn ablate_seg(reps: usize, rank: usize, pool: &Arc<SmPool>) {
     let mut rows = Vec::new();
     for w in Workload::all(rank) {
         let mk = |seg: bool| {
-            Engine::with_native_backend(
+            Engine::native_on_pool(
                 &w.tensor,
                 EngineConfig {
                     use_seg_kernel: seg,
                     ..cfg(rank)
                 },
+                Arc::clone(pool),
             )
             .unwrap()
         };
@@ -64,18 +68,19 @@ fn ablate_seg(reps: usize, rank: usize) {
     );
 }
 
-fn ablate_assign(reps: usize, rank: usize) {
+fn ablate_assign(reps: usize, rank: usize, pool: &Arc<SmPool>) {
     let mut rows = Vec::new();
     for w in Workload::all(rank) {
         let mut medians = Vec::new();
         let mut imb = Vec::new();
         for assign in [VertexAssign::Cyclic, VertexAssign::Greedy] {
-            let e = Engine::with_native_backend(
+            let e = Engine::native_on_pool(
                 &w.tensor,
                 EngineConfig {
                     assign,
                     ..cfg(rank)
                 },
+                Arc::clone(pool),
             )
             .unwrap();
             let s = time(reps, || {
@@ -109,7 +114,7 @@ fn ablate_assign(reps: usize, rank: usize) {
     );
 }
 
-fn ablate_kappa(reps: usize, rank: usize) {
+fn ablate_kappa(reps: usize, rank: usize, pool: &Arc<SmPool>) {
     let w = Workload::prepare(
         DatasetProfile::uber(),
         spmttkrp::bench_support::bench_scale(),
@@ -118,12 +123,13 @@ fn ablate_kappa(reps: usize, rank: usize) {
     );
     let mut rows = Vec::new();
     for kappa in [8usize, 16, 32, 82, 128, 256] {
-        let e = Engine::with_native_backend(
+        let e = Engine::native_on_pool(
             &w.tensor,
             EngineConfig {
                 sm_count: kappa,
                 ..cfg(rank)
             },
+            Arc::clone(pool),
         )
         .unwrap();
         let s = time(reps, || {
@@ -143,7 +149,7 @@ fn ablate_kappa(reps: usize, rank: usize) {
     );
 }
 
-fn ablate_blockp(reps: usize, rank: usize) {
+fn ablate_blockp(reps: usize, rank: usize, pool: &Arc<SmPool>) {
     let w = Workload::prepare(
         DatasetProfile::uber(),
         spmttkrp::bench_support::bench_scale(),
@@ -152,10 +158,11 @@ fn ablate_blockp(reps: usize, rank: usize) {
     );
     let mut rows = Vec::new();
     for p in [32usize, 64, 128, 256, 512, 1024] {
-        let e = Engine::new(
+        let e = Engine::with_pool(
             &w.tensor,
             Box::new(NativeBackend::new(p)),
             cfg(rank),
+            Arc::clone(pool),
         )
         .unwrap();
         let s = time(reps, || {
@@ -170,9 +177,10 @@ fn ablate_blockp(reps: usize, rank: usize) {
     );
 }
 
-fn ablate_runtime(reps: usize, rank: usize) {
+fn ablate_runtime(reps: usize, rank: usize, pool: &Arc<SmPool>) {
     let w = Workload::prepare(DatasetProfile::uber(), 0.01, rank, 7);
-    let native = Engine::with_native_backend(&w.tensor, cfg(rank)).unwrap();
+    let native =
+        Engine::native_on_pool(&w.tensor, cfg(rank), Arc::clone(pool)).unwrap();
     let t_native = time(reps, || {
         std::hint::black_box(native.execute_all_modes(&w.factors).unwrap());
     });
@@ -212,19 +220,21 @@ fn main() {
         "ablations: rank {rank}, reps {reps}, scale {}",
         spmttkrp::bench_support::bench_scale()
     );
+    // one persistent SM pool serves every engine in every ablation
+    let pool = Arc::new(SmPool::with_default_threads());
     if has("seg") {
-        ablate_seg(reps, rank);
+        ablate_seg(reps, rank, &pool);
     }
     if has("assign") {
-        ablate_assign(reps, rank);
+        ablate_assign(reps, rank, &pool);
     }
     if has("kappa") {
-        ablate_kappa(reps, rank);
+        ablate_kappa(reps, rank, &pool);
     }
     if has("blockp") {
-        ablate_blockp(reps, rank);
+        ablate_blockp(reps, rank, &pool);
     }
     if has("runtime") {
-        ablate_runtime(reps, rank);
+        ablate_runtime(reps, rank, &pool);
     }
 }

@@ -5,8 +5,13 @@
 //!
 //!     cargo bench --bench fig4_load_balancing
 
+use std::sync::Arc;
+
 use spmttkrp::baselines::MttkrpExecutor;
-use spmttkrp::bench_support::{bench_reps, paper_engine, print_table, time_sim, Workload};
+use spmttkrp::bench_support::{
+    bench_reps, paper_engine_on_pool, print_table, time_sim, Workload,
+};
+use spmttkrp::exec::SmPool;
 use spmttkrp::partition::LoadBalance;
 use spmttkrp::util::geomean;
 
@@ -14,6 +19,8 @@ fn main() {
     let rank = 32;
     let reps = bench_reps();
     let workloads = Workload::all(rank);
+    // one persistent SM pool serves every engine variant in the sweep
+    let pool = Arc::new(SmPool::with_default_threads());
     println!(
         "fig4 bench: rank {rank}, reps {reps}, scale {}",
         spmttkrp::bench_support::bench_scale()
@@ -29,7 +36,7 @@ fn main() {
             LoadBalance::ForceScheme1,
             LoadBalance::ForceScheme2,
         ] {
-            let engine = paper_engine(&w.tensor, rank, lb);
+            let engine = paper_engine_on_pool(&w.tensor, rank, lb, Arc::clone(&pool));
             let s = time_sim(reps, &engine, &w.factors);
             medians.push(s.median);
             let (_, rep) = engine.execute_all_modes(&w.factors).unwrap();

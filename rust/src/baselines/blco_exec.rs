@@ -12,33 +12,54 @@
 //!
 //! vs the paper's format: one copy instead of N (memory win), but
 //! non-leading modes pay decode + scattered output + global atomics.
+//!
+//! Runs on the shared persistent [`SmPool`]; the equal-nnz chunk bounds
+//! and lock shards live in per-mode [`ModePlan`]s built at construction.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-use std::time::Instant;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use super::MttkrpExecutor;
 use crate::coordinator::shared::SharedRows;
+use crate::exec::{ModePlan, SmPool, UpdatePolicy, WorkspaceArena};
 use crate::format::blco::BlcoTensor;
-use crate::metrics::{ModeExecReport, TrafficCounters};
+use crate::metrics::ModeExecReport;
 use crate::tensor::{FactorSet, SparseTensorCOO};
 use crate::util::stats::Imbalance;
+
+/// Per-worker scratch: the per-element contribution and the running
+/// same-output merge buffer.
+struct MergeScratch {
+    contrib: Vec<f32>,
+    run: Vec<f32>,
+}
 
 pub struct BlcoExecutor {
     pub blco: BlcoTensor,
     pub kappa: usize,
-    pub threads: usize,
     pub rank: usize,
-    pub lock_shards: usize,
-    /// Flattened (block, element) pairs in global sorted order, chunked.
-    chunks: Vec<(usize, usize)>, // (start, end) into the flat order
-    flat: Vec<(u32, u32)>,       // (block, elem)
+    /// Flattened (block, element) pairs in global sorted order.
+    flat: Vec<(u32, u32)>,
+    pool: Arc<SmPool>,
+    /// One plan per mode; `bounds` are the equal-nnz chunk offsets into
+    /// `flat` (identical per mode — the single-copy property).
+    plans: Vec<ModePlan>,
+    arena: WorkspaceArena<MergeScratch>,
 }
 
 impl BlcoExecutor {
     pub fn new(tensor: &SparseTensorCOO, kappa: usize, threads: usize, rank: usize) -> Self {
+        Self::with_pool(tensor, kappa, rank, Arc::new(SmPool::new(threads.min(kappa))))
+    }
+
+    /// Executor on an existing (possibly shared) pool.
+    pub fn with_pool(
+        tensor: &SparseTensorCOO,
+        kappa: usize,
+        rank: usize,
+        pool: Arc<SmPool>,
+    ) -> Self {
         let blco = BlcoTensor::build(tensor);
         let mut flat = Vec::with_capacity(blco.nnz());
         for (b, blk) in blco.blocks.iter().enumerate() {
@@ -46,31 +67,45 @@ impl BlcoExecutor {
                 flat.push((b as u32, e as u32));
             }
         }
-        let nnz = flat.len();
-        let base = nnz / kappa;
-        let extra = nnz % kappa;
-        let mut chunks = Vec::with_capacity(kappa);
-        let mut lo = 0;
-        for z in 0..kappa {
-            let len = base + usize::from(z < extra);
-            chunks.push((lo, lo + len));
-            lo += len;
-        }
+        let bounds = crate::exec::equal_bounds(flat.len(), kappa);
+        let n = tensor.n_modes();
+        let plans = (0..n)
+            .map(|d| {
+                ModePlan::new(
+                    d,
+                    kappa,
+                    rank,
+                    tensor.dims[d] as usize,
+                    UpdatePolicy::Global,
+                    bounds.clone(),
+                    (0..n).filter(|&w| w != d).collect(),
+                    12, // u64 key + f32 per decoded element
+                    64,
+                )
+            })
+            .collect();
+        let arena = WorkspaceArena::new(pool.n_workers(), |_| MergeScratch {
+            contrib: vec![0.0f32; rank],
+            run: vec![0.0f32; rank],
+        });
         BlcoExecutor {
             blco,
             kappa,
-            threads: threads.max(1),
             rank,
-            lock_shards: 64,
-            chunks,
             flat,
+            pool,
+            plans,
+            arena,
         }
     }
 
     fn chunk_loads(&self) -> Vec<u64> {
-        self.chunks
-            .iter()
-            .map(|&(lo, hi)| (hi - lo) as u64)
+        let plan = &self.plans[0];
+        (0..self.kappa)
+            .map(|z| {
+                let (lo, hi) = plan.partition(z);
+                (hi - lo) as u64
+            })
             .collect()
     }
 }
@@ -90,130 +125,54 @@ impl MttkrpExecutor for BlcoExecutor {
         mode: usize,
     ) -> Result<(Vec<f32>, ModeExecReport)> {
         let rank = self.rank;
-        let n = self.n_modes();
-        let dim = self.blco.dims[mode] as usize;
-        let mut out = vec![0.0f32; dim * rank];
+        let plan = &self.plans[mode];
+        let mut out = vec![0.0f32; plan.out_len()];
         let shared = SharedRows::new(&mut out, rank);
-        let locks: Vec<Mutex<()>> =
-            (0..self.lock_shards).map(|_| Mutex::new(())).collect();
-        let next = AtomicUsize::new(0);
-        let start = Instant::now();
-        type Parts = (TrafficCounters, Vec<(usize, std::time::Duration, u64)>);
-        let parts: Vec<Parts> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..self.threads)
-                .map(|_| {
-                    let shared = &shared;
-                    let locks = &locks;
-                    let next = &next;
-                    scope.spawn(move || {
-                        let mut tr = TrafficCounters::default();
-                        let mut costs = Vec::new();
-                        let mut contrib = vec![0.0f32; rank];
-                        let mut run = vec![0.0f32; rank];
-                        loop {
-                            let z = next.fetch_add(1, Ordering::Relaxed);
-                            if z >= self.chunks.len() {
-                                break;
-                            }
-                            let before_atomics = tr.global_atomics;
-                            let t0 = Instant::now();
-                            let (lo, hi) = self.chunks[z];
-                            let mut run_idx: Option<usize> = None;
-                            for f in lo..hi {
-                                let (b, e) =
-                                    (self.flat[f].0 as usize, self.flat[f].1 as usize);
-                                // decode (BLCO's per-element extraction cost)
-                                tr.tensor_bytes_read += 12; // u64 key + f32
-                                let idx = self.blco.coord(b, e, mode) as usize;
-                                contrib.fill(self.blco.blocks[b].vals[e]);
-                                for w in 0..n {
-                                    if w == mode {
-                                        continue;
-                                    }
-                                    let row = factors[w]
-                                        .row(self.blco.coord(b, e, w) as usize);
-                                    tr.factor_bytes_read += (rank * 4) as u64;
-                                    for r in 0..rank {
-                                        contrib[r] *= row[r];
-                                    }
-                                }
-                                // warp-level conflict merge: coalesce
-                                // consecutive same-row updates
-                                match run_idx {
-                                    Some(ri) if ri == idx => {
-                                        for r in 0..rank {
-                                            run[r] += contrib[r];
-                                        }
-                                    }
-                                    Some(ri) => {
-                                        flush(
-                                            shared, locks, ri, &run, &mut tr, rank,
-                                        );
-                                        run.copy_from_slice(&contrib);
-                                        run_idx = Some(idx);
-                                    }
-                                    None => {
-                                        run.copy_from_slice(&contrib);
-                                        run_idx = Some(idx);
-                                    }
-                                }
-                            }
-                            if let Some(ri) = run_idx {
-                                flush(shared, locks, ri, &run, &mut tr, rank);
-                            }
-                            costs.push((
-                                z,
-                                t0.elapsed(),
-                                tr.global_atomics - before_atomics,
-                            ));
+        let run = self.pool.run_partitions(self.kappa, &|wk, z, tr| {
+            self.arena.with(wk, |ws| {
+                let (lo, hi) = plan.partition(z);
+                let mut run_idx: Option<usize> = None;
+                for f in lo..hi {
+                    let (b, e) =
+                        (self.flat[f].0 as usize, self.flat[f].1 as usize);
+                    // decode (BLCO's per-element extraction cost)
+                    tr.tensor_bytes_read += plan.elem_bytes;
+                    let idx = self.blco.coord(b, e, mode) as usize;
+                    ws.contrib.fill(self.blco.blocks[b].vals[e]);
+                    for &w in &plan.input_modes {
+                        let row = factors[w].row(self.blco.coord(b, e, w) as usize);
+                        tr.factor_bytes_read += (rank * 4) as u64;
+                        for r in 0..rank {
+                            ws.contrib[r] *= row[r];
                         }
-                        (tr, costs)
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        let mut traffic = TrafficCounters::default();
-        let mut part_costs = vec![std::time::Duration::ZERO; self.kappa];
-        for (tr, costs) in &parts {
-            traffic.add(tr);
-            for &(z, dur, atomics) in costs {
-                let penalty = std::time::Duration::from_nanos(
-                    (atomics as f64 * crate::metrics::global_atomic_penalty_ns())
-                        as u64,
-                );
-                part_costs[z] = dur + penalty;
-            }
-        }
-        Ok((
-            out,
-            ModeExecReport {
-                mode,
-                wall: start.elapsed(),
-                sim: crate::metrics::makespan(&part_costs),
-                part_costs,
-                traffic,
-                imbalance: Imbalance::of(&self.chunk_loads()),
-            },
-        ))
+                    }
+                    // warp-level conflict merge: coalesce consecutive
+                    // same-row updates
+                    match run_idx {
+                        Some(ri) if ri == idx => {
+                            for r in 0..rank {
+                                ws.run[r] += ws.contrib[r];
+                            }
+                        }
+                        Some(ri) => {
+                            plan.push_row(&shared, ri, &ws.run, tr);
+                            ws.run.copy_from_slice(&ws.contrib);
+                            run_idx = Some(idx);
+                        }
+                        None => {
+                            ws.run.copy_from_slice(&ws.contrib);
+                            run_idx = Some(idx);
+                        }
+                    }
+                }
+                if let Some(ri) = run_idx {
+                    plan.push_row(&shared, ri, &ws.run, tr);
+                }
+                Ok(())
+            })
+        })?;
+        Ok((out, run.into_report(mode, Imbalance::of(&self.chunk_loads()))))
     }
-}
-
-#[inline]
-fn flush(
-    shared: &SharedRows,
-    locks: &[Mutex<()>],
-    idx: usize,
-    run: &[f32],
-    tr: &mut TrafficCounters,
-    rank: usize,
-) {
-    let _g = locks[idx % locks.len()].lock().unwrap();
-    // SAFETY: shard lock held for this row.
-    unsafe { shared.add_row_exclusive(idx, run) };
-    drop(_g);
-    tr.global_atomics += rank as u64;
-    tr.output_bytes_written += (rank * 4) as u64;
 }
 
 #[cfg(test)]

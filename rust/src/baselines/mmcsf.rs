@@ -13,18 +13,29 @@
 //!   partitions → fiber-size skew becomes SM load imbalance;
 //! * a root index never spans chunks, but chunks are count-balanced, so a
 //!   single hot fiber (Zipf head) serialises one worker.
+//!
+//! Runs on the shared persistent [`SmPool`]; the per-mode root-chunk
+//! bounds live in [`ModePlan`]s built once at construction (Local policy —
+//! root rows are chunk-exclusive, no atomics).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::time::Instant;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use super::MttkrpExecutor;
 use crate::coordinator::shared::SharedRows;
+use crate::exec::{ModePlan, SmPool, UpdatePolicy, WorkspaceArena};
 use crate::format::csf::CsfTree;
 use crate::metrics::{ModeExecReport, TrafficCounters};
 use crate::tensor::{FactorSet, SparseTensorCOO};
 use crate::util::stats::Imbalance;
+
+/// Per-worker walk scratch: the root accumulator and one running vector
+/// per tree level.
+struct WalkScratch {
+    acc: Vec<f32>,
+    levels: Vec<Vec<f32>>,
+}
 
 pub struct MmCsfExecutor {
     /// One CSF tree per output mode (MM-CSF's mixed-mode trick reuses
@@ -32,53 +43,76 @@ pub struct MmCsfExecutor {
     /// bound in memory and lower bound in work — see DESIGN.md §5).
     pub trees: Vec<CsfTree>,
     pub kappa: usize,
-    pub threads: usize,
     pub rank: usize,
+    pool: Arc<SmPool>,
+    /// One plan per mode; `bounds` are the equal-count root chunks.
+    plans: Vec<ModePlan>,
+    arena: WorkspaceArena<WalkScratch>,
 }
 
 impl MmCsfExecutor {
     pub fn new(tensor: &SparseTensorCOO, kappa: usize, threads: usize, rank: usize) -> Self {
-        let trees = (0..tensor.n_modes())
-            .map(|d| CsfTree::build(tensor, d))
+        Self::with_pool(tensor, kappa, rank, Arc::new(SmPool::new(threads.min(kappa))))
+    }
+
+    /// Executor on an existing (possibly shared) pool.
+    pub fn with_pool(
+        tensor: &SparseTensorCOO,
+        kappa: usize,
+        rank: usize,
+        pool: Arc<SmPool>,
+    ) -> Self {
+        let n = tensor.n_modes();
+        let trees: Vec<CsfTree> = (0..n).map(|d| CsfTree::build(tensor, d)).collect();
+        let plans = trees
+            .iter()
+            .enumerate()
+            .map(|(d, tree)| {
+                // Equal-count chunking of root nodes into κ chunks.
+                let n_roots = tree.levels[0].idx.len();
+                let bounds = crate::exec::equal_bounds(n_roots, kappa);
+                ModePlan::new(
+                    d,
+                    kappa,
+                    rank,
+                    tensor.dims[d] as usize,
+                    UpdatePolicy::Local,
+                    bounds,
+                    (0..n).filter(|&w| w != d).collect(),
+                    0, // traffic charged per CSF node, not per COO element
+                    1,
+                )
+            })
             .collect();
+        let levels = n;
+        let arena = WorkspaceArena::new(pool.n_workers(), |_| WalkScratch {
+            acc: vec![0.0f32; rank],
+            levels: (0..levels).map(|_| vec![0.0f32; rank]).collect(),
+        });
         MmCsfExecutor {
             trees,
             kappa,
-            threads: threads.max(1),
             rank,
+            pool,
+            plans,
+            arena,
         }
-    }
-
-    /// Equal-count chunking of root nodes into κ chunks.
-    fn chunks(&self, mode: usize) -> Vec<(usize, usize)> {
-        let n_roots = self.trees[mode].levels[0].idx.len();
-        let base = n_roots / self.kappa;
-        let extra = n_roots % self.kappa;
-        let mut out = Vec::with_capacity(self.kappa);
-        let mut lo = 0;
-        for z in 0..self.kappa {
-            let len = base + usize::from(z < extra);
-            out.push((lo, lo + len));
-            lo += len;
-        }
-        out
     }
 
     fn chunk_loads(&self, mode: usize) -> Vec<u64> {
         // load ≈ leaves under each chunk's roots
         let tree = &self.trees[mode];
-        self.chunks(mode)
-            .iter()
-            .map(|&(lo, hi)| {
-                let mut leaves = 0u64;
+        let plan = &self.plans[mode];
+        (0..self.kappa)
+            .map(|z| {
+                let (lo, hi) = plan.partition(z);
                 // descend ptr chains: range of level-1 nodes, then level-2...
                 let (mut a, mut b) = (lo, hi);
                 for l in 0..tree.levels.len() - 1 {
                     a = tree.levels[l].ptr[a] as usize;
                     b = tree.levels[l].ptr[b] as usize;
                 }
-                leaves += (b - a) as u64;
-                leaves
+                (b - a) as u64
             })
             .collect()
     }
@@ -151,74 +185,29 @@ impl MttkrpExecutor for MmCsfExecutor {
     ) -> Result<(Vec<f32>, ModeExecReport)> {
         let tree = &self.trees[mode];
         let rank = self.rank;
-        let dim = tree.dims[mode] as usize;
-        let mut out = vec![0.0f32; dim * rank];
+        let plan = &self.plans[mode];
+        let mut out = vec![0.0f32; plan.out_len()];
         let shared = SharedRows::new(&mut out, rank);
-        let chunks = self.chunks(mode);
-        let next = AtomicUsize::new(0);
-        let start = Instant::now();
-        type Parts = (TrafficCounters, Vec<(usize, std::time::Duration)>);
-        let parts: Vec<Parts> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..self.threads)
-                .map(|_| {
-                    let shared = &shared;
-                    let next = &next;
-                    let chunks = &chunks;
-                    scope.spawn(move || {
-                        let mut tr = TrafficCounters::default();
-                        let mut costs = Vec::new();
-                        let mut acc = vec![0.0f32; rank];
-                        let mut scratch: Vec<Vec<f32>> = (0..tree.levels.len())
-                            .map(|_| vec![0.0f32; rank])
-                            .collect();
-                        loop {
-                            let z = next.fetch_add(1, Ordering::Relaxed);
-                            if z >= chunks.len() {
-                                break;
-                            }
-                            let t0 = Instant::now();
-                            let (lo, hi) = chunks[z];
-                            for root in lo..hi {
-                                acc.fill(0.0);
-                                walk(
-                                    tree, factors, rank, 0, root, &mut acc,
-                                    &mut scratch, &mut tr,
-                                );
-                                let idx = tree.levels[0].idx[root] as usize;
-                                // root rows are chunk-exclusive (a root
-                                // appears once in level 0)
-                                // SAFETY: each root index occurs exactly
-                                // once across all chunks.
-                                unsafe { shared.add_row_exclusive(idx, &acc) };
-                                tr.local_updates += rank as u64;
-                                tr.output_bytes_written += (rank * 4) as u64;
-                            }
-                            costs.push((z, t0.elapsed()));
-                        }
-                        (tr, costs)
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        let mut traffic = TrafficCounters::default();
-        let mut part_costs = vec![std::time::Duration::ZERO; self.kappa];
-        for (tr, costs) in &parts {
-            traffic.add(tr);
-            for &(z, dur) in costs {
-                part_costs[z] = dur; // no global atomics in this baseline
-            }
-        }
+        let run = self.pool.run_partitions(self.kappa, &|w, z, tr| {
+            self.arena.with(w, |ws| {
+                let (lo, hi) = plan.partition(z);
+                for root in lo..hi {
+                    ws.acc.fill(0.0);
+                    walk(
+                        tree, factors, rank, 0, root, &mut ws.acc,
+                        &mut ws.levels, tr,
+                    );
+                    let idx = tree.levels[0].idx[root] as usize;
+                    // root rows are chunk-exclusive (a root appears once in
+                    // level 0), so the plan's Local policy applies
+                    plan.push_row(&shared, idx, &ws.acc, tr);
+                }
+                Ok(())
+            })
+        })?;
         Ok((
             out,
-            ModeExecReport {
-                mode,
-                wall: start.elapsed(),
-                sim: crate::metrics::makespan(&part_costs),
-                part_costs,
-                traffic,
-                imbalance: Imbalance::of(&self.chunk_loads(mode)),
-            },
+            run.into_report(mode, Imbalance::of(&self.chunk_loads(mode))),
         ))
     }
 }

@@ -2,9 +2,10 @@
 //!
 //! Algorithmic re-implementations (not CUDA ports — DESIGN.md §5,
 //! substitution 3) of the three systems the paper compares against, all
-//! running on the same worker-pool substrate and reporting the same
-//! [`TrafficCounters`], so "who wins and why" is an apples-to-apples
-//! question:
+//! running on the same persistent SM-pool substrate (`exec::SmPool` — one
+//! pool instance can be shared by every executor via the `with_pool`
+//! constructors) and reporting the same [`TrafficCounters`], so "who wins
+//! and why" is an apples-to-apples question:
 //!
 //! * [`parti::PartiExecutor`] — ParTI-GPU-like: HiCOO blocks, per-nonzero
 //!   global-atomic accumulation.

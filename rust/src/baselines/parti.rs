@@ -8,44 +8,78 @@
 //!   memory individually (global atomics; per-nnz intermediate traffic);
 //! * block-equal workload split (HiCOO blocks dealt round-robin), which is
 //!   nnz-balanced only as far as block population is uniform.
+//!
+//! Runs on the shared persistent [`SmPool`]: the round-robin chunk
+//! assignment and the per-mode [`ModePlan`]s (Global policy + lock shards)
+//! are built once at construction and replayed by every call.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-use std::time::Instant;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use super::MttkrpExecutor;
 use crate::coordinator::shared::SharedRows;
+use crate::exec::{ModePlan, SmPool, UpdatePolicy, WorkspaceArena};
 use crate::format::hicoo::HicooTensor;
-use crate::metrics::{ModeExecReport, TrafficCounters};
+use crate::metrics::ModeExecReport;
 use crate::tensor::{FactorSet, SparseTensorCOO};
 use crate::util::stats::Imbalance;
 
 pub struct PartiExecutor {
     pub hicoo: HicooTensor,
     pub kappa: usize,
-    pub threads: usize,
     pub rank: usize,
-    pub lock_shards: usize,
     /// Round-robin assignment: `chunks[z]` = block ids of SM-chunk z.
     chunks: Vec<Vec<u32>>,
+    pool: Arc<SmPool>,
+    /// One plan per mode: Global policy, lock shards, traffic constants.
+    plans: Vec<ModePlan>,
+    /// Per-worker rank-vector contribution scratch.
+    arena: WorkspaceArena<Vec<f32>>,
 }
 
 impl PartiExecutor {
     pub fn new(tensor: &SparseTensorCOO, kappa: usize, threads: usize, rank: usize) -> Self {
+        Self::with_pool(tensor, kappa, rank, Arc::new(SmPool::new(threads.min(kappa))))
+    }
+
+    /// Executor on an existing (possibly shared) pool.
+    pub fn with_pool(
+        tensor: &SparseTensorCOO,
+        kappa: usize,
+        rank: usize,
+        pool: Arc<SmPool>,
+    ) -> Self {
         let hicoo = HicooTensor::build(tensor, 7);
         let mut chunks = vec![Vec::new(); kappa];
         for b in 0..hicoo.blocks.len() {
             chunks[b % kappa].push(b as u32);
         }
+        let n = tensor.n_modes();
+        let plans = (0..n)
+            .map(|d| {
+                ModePlan::new(
+                    d,
+                    kappa,
+                    rank,
+                    tensor.dims[d] as usize,
+                    UpdatePolicy::Global,
+                    Vec::new(), // chunks are block lists, not contiguous ranges
+                    (0..n).filter(|&w| w != d).collect(),
+                    (n as u64) + 4, // compressed HiCOO element bytes
+                    64,
+                )
+            })
+            .collect();
+        let arena = WorkspaceArena::new(pool.n_workers(), |_| vec![0.0f32; rank]);
         PartiExecutor {
             hicoo,
             kappa,
-            threads: threads.max(1),
             rank,
-            lock_shards: 64,
             chunks,
+            pool,
+            plans,
+            arena,
         }
     }
 
@@ -77,100 +111,35 @@ impl MttkrpExecutor for PartiExecutor {
     ) -> Result<(Vec<f32>, ModeExecReport)> {
         let rank = self.rank;
         let n = self.n_modes();
-        let dim = self.hicoo.dims[mode] as usize;
-        let mut out = vec![0.0f32; dim * rank];
+        let plan = &self.plans[mode];
+        let mut out = vec![0.0f32; plan.out_len()];
         let shared = SharedRows::new(&mut out, rank);
-        let locks: Vec<Mutex<()>> =
-            (0..self.lock_shards).map(|_| Mutex::new(())).collect();
-        let next = AtomicUsize::new(0);
-        let start = Instant::now();
-        type Parts = (TrafficCounters, Vec<(usize, std::time::Duration, u64)>);
-        let parts: Vec<Parts> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..self.threads)
-                .map(|_| {
-                    let shared = &shared;
-                    let locks = &locks;
-                    let next = &next;
-                    scope.spawn(move || {
-                        let mut tr = TrafficCounters::default();
-                        let mut costs = Vec::new();
-                        let mut contrib = vec![0.0f32; rank];
-                        loop {
-                            let z = next.fetch_add(1, Ordering::Relaxed);
-                            if z >= self.chunks.len() {
-                                break;
+        let run = self.pool.run_partitions(self.kappa, &|wk, z, tr| {
+            self.arena.with(wk, |contrib| {
+                for &b in &self.chunks[z] {
+                    let blk = &self.hicoo.blocks[b as usize];
+                    // block header + compressed elements
+                    tr.tensor_bytes_read +=
+                        n as u64 * 4 + blk.nnz() as u64 * plan.elem_bytes;
+                    for e in 0..blk.nnz() {
+                        contrib.fill(blk.vals[e]);
+                        for &w in &plan.input_modes {
+                            let row = factors[w].row(blk.coord(e, w) as usize);
+                            for r in 0..rank {
+                                contrib[r] *= row[r];
                             }
-                            let before_atomics = tr.global_atomics;
-                            let t0 = Instant::now();
-                            for &b in &self.chunks[z] {
-                                let blk = &self.hicoo.blocks[b as usize];
-                                // block header + compressed elements
-                                tr.tensor_bytes_read += n as u64 * 4
-                                    + blk.nnz() as u64 * (n as u64 + 4);
-                                for e in 0..blk.nnz() {
-                                    contrib.fill(blk.vals[e]);
-                                    for w in 0..n {
-                                        if w == mode {
-                                            continue;
-                                        }
-                                        let row = factors[w]
-                                            .row(blk.coord(e, w) as usize);
-                                        for r in 0..rank {
-                                            contrib[r] *= row[r];
-                                        }
-                                        tr.factor_bytes_read += (rank * 4) as u64;
-                                    }
-                                    let idx = blk.coord(e, mode) as usize;
-                                    {
-                                        let _g = locks[idx % locks.len()]
-                                            .lock()
-                                            .unwrap();
-                                        // SAFETY: shard lock held for this row.
-                                        unsafe {
-                                            shared.add_row_exclusive(idx, &contrib)
-                                        };
-                                    }
-                                    tr.global_atomics += rank as u64;
-                                    // per-nnz partial pushed to global memory
-                                    tr.intermediate_bytes += (rank * 4) as u64;
-                                    tr.output_bytes_written += (rank * 4) as u64;
-                                }
-                            }
-                            costs.push((
-                                z,
-                                t0.elapsed(),
-                                tr.global_atomics - before_atomics,
-                            ));
+                            tr.factor_bytes_read += (rank * 4) as u64;
                         }
-                        (tr, costs)
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        let mut traffic = TrafficCounters::default();
-        let mut part_costs = vec![std::time::Duration::ZERO; self.kappa];
-        for (tr, costs) in &parts {
-            traffic.add(tr);
-            for &(z, dur, atomics) in costs {
-                let penalty = std::time::Duration::from_nanos(
-                    (atomics as f64 * crate::metrics::global_atomic_penalty_ns())
-                        as u64,
-                );
-                part_costs[z] = dur + penalty;
-            }
-        }
-        Ok((
-            out,
-            ModeExecReport {
-                mode,
-                wall: start.elapsed(),
-                sim: crate::metrics::makespan(&part_costs),
-                part_costs,
-                traffic,
-                imbalance: Imbalance::of(&self.chunk_loads()),
-            },
-        ))
+                        let idx = blk.coord(e, mode) as usize;
+                        plan.push_row(&shared, idx, contrib, tr);
+                        // per-nnz partial pushed to global memory
+                        tr.intermediate_bytes += (rank * 4) as u64;
+                    }
+                }
+                Ok(())
+            })
+        })?;
+        Ok((out, run.into_report(mode, Imbalance::of(&self.chunk_loads()))))
     }
 }
 

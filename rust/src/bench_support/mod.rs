@@ -5,12 +5,14 @@
 //! we need: warmup, repeated timed runs, summary stats, and aligned table
 //! output.)
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::baselines::{
     blco_exec::BlcoExecutor, mmcsf::MmCsfExecutor, parti::PartiExecutor, MttkrpExecutor,
 };
 use crate::coordinator::{Engine, EngineConfig};
+use crate::exec::SmPool;
 use crate::partition::{LoadBalance, VertexAssign};
 use crate::tensor::synth::DatasetProfile;
 use crate::tensor::{FactorSet, SparseTensorCOO};
@@ -118,7 +120,18 @@ impl Workload {
 /// Engine with the paper's default configuration over the native backend
 /// (benches compare algorithms, not PJRT dispatch — see baselines::).
 pub fn paper_engine(tensor: &SparseTensorCOO, rank: usize, lb: LoadBalance) -> Engine {
-    Engine::with_native_backend(
+    paper_engine_on_pool(tensor, rank, lb, Arc::new(SmPool::with_default_threads()))
+}
+
+/// As [`paper_engine`], but executing on an existing shared pool (ablation
+/// drivers build several engines; one pool serves them all).
+pub fn paper_engine_on_pool(
+    tensor: &SparseTensorCOO,
+    rank: usize,
+    lb: LoadBalance,
+    pool: Arc<SmPool>,
+) -> Engine {
+    Engine::native_on_pool(
         tensor,
         EngineConfig {
             sm_count: 82,
@@ -127,23 +140,29 @@ pub fn paper_engine(tensor: &SparseTensorCOO, rank: usize, lb: LoadBalance) -> E
             assign: VertexAssign::Cyclic,
             ..Default::default()
         },
+        pool,
     )
     .expect("engine build")
 }
 
-/// All four executors for a Fig. 3 row.
+/// All four executors for a Fig. 3 row, sharing one persistent SM pool —
+/// the "same substrate" comparison is structural, and no executor pays
+/// per-call thread spawns.
 pub fn all_executors<'t>(
     tensor: &'t SparseTensorCOO,
     rank: usize,
 ) -> Vec<Box<dyn MttkrpExecutor + 't>> {
-    let threads = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1);
+    let pool = Arc::new(SmPool::with_default_threads());
     vec![
-        Box::new(paper_engine(tensor, rank, LoadBalance::Adaptive)),
-        Box::new(BlcoExecutor::new(tensor, 82, threads, rank)),
-        Box::new(MmCsfExecutor::new(tensor, 82, threads, rank)),
-        Box::new(PartiExecutor::new(tensor, 82, threads, rank)),
+        Box::new(paper_engine_on_pool(
+            tensor,
+            rank,
+            LoadBalance::Adaptive,
+            Arc::clone(&pool),
+        )),
+        Box::new(BlcoExecutor::with_pool(tensor, 82, rank, Arc::clone(&pool))),
+        Box::new(MmCsfExecutor::with_pool(tensor, 82, rank, Arc::clone(&pool))),
+        Box::new(PartiExecutor::with_pool(tensor, 82, rank, pool)),
     ]
 }
 

@@ -4,17 +4,25 @@
 //! Roles (DESIGN.md §Hardware-Adaptation):
 //!
 //! * GPU **SM** → a tensor partition processed by a worker thread from the
-//!   pool (`κ` partitions; `threads ≤ κ` OS threads drain them from a
-//!   shared counter — SM *semantics* are per-partition, so counters and
-//!   correctness are independent of the OS thread count).
+//!   persistent [`SmPool`] (`κ` partitions; `threads ≤ κ` OS threads drain
+//!   them from a shared counter — SM *semantics* are per-partition, so
+//!   counters and correctness are independent of the OS thread count).
+//!   Workers are spawned once per pool lifetime and parked between calls,
+//!   like SMs persisting for the GPU's lifetime.
 //! * **Thread block (R × P)** → one `(P, R)` block streamed through the
 //!   [`Backend`] (the AOT Pallas kernel under PJRT, or the native mirror).
 //! * **`Local_Update`** → unsynchronised accumulation into output rows the
 //!   partition *owns* (Scheme 1 guarantees ownership).
 //! * **`Global_Update`** → sharded-lock accumulation (Scheme 2 rows may be
 //!   shared between partitions), counted as global atomics.
-//! * **Global barrier between modes** → `mttkrp_all_modes` joins the pool
-//!   after each mode (Alg. 1 line 8).
+//! * **Global barrier between modes** → each `mttkrp_mode` call blocks
+//!   until every pool worker has finished (Alg. 1 line 8).
+//!
+//! Everything a mode call needs that does not depend on the factor values
+//! — partition bounds, update policy, lock shards, traffic constants — is
+//! precomputed into a per-mode [`ModePlan`] at engine construction and
+//! reused across every call and ALS iteration; per-worker gather/compute
+//! scratch lives in a [`WorkspaceArena`], allocated once.
 //!
 //! The engine also offloads the dense ALS-side computations (Gram,
 //! Hadamard+solve, fit reductions) through the same backend so the PJRT
@@ -22,12 +30,11 @@
 
 pub mod shared;
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-use std::time::Instant;
+use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
+use crate::exec::{ModePlan, SmPool, WorkspaceArena};
 use crate::format::mode_specific::ModeSpecificFormat;
 use crate::metrics::{ExecReport, ModeExecReport, TrafficCounters};
 use crate::partition::{LoadBalance, VertexAssign};
@@ -37,14 +44,7 @@ use crate::tensor::{FactorSet, SparseTensorCOO};
 use crate::util::stats::Imbalance;
 use shared::SharedRows;
 
-/// How output-row accumulation is synchronised (derived from the scheme).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum UpdatePolicy {
-    /// Rows owned by one partition — no cross-SM synchronisation.
-    Local,
-    /// Rows may be shared — global (sharded-lock) accumulation.
-    Global,
-}
+pub use crate::exec::UpdatePolicy;
 
 /// Engine configuration. Defaults mirror the paper's RTX 3090 setup where
 /// meaningful (`κ = 82`, rank 32) and this machine elsewhere.
@@ -52,7 +52,10 @@ pub enum UpdatePolicy {
 pub struct EngineConfig {
     /// Number of tensor partitions = simulated SMs (paper: 82).
     pub sm_count: usize,
-    /// OS threads draining partitions (defaults to available parallelism).
+    /// OS threads draining partitions when the engine creates its own pool
+    /// (defaults to `SPMTTKRP_THREADS`, else available parallelism).
+    /// Ignored by [`Engine::with_pool`], which adopts the shared pool's
+    /// worker count.
     pub threads: usize,
     /// Factor-matrix rank (paper: 32).
     pub rank: usize,
@@ -75,9 +78,7 @@ impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
             sm_count: 82,
-            threads: std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1),
+            threads: crate::exec::default_threads(),
             rank: 32,
             lb: LoadBalance::Adaptive,
             assign: VertexAssign::Cyclic,
@@ -88,20 +89,65 @@ impl Default for EngineConfig {
     }
 }
 
+/// Per-worker gather/compute scratch, allocated once at engine
+/// construction (one slot per pool worker) and reused by every mode call.
+struct EngineWorkspace {
+    /// Block values, `len == P`.
+    vals: Vec<f32>,
+    /// Block segment-start marks, `len == P`.
+    seg: Vec<f32>,
+    /// Gathered input-mode factor rows, `N - 1` buffers of `(P, R)`.
+    rows: Vec<Vec<f32>>,
+    /// Block output `(P, R)`; the fused path reuses its first `2R` slots
+    /// as accumulator + contribution registers.
+    lout: Vec<f32>,
+}
+
+impl EngineWorkspace {
+    fn new(p: usize, rank: usize, n_modes: usize) -> EngineWorkspace {
+        EngineWorkspace {
+            vals: vec![0.0f32; p],
+            seg: vec![0.0f32; p],
+            rows: (0..n_modes.saturating_sub(1))
+                .map(|_| vec![0.0f32; p * rank])
+                .collect(),
+            lout: vec![0.0f32; p * rank],
+        }
+    }
+}
+
 /// The spMTTKRP execution engine over the mode-specific format.
 pub struct Engine {
     pub format: ModeSpecificFormat,
     pub config: EngineConfig,
     backend: Box<dyn Backend>,
-    /// Bytes per stored nonzero of this tensor (for the traffic model).
-    elem_bytes: u64,
+    /// The persistent SM pool (owned, or shared with other executors).
+    pool: Arc<SmPool>,
+    /// One precomputed plan per mode, reused across calls and iterations.
+    plans: Vec<ModePlan>,
+    arena: WorkspaceArena<EngineWorkspace>,
 }
 
 impl Engine {
+    /// Engine with its own worker pool of `config.threads` workers
+    /// (capped at `κ` — more workers than partitions can never get work).
     pub fn new(
         tensor: &SparseTensorCOO,
         backend: Box<dyn Backend>,
         config: EngineConfig,
+    ) -> Result<Engine> {
+        let pool = Arc::new(SmPool::new(config.threads.min(config.sm_count)));
+        Engine::with_pool(tensor, backend, config, pool)
+    }
+
+    /// Engine on an existing (possibly shared) pool — the persistent-SM
+    /// path: one pool can serve many engines/baselines and every ALS
+    /// iteration without respawning workers.
+    pub fn with_pool(
+        tensor: &SparseTensorCOO,
+        backend: Box<dyn Backend>,
+        config: EngineConfig,
+        pool: Arc<SmPool>,
     ) -> Result<Engine> {
         ensure!(config.sm_count > 0 && config.rank > 0);
         ensure!(
@@ -115,12 +161,42 @@ impl Engine {
             config.lb,
             config.assign,
         );
-        let elem_bytes = (tensor.n_modes() * 4 + 4) as u64;
+        let n = tensor.n_modes();
+        let elem_bytes = (n * 4 + 4) as u64;
+        let plans = format
+            .copies
+            .iter()
+            .enumerate()
+            .map(|(d, copy)| {
+                let policy = if copy.needs_global_update() {
+                    UpdatePolicy::Global
+                } else {
+                    UpdatePolicy::Local
+                };
+                ModePlan::new(
+                    d,
+                    config.sm_count,
+                    config.rank,
+                    tensor.dims[d] as usize,
+                    policy,
+                    copy.partitioning.bounds.clone(),
+                    (0..n).filter(|&w| w != d).collect(),
+                    elem_bytes,
+                    config.lock_shards,
+                )
+            })
+            .collect();
+        let p = backend.block_p();
+        let rank = config.rank;
+        let arena =
+            WorkspaceArena::new(pool.n_workers(), |_| EngineWorkspace::new(p, rank, n));
         Ok(Engine {
             format,
             config,
             backend,
-            elem_bytes,
+            pool,
+            plans,
+            arena,
         })
     }
 
@@ -130,6 +206,15 @@ impl Engine {
         config: EngineConfig,
     ) -> Result<Engine> {
         Engine::new(tensor, Box::new(NativeBackend::new(256)), config)
+    }
+
+    /// Native-backend engine on an existing pool.
+    pub fn native_on_pool(
+        tensor: &SparseTensorCOO,
+        config: EngineConfig,
+        pool: Arc<SmPool>,
+    ) -> Result<Engine> {
+        Engine::with_pool(tensor, Box::new(NativeBackend::new(256)), config, pool)
     }
 
     /// Engine over the PJRT backend (artifacts must be built).
@@ -151,17 +236,23 @@ impl Engine {
         self.backend.as_ref()
     }
 
+    /// The persistent pool this engine executes on.
+    pub fn pool(&self) -> &Arc<SmPool> {
+        &self.pool
+    }
+
+    /// The precomputed per-mode plans.
+    pub fn plans(&self) -> &[ModePlan] {
+        &self.plans
+    }
+
     pub fn n_modes(&self) -> usize {
         self.format.n_modes()
     }
 
     /// The update policy mode `d` will execute with.
     pub fn update_policy(&self, mode: usize) -> UpdatePolicy {
-        if self.format.copies[mode].needs_global_update() {
-            UpdatePolicy::Global
-        } else {
-            UpdatePolicy::Local
-        }
+        self.plans[mode].policy
     }
 
     /// spMTTKRP along one mode (Alg. 2 over all partitions of the mode's
@@ -171,6 +262,20 @@ impl Engine {
         factors: &FactorSet,
         mode: usize,
     ) -> Result<(Vec<f32>, ModeExecReport)> {
+        let mut out = Vec::new();
+        let report = self.mttkrp_mode_into(factors, mode, &mut out)?;
+        Ok((out, report))
+    }
+
+    /// As [`Engine::mttkrp_mode`], but reusing a caller-owned output
+    /// buffer (resized and zeroed here) — the ALS hot loop allocates its
+    /// `(I_d, R)` outputs once and replays them every iteration.
+    pub fn mttkrp_mode_into(
+        &self,
+        factors: &FactorSet,
+        mode: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<ModeExecReport> {
         ensure!(mode < self.n_modes(), "mode {mode} out of range");
         ensure!(
             factors.rank() == self.config.rank,
@@ -178,77 +283,17 @@ impl Engine {
             factors.rank(),
             self.config.rank
         );
+        let plan = &self.plans[mode];
+        out.clear();
+        out.resize(plan.out_len(), 0.0);
+        let shared = SharedRows::new(out.as_mut_slice(), plan.rank);
+        let run = self.pool.run_partitions(plan.kappa, &|w, z, traffic| {
+            self.arena.with(w, |ws| {
+                self.run_partition(plan, z, ws, factors, &shared, traffic)
+            })
+        })?;
         let copy = &self.format.copies[mode];
-        let tensor = &copy.tensor;
-        let rank = self.config.rank;
-        let dim = tensor.dims[mode] as usize;
-        let policy = self.update_policy(mode);
-        let mut out = vec![0.0f32; dim * rank];
-        let shared = SharedRows::new(&mut out, rank);
-        let locks: Vec<Mutex<()>> =
-            (0..self.config.lock_shards).map(|_| Mutex::new(())).collect();
-        let next = AtomicUsize::new(0);
-        let kappa = self.config.sm_count;
-        let n_threads = self.config.threads.clamp(1, kappa);
-        let start = Instant::now();
-        type PartCosts = Vec<(usize, std::time::Duration, u64)>;
-        let traffic_parts: Vec<Result<(TrafficCounters, PartCosts)>> =
-            std::thread::scope(|scope| {
-                let mut handles = Vec::with_capacity(n_threads);
-                for _ in 0..n_threads {
-                    let shared = &shared;
-                    let locks = &locks;
-                    let next = &next;
-                    handles.push(scope.spawn(move || {
-                        let mut worker = Worker::new(self, mode, policy);
-                        let mut local = TrafficCounters::default();
-                        let mut costs: PartCosts = Vec::new();
-                        loop {
-                            let z = next.fetch_add(1, Ordering::Relaxed);
-                            if z >= kappa {
-                                break;
-                            }
-                            let before_atomics = local.global_atomics;
-                            let t0 = Instant::now();
-                            worker.run_partition(
-                                z, factors, shared, locks, &mut local,
-                            )?;
-                            costs.push((
-                                z,
-                                t0.elapsed(),
-                                local.global_atomics - before_atomics,
-                            ));
-                        }
-                        Ok((local, costs))
-                    }));
-                }
-                handles.into_iter().map(|h| h.join().unwrap()).collect()
-            });
-        let mut traffic = TrafficCounters::default();
-        let mut part_costs = vec![std::time::Duration::ZERO; kappa];
-        for part in traffic_parts {
-            let (tr, costs) = part?;
-            traffic.add(&tr);
-            for (z, dur, atomics) in costs {
-                // simulated SM cost: measured serial time + modeled global
-                // atomic penalty (local updates are L1-resident, free)
-                let penalty = std::time::Duration::from_nanos(
-                    (atomics as f64 * crate::metrics::global_atomic_penalty_ns())
-                        as u64,
-                );
-                part_costs[z] = dur + penalty;
-            }
-        }
-        let wall = start.elapsed();
-        let report = ModeExecReport {
-            mode,
-            wall,
-            sim: crate::metrics::makespan(&part_costs),
-            part_costs,
-            traffic,
-            imbalance: Imbalance::of(&copy.partitioning.loads()),
-        };
-        Ok((out, report))
+        Ok(run.into_report(mode, Imbalance::of(&copy.partitioning.loads())))
     }
 
     /// Alg. 1: spMTTKRP along every mode with a barrier in between.
@@ -266,12 +311,190 @@ impl Engine {
         let mut outs = Vec::with_capacity(self.n_modes());
         let mut modes = Vec::with_capacity(self.n_modes());
         for d in 0..self.n_modes() {
-            // the scope join in mttkrp_mode is the global barrier
+            // the pool handshake in mttkrp_mode is the global barrier
             let (o, r) = self.mttkrp_mode(factors, d)?;
             outs.push(o);
             modes.push(r);
         }
         Ok((outs, ExecReport { modes }))
+    }
+
+    // ------------------------------------------------ partition execution
+
+    /// Alg. 2 over one partition (one simulated SM's serial work).
+    fn run_partition(
+        &self,
+        plan: &ModePlan,
+        z: usize,
+        ws: &mut EngineWorkspace,
+        factors: &FactorSet,
+        shared: &SharedRows,
+        traffic: &mut TrafficCounters,
+    ) -> Result<()> {
+        let (lo, hi) = plan.partition(z);
+        if lo == hi {
+            return Ok(());
+        }
+        if self.config.fused && self.backend.name() == "native" {
+            self.run_partition_fused(plan, z, ws, factors, shared, traffic)
+        } else {
+            self.run_partition_staged(plan, z, ws, factors, shared, traffic)
+        }
+    }
+
+    /// Staged path: gather `(P, R)` blocks into workspace buffers and
+    /// stream them through the backend kernels (required under PJRT).
+    fn run_partition_staged(
+        &self,
+        plan: &ModePlan,
+        z: usize,
+        ws: &mut EngineWorkspace,
+        factors: &FactorSet,
+        shared: &SharedRows,
+        traffic: &mut TrafficCounters,
+    ) -> Result<()> {
+        let copy = &self.format.copies[plan.mode];
+        let tensor = &copy.tensor;
+        let (lo, hi) = plan.partition(z);
+        let p = self.backend.block_p();
+        let rank = plan.rank;
+        let out_col = &tensor.inds[plan.mode];
+        let mut t = lo;
+        while t < hi {
+            let take = (hi - t).min(p);
+            // ---- gather (the "SM loads rows from global memory" step)
+            for i in 0..take {
+                ws.vals[i] = tensor.vals[t + i];
+                ws.seg[i] = if t + i == lo || out_col[t + i] != out_col[t + i - 1]
+                {
+                    1.0
+                } else {
+                    0.0
+                };
+            }
+            ws.vals[take..].fill(0.0);
+            ws.seg[take..].fill(0.0);
+            for (slot, &w) in plan.input_modes.iter().enumerate() {
+                let fac = &factors[w];
+                let col = &tensor.inds[w];
+                let buf = &mut ws.rows[slot];
+                for i in 0..take {
+                    let r = fac.row(col[t + i] as usize);
+                    buf[i * rank..(i + 1) * rank].copy_from_slice(r);
+                }
+                // padding rows: stale finite values are harmless (vals = 0)
+            }
+            traffic.tensor_bytes_read += take as u64 * plan.elem_bytes;
+            traffic.factor_bytes_read +=
+                (take * plan.input_modes.len() * rank * 4) as u64;
+            // ---- compute (the R×P thread block)
+            // The segmented reduction only applies under Local_Update:
+            // Scheme 1 owns its output rows, so the block can fully reduce
+            // a row before the single write (the paper's L1-resident
+            // accumulation). Under Scheme 2 the paper's Alg. 2 (lines
+            // 21-22) performs a Global_Update per nonzero — merging there
+            // would under-model its atomic traffic.
+            let row_refs: Vec<&[f32]> =
+                ws.rows.iter().map(|r| r.as_slice()).collect();
+            let use_seg = self.config.use_seg_kernel
+                && matches!(plan.policy, UpdatePolicy::Local);
+            if use_seg {
+                self.backend.mttkrp_block_seg(
+                    rank,
+                    &ws.vals,
+                    &ws.seg,
+                    &row_refs,
+                    &mut ws.lout,
+                )?;
+                // one update per block-local segment run
+                let mut i = 0;
+                while i < take {
+                    let idx = out_col[t + i];
+                    let mut j = i;
+                    while j + 1 < take && out_col[t + j + 1] == idx {
+                        j += 1;
+                    }
+                    let row = &ws.lout[j * rank..(j + 1) * rank];
+                    plan.push_row(shared, idx as usize, row, traffic);
+                    i = j + 1;
+                }
+            } else {
+                self.backend.mttkrp_block(
+                    rank,
+                    &ws.vals,
+                    &row_refs,
+                    &mut ws.lout,
+                )?;
+                // one update per nonzero. Under Local policy with the seg
+                // kernel disabled (ablation) these are partial sums
+                // spilled to "global memory" — intermediate traffic the
+                // paper's format exists to eliminate. Under Global policy
+                // they are Alg. 2's per-nonzero Global_Updates.
+                for i in 0..take {
+                    let row = &ws.lout[i * rank..(i + 1) * rank];
+                    plan.push_row(shared, out_col[t + i] as usize, row, traffic);
+                    if matches!(plan.policy, UpdatePolicy::Local) {
+                        traffic.intermediate_bytes += (rank * 4) as u64;
+                    }
+                }
+            }
+            t += take;
+        }
+        Ok(())
+    }
+
+    /// Fused SM loop (native backend): for every nonzero, multiply the
+    /// input-mode factor rows directly out of factor storage into a
+    /// register-resident accumulator; write each output row once per
+    /// precomputed segment run (Local) or per nonzero (Global, Alg. 2
+    /// lines 21-22). No staging buffers, no second pass — this is the
+    /// faithful rendering of the paper's thread-block inner loop on a CPU,
+    /// replaying the format's segment table built at construction.
+    fn run_partition_fused(
+        &self,
+        plan: &ModePlan,
+        z: usize,
+        ws: &mut EngineWorkspace,
+        factors: &FactorSet,
+        shared: &SharedRows,
+        traffic: &mut TrafficCounters,
+    ) -> Result<()> {
+        let copy = &self.format.copies[plan.mode];
+        let tensor = &copy.tensor;
+        let (lo, hi) = plan.partition(z);
+        let rank = plan.rank;
+        // acc + contrib reuse the first `2R` slots of the (otherwise
+        // unused) block-output scratch buffer.
+        let (acc, contrib_buf) = ws.lout.split_at_mut(rank);
+        let contrib = &mut contrib_buf[..rank];
+        if matches!(plan.policy, UpdatePolicy::Local) && self.config.use_seg_kernel {
+            // segment runs were precomputed when the format was built —
+            // one on-chip-reduced write per run
+            for seg in &copy.segments[z] {
+                acc.fill(0.0);
+                for t in seg.start as usize..seg.end as usize {
+                    contribution(tensor, &plan.input_modes, factors, t, contrib);
+                    for r in 0..rank {
+                        acc[r] += contrib[r];
+                    }
+                }
+                plan.push_row(shared, seg.out_index as usize, acc, traffic);
+            }
+        } else {
+            let out_col = &tensor.inds[plan.mode];
+            for t in lo..hi {
+                contribution(tensor, &plan.input_modes, factors, t, contrib);
+                plan.push_row(shared, out_col[t] as usize, contrib, traffic);
+                if matches!(plan.policy, UpdatePolicy::Local) {
+                    // seg reduction disabled (ablation): partials spill
+                    traffic.intermediate_bytes += (rank * 4) as u64;
+                }
+            }
+        }
+        traffic.tensor_bytes_read += (hi - lo) as u64 * plan.elem_bytes;
+        traffic.factor_bytes_read +=
+            ((hi - lo) * plan.input_modes.len() * rank * 4) as u64;
+        Ok(())
     }
 
     // ------------------------------------------------- dense ALS helpers
@@ -299,8 +522,9 @@ impl Engine {
         Ok(acc.into_iter().map(|x| x as f32).collect())
     }
 
-    /// `V = hadamard(grams) + damp I` via the backend.
-    pub fn hadamard(&self, grams: &[Vec<f32>], damp: f32) -> Result<Vec<f32>> {
+    /// `V = hadamard(grams) + damp I` via the backend. `grams` borrows the
+    /// caller's `(R, R)` matrices — no clones on the ALS hot path.
+    pub fn hadamard(&self, grams: &[&[f32]], damp: f32) -> Result<Vec<f32>> {
         let rank = self.config.rank;
         let n = grams.len();
         let mut stacked = Vec::with_capacity(n * rank * rank);
@@ -357,8 +581,9 @@ impl Engine {
         Ok(acc)
     }
 
-    /// `sum(hadamard(grams) * w w^T)` via the backend.
-    pub fn weighted_gram(&self, grams: &[Vec<f32>], weights: &[f32]) -> Result<f64> {
+    /// `sum(hadamard(grams) * w w^T)` via the backend; `grams` borrows the
+    /// caller's `(R, R)` matrices.
+    pub fn weighted_gram(&self, grams: &[&[f32]], weights: &[f32]) -> Result<f64> {
         let rank = self.config.rank;
         let n = grams.len();
         let mut stacked = Vec::with_capacity(n * rank * rank);
@@ -372,305 +597,42 @@ impl Engine {
     }
 }
 
-/// Per-worker scratch buffers + the Alg. 2 inner loop.
-struct Worker<'e> {
-    engine: &'e Engine,
-    mode: usize,
-    policy: UpdatePolicy,
-    input_modes: Vec<usize>,
-    vals: Vec<f32>,
-    seg: Vec<f32>,
-    rows: Vec<Vec<f32>>,
-    lout: Vec<f32>,
-}
-
-impl<'e> Worker<'e> {
-    fn new(engine: &'e Engine, mode: usize, policy: UpdatePolicy) -> Worker<'e> {
-        let p = engine.backend.block_p();
-        let rank = engine.config.rank;
-        let n = engine.n_modes();
-        let input_modes: Vec<usize> = (0..n).filter(|&w| w != mode).collect();
-        Worker {
-            engine,
-            mode,
-            policy,
-            vals: vec![0.0f32; p],
-            seg: vec![0.0f32; p],
-            rows: (0..n - 1).map(|_| vec![0.0f32; p * rank]).collect(),
-            lout: vec![0.0f32; p * rank],
-            input_modes,
-        }
-    }
-
-    fn run_partition(
-        &mut self,
-        z: usize,
-        factors: &FactorSet,
-        shared: &SharedRows,
-        locks: &[Mutex<()>],
-        traffic: &mut TrafficCounters,
-    ) -> Result<()> {
-        let engine = self.engine;
-        let copy = &engine.format.copies[self.mode];
-        let tensor = &copy.tensor;
-        let (lo, hi) = (
-            copy.partitioning.bounds[z],
-            copy.partitioning.bounds[z + 1],
-        );
-        if lo == hi {
-            return Ok(());
-        }
-        if engine.config.fused && engine.backend.name() == "native" {
-            return self.run_partition_fused(z, factors, shared, locks, traffic);
-        }
-        let p = engine.backend.block_p();
-        let rank = engine.config.rank;
-        let out_col = &tensor.inds[self.mode];
-        let mut t = lo;
-        while t < hi {
-            let take = (hi - t).min(p);
-            // ---- gather (the "SM loads rows from global memory" step)
-            for i in 0..take {
-                self.vals[i] = tensor.vals[t + i];
-                self.seg[i] = if t + i == lo || out_col[t + i] != out_col[t + i - 1]
-                {
-                    1.0
-                } else {
-                    0.0
-                };
-            }
-            self.vals[take..].fill(0.0);
-            self.seg[take..].fill(0.0);
-            for (slot, &w) in self.input_modes.iter().enumerate() {
-                let fac = &factors[w];
-                let col = &tensor.inds[w];
-                let buf = &mut self.rows[slot];
-                for i in 0..take {
-                    let r = fac.row(col[t + i] as usize);
-                    buf[i * rank..(i + 1) * rank].copy_from_slice(r);
-                }
-                // padding rows: stale finite values are harmless (vals = 0)
-            }
-            traffic.tensor_bytes_read += take as u64 * engine.elem_bytes;
-            traffic.factor_bytes_read +=
-                (take * self.input_modes.len() * rank * 4) as u64;
-            // ---- compute (the R×P thread block)
-            // The segmented reduction only applies under Local_Update:
-            // Scheme 1 owns its output rows, so the block can fully reduce
-            // a row before the single write (the paper's L1-resident
-            // accumulation). Under Scheme 2 the paper's Alg. 2 (lines
-            // 21-22) performs a Global_Update per nonzero — merging there
-            // would under-model its atomic traffic.
-            let row_refs: Vec<&[f32]> =
-                self.rows.iter().map(|r| r.as_slice()).collect();
-            let use_seg = engine.config.use_seg_kernel
-                && matches!(self.policy, UpdatePolicy::Local);
-            if use_seg {
-                engine.backend.mttkrp_block_seg(
-                    rank,
-                    &self.vals,
-                    &self.seg,
-                    &row_refs,
-                    &mut self.lout,
-                )?;
-                // one update per block-local segment run
-                let mut i = 0;
-                while i < take {
-                    let idx = out_col[t + i];
-                    let mut j = i;
-                    while j + 1 < take && out_col[t + j + 1] == idx {
-                        j += 1;
-                    }
-                    let row = &self.lout[j * rank..(j + 1) * rank];
-                    self.update(shared, locks, idx as usize, row, traffic);
-                    i = j + 1;
-                }
-            } else {
-                engine.backend.mttkrp_block(
-                    rank,
-                    &self.vals,
-                    &row_refs,
-                    &mut self.lout,
-                )?;
-                // one update per nonzero. Under Local policy with the seg
-                // kernel disabled (ablation) these are partial sums
-                // spilled to "global memory" — intermediate traffic the
-                // paper's format exists to eliminate. Under Global policy
-                // they are Alg. 2's per-nonzero Global_Updates.
-                for i in 0..take {
-                    let row = &self.lout[i * rank..(i + 1) * rank];
-                    self.update(
-                        shared,
-                        locks,
-                        out_col[t + i] as usize,
-                        row,
-                        traffic,
-                    );
-                    if matches!(self.policy, UpdatePolicy::Local) {
-                        traffic.intermediate_bytes += (rank * 4) as u64;
-                    }
-                }
-            }
-            t += take;
-        }
-        Ok(())
-    }
-
-    /// Fused SM loop (native backend): for every nonzero, multiply the
-    /// input-mode factor rows directly out of factor storage into a
-    /// register-resident accumulator; write each output row once per
-    /// segment (Local) or per nonzero (Global, Alg. 2 lines 21-22). No
-    /// staging buffers, no second pass — this is the faithful rendering of
-    /// the paper's thread-block inner loop on a CPU.
-    fn run_partition_fused(
-        &mut self,
-        z: usize,
-        factors: &FactorSet,
-        shared: &SharedRows,
-        locks: &[Mutex<()>],
-        traffic: &mut TrafficCounters,
-    ) -> Result<()> {
-        let engine = self.engine;
-        let copy = &engine.format.copies[self.mode];
-        let tensor = &copy.tensor;
-        let (lo, hi) = (
-            copy.partitioning.bounds[z],
-            copy.partitioning.bounds[z + 1],
-        );
-        let rank = engine.config.rank;
-        let out_col = &tensor.inds[self.mode];
-        let n_in = self.input_modes.len();
-        let local = matches!(self.policy, UpdatePolicy::Local)
-            && engine.config.use_seg_kernel;
-        // acc reuses the first `rank` slots of the (otherwise unused)
-        // block-output scratch buffer.
-        let (acc, contrib_buf) = self.lout.split_at_mut(rank);
-        let contrib = &mut contrib_buf[..rank];
-        let mut cur_idx = out_col[lo];
-        acc.fill(0.0);
-        for t in lo..hi {
-            let v = tensor.vals[t];
-            match n_in {
-                2 => {
-                    let ra = factors[self.input_modes[0]]
-                        .row(tensor.inds[self.input_modes[0]][t] as usize);
-                    let rb = factors[self.input_modes[1]]
-                        .row(tensor.inds[self.input_modes[1]][t] as usize);
-                    for r in 0..rank {
-                        contrib[r] = v * ra[r] * rb[r];
-                    }
-                }
-                3 => {
-                    let ra = factors[self.input_modes[0]]
-                        .row(tensor.inds[self.input_modes[0]][t] as usize);
-                    let rb = factors[self.input_modes[1]]
-                        .row(tensor.inds[self.input_modes[1]][t] as usize);
-                    let rc = factors[self.input_modes[2]]
-                        .row(tensor.inds[self.input_modes[2]][t] as usize);
-                    for r in 0..rank {
-                        contrib[r] = v * ra[r] * rb[r] * rc[r];
-                    }
-                }
-                _ => {
-                    contrib.fill(v);
-                    for &w in &self.input_modes {
-                        let row = factors[w].row(tensor.inds[w][t] as usize);
-                        for r in 0..rank {
-                            contrib[r] *= row[r];
-                        }
-                    }
-                }
-            }
-            if local {
-                let idx = out_col[t];
-                if idx != cur_idx {
-                    // segment boundary: single on-chip-reduced write
-                    push_row(
-                        shared, locks, self.policy, locks.len(),
-                        cur_idx as usize, acc, traffic,
-                    );
-                    acc.fill(0.0);
-                    cur_idx = idx;
-                }
-                for r in 0..rank {
-                    acc[r] += contrib[r];
-                }
-            } else {
-                push_row(
-                    shared, locks, self.policy, locks.len(),
-                    out_col[t] as usize, contrib, traffic,
-                );
-                if matches!(self.policy, UpdatePolicy::Local) {
-                    // seg reduction disabled (ablation): partials spill
-                    traffic.intermediate_bytes += (rank * 4) as u64;
-                }
-            }
-        }
-        if local {
-            push_row(
-                shared, locks, self.policy, locks.len(),
-                cur_idx as usize, acc, traffic,
-            );
-        }
-        traffic.tensor_bytes_read += (hi - lo) as u64 * engine.elem_bytes;
-        traffic.factor_bytes_read += ((hi - lo) * n_in * rank * 4) as u64;
-        Ok(())
-    }
-
-    #[inline]
-    fn update(
-        &self,
-        shared: &SharedRows,
-        locks: &[Mutex<()>],
-        idx: usize,
-        row: &[f32],
-        traffic: &mut TrafficCounters,
-    ) {
-        let rank = row.len();
-        match self.policy {
-            UpdatePolicy::Local => {
-                // SAFETY (exclusivity): Scheme-1 partitions own disjoint
-                // output indices (proptested in rust/tests/), and a single
-                // partition is processed by one worker at a time.
-                unsafe { shared.add_row_exclusive(idx, row) };
-                traffic.local_updates += rank as u64;
-            }
-            UpdatePolicy::Global => {
-                let _g = locks[idx % locks.len()].lock().unwrap();
-                // SAFETY: all writers of rows hashing to this shard hold
-                // the same lock.
-                unsafe { shared.add_row_exclusive(idx, row) };
-                traffic.global_atomics += rank as u64;
-            }
-        }
-        traffic.output_bytes_written += (rank * 4) as u64;
-    }
-}
-
-/// Row update shared by the fused path (same semantics as `Worker::update`).
+/// One nonzero's rank-vector contribution: `contrib = val * ⊙ input rows`
+/// (the paper's elementwise computation, specialised for the common 3-/4-
+/// mode cases).
 #[inline]
-fn push_row(
-    shared: &SharedRows,
-    locks: &[Mutex<()>],
-    policy: UpdatePolicy,
-    n_locks: usize,
-    idx: usize,
-    row: &[f32],
-    traffic: &mut TrafficCounters,
+fn contribution(
+    tensor: &SparseTensorCOO,
+    input_modes: &[usize],
+    factors: &FactorSet,
+    t: usize,
+    contrib: &mut [f32],
 ) {
-    let rank = row.len();
-    match policy {
-        UpdatePolicy::Local => {
-            // SAFETY: Scheme-1 partitions own disjoint output indices.
-            unsafe { shared.add_row_exclusive(idx, row) };
-            traffic.local_updates += rank as u64;
+    let v = tensor.vals[t];
+    match *input_modes {
+        [a, b] => {
+            let ra = factors[a].row(tensor.inds[a][t] as usize);
+            let rb = factors[b].row(tensor.inds[b][t] as usize);
+            for (r, c) in contrib.iter_mut().enumerate() {
+                *c = v * ra[r] * rb[r];
+            }
         }
-        UpdatePolicy::Global => {
-            let _g = locks[idx % n_locks].lock().unwrap();
-            // SAFETY: shard lock held for this row.
-            unsafe { shared.add_row_exclusive(idx, row) };
-            traffic.global_atomics += rank as u64;
+        [a, b, c] => {
+            let ra = factors[a].row(tensor.inds[a][t] as usize);
+            let rb = factors[b].row(tensor.inds[b][t] as usize);
+            let rc = factors[c].row(tensor.inds[c][t] as usize);
+            for (r, x) in contrib.iter_mut().enumerate() {
+                *x = v * ra[r] * rb[r] * rc[r];
+            }
+        }
+        _ => {
+            contrib.fill(v);
+            for &w in input_modes {
+                let row = factors[w].row(tensor.inds[w][t] as usize);
+                for (r, x) in contrib.iter_mut().enumerate() {
+                    *x *= row[r];
+                }
+            }
         }
     }
-    traffic.output_bytes_written += (rank * 4) as u64;
 }

@@ -78,26 +78,21 @@ mod tests {
     }
 
     #[test]
-    fn disjoint_rows_from_many_threads() {
+    fn disjoint_rows_from_many_pool_workers() {
         let rows = 64;
         let rank = 8;
         let mut buf = vec![0.0f32; rows * rank];
         let s = SharedRows::new(&mut buf, rank);
         let next = AtomicUsize::new(0);
-        std::thread::scope(|scope| {
-            for _ in 0..4 {
-                let s = &s;
-                let next = &next;
-                scope.spawn(move || loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= rows {
-                        break;
-                    }
-                    let row = vec![i as f32; rank];
-                    for _ in 0..10 {
-                        unsafe { s.add_row_exclusive(i, &row) };
-                    }
-                });
+        let pool = crate::exec::SmPool::new(4);
+        pool.run(&|_w| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= rows {
+                break;
+            }
+            let row = vec![i as f32; rank];
+            for _ in 0..10 {
+                unsafe { s.add_row_exclusive(i, &row) };
             }
         });
         for i in 0..rows {

@@ -78,25 +78,28 @@ pub fn als(engine: &Engine, tensor: &SparseTensorCOO, cfg: &CpdConfig) -> Result
     let mut fits = Vec::new();
     let mut reports = Vec::new();
     let mut weights = vec![1.0f64; rank];
+    // Per-mode `(I_d, R)` MTTKRP outputs, allocated once and replayed
+    // every iteration (the engine's pool + plans are likewise persistent —
+    // the whole ALS run executes on one set of workers).
+    let mut mttkrp_out: Vec<Vec<f32>> = vec![Vec::new(); n];
     for _iter in 0..cfg.max_iters {
         let mut sweep = Vec::with_capacity(n);
-        let mut m_last: Vec<f32> = Vec::new();
         for d in 0..n {
-            let (m, rep) = engine.mttkrp_mode(&factors, d)?;
+            let rep = engine.mttkrp_mode_into(&factors, d, &mut mttkrp_out[d])?;
             sweep.push(rep);
-            // V = hadamard of the *other* modes' Grams.
-            let others: Vec<Vec<f32>> = (0..n)
+            // V = hadamard of the *other* modes' Grams (borrowed, not
+            // cloned — the Gram cache is read-only here).
+            let others: Vec<&[f32]> = (0..n)
                 .filter(|&w| w != d)
-                .map(|w| grams[w].clone())
+                .map(|w| grams[w].as_slice())
                 .collect();
             let v = engine.hadamard(&others, cfg.damp)?;
             let rows = tensor.dims[d] as usize;
-            let y = engine.solve(&v, &m, rows)?;
+            let y = engine.solve(&v, &mttkrp_out[d], rows)?;
             factors[d].data = y;
             let lam = factors[d].normalize_columns();
             if d == n - 1 {
                 weights = lam;
-                m_last = m;
             }
             grams[d] = engine.gram(&factors[d])?;
         }
@@ -104,7 +107,8 @@ pub fn als(engine: &Engine, tensor: &SparseTensorCOO, cfg: &CpdConfig) -> Result
 
         // Matrix-free fit from the mode-(n-1) MTTKRP result.
         let w32: Vec<f32> = weights.iter().map(|&w| w as f32).collect();
-        let norm_model_sq = engine.weighted_gram(&grams, &w32)?;
+        let gram_refs: Vec<&[f32]> = grams.iter().map(|g| g.as_slice()).collect();
+        let norm_model_sq = engine.weighted_gram(&gram_refs, &w32)?;
         // <X, Xhat> = sum(M_last ⊙ (Y_last * lambda))
         let y_last = &factors[n - 1];
         let mut y_weighted = vec![0.0f32; y_last.data.len()];
@@ -114,7 +118,7 @@ pub fn als(engine: &Engine, tensor: &SparseTensorCOO, cfg: &CpdConfig) -> Result
                     (y_last.data[i * rank + r] as f64 * weights[r]) as f32;
             }
         }
-        let inner = engine.inner(&m_last, &y_weighted)?;
+        let inner = engine.inner(&mttkrp_out[n - 1], &y_weighted)?;
         let resid_sq = (norm_x_sq + norm_model_sq - 2.0 * inner).max(0.0);
         let fit = 1.0 - resid_sq.sqrt() / norm_x_sq.sqrt();
         let prev = fits.last().copied();

@@ -1,0 +1,56 @@
+//! The persistent SM-pool runtime — the execution substrate shared by all
+//! four spMTTKRP executors (the paper's engine and the three baselines).
+//!
+//! On the GPU the paper targets, the 82 SMs exist for the device's
+//! lifetime: the layout and partitioning are built *once* and replayed
+//! every ALS iteration on the same silicon. This module is that substrate
+//! for the simulated device:
+//!
+//! * [`SmPool`] — worker threads spawned once per pool lifetime and
+//!   *parked* between calls. Each mode execution dispatches one job; the
+//!   workers drain partition indices (simulated SMs) from a shared atomic
+//!   counter, and per-partition timing + the modeled global-atomic penalty
+//!   are collected centrally ([`SmPool::run_partitions`]).
+//! * [`ModePlan`] — the precomputed per-mode execution plan (partition
+//!   bounds, update policy, input-mode list, traffic constants, lock
+//!   shards) built at executor *construction* and reused across every mode
+//!   call and ALS iteration. Its [`ModePlan::push_row`] is the single
+//!   update primitive implementing `Local_Update` / `Global_Update`.
+//! * [`WorkspaceArena`] — per-worker scratch slots allocated once per
+//!   executor, so gather/compute buffers are not re-allocated per call.
+//!
+//! Executors differ only in layout, balance and synchronisation — the
+//! DESIGN.md "same substrate" claim is structural: `coordinator::Engine`,
+//! `baselines::{PartiExecutor, MmCsfExecutor, BlcoExecutor}` all run on
+//! one (optionally shared) `SmPool`.
+
+pub mod plan;
+pub mod pool;
+pub mod workspace;
+
+pub use plan::{equal_bounds, ModePlan, UpdatePolicy};
+pub use pool::{PartitionRun, SmPool};
+pub use workspace::WorkspaceArena;
+
+/// Default worker count for a new pool: `SPMTTKRP_THREADS` if set (> 0),
+/// else this machine's available parallelism. Read per call — cheap, and
+/// keeps tests free to vary the variable.
+pub fn default_threads() -> usize {
+    std::env::var("SPMTTKRP_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n: &usize| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn default_threads_positive() {
+        assert!(super::default_threads() >= 1);
+    }
+}

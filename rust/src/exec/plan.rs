@@ -1,0 +1,176 @@
+//! Per-mode execution plans: everything a mode call needs that does *not*
+//! depend on the factor values, precomputed once at executor construction
+//! and replayed every call / ALS iteration (the paper builds its layout
+//! and partitioning once and reuses it for the decomposition's lifetime).
+
+use std::sync::Mutex;
+
+use crate::coordinator::shared::SharedRows;
+use crate::metrics::TrafficCounters;
+
+/// `κ + 1` offsets splitting `0..n` into κ near-equal contiguous chunks
+/// (the first `n % κ` chunks get one extra element). Shared by Scheme 2
+/// and the equal-count baselines so the splitting rule cannot diverge.
+pub fn equal_bounds(n: usize, kappa: usize) -> Vec<usize> {
+    assert!(kappa > 0);
+    let base = n / kappa;
+    let extra = n % kappa;
+    let mut bounds = Vec::with_capacity(kappa + 1);
+    let mut lo = 0;
+    bounds.push(0);
+    for z in 0..kappa {
+        lo += base + usize::from(z < extra);
+        bounds.push(lo);
+    }
+    bounds
+}
+
+/// How output-row accumulation is synchronised (derived from the scheme).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdatePolicy {
+    /// Rows owned by one partition — no cross-SM synchronisation.
+    Local,
+    /// Rows may be shared — global (sharded-lock) accumulation.
+    Global,
+}
+
+/// The precomputed plan for executing one output mode: partition bounds,
+/// update policy, input-mode list, traffic constants, and the lock shards
+/// backing `Global_Update`. Segment-run boundaries live in the format's
+/// `ModeCopy::segments` (built once alongside the partitioning); the plan
+/// is the executable view over them, keyed by `mode`.
+pub struct ModePlan {
+    pub mode: usize,
+    /// Partition (simulated-SM) count for this mode.
+    pub kappa: usize,
+    pub rank: usize,
+    pub policy: UpdatePolicy,
+    /// Output dimension `I_d`.
+    pub out_rows: usize,
+    /// `κ + 1` offsets when partitions are contiguous ranges; empty for
+    /// executors with non-contiguous partitions (ParTI's block chunks).
+    pub bounds: Vec<usize>,
+    /// The `N - 1` gathered modes (all but `mode`), in order.
+    pub input_modes: Vec<usize>,
+    /// Traffic constant: bytes per stored nonzero of this tensor.
+    pub elem_bytes: u64,
+    /// Lock shards for `Global_Update`, allocated once per plan.
+    locks: Vec<Mutex<()>>,
+}
+
+impl ModePlan {
+    pub fn new(
+        mode: usize,
+        kappa: usize,
+        rank: usize,
+        out_rows: usize,
+        policy: UpdatePolicy,
+        bounds: Vec<usize>,
+        input_modes: Vec<usize>,
+        elem_bytes: u64,
+        lock_shards: usize,
+    ) -> ModePlan {
+        assert!(kappa > 0 && rank > 0 && lock_shards > 0);
+        assert!(bounds.is_empty() || bounds.len() == kappa + 1);
+        ModePlan {
+            mode,
+            kappa,
+            rank,
+            policy,
+            out_rows,
+            bounds,
+            input_modes,
+            elem_bytes,
+            locks: (0..lock_shards).map(|_| Mutex::new(())).collect(),
+        }
+    }
+
+    /// Length of the `(I_d, R)` row-major output buffer.
+    pub fn out_len(&self) -> usize {
+        self.out_rows * self.rank
+    }
+
+    /// Partition `z`'s contiguous `(lo, hi)` range (contiguous plans only).
+    #[inline]
+    pub fn partition(&self, z: usize) -> (usize, usize) {
+        (self.bounds[z], self.bounds[z + 1])
+    }
+
+    /// The single update primitive shared by all executors and both code
+    /// paths (`Local_Update` / `Global_Update`): `out[idx, :] += row`,
+    /// counted per the policy.
+    #[inline]
+    pub fn push_row(
+        &self,
+        shared: &SharedRows,
+        idx: usize,
+        row: &[f32],
+        traffic: &mut TrafficCounters,
+    ) {
+        let rank = row.len();
+        match self.policy {
+            UpdatePolicy::Local => {
+                // SAFETY (exclusivity): Scheme-1 partitions own disjoint
+                // output indices (proptested in rust/tests/), and a single
+                // partition is processed by one worker at a time.
+                unsafe { shared.add_row_exclusive(idx, row) };
+                traffic.local_updates += rank as u64;
+            }
+            UpdatePolicy::Global => {
+                // a poisoned shard (panic in an earlier job) is recovered:
+                // the () payload carries no invariant
+                let _g = self.locks[idx % self.locks.len()]
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+                // SAFETY: all writers of rows hashing to this shard hold
+                // the same lock.
+                unsafe { shared.add_row_exclusive(idx, row) };
+                traffic.global_atomics += rank as u64;
+            }
+        }
+        traffic.output_bytes_written += (rank * 4) as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(policy: UpdatePolicy) -> ModePlan {
+        ModePlan::new(0, 2, 2, 4, policy, vec![0, 3, 6], vec![1, 2], 20, 8)
+    }
+
+    #[test]
+    fn equal_bounds_splits_near_equally() {
+        assert_eq!(equal_bounds(7, 3), vec![0, 3, 5, 7]);
+        assert_eq!(equal_bounds(6, 3), vec![0, 2, 4, 6]);
+        assert_eq!(equal_bounds(2, 4), vec![0, 1, 2, 2, 2]);
+        assert_eq!(equal_bounds(0, 2), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn partition_ranges_follow_bounds() {
+        let p = plan(UpdatePolicy::Local);
+        assert_eq!(p.partition(0), (0, 3));
+        assert_eq!(p.partition(1), (3, 6));
+        assert_eq!(p.out_len(), 8);
+    }
+
+    #[test]
+    fn push_row_counts_local_vs_global() {
+        for (policy, want_local, want_global) in [
+            (UpdatePolicy::Local, 2u64, 0u64),
+            (UpdatePolicy::Global, 0, 2),
+        ] {
+            let p = plan(policy);
+            let mut buf = vec![0.0f32; p.out_len()];
+            let shared = SharedRows::new(&mut buf, p.rank);
+            let mut tr = TrafficCounters::default();
+            p.push_row(&shared, 1, &[1.0, 2.0], &mut tr);
+            assert_eq!(tr.local_updates, want_local);
+            assert_eq!(tr.global_atomics, want_global);
+            assert_eq!(tr.output_bytes_written, 8);
+            assert_eq!(&buf[2..4], &[1.0, 2.0]);
+        }
+    }
+}

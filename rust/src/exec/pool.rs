@@ -1,0 +1,386 @@
+//! The persistent worker pool playing the role of the GPU's SM array.
+//!
+//! Threads are spawned once (pool construction) and parked on a condvar
+//! between calls — the per-mode, per-iteration `std::thread::scope` spawn/
+//! join cycle the executors used to pay is gone from the hot loop. A call
+//! installs one job; every worker runs it exactly once; the caller blocks
+//! until all workers have finished, which is what makes the borrowed-job
+//! lifetime erasure sound (and doubles as Alg. 1's global barrier between
+//! modes).
+
+use std::any::Any;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::metrics::TrafficCounters;
+use crate::util::stats::Imbalance;
+
+/// Pool state guarded by one mutex; both condvars wait on it.
+struct PoolState {
+    /// Current job, lifetime-erased. `Some` only while a call is in flight.
+    job: Option<&'static (dyn Fn(usize) + Sync)>,
+    /// Bumped once per dispatched job; workers use it to run each job once.
+    epoch: u64,
+    /// Workers still executing the current job.
+    active: usize,
+    /// First panic payload raised by a worker during the current job.
+    panic: Option<Box<dyn Any + Send>>,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Signalled when a job is installed (or on shutdown).
+    work_ready: Condvar,
+    /// Signalled when the last worker finishes a job (and when the slot
+    /// frees up for the next dispatcher).
+    done: Condvar,
+}
+
+/// A persistent pool of worker threads — the simulated SM array.
+///
+/// * Workers are spawned in [`SmPool::new`] and live until the pool drops.
+/// * [`SmPool::run`] dispatches one job to every worker and blocks until
+///   all finish. Calls from multiple threads serialize; calls are **not**
+///   reentrant (a job must not dispatch onto its own pool).
+/// * [`SmPool::run_partitions`] is the executor-facing entry: it drains
+///   `κ` partition indices through the workers and collects traffic
+///   counters plus per-partition simulated costs centrally.
+pub struct SmPool {
+    shared: Arc<PoolShared>,
+    workers: usize,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl SmPool {
+    /// Spawn `threads.max(1)` workers (parked until the first call).
+    pub fn new(threads: usize) -> SmPool {
+        let workers = threads.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                job: None,
+                epoch: 0,
+                active: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work_ready: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("sm-pool-{i}"))
+                    .spawn(move || worker_loop(&shared, i))
+                    .expect("spawn sm-pool worker")
+            })
+            .collect();
+        SmPool {
+            shared,
+            workers,
+            handles,
+        }
+    }
+
+    /// Pool with [`super::default_threads`] workers.
+    pub fn with_default_threads() -> SmPool {
+        SmPool::new(super::default_threads())
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f(worker_index)` once on every worker; blocks until all return.
+    /// A panic inside `f` is captured and re-raised here (the pool stays
+    /// usable afterwards).
+    // the transmute differs only in lifetime — exactly the point
+    #[allow(clippy::useless_transmute)]
+    pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
+        // SAFETY: the forged 'static reference is only dereferenced by
+        // workers between job installation and the `active == 0` handshake
+        // below, which this method waits for before returning — the
+        // pointee strictly outlives every use.
+        let job: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        let sh = &*self.shared;
+        let mut st = sh.state.lock().unwrap();
+        // Another dispatcher may be mid-call: wait for the slot.
+        while st.active > 0 || st.job.is_some() {
+            st = sh.done.wait(st).unwrap();
+        }
+        st.job = Some(job);
+        st.epoch += 1;
+        st.active = self.workers;
+        sh.work_ready.notify_all();
+        while st.active > 0 {
+            st = sh.done.wait(st).unwrap();
+        }
+        st.job = None;
+        let panic = st.panic.take();
+        drop(st);
+        sh.done.notify_all(); // release any queued dispatcher
+        if let Some(p) = panic {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    /// Execute one mode: drain partitions `0..kappa` (the simulated SMs)
+    /// through the pool. `body(worker, z, traffic)` processes partition
+    /// `z` with worker-local counters; timing and the modeled global-
+    /// atomic penalty per partition are collected here, so every executor
+    /// reports costs identically.
+    pub fn run_partitions(
+        &self,
+        kappa: usize,
+        body: &(dyn Fn(usize, usize, &mut TrafficCounters) -> Result<()> + Sync),
+    ) -> Result<PartitionRun> {
+        #[derive(Default)]
+        struct WorkerOut {
+            traffic: TrafficCounters,
+            costs: Vec<(usize, Duration, u64)>,
+            err: Option<anyhow::Error>,
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<WorkerOut>> =
+            (0..self.workers).map(|_| Mutex::new(WorkerOut::default())).collect();
+        let start = Instant::now();
+        self.run(&|w| {
+            let mut out = slots[w].lock().unwrap();
+            loop {
+                let z = next.fetch_add(1, Ordering::Relaxed);
+                if z >= kappa {
+                    break;
+                }
+                let before_atomics = out.traffic.global_atomics;
+                let t0 = Instant::now();
+                if let Err(e) = body(w, z, &mut out.traffic) {
+                    // This worker stops; others keep draining (matches the
+                    // old per-call thread-scope behaviour).
+                    out.err = Some(e);
+                    break;
+                }
+                let atomics = out.traffic.global_atomics - before_atomics;
+                out.costs.push((z, t0.elapsed(), atomics));
+            }
+        });
+        let wall = start.elapsed();
+        let mut traffic = TrafficCounters::default();
+        let mut part_costs = vec![Duration::ZERO; kappa];
+        let penalty_ns = crate::metrics::global_atomic_penalty_ns();
+        for slot in slots {
+            let out = slot.into_inner().unwrap();
+            if let Some(e) = out.err {
+                return Err(e);
+            }
+            traffic.add(&out.traffic);
+            for (z, dur, atomics) in out.costs {
+                // simulated SM cost: measured serial time + modeled global
+                // atomic penalty (local updates are L1-resident, free)
+                let penalty =
+                    Duration::from_nanos((atomics as f64 * penalty_ns) as u64);
+                part_costs[z] = dur + penalty;
+            }
+        }
+        Ok(PartitionRun {
+            traffic,
+            part_costs,
+            wall,
+        })
+    }
+}
+
+impl Drop for SmPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_ready.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared, me: usize) {
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != last_epoch {
+                    last_epoch = st.epoch;
+                    break st.job.expect("job present while epoch advances");
+                }
+                st = shared.work_ready.wait(st).unwrap();
+            }
+        };
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(me)));
+        let mut st = shared.state.lock().unwrap();
+        if let Err(p) = outcome {
+            if st.panic.is_none() {
+                st.panic = Some(p);
+            }
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Result of one [`SmPool::run_partitions`] call: merged traffic counters
+/// and the per-partition simulated costs (penalty already applied).
+pub struct PartitionRun {
+    pub traffic: TrafficCounters,
+    /// `len == κ`; entry `z` is partition `z`'s serial time + atomic penalty.
+    pub part_costs: Vec<Duration>,
+    /// Wallclock of the whole call on this machine.
+    pub wall: Duration,
+}
+
+impl PartitionRun {
+    /// Assemble the standard per-mode report (sim = makespan of the
+    /// per-partition costs — see `metrics::makespan`).
+    pub fn into_report(
+        self,
+        mode: usize,
+        imbalance: Imbalance,
+    ) -> crate::metrics::ModeExecReport {
+        crate::metrics::ModeExecReport {
+            mode,
+            wall: self.wall,
+            sim: crate::metrics::makespan(&self.part_costs),
+            part_costs: self.part_costs,
+            traffic: self.traffic,
+            imbalance,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_partition_processed_exactly_once() {
+        let pool = SmPool::new(4);
+        let kappa = 57;
+        let hits: Vec<AtomicUsize> = (0..kappa).map(|_| AtomicUsize::new(0)).collect();
+        let run = pool
+            .run_partitions(kappa, &|_w, z, _tr| {
+                hits[z].fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            })
+            .unwrap();
+        for h in &hits {
+            assert_eq!(h.load(Ordering::Relaxed), 1);
+        }
+        assert_eq!(run.part_costs.len(), kappa);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_calls() {
+        let pool = SmPool::new(3);
+        for round in 0..20 {
+            let total = AtomicUsize::new(0);
+            let run = pool
+                .run_partitions(round + 1, &|_w, z, tr| {
+                    total.fetch_add(z + 1, Ordering::Relaxed);
+                    tr.local_updates += 1;
+                    Ok(())
+                })
+                .unwrap();
+            let k = round + 1;
+            assert_eq!(total.load(Ordering::Relaxed), k * (k + 1) / 2);
+            assert_eq!(run.traffic.local_updates, k as u64);
+        }
+    }
+
+    #[test]
+    fn more_workers_than_partitions_is_fine() {
+        let pool = SmPool::new(8);
+        let run = pool
+            .run_partitions(2, &|_w, _z, tr| {
+                tr.tensor_bytes_read += 10;
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(run.traffic.tensor_bytes_read, 20);
+        assert_eq!(run.part_costs.len(), 2);
+    }
+
+    #[test]
+    fn zero_requested_threads_still_executes() {
+        let pool = SmPool::new(0); // clamped to 1 worker
+        assert_eq!(pool.n_workers(), 1);
+        let n = AtomicUsize::new(0);
+        pool.run(&|_w| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn errors_propagate_and_pool_survives() {
+        let pool = SmPool::new(2);
+        let err = pool.run_partitions(5, &|_w, z, _tr| {
+            if z == 3 {
+                anyhow::bail!("partition 3 exploded")
+            }
+            Ok(())
+        });
+        assert!(err.is_err());
+        // the pool must still be usable after a failed call
+        let ok = pool.run_partitions(4, &|_w, _z, _tr| Ok(())).unwrap();
+        assert_eq!(ok.part_costs.len(), 4);
+    }
+
+    #[test]
+    fn worker_panic_reaches_caller_and_pool_survives() {
+        let pool = SmPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(&|w| {
+                if w == 0 {
+                    panic!("worker 0 down");
+                }
+            });
+        }));
+        assert!(caught.is_err());
+        let n = AtomicUsize::new(0);
+        pool.run(&|_w| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn atomic_penalty_applied_per_partition() {
+        let pool = SmPool::new(1);
+        let run = pool
+            .run_partitions(2, &|_w, z, tr| {
+                if z == 1 {
+                    tr.global_atomics += 1_000_000; // ≥ 2 ms penalty at 2 ns
+                }
+                Ok(())
+            })
+            .unwrap();
+        // with the default 2 ns/atomic model the penalized partition costs
+        // at least 2 ms more than its serial time
+        if crate::metrics::global_atomic_penalty_ns() > 0.0 {
+            assert!(run.part_costs[1] >= Duration::from_millis(1));
+            assert!(run.part_costs[1] > run.part_costs[0]);
+        }
+    }
+}

@@ -1,0 +1,71 @@
+//! Per-worker scratch arenas: allocate each worker's gather/compute
+//! buffers once per executor lifetime instead of once per mode call.
+//!
+//! One slot per pool worker; a job accesses its own slot by worker index.
+//! Slots are mutex-wrapped so misuse cannot cause UB, but within one
+//! dispatched job worker indices are unique, so the locks are uncontended
+//! on the hot path.
+
+use std::sync::Mutex;
+
+/// `n_workers` independently-owned scratch values of type `T`.
+pub struct WorkspaceArena<T> {
+    slots: Vec<Mutex<T>>,
+}
+
+impl<T> WorkspaceArena<T> {
+    /// Build one slot per worker with `init(worker_index)`.
+    pub fn new(n_workers: usize, mut init: impl FnMut(usize) -> T) -> WorkspaceArena<T> {
+        WorkspaceArena {
+            slots: (0..n_workers.max(1)).map(&mut init).collect(),
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Run `f` with exclusive access to worker `w`'s scratch. A poisoned
+    /// slot (panic in an earlier job) is recovered — scratch is fully
+    /// rewritten before use, so a long-lived executor stays retryable
+    /// after a caught panic.
+    #[inline]
+    pub fn with<R>(&self, w: usize, f: impl FnOnce(&mut T) -> R) -> R {
+        let mut guard = self.slots[w % self.slots.len()]
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        f(&mut guard)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slots_are_independent_and_persistent() {
+        let arena = WorkspaceArena::new(3, |i| vec![i; 2]);
+        assert_eq!(arena.n_slots(), 3);
+        arena.with(1, |v| v.push(99));
+        arena.with(0, |v| assert_eq!(v, &vec![0, 0]));
+        arena.with(1, |v| assert_eq!(v, &vec![1, 1, 99]));
+    }
+
+    #[test]
+    fn poisoned_slot_recovers_after_panic() {
+        let arena = WorkspaceArena::new(1, |_| 0u32);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            arena.with(0, |_| panic!("job died"));
+        }));
+        assert!(caught.is_err());
+        arena.with(0, |x| *x = 5);
+        assert_eq!(arena.with(0, |x| *x), 5);
+    }
+
+    #[test]
+    fn zero_workers_clamps_to_one_slot() {
+        let arena = WorkspaceArena::new(0, |_| 7u32);
+        assert_eq!(arena.n_slots(), 1);
+        assert_eq!(arena.with(5, |x| *x), 7); // index wraps, no panic
+    }
+}

@@ -35,6 +35,7 @@ pub mod baselines;
 pub mod bench_support;
 pub mod coordinator;
 pub mod cpd;
+pub mod exec;
 pub mod format;
 pub mod hypergraph;
 pub mod metrics;
@@ -47,6 +48,7 @@ pub mod util;
 pub mod prelude {
     pub use crate::coordinator::{Engine, EngineConfig, UpdatePolicy};
     pub use crate::cpd::{als, CpdConfig, CpdResult};
+    pub use crate::exec::SmPool;
     pub use crate::format::{memory::MemoryReport, ModeSpecificFormat};
     pub use crate::partition::{LoadBalance, ModePartitioning};
     pub use crate::runtime::{Backend, NativeBackend, PjrtBackend};

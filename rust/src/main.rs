@@ -106,10 +106,8 @@ fn lb_of(s: &str) -> Result<LoadBalance> {
 fn engine_of(args: &Args, tensor: &SparseTensorCOO) -> Result<Engine> {
     let cfg = EngineConfig {
         sm_count: args.get("kappa", 82)?,
-        threads: args.get(
-            "threads",
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
-        )?,
+        // --threads overrides SPMTTKRP_THREADS overrides available cores
+        threads: args.get("threads", spmttkrp::exec::default_threads())?,
         rank: args.get("rank", 32)?,
         lb: lb_of(args.str_opt("lb").unwrap_or("adaptive"))?,
         assign: VertexAssign::Cyclic,

@@ -5,7 +5,10 @@
 //! Scheme-2 modes. Since our "GPU" is a worker pool, we *count* those
 //! quantities explicitly — every executor (ours and the baselines) reports
 //! a [`TrafficCounters`] so Fig. 3/4 can be compared on both wallclock and
-//! modeled traffic.
+//! modeled traffic. Per-partition cost collection (serial timing + the
+//! atomic penalty below) happens centrally in
+//! `exec::SmPool::run_partitions`, so all four executors are costed by one
+//! code path.
 
 use std::time::Duration;
 

@@ -177,15 +177,7 @@ pub fn scheme2(tensor: &SparseTensorCOO, mode: usize, kappa: usize) -> ModeParti
     let mut perm: Vec<u32> = (0..nnz as u32).collect();
     perm.sort_unstable_by_key(|&t| ((col[t as usize] as u64) << 32) | t as u64);
     // κ near-equal chunks: first `nnz % κ` partitions get one extra.
-    let base = nnz / kappa;
-    let extra = nnz % kappa;
-    let mut bounds = Vec::with_capacity(kappa + 1);
-    let mut acc = 0usize;
-    bounds.push(0);
-    for z in 0..kappa {
-        acc += base + usize::from(z < extra);
-        bounds.push(acc);
-    }
+    let bounds = crate::exec::equal_bounds(nnz, kappa);
     ModePartitioning {
         mode,
         scheme: SchemeUsed::ElementPartitioned,

@@ -35,7 +35,8 @@ fn engine_fit_pieces_match_oracle_fit() {
             .map(|f| engine.gram(f).unwrap())
             .collect();
         let w = vec![1.0f32; case.rank];
-        let norm_model_sq = engine.weighted_gram(&grams, &w).unwrap();
+        let gram_refs: Vec<&[f32]> = grams.iter().map(|g| g.as_slice()).collect();
+        let norm_model_sq = engine.weighted_gram(&gram_refs, &w).unwrap();
         let (m_last, _) = engine.mttkrp_mode(&case.factors, n - 1).unwrap();
         let inner = engine
             .inner(&m_last, &case.factors[n - 1].data)

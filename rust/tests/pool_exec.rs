@@ -1,0 +1,194 @@
+//! Tests for the persistent SM-pool runtime (`exec` layer):
+//!
+//!   * determinism across repeated calls on ONE pool (extends invariant
+//!     P8, which rebuilds the engine per call, to the persistent case);
+//!   * one pool shared by all four executors (the "same substrate" claim
+//!     is structural — everyone agrees with the dense oracle on it);
+//!   * ModePlan reuse: a long-lived engine replaying its plans produces
+//!     outputs identical to a freshly-built engine.
+
+use std::sync::Arc;
+
+use spmttkrp::baselines::{
+    blco_exec::BlcoExecutor, mmcsf::MmCsfExecutor, parti::PartiExecutor, MttkrpExecutor,
+};
+use spmttkrp::coordinator::{Engine, EngineConfig, UpdatePolicy};
+use spmttkrp::exec::SmPool;
+use spmttkrp::tensor::{DenseTensor, FactorSet, SparseTensorCOO};
+use spmttkrp::util::rng::Rng;
+
+/// Random small tensor: 2-5 modes, dims 1..40 (mirrors the prop-test
+/// generator so pool results are exercised on the same distribution).
+fn random_tensor(rng: &mut Rng) -> SparseTensorCOO {
+    let n = 2 + rng.next_below(4) as usize;
+    let dims: Vec<u32> = (0..n).map(|_| 1 + rng.next_below(40) as u32).collect();
+    let nnz = 1 + rng.next_below(800) as usize;
+    let mut inds: Vec<Vec<u32>> = vec![Vec::with_capacity(nnz); n];
+    let mut vals = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        for (w, col) in inds.iter_mut().enumerate() {
+            let i = if rng.next_f64() < 0.5 {
+                rng.next_below(dims[w] as u64)
+            } else {
+                rng.next_power_law(dims[w] as u64, 2.0)
+            };
+            col.push(i as u32);
+        }
+        vals.push(rng.next_normal() as f32);
+    }
+    SparseTensorCOO::new(dims, inds, vals)
+        .unwrap()
+        .collapse_duplicates()
+}
+
+fn small_cfg(kappa: usize, threads: usize, rank: usize) -> EngineConfig {
+    EngineConfig {
+        sm_count: kappa,
+        threads,
+        rank,
+        ..Default::default()
+    }
+}
+
+/// P8 extended: the *same* engine (one persistent pool, one set of plans
+/// and workspaces) called many times must reproduce its own results —
+/// bitwise for Local-policy modes (fixed per-partition update order),
+/// tight epsilon for Global modes (lock interleaving reorders f32 adds).
+#[test]
+fn repeated_calls_on_one_pool_are_deterministic() {
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(7700 + seed);
+        let t = random_tensor(&mut rng);
+        let fs = FactorSet::random(&t.dims, 8, 9 ^ seed);
+        let engine =
+            Engine::with_native_backend(&t, small_cfg(7, 3, 8)).unwrap();
+        let first = engine.mttkrp_all_modes(&fs).unwrap();
+        for round in 0..4 {
+            let again = engine.mttkrp_all_modes(&fs).unwrap();
+            for (d, (va, vb)) in first.iter().zip(&again).enumerate() {
+                let local =
+                    matches!(engine.update_policy(d), UpdatePolicy::Local);
+                for (i, (&x, &y)) in va.iter().zip(vb).enumerate() {
+                    if local {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "seed {seed} round {round} mode {d} [{i}]: {x} vs {y}"
+                        );
+                    } else {
+                        assert!(
+                            (x - y).abs() <= 1e-4 * (1.0 + y.abs()),
+                            "seed {seed} round {round} mode {d} [{i}]: {x} vs {y}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One pool, four executors: everyone runs (twice — reuse), and everyone
+/// matches the dense oracle.
+#[test]
+fn one_pool_shared_by_all_four_executors() {
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(8800 + seed);
+        let t = random_tensor(&mut rng);
+        let rank = 8;
+        let fs = FactorSet::random(&t.dims, rank, seed ^ 0xb);
+        let pool = Arc::new(SmPool::new(3));
+        let engine =
+            Engine::native_on_pool(&t, small_cfg(6, 3, rank), Arc::clone(&pool))
+                .unwrap();
+        let execs: Vec<Box<dyn MttkrpExecutor>> = vec![
+            Box::new(PartiExecutor::with_pool(&t, 6, rank, Arc::clone(&pool))),
+            Box::new(MmCsfExecutor::with_pool(&t, 6, rank, Arc::clone(&pool))),
+            Box::new(BlcoExecutor::with_pool(&t, 6, rank, Arc::clone(&pool))),
+        ];
+        let dense = DenseTensor::from_coo(&t);
+        for round in 0..2 {
+            for mode in 0..t.n_modes() {
+                let want = dense.mttkrp(&fs, mode);
+                let (ours, _) = engine.mttkrp_mode(&fs, mode).unwrap();
+                for (i, (&g, &w)) in ours.iter().zip(&want).enumerate() {
+                    assert!(
+                        (g as f64 - w).abs() <= 1e-2 * (1.0 + w.abs()),
+                        "seed {seed} round {round} ours mode {mode} [{i}]: {g} vs {w}"
+                    );
+                }
+                for ex in &execs {
+                    let (got, _) = ex.execute_mode(&fs, mode).unwrap();
+                    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                        assert!(
+                            (g as f64 - w).abs() <= 1e-2 * (1.0 + w.abs()),
+                            "seed {seed} round {round} {} mode {mode} [{i}]: {g} vs {w}",
+                            ex.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Regression: replaying a long-lived engine's ModePlans (third call on
+/// the same instance) gives outputs identical to a freshly-built engine's
+/// first call — plan/workspace reuse changes nothing.
+#[test]
+fn mode_plan_reuse_matches_fresh_engine() {
+    let mut rng = Rng::new(9901);
+    let t = random_tensor(&mut rng);
+    let rank = 8;
+    let fs = FactorSet::random(&t.dims, rank, 0xfeed);
+    let veteran = Engine::with_native_backend(&t, small_cfg(5, 2, rank)).unwrap();
+    // warm the plans/workspaces with two full sweeps
+    for _ in 0..2 {
+        veteran.mttkrp_all_modes(&fs).unwrap();
+    }
+    for mode in 0..t.n_modes() {
+        let fresh_engine =
+            Engine::with_native_backend(&t, small_cfg(5, 2, rank)).unwrap();
+        let (fresh, _) = fresh_engine.mttkrp_mode(&fs, mode).unwrap();
+        let (reused, rep) = veteran.mttkrp_mode(&fs, mode).unwrap();
+        let local = matches!(veteran.update_policy(mode), UpdatePolicy::Local);
+        for (i, (&a, &b)) in reused.iter().zip(&fresh).enumerate() {
+            if local {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "mode {mode} [{i}]: reused {a} vs fresh {b}"
+                );
+            } else {
+                assert!(
+                    (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                    "mode {mode} [{i}]: reused {a} vs fresh {b}"
+                );
+            }
+        }
+        // traffic counters are pure counts — bit-identical regardless of
+        // pool/plan age or thread interleaving
+        let (_, fresh_rep) = fresh_engine.mttkrp_mode(&fs, mode).unwrap();
+        assert_eq!(rep.traffic, fresh_rep.traffic, "mode {mode} counters");
+    }
+}
+
+/// The reusable-output entry point must produce the same result whether
+/// the buffer is fresh, dirty, or wrongly sized.
+#[test]
+fn mttkrp_mode_into_reuses_buffers_cleanly() {
+    let mut rng = Rng::new(4242);
+    let t = random_tensor(&mut rng);
+    let rank = 8;
+    let fs = FactorSet::random(&t.dims, rank, 77);
+    let engine = Engine::with_native_backend(&t, small_cfg(4, 2, rank)).unwrap();
+    let (want, _) = engine.mttkrp_mode(&fs, 0).unwrap();
+    let mut buf = vec![f32::NAN; 3]; // wrong size AND poisoned contents
+    engine.mttkrp_mode_into(&fs, 0, &mut buf).unwrap();
+    assert_eq!(buf.len(), want.len());
+    for (i, (&a, &b)) in buf.iter().zip(&want).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+            "[{i}]: into {a} vs fresh {b}"
+        );
+    }
+}
