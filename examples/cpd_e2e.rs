@@ -13,7 +13,7 @@
 use spmttkrp::prelude::*;
 use spmttkrp::util::human_bytes;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> spmttkrp::Result<()> {
     let backend = std::env::args().nth(1).unwrap_or_else(|| "pjrt".into());
     let scale: f64 = std::env::var("SPMTTKRP_E2E_SCALE")
         .ok()
@@ -34,16 +34,14 @@ fn main() -> anyhow::Result<()> {
         profile.scale_vs_paper()
     );
 
-    let cfg = EngineConfig {
-        sm_count: 82,
-        rank: 32,
-        ..Default::default()
-    };
+    let builder = ExecutorBuilder::new().sm_count(82).rank(32).backend(match backend.as_str() {
+        "native" => BackendKind::Native,
+        _ => BackendKind::Pjrt,
+    });
     let t0 = std::time::Instant::now();
-    let engine = match backend.as_str() {
-        "native" => Engine::with_native_backend(&tensor, cfg)?,
-        _ => Engine::with_pjrt_backend(&tensor, cfg)?,
-    };
+    let mut session = Session::new();
+    let h = session.prepare(&tensor, &builder)?;
+    let engine = session.engine(h)?;
     println!(
         "engine ready in {:.2}s (format: {} copies, {} stored)",
         t0.elapsed().as_secs_f64(),
@@ -67,7 +65,7 @@ fn main() -> anyhow::Result<()> {
         seed: 7,
     };
     let t1 = std::time::Instant::now();
-    let res = als(&engine, &tensor, &cpd_cfg)?;
+    let res = session.decompose(h, &cpd_cfg)?;
     let wall = t1.elapsed();
 
     println!("\niter   fit        spMTTKRP-total   traffic      atomics");
@@ -95,10 +93,12 @@ fn main() -> anyhow::Result<()> {
         wall.as_secs_f64(),
         total_mttkrp * 1e3
     );
-    anyhow::ensure!(
-        res.fits.windows(2).all(|w| w[1] >= w[0] - 1e-3),
-        "fit curve must be non-decreasing"
-    );
+    if !res.fits.windows(2).all(|w| w[1] >= w[0] - 1e-3) {
+        return Err(Error::Numeric(format!(
+            "fit curve must be non-decreasing: {:?}",
+            res.fits
+        )));
+    }
     println!("e2e OK");
     Ok(())
 }

@@ -10,11 +10,11 @@
 //!     cargo run --release --example fig3_overall
 //!     SPMTTKRP_BENCH_SCALE=0.02 cargo run ... (smaller/faster)
 
-use spmttkrp::baselines::MttkrpExecutor;
 use spmttkrp::bench_support::{all_executors, bench_reps, print_table, time_sim, Workload};
+use spmttkrp::prelude::*;
 use spmttkrp::util::{geomean, human_bytes};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> spmttkrp::Result<()> {
     let rank = 32;
     let reps = bench_reps();
     let workloads = Workload::all(rank);

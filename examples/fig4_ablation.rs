@@ -10,11 +10,10 @@ use std::sync::Arc;
 use spmttkrp::bench_support::{
     bench_reps, paper_engine_on_pool, print_table, time_sim, Workload,
 };
-use spmttkrp::exec::SmPool;
-use spmttkrp::partition::LoadBalance;
+use spmttkrp::prelude::*;
 use spmttkrp::util::geomean;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> spmttkrp::Result<()> {
     let rank = 32;
     let reps = bench_reps();
     let workloads = Workload::all(rank);

@@ -6,22 +6,23 @@
 //!     cargo run --release --example fig5_memory
 
 use spmttkrp::bench_support::print_table;
-use spmttkrp::format::memory::{MemoryReport, RTX3090_BYTES};
-use spmttkrp::tensor::synth::DatasetProfile;
+use spmttkrp::format::memory::RTX3090_BYTES;
+use spmttkrp::prelude::*;
 use spmttkrp::util::human_bytes;
 
-fn main() {
+fn main() -> spmttkrp::Result<()> {
     let rank = 32;
     let mut rows = Vec::new();
-    for p in DatasetProfile::all() {
+    for p in synth::DatasetProfile::all() {
         let paper = MemoryReport::paper_scale(&p, rank);
         let ours = MemoryReport::model(p.name, &p.dims, p.nnz as u64, rank);
-        assert!(
-            paper.fits_rtx3090(),
-            "{}: Fig. 5 claim violated ({} > 24 GB)",
-            p.name,
-            human_bytes(paper.total_bytes())
-        );
+        if !paper.fits_rtx3090() {
+            return Err(Error::InvalidData(format!(
+                "{}: Fig. 5 claim violated ({} > 24 GB)",
+                p.name,
+                human_bytes(paper.total_bytes())
+            )));
+        }
         rows.push(vec![
             p.name.to_string(),
             format!("{}", p.dims.len()),
@@ -43,4 +44,5 @@ fn main() {
         &rows,
     );
     println!("\nall datasets fit the RTX 3090's 24 GB — the paper's small-tensor criterion holds");
+    Ok(())
 }

@@ -1,27 +1,23 @@
-//! Quickstart: generate a small tensor, run spMTTKRP along every mode, and
-//! run a short CPD — the 60-second tour of the public API.
+//! Quickstart: generate a small tensor, prepare it in a `Session`, run
+//! spMTTKRP along every mode, and run a short CPD — the 60-second tour of
+//! the public API (`ExecutorBuilder` + `Session`).
 //!
 //!     cargo run --release --example quickstart
 
 use spmttkrp::prelude::*;
 use spmttkrp::util::human_bytes;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> spmttkrp::Result<()> {
     // 1. A synthetic tensor with the Uber profile (183 x 24 x 1140 x 1717).
     let tensor = synth::DatasetProfile::uber().scaled(0.02).generate(42);
-    println!(
-        "tensor: dims {:?}, {} nonzeros",
-        tensor.dims,
-        tensor.nnz()
-    );
+    println!("tensor: dims {:?}, {} nonzeros", tensor.dims, tensor.nnz());
 
-    // 2. Build the engine: mode-specific format + adaptive load balancing
-    //    over 82 simulated SMs (the paper's RTX 3090 κ).
-    let cfg = EngineConfig {
-        rank: 16,
-        ..Default::default()
-    };
-    let engine = Engine::with_native_backend(&tensor, cfg)?;
+    // 2. Prepare it once: mode-specific format + adaptive load balancing
+    //    over 82 simulated SMs (the paper's RTX 3090 κ), registered in a
+    //    session that replays the layout for every later call.
+    let mut session = Session::new();
+    let h = session.prepare(&tensor, &ExecutorBuilder::new().rank(16))?;
+    let engine = session.engine(h)?;
     for (d, copy) in engine.format.copies.iter().enumerate() {
         println!(
             "  mode {d}: {:?} ({} owned-output segments)",
@@ -32,7 +28,7 @@ fn main() -> anyhow::Result<()> {
 
     // 3. spMTTKRP along all modes (Algorithm 1).
     let factors = FactorSet::random(&tensor.dims, 16, 7);
-    let (_, report) = engine.mttkrp_all_modes_with_report(&factors)?;
+    let (_, report) = session.mttkrp_all_modes(h, &factors)?;
     for m in &report.modes {
         println!(
             "  mode {}: {:.2} ms, {} traffic, {} global atomics",
@@ -47,13 +43,13 @@ fn main() -> anyhow::Result<()> {
         report.total_wall().as_secs_f64() * 1e3
     );
 
-    // 4. A short CPD-ALS decomposition on top.
+    // 4. A short CPD-ALS decomposition through the same prepared handle.
     let cpd_cfg = CpdConfig {
         rank: 16,
         max_iters: 5,
         ..Default::default()
     };
-    let result = als(&engine, &tensor, &cpd_cfg)?;
+    let result = session.decompose(h, &cpd_cfg)?;
     println!("CPD fits per iteration: {:?}", result.fits);
     Ok(())
 }

@@ -12,36 +12,24 @@
 
 use std::sync::Arc;
 
-use spmttkrp::baselines::MttkrpExecutor;
 use spmttkrp::bench_support::{bench_reps, print_table, time, Workload};
-use spmttkrp::coordinator::{Engine, EngineConfig};
-use spmttkrp::exec::SmPool;
-use spmttkrp::partition::VertexAssign;
-use spmttkrp::runtime::NativeBackend;
+use spmttkrp::prelude::*;
 use spmttkrp::tensor::synth::DatasetProfile;
 use spmttkrp::util::human_bytes;
 
-fn cfg(rank: usize) -> EngineConfig {
-    EngineConfig {
-        sm_count: 82,
-        rank,
-        ..Default::default()
-    }
+fn builder(rank: usize) -> ExecutorBuilder {
+    ExecutorBuilder::new().sm_count(82).rank(rank)
 }
 
 fn ablate_seg(reps: usize, rank: usize, pool: &Arc<SmPool>) {
     let mut rows = Vec::new();
     for w in Workload::all(rank) {
         let mk = |seg: bool| {
-            Engine::native_on_pool(
-                &w.tensor,
-                EngineConfig {
-                    use_seg_kernel: seg,
-                    ..cfg(rank)
-                },
-                Arc::clone(pool),
-            )
-            .unwrap()
+            builder(rank)
+                .seg_kernel(seg)
+                .pool(Arc::clone(pool))
+                .build_engine(&w.tensor)
+                .unwrap()
         };
         let (on, off) = (mk(true), mk(false));
         let t_on = time(reps, || {
@@ -74,15 +62,11 @@ fn ablate_assign(reps: usize, rank: usize, pool: &Arc<SmPool>) {
         let mut medians = Vec::new();
         let mut imb = Vec::new();
         for assign in [VertexAssign::Cyclic, VertexAssign::Greedy] {
-            let e = Engine::native_on_pool(
-                &w.tensor,
-                EngineConfig {
-                    assign,
-                    ..cfg(rank)
-                },
-                Arc::clone(pool),
-            )
-            .unwrap();
+            let e = builder(rank)
+                .vertex_assign(assign)
+                .pool(Arc::clone(pool))
+                .build_engine(&w.tensor)
+                .unwrap();
             let s = time(reps, || {
                 std::hint::black_box(e.execute_all_modes(&w.factors).unwrap());
             });
@@ -123,15 +107,11 @@ fn ablate_kappa(reps: usize, rank: usize, pool: &Arc<SmPool>) {
     );
     let mut rows = Vec::new();
     for kappa in [8usize, 16, 32, 82, 128, 256] {
-        let e = Engine::native_on_pool(
-            &w.tensor,
-            EngineConfig {
-                sm_count: kappa,
-                ..cfg(rank)
-            },
-            Arc::clone(pool),
-        )
-        .unwrap();
+        let e = builder(rank)
+            .sm_count(kappa)
+            .pool(Arc::clone(pool))
+            .build_engine(&w.tensor)
+            .unwrap();
         let s = time(reps, || {
             std::hint::black_box(e.execute_all_modes(&w.factors).unwrap());
         });
@@ -158,13 +138,11 @@ fn ablate_blockp(reps: usize, rank: usize, pool: &Arc<SmPool>) {
     );
     let mut rows = Vec::new();
     for p in [32usize, 64, 128, 256, 512, 1024] {
-        let e = Engine::with_pool(
-            &w.tensor,
-            Box::new(NativeBackend::new(p)),
-            cfg(rank),
-            Arc::clone(pool),
-        )
-        .unwrap();
+        let e = builder(rank)
+            .block_p(p)
+            .pool(Arc::clone(pool))
+            .build_engine(&w.tensor)
+            .unwrap();
         let s = time(reps, || {
             std::hint::black_box(e.execute_all_modes(&w.factors).unwrap());
         });
@@ -179,8 +157,10 @@ fn ablate_blockp(reps: usize, rank: usize, pool: &Arc<SmPool>) {
 
 fn ablate_runtime(reps: usize, rank: usize, pool: &Arc<SmPool>) {
     let w = Workload::prepare(DatasetProfile::uber(), 0.01, rank, 7);
-    let native =
-        Engine::native_on_pool(&w.tensor, cfg(rank), Arc::clone(pool)).unwrap();
+    let native = builder(rank)
+        .pool(Arc::clone(pool))
+        .build_engine(&w.tensor)
+        .unwrap();
     let t_native = time(reps, || {
         std::hint::black_box(native.execute_all_modes(&w.factors).unwrap());
     });
@@ -189,7 +169,7 @@ fn ablate_runtime(reps: usize, rank: usize, pool: &Arc<SmPool>) {
         format!("{:.2}", t_native.median * 1e3),
         "1.00x".to_string(),
     ]];
-    match Engine::with_pjrt_backend(&w.tensor, cfg(rank)) {
+    match builder(rank).backend(BackendKind::Pjrt).build_engine(&w.tensor) {
         Ok(pjrt) => {
             pjrt.mttkrp_all_modes(&w.factors).unwrap(); // compile outside timing
             let t_pjrt = time(reps, || {
@@ -201,7 +181,7 @@ fn ablate_runtime(reps: usize, rank: usize, pool: &Arc<SmPool>) {
                 format!("{:.2}x", t_pjrt.median / t_native.median),
             ]);
         }
-        Err(e) => println!("(pjrt unavailable: {e:#} — run `make artifacts`)"),
+        Err(e) => println!("(pjrt unavailable: {e} — run `make artifacts`)"),
     }
     print_table(
         "ablation: backend dispatch (uber @ 1% scale, total ms)",

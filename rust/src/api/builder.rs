@@ -1,0 +1,421 @@
+//! `ExecutorBuilder` — the one way to construct an spMTTKRP executor.
+//!
+//! Subsumes the former constructor zoo (`Engine::new` / `with_pool` /
+//! `with_native_backend` / `native_on_pool` / `with_pjrt_backend`, plus the
+//! `new`/`with_pool` pairs on each of the three baselines): pick a
+//! [`ExecutorKind`], a [`BackendKind`], the knobs, optionally a shared
+//! [`SmPool`], and call [`ExecutorBuilder::build`] (trait object) or
+//! [`ExecutorBuilder::build_engine`] (the concrete engine, when you need
+//! its dense ALS helpers). Configuration is validated *before* any layout
+//! work runs — misuse returns a typed [`Error`], never a panic.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use super::error::{bail_with, ensure_or};
+use super::{Error, Result};
+use crate::baselines::{BlcoExecutor, MmCsfExecutor, MttkrpExecutor, PartiExecutor};
+use crate::coordinator::{Engine, EngineConfig};
+use crate::exec::SmPool;
+use crate::partition::{LoadBalance, VertexAssign};
+use crate::runtime::{Backend, NativeBackend, PjrtBackend};
+use crate::tensor::SparseTensorCOO;
+
+/// Which executor algorithm to prepare (the paper's engine or one of the
+/// three Fig. 3 baselines).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ExecutorKind {
+    /// The paper's method: mode-specific format + adaptive load balancing.
+    #[default]
+    Ours,
+    /// ParTI-GPU-like: HiCOO blocks, per-nonzero global atomics.
+    Parti,
+    /// MM-CSF-like: per-mode CSF trees with fiber reuse.
+    MmCsf,
+    /// BLCO-like: one linearized copy, decode + global atomics.
+    Blco,
+}
+
+impl ExecutorKind {
+    /// All four kinds in the Fig. 3 column order (ours, blco, mm-csf,
+    /// parti).
+    pub fn all() -> [ExecutorKind; 4] {
+        [
+            ExecutorKind::Ours,
+            ExecutorKind::Blco,
+            ExecutorKind::MmCsf,
+            ExecutorKind::Parti,
+        ]
+    }
+}
+
+/// Which block-kernel backend the engine executes on. The baselines always
+/// run native arithmetic (the Fig. 3 comparison is algorithmic, not a
+/// dispatch-overhead measurement).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Pure-Rust block kernels; no artifacts needed.
+    #[default]
+    Native,
+    /// AOT-compiled Pallas kernels via the PJRT artifact contract
+    /// (requires `artifacts/manifest.json` — see `make artifacts`).
+    Pjrt,
+}
+
+/// Fluent, validated construction of any [`MttkrpExecutor`].
+///
+/// ```no_run
+/// use spmttkrp::prelude::*;
+///
+/// # fn main() -> spmttkrp::Result<()> {
+/// let tensor = synth::DatasetProfile::uber().scaled(0.01).generate(42);
+/// let engine = ExecutorBuilder::new()
+///     .rank(16)
+///     .sm_count(8)
+///     .load_balance(LoadBalance::Adaptive)
+///     .build_engine(&tensor)?;
+/// let factors = FactorSet::random(&tensor.dims, 16, 7);
+/// let (out, _report) = engine.mttkrp_mode(&factors, 0)?;
+/// assert_eq!(out.len(), tensor.dims[0] as usize * 16);
+/// # Ok(())
+/// # }
+/// ```
+#[derive(Clone)]
+pub struct ExecutorBuilder {
+    kind: ExecutorKind,
+    backend: BackendKind,
+    cfg: EngineConfig,
+    block_p: usize,
+    pool: Option<Arc<SmPool>>,
+    artifacts: Option<PathBuf>,
+}
+
+impl Default for ExecutorBuilder {
+    fn default() -> Self {
+        ExecutorBuilder::new()
+    }
+}
+
+impl ExecutorBuilder {
+    /// Defaults: [`ExecutorKind::Ours`] on the native backend with the
+    /// paper's configuration (`κ = 82`, rank 32, adaptive load balancing,
+    /// block `P = 256`) and an owned worker pool.
+    pub fn new() -> ExecutorBuilder {
+        ExecutorBuilder {
+            kind: ExecutorKind::Ours,
+            backend: BackendKind::Native,
+            cfg: EngineConfig::default(),
+            block_p: 256,
+            pool: None,
+            artifacts: None,
+        }
+    }
+
+    /// Which executor algorithm to prepare.
+    pub fn kind(mut self, kind: ExecutorKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    /// Which block-kernel backend the engine runs on (engine only).
+    pub fn backend(mut self, backend: BackendKind) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Factor-matrix rank `R` (paper: 32).
+    pub fn rank(mut self, rank: usize) -> Self {
+        self.cfg.rank = rank;
+        self
+    }
+
+    /// Number of tensor partitions = simulated SMs `κ` (paper: 82).
+    pub fn sm_count(mut self, kappa: usize) -> Self {
+        self.cfg.sm_count = kappa;
+        self
+    }
+
+    /// OS worker threads when the executor owns its pool (capped at `κ`).
+    /// Ignored when [`ExecutorBuilder::pool`] supplies a shared pool.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+
+    /// Load-balancing scheme selection (engine only).
+    pub fn load_balance(mut self, lb: LoadBalance) -> Self {
+        self.cfg.lb = lb;
+        self
+    }
+
+    /// Scheme-1 vertex dealing rule (engine only).
+    pub fn vertex_assign(mut self, assign: VertexAssign) -> Self {
+        self.cfg.assign = assign;
+        self
+    }
+
+    /// In-kernel segmented reduction on/off (engine only; off = the
+    /// `ablate_segreduce` baseline).
+    pub fn seg_kernel(mut self, on: bool) -> Self {
+        self.cfg.use_seg_kernel = on;
+        self
+    }
+
+    /// Fused register-resident SM loop on/off (engine + native only).
+    pub fn fused(mut self, on: bool) -> Self {
+        self.cfg.fused = on;
+        self
+    }
+
+    /// Lock shards backing `Global_Update` (engine only).
+    pub fn lock_shards(mut self, shards: usize) -> Self {
+        self.cfg.lock_shards = shards;
+        self
+    }
+
+    /// Native block size `P` (must be even; PJRT takes `P` from the
+    /// manifest instead).
+    pub fn block_p(mut self, p: usize) -> Self {
+        self.block_p = p;
+        self
+    }
+
+    /// Execute on an existing shared pool instead of spawning an owned one
+    /// — the persistent-SM path: one pool serves many executors and every
+    /// ALS iteration without respawning workers.
+    pub fn pool(mut self, pool: Arc<SmPool>) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Override the PJRT artifact directory (default:
+    /// `$SPMTTKRP_ARTIFACTS`, else `./artifacts`).
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.artifacts = Some(dir.into());
+        self
+    }
+
+    /// Replace the whole engine configuration at once (migration aid for
+    /// callers that already hold an [`EngineConfig`]).
+    pub fn engine_config(mut self, cfg: EngineConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// The shared pool this builder was given, if any.
+    pub fn shared_pool(&self) -> Option<&Arc<SmPool>> {
+        self.pool.as_ref()
+    }
+
+    /// The executor kind this builder will construct.
+    pub fn configured_kind(&self) -> ExecutorKind {
+        self.kind
+    }
+
+    /// Validate the configuration without building anything. `build*` call
+    /// this first, so misuse is reported before any layout work runs.
+    pub fn validate(&self) -> Result<()> {
+        ensure_or!(self.cfg.rank > 0, InvalidConfig, "rank must be > 0");
+        ensure_or!(self.cfg.sm_count > 0, InvalidConfig, "sm_count (κ) must be > 0");
+        ensure_or!(
+            self.cfg.lock_shards > 0,
+            InvalidConfig,
+            "lock_shards must be > 0 (Global_Update needs at least one shard)"
+        );
+        if self.pool.is_none() {
+            ensure_or!(
+                self.cfg.threads > 0,
+                InvalidConfig,
+                "threads must be > 0 when the executor owns its pool"
+            );
+        }
+        ensure_or!(
+            self.block_p > 0 && self.block_p % 2 == 0,
+            InvalidConfig,
+            "block_p must be positive and even, got {}",
+            self.block_p
+        );
+        if self.kind != ExecutorKind::Ours && self.backend != BackendKind::Native {
+            bail_with!(
+                InvalidConfig,
+                "baseline executors run native arithmetic only (kind {:?} + backend {:?})",
+                self.kind,
+                self.backend
+            );
+        }
+        Ok(())
+    }
+
+    /// The pool the executor will run on: the shared one, or a fresh owned
+    /// pool of `threads.min(κ)` workers (more workers than partitions can
+    /// never get work).
+    fn resolve_pool(&self) -> Arc<SmPool> {
+        self.pool.clone().unwrap_or_else(|| {
+            Arc::new(SmPool::new(self.cfg.threads.min(self.cfg.sm_count)))
+        })
+    }
+
+    /// Construct the engine backend per [`BackendKind`], enforcing the
+    /// artifact contract (manifest present, rank available) for PJRT.
+    fn make_backend(&self) -> Result<Box<dyn Backend>> {
+        match self.backend {
+            BackendKind::Native => Ok(Box::new(NativeBackend::new(self.block_p))),
+            BackendKind::Pjrt => {
+                let be = match &self.artifacts {
+                    Some(dir) => PjrtBackend::load(dir)?,
+                    None => PjrtBackend::load_default()?,
+                };
+                if !be.manifest().has_rank(self.cfg.rank) {
+                    return Err(Error::Backend(format!(
+                        "no artifacts for rank {} (have {:?})",
+                        self.cfg.rank,
+                        be.manifest().ranks
+                    )));
+                }
+                Ok(Box::new(be))
+            }
+        }
+    }
+
+    /// Build the configured executor as a trait object.
+    pub fn build(&self, tensor: &SparseTensorCOO) -> Result<Box<dyn MttkrpExecutor>> {
+        self.validate()?;
+        let kappa = self.cfg.sm_count;
+        let rank = self.cfg.rank;
+        Ok(match self.kind {
+            ExecutorKind::Ours => Box::new(self.build_engine(tensor)?),
+            ExecutorKind::Parti => {
+                Box::new(PartiExecutor::with_pool(tensor, kappa, rank, self.resolve_pool()))
+            }
+            ExecutorKind::MmCsf => {
+                Box::new(MmCsfExecutor::with_pool(tensor, kappa, rank, self.resolve_pool()))
+            }
+            ExecutorKind::Blco => {
+                Box::new(BlcoExecutor::with_pool(tensor, kappa, rank, self.resolve_pool()))
+            }
+        })
+    }
+
+    /// Build the paper's engine concretely — needed for the dense ALS
+    /// helpers (`gram`/`hadamard`/`solve`) and [`crate::cpd::als`].
+    /// Errors with [`Error::InvalidConfig`] unless the kind is
+    /// [`ExecutorKind::Ours`].
+    pub fn build_engine(&self, tensor: &SparseTensorCOO) -> Result<Engine> {
+        self.validate()?;
+        ensure_or!(
+            self.kind == ExecutorKind::Ours,
+            InvalidConfig,
+            "build_engine requires ExecutorKind::Ours, got {:?}",
+            self.kind
+        );
+        Engine::from_parts(tensor, self.make_backend()?, self.cfg.clone(), self.resolve_pool())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::synth::DatasetProfile;
+
+    fn tiny() -> SparseTensorCOO {
+        DatasetProfile::uber().scaled(0.0005).generate(11)
+    }
+
+    #[test]
+    fn defaults_build_the_engine() {
+        let t = tiny();
+        let ex = ExecutorBuilder::new()
+            .sm_count(4)
+            .threads(2)
+            .rank(8)
+            .build(&t)
+            .unwrap();
+        assert_eq!(ex.name(), "ours");
+        assert_eq!(ex.n_modes(), t.n_modes());
+    }
+
+    #[test]
+    fn every_kind_builds_and_names_itself() {
+        let t = tiny();
+        let names: Vec<&str> = ExecutorKind::all()
+            .into_iter()
+            .map(|k| {
+                ExecutorBuilder::new()
+                    .kind(k)
+                    .sm_count(4)
+                    .threads(1)
+                    .rank(8)
+                    .build(&t)
+                    .unwrap()
+                    .name()
+            })
+            .collect();
+        assert_eq!(names, vec!["ours", "blco", "mm-csf", "parti"]);
+    }
+
+    #[test]
+    fn zero_knobs_are_rejected_with_invalid_config() {
+        let t = tiny();
+        for b in [
+            ExecutorBuilder::new().rank(0),
+            ExecutorBuilder::new().sm_count(0),
+            ExecutorBuilder::new().lock_shards(0),
+            ExecutorBuilder::new().threads(0),
+            ExecutorBuilder::new().block_p(0),
+            ExecutorBuilder::new().block_p(255), // odd
+        ] {
+            assert!(matches!(b.build(&t), Err(Error::InvalidConfig(_))));
+        }
+    }
+
+    #[test]
+    fn threads_zero_is_fine_on_a_shared_pool() {
+        let t = tiny();
+        let pool = Arc::new(SmPool::new(2));
+        let ex = ExecutorBuilder::new()
+            .threads(0)
+            .sm_count(4)
+            .rank(8)
+            .pool(pool)
+            .build(&t)
+            .unwrap();
+        assert_eq!(ex.name(), "ours");
+    }
+
+    #[test]
+    fn pjrt_without_artifacts_is_a_typed_error() {
+        let t = tiny();
+        let err = ExecutorBuilder::new()
+            .backend(BackendKind::Pjrt)
+            .artifacts_dir("/definitely/not/here")
+            .sm_count(4)
+            .rank(8)
+            .build(&t)
+            .unwrap_err();
+        assert!(matches!(err, Error::Io { .. }), "got {err}");
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn baseline_plus_pjrt_is_rejected_up_front() {
+        let t = tiny();
+        let err = ExecutorBuilder::new()
+            .kind(ExecutorKind::Parti)
+            .backend(BackendKind::Pjrt)
+            .build(&t)
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)));
+    }
+
+    #[test]
+    fn build_engine_rejects_baseline_kinds() {
+        let t = tiny();
+        let err = ExecutorBuilder::new()
+            .kind(ExecutorKind::Blco)
+            .sm_count(4)
+            .rank(8)
+            .build_engine(&t)
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)));
+    }
+}

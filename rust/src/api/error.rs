@@ -1,0 +1,145 @@
+//! The library-wide typed error. Every public `spmttkrp` entry point
+//! returns [`Result<T>`]; `anyhow` is not part of the library surface
+//! (examples and the CLI binary may still use it for *their* top-level
+//! error handling — [`Error`] implements `std::error::Error`, so `?`
+//! interops).
+//!
+//! Variants are coarse by design: callers branch on *kind* (was the config
+//! rejected up front? did a buffer shape disagree? is the artifact set
+//! missing?), while the payload string carries the precise diagnostic.
+
+use std::fmt;
+
+/// Library-wide result alias. The error parameter defaults to [`Error`],
+/// so a prelude glob import can shadow `std::result::Result` harmlessly —
+/// `Result<T, E>` still means what it always did.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// What went wrong, by kind.
+#[derive(Debug)]
+#[non_exhaustive]
+pub enum Error {
+    /// A configuration was rejected before any work ran (zero rank / SM
+    /// count / lock shards, odd block size, kind/backend combinations that
+    /// cannot execute, rank mismatches between components).
+    InvalidConfig(String),
+    /// A buffer, factor, or mode index disagrees with the prepared layout.
+    ShapeMismatch(String),
+    /// Tensor data failed validation (ragged coordinates, out-of-range
+    /// index, zero-based `.tns` input, empty or all-zero tensor).
+    InvalidData(String),
+    /// The execution backend's contract was violated: missing artifact
+    /// set, unknown artifact, unsupported rank, malformed manifest entry.
+    Backend(String),
+    /// A numerical failure on valid inputs (e.g. singular normal-equation
+    /// matrix in the ALS solve).
+    Numeric(String),
+    /// Malformed text input (`.tns` file, `manifest.json`, golden meta).
+    Parse(String),
+    /// An underlying file-IO failure, with what was being attempted.
+    Io {
+        what: String,
+        source: std::io::Error,
+    },
+    /// A [`crate::api::TensorHandle`] this session never issued.
+    UnknownHandle(usize),
+}
+
+impl Error {
+    /// An [`Error::Io`] carrying the attempted operation as context.
+    pub fn io(what: impl Into<String>, source: std::io::Error) -> Error {
+        Error::Io {
+            what: what.into(),
+            source,
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidConfig(m) => write!(f, "invalid configuration: {m}"),
+            Error::ShapeMismatch(m) => write!(f, "shape mismatch: {m}"),
+            Error::InvalidData(m) => write!(f, "invalid data: {m}"),
+            Error::Backend(m) => write!(f, "backend error: {m}"),
+            Error::Numeric(m) => write!(f, "numerical error: {m}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Io { what, source } => write!(f, "io error: {what}: {source}"),
+            Error::UnknownHandle(h) => {
+                write!(f, "unknown session handle {h} (not issued by this session)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(source: std::io::Error) -> Error {
+        Error::Io {
+            what: "io".into(),
+            source,
+        }
+    }
+}
+
+/// Internal `ensure!`-style guard producing a typed [`Error`] variant:
+/// `ensure_or!(cond, ShapeMismatch, "got {}", n)`.
+macro_rules! ensure_or {
+    ($cond:expr, $variant:ident, $($arg:tt)+) => {
+        if !$cond {
+            return Err($crate::api::Error::$variant(format!($($arg)+)));
+        }
+    };
+}
+
+/// Internal `bail!`-style early return with a typed [`Error`] variant.
+macro_rules! bail_with {
+    ($variant:ident, $($arg:tt)+) => {
+        return Err($crate::api::Error::$variant(format!($($arg)+)))
+    };
+}
+
+pub(crate) use bail_with;
+pub(crate) use ensure_or;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_kind() {
+        let e = Error::InvalidConfig("rank must be > 0".into());
+        assert_eq!(e.to_string(), "invalid configuration: rank must be > 0");
+        let e = Error::UnknownHandle(3);
+        assert!(e.to_string().contains("handle 3"));
+    }
+
+    #[test]
+    fn io_carries_source() {
+        use std::error::Error as _;
+        let e = Error::io(
+            "open /nope",
+            std::io::Error::new(std::io::ErrorKind::NotFound, "gone"),
+        );
+        assert!(e.to_string().contains("open /nope"));
+        assert!(e.source().is_some());
+    }
+
+    #[test]
+    fn ensure_or_returns_typed_variant() {
+        fn f(n: usize) -> Result<()> {
+            ensure_or!(n > 0, InvalidConfig, "n must be > 0, got {n}");
+            Ok(())
+        }
+        assert!(f(1).is_ok());
+        assert!(matches!(f(0), Err(Error::InvalidConfig(_))));
+    }
+}

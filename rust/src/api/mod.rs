@@ -1,0 +1,25 @@
+//! The typed public front-end: one way in for every executor, every
+//! backend, and multi-tensor serving.
+//!
+//! * [`Error`] / [`Result`] — the library-wide error surface. No public
+//!   `spmttkrp` signature exposes `anyhow`; misuse returns a typed
+//!   variant, never a panic.
+//! * [`ExecutorBuilder`] — fluent, up-front-validated construction of the
+//!   paper's engine and all three baselines ([`ExecutorKind`]), on either
+//!   backend ([`BackendKind`]), with an owned or shared
+//!   [`crate::exec::SmPool`]. Subsumes the former constructor zoo.
+//! * [`Session`] — a multi-tenant registry: `prepare()` many tensors once,
+//!   then replay `mttkrp`/`mttkrp_into`/`decompose` through
+//!   [`TensorHandle`]s on one persistent pool. Handles never rebuild
+//!   plans.
+//!
+//! The layer sits over `coordinator`/`baselines`/`cpd`/`exec` and is
+//! re-exported at the crate root and in [`crate::prelude`].
+
+pub mod builder;
+pub mod error;
+pub mod session;
+
+pub use builder::{BackendKind, ExecutorBuilder, ExecutorKind};
+pub use error::{Error, Result};
+pub use session::{Session, TensorHandle};

@@ -1,0 +1,329 @@
+//! `Session` — a multi-tenant registry of prepared executors over one
+//! persistent [`SmPool`].
+//!
+//! The paper's core economics: layout + partitioning are built **once per
+//! tensor** and replayed every call. A session makes that shape first-
+//! class for many tensors at once — `prepare()` builds the mode-specific
+//! layouts (or a baseline's format) into a handle-keyed registry, and
+//! `mttkrp`/`mttkrp_into`/`decompose` replay them concurrently on the one
+//! shared pool. Handles never rebuild plans: preparation cost is paid
+//! exactly once per tensor for the session's lifetime (DESIGN.md §6,
+//! invariant S1).
+//!
+//! Mode calls take `&self`, so a session can serve concurrent callers
+//! (e.g. behind an `Arc`); the pool serializes execution internally while
+//! every prepared layout stays resident.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::builder::{ExecutorBuilder, ExecutorKind};
+use super::error::{bail_with, ensure_or};
+use super::{Error, Result};
+use crate::baselines::MttkrpExecutor;
+use crate::coordinator::Engine;
+use crate::cpd::{als, CpdConfig, CpdResult};
+use crate::exec::SmPool;
+use crate::metrics::{ExecReport, ModeExecReport};
+use crate::tensor::{FactorSet, SparseTensorCOO};
+
+/// Process-wide counter stamping every [`Session`] with a distinct id, so
+/// a [`TensorHandle`] can prove which session issued it.
+static NEXT_SESSION_ID: AtomicU64 = AtomicU64::new(0);
+
+/// Opaque key for one prepared tensor in a [`Session`]. Handles are
+/// stamped with the issuing session's id: presenting a handle to any
+/// *other* session — even one whose registry happens to have an entry at
+/// the same index — returns [`Error::UnknownHandle`], never another
+/// tenant's results.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TensorHandle {
+    session: u64,
+    index: usize,
+}
+
+/// One prepared tensor: its data (kept for `decompose`'s fit evaluation;
+/// shared, not copied, when prepared via [`Session::prepare_shared`])
+/// plus the executor holding the replayable layout/plans.
+struct Entry {
+    tensor: Arc<SparseTensorCOO>,
+    prepared: Prepared,
+}
+
+enum Prepared {
+    /// The paper's engine — supports `mttkrp` *and* `decompose`.
+    Engine(Box<Engine>),
+    /// A baseline executor — `mttkrp` only.
+    Baseline(Box<dyn MttkrpExecutor>),
+}
+
+impl Prepared {
+    fn executor(&self) -> &dyn MttkrpExecutor {
+        match self {
+            Prepared::Engine(e) => e.as_ref(),
+            Prepared::Baseline(b) => b.as_ref(),
+        }
+    }
+}
+
+/// The multi-tenant front door: many prepared tensors, one pool.
+///
+/// ```no_run
+/// use spmttkrp::prelude::*;
+///
+/// # fn main() -> spmttkrp::Result<()> {
+/// let mut session = Session::new();
+/// let a = synth::DatasetProfile::uber().scaled(0.01).generate(1);
+/// let b = synth::DatasetProfile::nips().scaled(0.01).generate(2);
+/// let ha = session.prepare(&a, &ExecutorBuilder::new().rank(16).sm_count(8))?;
+/// let hb = session.prepare(&b, &ExecutorBuilder::new().rank(16).sm_count(8))?;
+/// // interleaved requests replay the prepared layouts on one pool
+/// let fa = FactorSet::random(&a.dims, 16, 7);
+/// let fb = FactorSet::random(&b.dims, 16, 8);
+/// let (out_a, _) = session.mttkrp(ha, &fa, 0)?;
+/// let (out_b, _) = session.mttkrp(hb, &fb, 1)?;
+/// let cpd = session.decompose(ha, &CpdConfig { rank: 16, ..Default::default() })?;
+/// # let _ = (out_a, out_b, cpd);
+/// # Ok(())
+/// # }
+/// ```
+pub struct Session {
+    id: u64,
+    pool: Arc<SmPool>,
+    entries: Vec<Entry>,
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Session::new()
+    }
+}
+
+impl Session {
+    /// Session on a fresh pool with the default worker count
+    /// (`SPMTTKRP_THREADS`, else available parallelism).
+    pub fn new() -> Session {
+        Session::on_pool(Arc::new(SmPool::with_default_threads()))
+    }
+
+    /// Session on an existing pool (shareable with executors built
+    /// elsewhere via [`ExecutorBuilder::pool`]).
+    pub fn on_pool(pool: Arc<SmPool>) -> Session {
+        Session {
+            id: NEXT_SESSION_ID.fetch_add(1, Ordering::Relaxed),
+            pool,
+            entries: Vec::new(),
+        }
+    }
+
+    /// The persistent pool every prepared executor runs on.
+    pub fn pool(&self) -> &Arc<SmPool> {
+        &self.pool
+    }
+
+    /// Number of prepared tensors.
+    pub fn n_prepared(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Build `builder`'s executor over `tensor` on the session pool and
+    /// register it. The layout/partitioning work happens here, once; every
+    /// later call through the returned handle replays it. The tensor is
+    /// copied into the registry (`decompose` needs it) — for large tensors
+    /// prefer [`Session::prepare_shared`], which shares instead of
+    /// cloning.
+    ///
+    /// A builder that names a *different* shared pool is rejected — the
+    /// session's invariant is one pool for all tenants.
+    pub fn prepare(
+        &mut self,
+        tensor: &SparseTensorCOO,
+        builder: &ExecutorBuilder,
+    ) -> Result<TensorHandle> {
+        self.prepare_shared(Arc::new(tensor.clone()), builder)
+    }
+
+    /// As [`Session::prepare`], but taking shared ownership of the tensor
+    /// — no copy is made, and the caller keeps (or drops) its `Arc`.
+    pub fn prepare_shared(
+        &mut self,
+        tensor: Arc<SparseTensorCOO>,
+        builder: &ExecutorBuilder,
+    ) -> Result<TensorHandle> {
+        if let Some(p) = builder.shared_pool() {
+            ensure_or!(
+                Arc::ptr_eq(p, &self.pool),
+                InvalidConfig,
+                "builder names a different shared pool; Session::prepare installs its own"
+            );
+        }
+        let on_pool = builder.clone().pool(Arc::clone(&self.pool));
+        let prepared = if on_pool.configured_kind() == ExecutorKind::Ours {
+            Prepared::Engine(Box::new(on_pool.build_engine(&tensor)?))
+        } else {
+            Prepared::Baseline(on_pool.build(&tensor)?)
+        };
+        self.entries.push(Entry { tensor, prepared });
+        Ok(TensorHandle {
+            session: self.id,
+            index: self.entries.len() - 1,
+        })
+    }
+
+    fn entry(&self, h: TensorHandle) -> Result<&Entry> {
+        if h.session != self.id {
+            return Err(Error::UnknownHandle(h.index));
+        }
+        self.entries.get(h.index).ok_or(Error::UnknownHandle(h.index))
+    }
+
+    /// The prepared executor behind `h` (trait-object view).
+    pub fn executor(&self, h: TensorHandle) -> Result<&dyn MttkrpExecutor> {
+        Ok(self.entry(h)?.prepared.executor())
+    }
+
+    /// The prepared engine behind `h`, when `h` was prepared with
+    /// [`super::ExecutorKind::Ours`] (format inspection, dense helpers).
+    pub fn engine(&self, h: TensorHandle) -> Result<&Engine> {
+        match &self.entry(h)?.prepared {
+            Prepared::Engine(e) => Ok(e.as_ref()),
+            Prepared::Baseline(b) => bail_with!(
+                InvalidConfig,
+                "handle was prepared as baseline '{}', not ExecutorKind::Ours",
+                b.name()
+            ),
+        }
+    }
+
+    /// The tensor `h` was prepared from.
+    pub fn tensor(&self, h: TensorHandle) -> Result<&SparseTensorCOO> {
+        Ok(self.entry(h)?.tensor.as_ref())
+    }
+
+    /// spMTTKRP along `mode`, replaying `h`'s prepared layout.
+    pub fn mttkrp(
+        &self,
+        h: TensorHandle,
+        factors: &FactorSet,
+        mode: usize,
+    ) -> Result<(Vec<f32>, ModeExecReport)> {
+        self.executor(h)?.execute_mode(factors, mode)
+    }
+
+    /// As [`Session::mttkrp`], reusing a caller-owned output buffer — the
+    /// replay path for serving loops.
+    pub fn mttkrp_into(
+        &self,
+        h: TensorHandle,
+        factors: &FactorSet,
+        mode: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<ModeExecReport> {
+        self.executor(h)?.execute_mode_into(factors, mode, out)
+    }
+
+    /// Full sweep over `h`'s modes (Alg. 1 barrier semantics).
+    pub fn mttkrp_all_modes(
+        &self,
+        h: TensorHandle,
+        factors: &FactorSet,
+    ) -> Result<(Vec<Vec<f32>>, ExecReport)> {
+        self.executor(h)?.execute_all_modes(factors)
+    }
+
+    /// CPD-ALS on `h`'s tensor through its prepared engine. `h` must have
+    /// been prepared with [`super::ExecutorKind::Ours`] (the baselines do
+    /// not provide the dense ALS pieces).
+    pub fn decompose(&self, h: TensorHandle, cfg: &CpdConfig) -> Result<CpdResult> {
+        let entry = self.entry(h)?;
+        match &entry.prepared {
+            Prepared::Engine(e) => als(e, &entry.tensor, cfg),
+            Prepared::Baseline(b) => bail_with!(
+                InvalidConfig,
+                "decompose requires ExecutorKind::Ours; handle was prepared as '{}'",
+                b.name()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::ExecutorKind;
+    use crate::tensor::synth::DatasetProfile;
+
+    fn tiny(seed: u64) -> SparseTensorCOO {
+        DatasetProfile::uber().scaled(0.0005).generate(seed)
+    }
+
+    #[test]
+    fn foreign_handles_are_a_typed_error() {
+        let mut a = Session::new();
+        let mut b = Session::new();
+        let t = tiny(1);
+        let ha = a.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4)).unwrap();
+        let h2 = a.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4)).unwrap();
+        let hb = b.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4)).unwrap();
+        // a's handles are never accepted by b — not the out-of-range one,
+        // and not the in-range one either (same index, wrong session):
+        // replaying another tenant's registry slot would be silent wrong
+        // output, so the session id stamped in the handle must gate it
+        assert!(matches!(b.executor(h2), Err(Error::UnknownHandle(_))));
+        assert!(matches!(b.executor(ha), Err(Error::UnknownHandle(_))));
+        let fs = FactorSet::random(&t.dims, 8, 3);
+        assert!(matches!(b.mttkrp(ha, &fs, 0), Err(Error::UnknownHandle(_))));
+        assert!(matches!(a.decompose(hb, &CpdConfig::default()), Err(Error::UnknownHandle(_))));
+        // while each session still honours its own handles
+        assert!(a.mttkrp(ha, &fs, 0).is_ok());
+        assert!(b.mttkrp(hb, &fs, 0).is_ok());
+    }
+
+    #[test]
+    fn prepare_shared_takes_ownership_without_cloning() {
+        let mut s = Session::new();
+        let t = Arc::new(tiny(7));
+        let h = s
+            .prepare_shared(Arc::clone(&t), &ExecutorBuilder::new().rank(8).sm_count(4))
+            .unwrap();
+        // the registry shares the caller's allocation rather than copying
+        assert!(std::ptr::eq(s.tensor(h).unwrap(), t.as_ref()));
+        let fs = FactorSet::random(&t.dims, 8, 2);
+        assert!(s.mttkrp(h, &fs, 0).is_ok());
+    }
+
+    #[test]
+    fn decompose_on_a_baseline_handle_is_rejected() {
+        let mut s = Session::new();
+        let t = tiny(2);
+        let h = s
+            .prepare(&t, &ExecutorBuilder::new().kind(ExecutorKind::Parti).rank(8).sm_count(4))
+            .unwrap();
+        let err = s.decompose(h, &CpdConfig::default()).unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)));
+        assert!(s.engine(h).is_err());
+        // but mttkrp works fine on the same handle
+        let fs = FactorSet::random(&t.dims, 8, 5);
+        assert!(s.mttkrp(h, &fs, 0).is_ok());
+    }
+
+    #[test]
+    fn prepare_rejects_a_foreign_pool() {
+        let mut s = Session::new();
+        let t = tiny(3);
+        let foreign = Arc::new(SmPool::new(1));
+        let err = s
+            .prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4).pool(foreign))
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)));
+    }
+
+    #[test]
+    fn all_prepared_executors_share_the_session_pool() {
+        let mut s = Session::new();
+        let t = tiny(4);
+        let h = s.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4)).unwrap();
+        assert!(Arc::ptr_eq(s.engine(h).unwrap().pool(), s.pool()));
+        assert_eq!(s.n_prepared(), 1);
+    }
+}

@@ -18,9 +18,9 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
-
 use super::MttkrpExecutor;
+use crate::api::error::ensure_or;
+use crate::api::Result;
 use crate::coordinator::shared::SharedRows;
 use crate::exec::{ModePlan, SmPool, UpdatePolicy, WorkspaceArena};
 use crate::format::blco::BlcoTensor;
@@ -49,12 +49,10 @@ pub struct BlcoExecutor {
 }
 
 impl BlcoExecutor {
-    pub fn new(tensor: &SparseTensorCOO, kappa: usize, threads: usize, rank: usize) -> Self {
-        Self::with_pool(tensor, kappa, rank, Arc::new(SmPool::new(threads.min(kappa))))
-    }
-
-    /// Executor on an existing (possibly shared) pool.
-    pub fn with_pool(
+    /// Executor on an existing (possibly shared) pool. The public way in
+    /// is [`crate::api::ExecutorBuilder`] with
+    /// [`crate::api::ExecutorKind::Blco`], which delegates here.
+    pub(crate) fn with_pool(
         tensor: &SparseTensorCOO,
         kappa: usize,
         rank: usize,
@@ -124,10 +122,34 @@ impl MttkrpExecutor for BlcoExecutor {
         factors: &FactorSet,
         mode: usize,
     ) -> Result<(Vec<f32>, ModeExecReport)> {
+        let mut out = Vec::new();
+        let rep = self.execute_mode_into(factors, mode, &mut out)?;
+        Ok((out, rep))
+    }
+
+    fn execute_mode_into(
+        &self,
+        factors: &FactorSet,
+        mode: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<ModeExecReport> {
         let rank = self.rank;
+        ensure_or!(
+            mode < self.n_modes(),
+            ShapeMismatch,
+            "mode {mode} out of range ({} modes)",
+            self.n_modes()
+        );
+        ensure_or!(
+            factors.rank() == rank,
+            ShapeMismatch,
+            "factor rank {} != executor rank {rank}",
+            factors.rank()
+        );
         let plan = &self.plans[mode];
-        let mut out = vec![0.0f32; plan.out_len()];
-        let shared = SharedRows::new(&mut out, rank);
+        out.clear();
+        out.resize(plan.out_len(), 0.0);
+        let shared = SharedRows::new(out.as_mut_slice(), rank);
         let run = self.pool.run_partitions(self.kappa, &|wk, z, tr| {
             self.arena.with(wk, |ws| {
                 let (lo, hi) = plan.partition(z);
@@ -171,15 +193,31 @@ impl MttkrpExecutor for BlcoExecutor {
                 Ok(())
             })
         })?;
-        Ok((out, run.into_report(mode, Imbalance::of(&self.chunk_loads()))))
+        Ok(run.into_report(mode, Imbalance::of(&self.chunk_loads())))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{ExecutorBuilder, ExecutorKind};
     use crate::tensor::synth::DatasetProfile;
     use crate::tensor::DenseTensor;
+
+    fn blco(
+        t: &SparseTensorCOO,
+        kappa: usize,
+        threads: usize,
+        rank: usize,
+    ) -> Box<dyn MttkrpExecutor> {
+        ExecutorBuilder::new()
+            .kind(ExecutorKind::Blco)
+            .sm_count(kappa)
+            .threads(threads)
+            .rank(rank)
+            .build(t)
+            .unwrap()
+    }
 
     #[test]
     fn matches_dense_oracle() {
@@ -196,7 +234,7 @@ mod tests {
         .unwrap()
         .collapse_duplicates();
         let fs = FactorSet::random(&t.dims, 8, 7);
-        let ex = BlcoExecutor::new(&t, 8, 2, 8);
+        let ex = blco(&t, 8, 2, 8);
         let dense = DenseTensor::from_coo(&t);
         for mode in 0..t.n_modes() {
             let (got, _) = ex.execute_mode(&fs, mode).unwrap();
@@ -211,7 +249,7 @@ mod tests {
     fn leading_mode_merges_more_updates_than_trailing() {
         let t = DatasetProfile::uber().scaled(0.005).generate(52);
         let fs = FactorSet::random(&t.dims, 8, 7);
-        let ex = BlcoExecutor::new(&t, 8, 1, 8);
+        let ex = blco(&t, 8, 1, 8);
         let (_, rep0) = ex.execute_mode(&fs, 0).unwrap();
         let (_, rep_last) = ex.execute_mode(&fs, 3).unwrap();
         // sorted order is lexicographic on mode 0 → long runs → fewer atomics
@@ -225,10 +263,11 @@ mod tests {
 
     #[test]
     fn single_copy_memory() {
+        // white-box check of the stored format the executor holds
         let t = DatasetProfile::uber().scaled(0.002).generate(53);
-        let ex = BlcoExecutor::new(&t, 8, 1, 8);
-        assert_eq!(ex.blco.nnz(), t.nnz());
+        let blco = BlcoTensor::build(&t);
+        assert_eq!(blco.nnz(), t.nnz());
         // one copy: 12 B per nnz + headers, far less than N copies × 20 B
-        assert!(ex.blco.stored_bytes() < (t.nnz() * 20 * 4) as u64 / 2);
+        assert!(blco.stored_bytes() < (t.nnz() * 20 * 4) as u64 / 2);
     }
 }

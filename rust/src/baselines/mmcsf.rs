@@ -20,9 +20,9 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
-
 use super::MttkrpExecutor;
+use crate::api::error::ensure_or;
+use crate::api::Result;
 use crate::coordinator::shared::SharedRows;
 use crate::exec::{ModePlan, SmPool, UpdatePolicy, WorkspaceArena};
 use crate::format::csf::CsfTree;
@@ -51,12 +51,10 @@ pub struct MmCsfExecutor {
 }
 
 impl MmCsfExecutor {
-    pub fn new(tensor: &SparseTensorCOO, kappa: usize, threads: usize, rank: usize) -> Self {
-        Self::with_pool(tensor, kappa, rank, Arc::new(SmPool::new(threads.min(kappa))))
-    }
-
-    /// Executor on an existing (possibly shared) pool.
-    pub fn with_pool(
+    /// Executor on an existing (possibly shared) pool. The public way in
+    /// is [`crate::api::ExecutorBuilder`] with
+    /// [`crate::api::ExecutorKind::MmCsf`], which delegates here.
+    pub(crate) fn with_pool(
         tensor: &SparseTensorCOO,
         kappa: usize,
         rank: usize,
@@ -183,11 +181,35 @@ impl MttkrpExecutor for MmCsfExecutor {
         factors: &FactorSet,
         mode: usize,
     ) -> Result<(Vec<f32>, ModeExecReport)> {
-        let tree = &self.trees[mode];
+        let mut out = Vec::new();
+        let rep = self.execute_mode_into(factors, mode, &mut out)?;
+        Ok((out, rep))
+    }
+
+    fn execute_mode_into(
+        &self,
+        factors: &FactorSet,
+        mode: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<ModeExecReport> {
         let rank = self.rank;
+        ensure_or!(
+            mode < self.n_modes(),
+            ShapeMismatch,
+            "mode {mode} out of range ({} modes)",
+            self.n_modes()
+        );
+        ensure_or!(
+            factors.rank() == rank,
+            ShapeMismatch,
+            "factor rank {} != executor rank {rank}",
+            factors.rank()
+        );
+        let tree = &self.trees[mode];
         let plan = &self.plans[mode];
-        let mut out = vec![0.0f32; plan.out_len()];
-        let shared = SharedRows::new(&mut out, rank);
+        out.clear();
+        out.resize(plan.out_len(), 0.0);
+        let shared = SharedRows::new(out.as_mut_slice(), rank);
         let run = self.pool.run_partitions(self.kappa, &|w, z, tr| {
             self.arena.with(w, |ws| {
                 let (lo, hi) = plan.partition(z);
@@ -205,18 +227,31 @@ impl MttkrpExecutor for MmCsfExecutor {
                 Ok(())
             })
         })?;
-        Ok((
-            out,
-            run.into_report(mode, Imbalance::of(&self.chunk_loads(mode))),
-        ))
+        Ok(run.into_report(mode, Imbalance::of(&self.chunk_loads(mode))))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{ExecutorBuilder, ExecutorKind};
     use crate::tensor::synth::DatasetProfile;
     use crate::tensor::DenseTensor;
+
+    fn mmcsf(
+        t: &SparseTensorCOO,
+        kappa: usize,
+        threads: usize,
+        rank: usize,
+    ) -> Box<dyn MttkrpExecutor> {
+        ExecutorBuilder::new()
+            .kind(ExecutorKind::MmCsf)
+            .sm_count(kappa)
+            .threads(threads)
+            .rank(rank)
+            .build(t)
+            .unwrap()
+    }
 
     #[test]
     fn matches_dense_oracle() {
@@ -233,7 +268,7 @@ mod tests {
         .unwrap()
         .collapse_duplicates();
         let fs = FactorSet::random(&t.dims, 8, 6);
-        let ex = MmCsfExecutor::new(&t, 8, 2, 8);
+        let ex = mmcsf(&t, 8, 2, 8);
         let dense = DenseTensor::from_coo(&t);
         for mode in 0..t.n_modes() {
             let (got, rep) = ex.execute_mode(&fs, mode).unwrap();
@@ -249,7 +284,7 @@ mod tests {
     fn fiber_reuse_reads_fewer_factor_bytes_than_per_nnz() {
         let t = DatasetProfile::uber().scaled(0.002).generate(42);
         let fs = FactorSet::random(&t.dims, 8, 6);
-        let ex = MmCsfExecutor::new(&t, 8, 1, 8);
+        let ex = mmcsf(&t, 8, 1, 8);
         let (_, rep) = ex.execute_mode(&fs, 0).unwrap();
         let per_nnz = t.nnz() as u64 * 3 * 8 * 4; // 3 input modes, rank 8
         assert!(

@@ -3,9 +3,10 @@
 //! Algorithmic re-implementations (not CUDA ports — DESIGN.md §5,
 //! substitution 3) of the three systems the paper compares against, all
 //! running on the same persistent SM-pool substrate (`exec::SmPool` — one
-//! pool instance can be shared by every executor via the `with_pool`
-//! constructors) and reporting the same [`TrafficCounters`], so "who wins
-//! and why" is an apples-to-apples question:
+//! pool instance can be shared by every executor via
+//! [`crate::api::ExecutorBuilder::pool`]) and reporting the same
+//! [`TrafficCounters`], so "who wins and why" is an apples-to-apples
+//! question:
 //!
 //! * [`parti::PartiExecutor`] — ParTI-GPU-like: HiCOO blocks, per-nonzero
 //!   global-atomic accumulation.
@@ -24,13 +25,17 @@ pub mod blco_exec;
 pub mod mmcsf;
 pub mod parti;
 
-use anyhow::Result;
+pub use blco_exec::BlcoExecutor;
+pub use mmcsf::MmCsfExecutor;
+pub use parti::PartiExecutor;
 
+use crate::api::Result;
 use crate::coordinator::Engine;
 use crate::metrics::{ExecReport, ModeExecReport};
 use crate::tensor::FactorSet;
 
-/// Uniform interface over "ours" and every baseline.
+/// Uniform interface over "ours" and every baseline. Construct
+/// implementations through [`crate::api::ExecutorBuilder`].
 pub trait MttkrpExecutor {
     fn name(&self) -> &'static str;
 
@@ -43,17 +48,45 @@ pub trait MttkrpExecutor {
 
     fn n_modes(&self) -> usize;
 
+    /// As [`MttkrpExecutor::execute_mode`], but reusing a caller-owned
+    /// output buffer (resized and zeroed by the callee) — the replay path
+    /// for ALS loops and repeated-measurement benches, uniform over trait
+    /// objects. The default delegates to `execute_mode` and moves the
+    /// result; all in-tree executors override it with genuine buffer
+    /// reuse (no per-call output allocation).
+    fn execute_mode_into(
+        &self,
+        factors: &FactorSet,
+        mode: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<ModeExecReport> {
+        let (o, rep) = self.execute_mode(factors, mode)?;
+        *out = o;
+        Ok(rep)
+    }
+
     /// Total execution time across all modes (the paper's Fig. 3 metric:
     /// "execute mode by mode, sum the execution times").
     fn execute_all_modes(&self, factors: &FactorSet) -> Result<(Vec<Vec<f32>>, ExecReport)> {
-        let mut outs = Vec::with_capacity(self.n_modes());
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        let report = self.execute_all_modes_into(factors, &mut outs)?;
+        Ok((outs, report))
+    }
+
+    /// Full sweep reusing caller-owned per-mode buffers (resized on first
+    /// use, replayed thereafter) — what the Fig. 3 timing loop measures,
+    /// so repetitions time the kernels rather than output allocation.
+    fn execute_all_modes_into(
+        &self,
+        factors: &FactorSet,
+        outs: &mut Vec<Vec<f32>>,
+    ) -> Result<ExecReport> {
+        outs.resize(self.n_modes(), Vec::new());
         let mut modes = Vec::with_capacity(self.n_modes());
-        for d in 0..self.n_modes() {
-            let (o, r) = self.execute_mode(factors, d)?;
-            outs.push(o);
-            modes.push(r);
+        for (d, out) in outs.iter_mut().enumerate() {
+            modes.push(self.execute_mode_into(factors, d, out)?);
         }
-        Ok((outs, ExecReport { modes }))
+        Ok(ExecReport { modes })
     }
 }
 
@@ -68,6 +101,15 @@ impl MttkrpExecutor for Engine {
         mode: usize,
     ) -> Result<(Vec<f32>, ModeExecReport)> {
         self.mttkrp_mode(factors, mode)
+    }
+
+    fn execute_mode_into(
+        &self,
+        factors: &FactorSet,
+        mode: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<ModeExecReport> {
+        self.mttkrp_mode_into(factors, mode, out)
     }
 
     fn n_modes(&self) -> usize {

@@ -15,9 +15,9 @@
 
 use std::sync::Arc;
 
-use anyhow::Result;
-
 use super::MttkrpExecutor;
+use crate::api::error::ensure_or;
+use crate::api::Result;
 use crate::coordinator::shared::SharedRows;
 use crate::exec::{ModePlan, SmPool, UpdatePolicy, WorkspaceArena};
 use crate::format::hicoo::HicooTensor;
@@ -39,12 +39,10 @@ pub struct PartiExecutor {
 }
 
 impl PartiExecutor {
-    pub fn new(tensor: &SparseTensorCOO, kappa: usize, threads: usize, rank: usize) -> Self {
-        Self::with_pool(tensor, kappa, rank, Arc::new(SmPool::new(threads.min(kappa))))
-    }
-
-    /// Executor on an existing (possibly shared) pool.
-    pub fn with_pool(
+    /// Executor on an existing (possibly shared) pool. The public way in
+    /// is [`crate::api::ExecutorBuilder`] with
+    /// [`crate::api::ExecutorKind::Parti`], which delegates here.
+    pub(crate) fn with_pool(
         tensor: &SparseTensorCOO,
         kappa: usize,
         rank: usize,
@@ -109,11 +107,30 @@ impl MttkrpExecutor for PartiExecutor {
         factors: &FactorSet,
         mode: usize,
     ) -> Result<(Vec<f32>, ModeExecReport)> {
+        let mut out = Vec::new();
+        let rep = self.execute_mode_into(factors, mode, &mut out)?;
+        Ok((out, rep))
+    }
+
+    fn execute_mode_into(
+        &self,
+        factors: &FactorSet,
+        mode: usize,
+        out: &mut Vec<f32>,
+    ) -> Result<ModeExecReport> {
         let rank = self.rank;
         let n = self.n_modes();
+        ensure_or!(mode < n, ShapeMismatch, "mode {mode} out of range ({n} modes)");
+        ensure_or!(
+            factors.rank() == rank,
+            ShapeMismatch,
+            "factor rank {} != executor rank {rank}",
+            factors.rank()
+        );
         let plan = &self.plans[mode];
-        let mut out = vec![0.0f32; plan.out_len()];
-        let shared = SharedRows::new(&mut out, rank);
+        out.clear();
+        out.resize(plan.out_len(), 0.0);
+        let shared = SharedRows::new(out.as_mut_slice(), rank);
         let run = self.pool.run_partitions(self.kappa, &|wk, z, tr| {
             self.arena.with(wk, |contrib| {
                 for &b in &self.chunks[z] {
@@ -139,15 +156,31 @@ impl MttkrpExecutor for PartiExecutor {
                 Ok(())
             })
         })?;
-        Ok((out, run.into_report(mode, Imbalance::of(&self.chunk_loads()))))
+        Ok(run.into_report(mode, Imbalance::of(&self.chunk_loads())))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::{ExecutorBuilder, ExecutorKind};
     use crate::tensor::synth::DatasetProfile;
     use crate::tensor::DenseTensor;
+
+    fn parti(
+        t: &SparseTensorCOO,
+        kappa: usize,
+        threads: usize,
+        rank: usize,
+    ) -> Box<dyn MttkrpExecutor> {
+        ExecutorBuilder::new()
+            .kind(ExecutorKind::Parti)
+            .sm_count(kappa)
+            .threads(threads)
+            .rank(rank)
+            .build(t)
+            .unwrap()
+    }
 
     #[test]
     fn matches_dense_oracle() {
@@ -164,7 +197,7 @@ mod tests {
         .unwrap()
         .collapse_duplicates();
         let fs = FactorSet::random(&t.dims, 8, 5);
-        let ex = PartiExecutor::new(&t, 8, 2, 8);
+        let ex = parti(&t, 8, 2, 8);
         let dense = DenseTensor::from_coo(&t);
         for mode in 0..t.n_modes() {
             let (got, rep) = ex.execute_mode(&fs, mode).unwrap();
@@ -181,7 +214,7 @@ mod tests {
     fn per_nnz_intermediate_traffic() {
         let t = DatasetProfile::uber().scaled(0.001).generate(32);
         let fs = FactorSet::random(&t.dims, 8, 5);
-        let ex = PartiExecutor::new(&t, 8, 1, 8);
+        let ex = parti(&t, 8, 1, 8);
         let (_, rep) = ex.execute_mode(&fs, 0).unwrap();
         assert_eq!(
             rep.traffic.intermediate_bytes,

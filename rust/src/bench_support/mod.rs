@@ -8,10 +8,9 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::baselines::{
-    blco_exec::BlcoExecutor, mmcsf::MmCsfExecutor, parti::PartiExecutor, MttkrpExecutor,
-};
-use crate::coordinator::{Engine, EngineConfig};
+use crate::api::{ExecutorBuilder, ExecutorKind};
+use crate::baselines::MttkrpExecutor;
+use crate::coordinator::Engine;
 use crate::exec::SmPool;
 use crate::partition::{LoadBalance, VertexAssign};
 use crate::tensor::synth::DatasetProfile;
@@ -51,22 +50,29 @@ pub fn time<F: FnMut()>(reps: usize, mut f: F) -> Summary {
 /// Measure an executor's **simulated SM-parallel** total time (the Fig. 3
 /// metric — see `metrics::makespan`).
 ///
-/// One warmup run, then `reps` measured runs. Per mode, the per-partition
-/// costs are reduced with an element-wise **min across reps** before the
-/// makespan: measurement noise (page faults, timer interrupts) is strictly
-/// additive on a partition's serial time, so the min is the faithful
-/// estimate of what that SM's work costs. The summary's spread is computed
-/// over the per-rep makespans for reference.
+/// One warmup run, then `reps` measured runs. The warmup allocates the
+/// per-mode output buffers once; every measured rep replays them through
+/// `execute_mode_into`, so the timing covers the kernel replay path —
+/// layout walk, gather, compute, update — not per-rep output allocation,
+/// for the baselines exactly as for the engine.
+///
+/// Per mode, the per-partition costs are reduced with an element-wise
+/// **min across reps** before the makespan: measurement noise (page
+/// faults, timer interrupts) is strictly additive on a partition's serial
+/// time, so the min is the faithful estimate of what that SM's work
+/// costs. The summary's spread is computed over the per-rep makespans for
+/// reference.
 pub fn time_sim<E: MttkrpExecutor + ?Sized>(
     reps: usize,
     ex: &E,
     factors: &FactorSet,
 ) -> Summary {
-    ex.execute_all_modes(factors).unwrap(); // warmup
+    let mut outs: Vec<Vec<f32>> = Vec::new();
+    ex.execute_all_modes_into(factors, &mut outs).unwrap(); // warmup + alloc
     let mut per_rep = Vec::with_capacity(reps);
     let mut min_costs: Vec<Vec<std::time::Duration>> = Vec::new();
     for rep_i in 0..reps {
-        let (_, rep) = ex.execute_all_modes(factors).unwrap();
+        let rep = ex.execute_all_modes_into(factors, &mut outs).unwrap();
         per_rep.push(rep.total_sim().as_secs_f64());
         for (d, m) in rep.modes.iter().enumerate() {
             if rep_i == 0 {
@@ -117,8 +123,17 @@ impl Workload {
     }
 }
 
-/// Engine with the paper's default configuration over the native backend
+/// Builder preset for the paper's configuration over the native backend
 /// (benches compare algorithms, not PJRT dispatch — see baselines::).
+pub fn paper_builder(rank: usize, lb: LoadBalance) -> ExecutorBuilder {
+    ExecutorBuilder::new()
+        .sm_count(82)
+        .rank(rank)
+        .load_balance(lb)
+        .vertex_assign(VertexAssign::Cyclic)
+}
+
+/// Engine with the paper's default configuration on an owned pool.
 pub fn paper_engine(tensor: &SparseTensorCOO, rank: usize, lb: LoadBalance) -> Engine {
     paper_engine_on_pool(tensor, rank, lb, Arc::new(SmPool::with_default_threads()))
 }
@@ -131,39 +146,27 @@ pub fn paper_engine_on_pool(
     lb: LoadBalance,
     pool: Arc<SmPool>,
 ) -> Engine {
-    Engine::native_on_pool(
-        tensor,
-        EngineConfig {
-            sm_count: 82,
-            rank,
-            lb,
-            assign: VertexAssign::Cyclic,
-            ..Default::default()
-        },
-        pool,
-    )
-    .expect("engine build")
+    paper_builder(rank, lb)
+        .pool(pool)
+        .build_engine(tensor)
+        .expect("engine build")
 }
 
-/// All four executors for a Fig. 3 row, sharing one persistent SM pool —
-/// the "same substrate" comparison is structural, and no executor pays
-/// per-call thread spawns.
-pub fn all_executors<'t>(
-    tensor: &'t SparseTensorCOO,
-    rank: usize,
-) -> Vec<Box<dyn MttkrpExecutor + 't>> {
+/// All four executors for a Fig. 3 row (ours, blco, mm-csf, parti),
+/// sharing one persistent SM pool — the "same substrate" comparison is
+/// structural, and no executor pays per-call thread spawns.
+pub fn all_executors(tensor: &SparseTensorCOO, rank: usize) -> Vec<Box<dyn MttkrpExecutor>> {
     let pool = Arc::new(SmPool::with_default_threads());
-    vec![
-        Box::new(paper_engine_on_pool(
-            tensor,
-            rank,
-            LoadBalance::Adaptive,
-            Arc::clone(&pool),
-        )),
-        Box::new(BlcoExecutor::with_pool(tensor, 82, rank, Arc::clone(&pool))),
-        Box::new(MmCsfExecutor::with_pool(tensor, 82, rank, Arc::clone(&pool))),
-        Box::new(PartiExecutor::with_pool(tensor, 82, rank, pool)),
-    ]
+    ExecutorKind::all()
+        .into_iter()
+        .map(|kind| {
+            paper_builder(rank, LoadBalance::Adaptive)
+                .kind(kind)
+                .pool(Arc::clone(&pool))
+                .build(tensor)
+                .expect("executor build")
+        })
+        .collect()
 }
 
 /// Print an aligned table: header row + rows of cells.

@@ -32,13 +32,13 @@ pub mod shared;
 
 use std::sync::Arc;
 
-use anyhow::{ensure, Context, Result};
-
+use crate::api::error::ensure_or;
+use crate::api::Result;
 use crate::exec::{ModePlan, SmPool, WorkspaceArena};
 use crate::format::mode_specific::ModeSpecificFormat;
 use crate::metrics::{ExecReport, ModeExecReport, TrafficCounters};
 use crate::partition::{LoadBalance, VertexAssign};
-use crate::runtime::{Backend, NativeBackend, PjrtBackend};
+use crate::runtime::Backend;
 use crate::tensor::factor::Factor;
 use crate::tensor::{FactorSet, SparseTensorCOO};
 use crate::util::stats::Imbalance;
@@ -54,7 +54,8 @@ pub struct EngineConfig {
     pub sm_count: usize,
     /// OS threads draining partitions when the engine creates its own pool
     /// (defaults to `SPMTTKRP_THREADS`, else available parallelism).
-    /// Ignored by [`Engine::with_pool`], which adopts the shared pool's
+    /// Ignored when a shared pool is supplied
+    /// ([`crate::api::ExecutorBuilder::pool`]), which brings its own
     /// worker count.
     pub threads: usize,
     /// Factor-matrix rank (paper: 32).
@@ -129,29 +130,29 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Engine with its own worker pool of `config.threads` workers
-    /// (capped at `κ` — more workers than partitions can never get work).
-    pub fn new(
-        tensor: &SparseTensorCOO,
-        backend: Box<dyn Backend>,
-        config: EngineConfig,
-    ) -> Result<Engine> {
-        let pool = Arc::new(SmPool::new(config.threads.min(config.sm_count)));
-        Engine::with_pool(tensor, backend, config, pool)
-    }
-
     /// Engine on an existing (possibly shared) pool — the persistent-SM
     /// path: one pool can serve many engines/baselines and every ALS
     /// iteration without respawning workers.
-    pub fn with_pool(
+    ///
+    /// This is the single construction path; the public way in is
+    /// [`crate::api::ExecutorBuilder`], which validates the configuration
+    /// up front and delegates here.
+    pub(crate) fn from_parts(
         tensor: &SparseTensorCOO,
         backend: Box<dyn Backend>,
         config: EngineConfig,
         pool: Arc<SmPool>,
     ) -> Result<Engine> {
-        ensure!(config.sm_count > 0 && config.rank > 0);
-        ensure!(
+        ensure_or!(
+            config.sm_count > 0 && config.rank > 0,
+            InvalidConfig,
+            "sm_count and rank must be > 0 (got {} / {})",
+            config.sm_count,
+            config.rank
+        );
+        ensure_or!(
             backend.block_p() % 2 == 0,
+            InvalidConfig,
             "block_p must be even, got {}",
             backend.block_p()
         );
@@ -200,38 +201,6 @@ impl Engine {
         })
     }
 
-    /// Engine over the pure-Rust backend (no artifacts needed).
-    pub fn with_native_backend(
-        tensor: &SparseTensorCOO,
-        config: EngineConfig,
-    ) -> Result<Engine> {
-        Engine::new(tensor, Box::new(NativeBackend::new(256)), config)
-    }
-
-    /// Native-backend engine on an existing pool.
-    pub fn native_on_pool(
-        tensor: &SparseTensorCOO,
-        config: EngineConfig,
-        pool: Arc<SmPool>,
-    ) -> Result<Engine> {
-        Engine::with_pool(tensor, Box::new(NativeBackend::new(256)), config, pool)
-    }
-
-    /// Engine over the PJRT backend (artifacts must be built).
-    pub fn with_pjrt_backend(
-        tensor: &SparseTensorCOO,
-        config: EngineConfig,
-    ) -> Result<Engine> {
-        let be = PjrtBackend::load_default()?;
-        ensure!(
-            be.manifest().has_rank(config.rank),
-            "no artifacts for rank {} (have {:?})",
-            config.rank,
-            be.manifest().ranks
-        );
-        Engine::new(tensor, Box::new(be), config)
-    }
-
     pub fn backend(&self) -> &dyn Backend {
         self.backend.as_ref()
     }
@@ -276,9 +245,15 @@ impl Engine {
         mode: usize,
         out: &mut Vec<f32>,
     ) -> Result<ModeExecReport> {
-        ensure!(mode < self.n_modes(), "mode {mode} out of range");
-        ensure!(
+        ensure_or!(
+            mode < self.n_modes(),
+            ShapeMismatch,
+            "mode {mode} out of range ({} modes)",
+            self.n_modes()
+        );
+        ensure_or!(
             factors.rank() == self.config.rank,
+            ShapeMismatch,
             "factor rank {} != engine rank {}",
             factors.rank(),
             self.config.rank
@@ -529,7 +504,13 @@ impl Engine {
         let n = grams.len();
         let mut stacked = Vec::with_capacity(n * rank * rank);
         for g in grams {
-            ensure!(g.len() == rank * rank);
+            ensure_or!(
+                g.len() == rank * rank,
+                ShapeMismatch,
+                "hadamard: gram len {} != R*R = {}",
+                g.len(),
+                rank * rank
+            );
             stacked.extend_from_slice(g);
         }
         let mut out = vec![0.0f32; rank * rank];
@@ -541,7 +522,13 @@ impl Engine {
     /// ALS update: `Y = M @ inv(V)` streamed block-wise; `m` is `(rows, R)`.
     pub fn solve(&self, v: &[f32], m: &[f32], rows: usize) -> Result<Vec<f32>> {
         let rank = self.config.rank;
-        ensure!(m.len() == rows * rank);
+        ensure_or!(
+            m.len() == rows * rank,
+            ShapeMismatch,
+            "solve: m len {} != rows*R = {}",
+            m.len(),
+            rows * rank
+        );
         let p = self.backend.block_p();
         let mut out = vec![0.0f32; rows * rank];
         let mut blk_in = vec![0.0f32; p * rank];
@@ -561,7 +548,13 @@ impl Engine {
 
     /// `sum(a * b)` over equal-length `(rows, R)` buffers, streamed.
     pub fn inner(&self, a: &[f32], b: &[f32]) -> Result<f64> {
-        ensure!(a.len() == b.len());
+        ensure_or!(
+            a.len() == b.len(),
+            ShapeMismatch,
+            "inner: {} vs {}",
+            a.len(),
+            b.len()
+        );
         let rank = self.config.rank;
         let p = self.backend.block_p();
         let chunk = p * rank;
@@ -590,10 +583,7 @@ impl Engine {
         for g in grams {
             stacked.extend_from_slice(g);
         }
-        Ok(self
-            .backend
-            .weighted_gram(rank, n, &stacked, weights)
-            .context("weighted_gram")? as f64)
+        Ok(self.backend.weighted_gram(rank, n, &stacked, weights)? as f64)
     }
 }
 

@@ -10,8 +10,8 @@
 //! against). All dense pieces run through the engine's backend so the PJRT
 //! path exercises the complete iteration.
 
-use anyhow::{ensure, Result};
-
+use crate::api::error::ensure_or;
+use crate::api::Result;
 use crate::coordinator::Engine;
 use crate::metrics::ExecReport;
 use crate::tensor::{FactorSet, SparseTensorCOO};
@@ -61,12 +61,18 @@ impl CpdResult {
 /// Run CPD-ALS on `tensor` using `engine` (which must have been built over
 /// the same tensor with `rank == cfg.rank`).
 pub fn als(engine: &Engine, tensor: &SparseTensorCOO, cfg: &CpdConfig) -> Result<CpdResult> {
-    ensure!(engine.config.rank == cfg.rank, "engine/config rank mismatch");
+    ensure_or!(
+        engine.config.rank == cfg.rank,
+        InvalidConfig,
+        "engine rank {} != CPD rank {}",
+        engine.config.rank,
+        cfg.rank
+    );
     let n = tensor.n_modes();
     let rank = cfg.rank;
     let mut factors = FactorSet::random(&tensor.dims, rank, cfg.seed);
     let norm_x_sq = tensor.norm_sq();
-    ensure!(norm_x_sq > 0.0, "zero tensor");
+    ensure_or!(norm_x_sq > 0.0, InvalidData, "zero tensor");
 
     // Cached Gram matrices, refreshed after each factor update.
     let mut grams: Vec<Vec<f32>> = factors
@@ -141,17 +147,17 @@ pub fn als(engine: &Engine, tensor: &SparseTensorCOO, cfg: &CpdConfig) -> Result
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::EngineConfig;
+    use crate::api::ExecutorBuilder;
     use crate::tensor::synth::DatasetProfile;
     use crate::util::rng::Rng;
 
-    fn small_cfg(rank: usize) -> EngineConfig {
-        EngineConfig {
-            sm_count: 8,
-            threads: 2,
-            rank,
-            ..Default::default()
-        }
+    fn small_engine(t: &SparseTensorCOO, rank: usize) -> Engine {
+        ExecutorBuilder::new()
+            .sm_count(8)
+            .threads(2)
+            .rank(rank)
+            .build_engine(t)
+            .unwrap()
     }
 
     /// A genuinely low-rank tensor, stored densely as "sparse" (every cell
@@ -191,7 +197,7 @@ mod tests {
     #[test]
     fn als_fits_low_rank_tensor() {
         let t = low_rank_tensor(&[16, 14, 12], 4, 7);
-        let engine = Engine::with_native_backend(&t, small_cfg(16)).unwrap();
+        let engine = small_engine(&t, 16);
         let cfg = CpdConfig {
             rank: 16,
             max_iters: 15,
@@ -212,7 +218,7 @@ mod tests {
     #[test]
     fn als_fit_is_monotonic_up_to_noise() {
         let t = DatasetProfile::uber().scaled(0.002).generate(5);
-        let engine = Engine::with_native_backend(&t, small_cfg(16)).unwrap();
+        let engine = small_engine(&t, 16);
         let cfg = CpdConfig {
             rank: 16,
             max_iters: 8,
@@ -229,11 +235,14 @@ mod tests {
     #[test]
     fn als_rejects_rank_mismatch() {
         let t = DatasetProfile::uber().scaled(0.001).generate(5);
-        let engine = Engine::with_native_backend(&t, small_cfg(16)).unwrap();
+        let engine = small_engine(&t, 16);
         let cfg = CpdConfig {
             rank: 32,
             ..Default::default()
         };
-        assert!(als(&engine, &t, &cfg).is_err());
+        assert!(matches!(
+            als(&engine, &t, &cfg),
+            Err(crate::api::Error::InvalidConfig(_))
+        ));
     }
 }

@@ -14,8 +14,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-
+use crate::api::{Error, Result};
 use crate::metrics::TrafficCounters;
 use crate::util::stats::Imbalance;
 
@@ -145,7 +144,7 @@ impl SmPool {
         struct WorkerOut {
             traffic: TrafficCounters,
             costs: Vec<(usize, Duration, u64)>,
-            err: Option<anyhow::Error>,
+            err: Option<Error>,
         }
         let next = AtomicUsize::new(0);
         let slots: Vec<Mutex<WorkerOut>> =
@@ -337,7 +336,7 @@ mod tests {
         let pool = SmPool::new(2);
         let err = pool.run_partitions(5, &|_w, z, _tr| {
             if z == 3 {
-                anyhow::bail!("partition 3 exploded")
+                return Err(Error::Numeric("partition 3 exploded".into()));
             }
             Ok(())
         });

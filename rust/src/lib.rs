@@ -15,22 +15,37 @@
 //! * **runtime** — a PJRT CPU client that loads the HLO artifacts once and
 //!   executes them from the hot path. Python never runs at request time.
 //!
+//! The public way in is the typed [`api`] layer: [`ExecutorBuilder`]
+//! constructs any executor (validated up front, typed [`Error`]s, never a
+//! panic), and [`Session`] holds many prepared tensors on one persistent
+//! SM pool, replaying their layouts across calls — the paper's
+//! build-once/replay-forever economics as an API shape.
+//!
 //! ## Quick start
 //!
 //! ```no_run
 //! use spmttkrp::prelude::*;
 //!
+//! # fn main() -> spmttkrp::Result<()> {
 //! let tensor = synth::DatasetProfile::uber().scaled(0.05).generate(42);
-//! let cfg = EngineConfig { sm_count: 8, rank: 16, ..Default::default() };
-//! let engine = Engine::with_native_backend(&tensor, cfg).unwrap();
+//! let mut session = Session::new();
+//! let h = session.prepare(&tensor, &ExecutorBuilder::new().rank(16).sm_count(8))?;
 //! let factors = FactorSet::random(&tensor.dims, 16, 7);
-//! let out = engine.mttkrp_all_modes(&factors).unwrap();
-//! assert_eq!(out.len(), tensor.n_modes());
+//! for mode in 0..tensor.n_modes() {
+//!     let (out, report) = session.mttkrp(h, &factors, mode)?;
+//!     assert_eq!(out.len(), tensor.dims[mode] as usize * 16);
+//!     println!("mode {mode}: {} global atomics", report.traffic.global_atomics);
+//! }
+//! let cpd = session.decompose(h, &CpdConfig { rank: 16, max_iters: 5, ..Default::default() })?;
+//! println!("fit after {} iters: {:.4}", cpd.iterations, cpd.final_fit());
+//! # Ok(())
+//! # }
 //! ```
 //!
 //! See `examples/` for the figure-reproduction drivers and `DESIGN.md` for
 //! the experiment index.
 
+pub mod api;
 pub mod baselines;
 pub mod bench_support;
 pub mod coordinator;
@@ -44,13 +59,24 @@ pub mod runtime;
 pub mod tensor;
 pub mod util;
 
+pub use api::{BackendKind, Error, ExecutorBuilder, ExecutorKind, Result, Session, TensorHandle};
+
 /// Most-used types, re-exported for `use spmttkrp::prelude::*`.
+///
+/// Glob-importing this is enough to compile the crate-level quick start:
+/// the API front-end ([`Session`], [`ExecutorBuilder`], [`Error`]), the
+/// executor trait, the engine and CPD types, and the tensor substrate.
 pub mod prelude {
+    pub use crate::api::{
+        BackendKind, Error, ExecutorBuilder, ExecutorKind, Result, Session, TensorHandle,
+    };
+    pub use crate::baselines::MttkrpExecutor;
     pub use crate::coordinator::{Engine, EngineConfig, UpdatePolicy};
     pub use crate::cpd::{als, CpdConfig, CpdResult};
     pub use crate::exec::SmPool;
     pub use crate::format::{memory::MemoryReport, ModeSpecificFormat};
-    pub use crate::partition::{LoadBalance, ModePartitioning};
+    pub use crate::metrics::{ExecReport, ModeExecReport, TrafficCounters};
+    pub use crate::partition::{LoadBalance, ModePartitioning, VertexAssign};
     pub use crate::runtime::{Backend, NativeBackend, PjrtBackend};
     pub use crate::tensor::{synth, FactorSet, SparseTensorCOO};
 }

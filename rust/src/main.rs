@@ -16,10 +16,11 @@ use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 
-use spmttkrp::coordinator::{Engine, EngineConfig};
+use spmttkrp::api::{BackendKind, ExecutorBuilder};
+use spmttkrp::coordinator::Engine;
 use spmttkrp::cpd::{als, CpdConfig};
 use spmttkrp::format::memory::MemoryReport;
-use spmttkrp::partition::{LoadBalance, VertexAssign};
+use spmttkrp::partition::LoadBalance;
 use spmttkrp::runtime::PjrtBackend;
 use spmttkrp::tensor::synth::DatasetProfile;
 use spmttkrp::tensor::{io, FactorSet, SparseTensorCOO};
@@ -82,7 +83,7 @@ impl Args {
 
 fn dataset(args: &Args) -> Result<SparseTensorCOO> {
     if let Some(path) = args.str_opt("tns") {
-        return io::read_tns(&PathBuf::from(path), None);
+        return Ok(io::read_tns(&PathBuf::from(path), None)?);
     }
     let name = args
         .str_opt("dataset")
@@ -104,22 +105,21 @@ fn lb_of(s: &str) -> Result<LoadBalance> {
 }
 
 fn engine_of(args: &Args, tensor: &SparseTensorCOO) -> Result<Engine> {
-    let cfg = EngineConfig {
-        sm_count: args.get("kappa", 82)?,
-        // --threads overrides SPMTTKRP_THREADS overrides available cores
-        threads: args.get("threads", spmttkrp::exec::default_threads())?,
-        rank: args.get("rank", 32)?,
-        lb: lb_of(args.str_opt("lb").unwrap_or("adaptive"))?,
-        assign: VertexAssign::Cyclic,
-        use_seg_kernel: args.get("seg", true)?,
-        lock_shards: 64,
-        fused: args.get("fused", true)?,
-    };
-    match args.str_opt("backend").unwrap_or("native") {
-        "native" => Engine::with_native_backend(tensor, cfg),
-        "pjrt" => Engine::with_pjrt_backend(tensor, cfg),
+    let backend = match args.str_opt("backend").unwrap_or("native") {
+        "native" => BackendKind::Native,
+        "pjrt" => BackendKind::Pjrt,
         other => bail!("bad --backend '{other}'"),
-    }
+    };
+    let builder = ExecutorBuilder::new()
+        .sm_count(args.get("kappa", 82)?)
+        // --threads overrides SPMTTKRP_THREADS overrides available cores
+        .threads(args.get("threads", spmttkrp::exec::default_threads())?)
+        .rank(args.get("rank", 32)?)
+        .load_balance(lb_of(args.str_opt("lb").unwrap_or("adaptive"))?)
+        .seg_kernel(args.get("seg", true)?)
+        .fused(args.get("fused", true)?)
+        .backend(backend);
+    Ok(builder.build_engine(tensor)?)
 }
 
 fn cmd_gen(args: &Args) -> Result<()> {
@@ -161,14 +161,10 @@ fn cmd_info(args: &Args) -> Result<()> {
         t.density(),
         t.bits_per_nnz(32)
     );
-    let engine = Engine::with_native_backend(
-        &t,
-        EngineConfig {
-            sm_count: kappa,
-            rank,
-            ..Default::default()
-        },
-    )?;
+    let engine = ExecutorBuilder::new()
+        .sm_count(kappa)
+        .rank(rank)
+        .build_engine(&t)?;
     for (d, copy) in engine.format.copies.iter().enumerate() {
         let st = spmttkrp::partition::stats::evaluate(&copy.partitioning, 0);
         println!(

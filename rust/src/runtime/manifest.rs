@@ -5,8 +5,8 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
+use crate::api::error::bail_with;
+use crate::api::{Error, Result};
 use crate::util::json::Json;
 
 /// Shape+dtype of one input or output of an artifact.
@@ -42,16 +42,21 @@ pub struct Manifest {
     pub entries: BTreeMap<String, ManifestEntry>,
 }
 
+/// A `Parse` error naming the missing/malformed manifest field.
+fn field_err(field: &str) -> Error {
+    Error::Parse(format!("manifest.json: missing or malformed `{field}`"))
+}
+
 fn parse_spec(v: &Json) -> Result<TensorSpec> {
     Ok(TensorSpec {
         shape: v
             .get("shape")
             .and_then(|s| s.as_usize_vec())
-            .context("spec.shape")?,
+            .ok_or_else(|| field_err("spec.shape"))?,
         dtype: v
             .get("dtype")
             .and_then(|s| s.as_str())
-            .context("spec.dtype")?
+            .ok_or_else(|| field_err("spec.dtype"))?
             .to_string(),
     })
 }
@@ -60,46 +65,50 @@ impl Manifest {
     /// Load `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path).with_context(|| {
-            format!(
-                "read {} — run `make artifacts` to build the AOT kernels",
-                path.display()
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::io(
+                format!(
+                    "read {} — run `make artifacts` to build the AOT kernels",
+                    path.display()
+                ),
+                e,
             )
         })?;
-        let root = Json::parse(&text).context("parse manifest.json")?;
+        let root = Json::parse(&text)
+            .map_err(|e| Error::Parse(format!("parse manifest.json: {e}")))?;
         let block_p = root
             .get("block_p")
             .and_then(|v| v.as_usize())
-            .context("manifest.block_p")?;
+            .ok_or_else(|| field_err("block_p"))?;
         let ranks = root
             .get("ranks")
             .and_then(|v| v.as_usize_vec())
-            .context("manifest.ranks")?;
+            .ok_or_else(|| field_err("ranks"))?;
         let mut entries = BTreeMap::new();
         for (name, e) in root
             .get("entries")
             .and_then(|v| v.as_obj())
-            .context("manifest.entries")?
+            .ok_or_else(|| field_err("entries"))?
         {
             let file = dir.join(
                 e.get("file")
                     .and_then(|v| v.as_str())
-                    .context("entry.file")?,
+                    .ok_or_else(|| field_err("entry.file"))?,
             );
             if !file.exists() {
-                bail!("artifact {} missing file {}", name, file.display());
+                bail_with!(Backend, "artifact {} missing file {}", name, file.display());
             }
             let inputs = e
                 .get("inputs")
                 .and_then(|v| v.as_arr())
-                .context("entry.inputs")?
+                .ok_or_else(|| field_err("entry.inputs"))?
                 .iter()
                 .map(parse_spec)
                 .collect::<Result<Vec<_>>>()?;
             let outputs = e
                 .get("outputs")
                 .and_then(|v| v.as_arr())
-                .context("entry.outputs")?
+                .ok_or_else(|| field_err("entry.outputs"))?
                 .iter()
                 .map(parse_spec)
                 .collect::<Result<Vec<_>>>()?;
@@ -129,11 +138,11 @@ impl Manifest {
     }
 
     pub fn get(&self, name: &str) -> Result<&ManifestEntry> {
-        self.entries.get(name).with_context(|| {
-            format!(
+        self.entries.get(name).ok_or_else(|| {
+            Error::Backend(format!(
                 "artifact '{name}' not in manifest (have: {:?}) — re-run `make artifacts`",
                 self.entries.keys().take(8).collect::<Vec<_>>()
-            )
+            ))
         })
     }
 
@@ -175,6 +184,7 @@ mod tests {
     #[test]
     fn missing_dir_errors_with_hint() {
         let err = Manifest::load(Path::new("/definitely/not/here")).unwrap_err();
-        assert!(format!("{err:#}").contains("make artifacts"));
+        assert!(matches!(err, crate::api::Error::Io { .. }));
+        assert!(err.to_string().contains("make artifacts"));
     }
 }

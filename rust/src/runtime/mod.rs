@@ -23,7 +23,7 @@ pub use manifest::Manifest;
 pub use native::NativeBackend;
 pub use pjrt::PjrtBackend;
 
-use anyhow::Result;
+use crate::api::Result;
 
 /// A provider of the fixed-shape block computations (L1/L2 kernels).
 ///
@@ -85,13 +85,4 @@ pub trait Backend: Send + Sync {
         grams: &[f32],
         weights: &[f32],
     ) -> Result<f32>;
-}
-
-/// Construct the backend named by a CLI string.
-pub fn backend_by_name(name: &str, block_p: usize) -> Result<Box<dyn Backend>> {
-    match name {
-        "native" => Ok(Box::new(NativeBackend::new(block_p))),
-        "pjrt" => Ok(Box::new(PjrtBackend::load_default()?)),
-        other => anyhow::bail!("unknown backend '{other}' (native|pjrt)"),
-    }
 }

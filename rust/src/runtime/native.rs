@@ -3,9 +3,9 @@
 //! matters) so PJRT and native results cross-validate, and so the perf
 //! suite can separate PJRT dispatch overhead from algorithmic cost.
 
-use anyhow::{ensure, Result};
-
 use super::Backend;
+use crate::api::error::ensure_or;
+use crate::api::Result;
 
 #[derive(Debug)]
 pub struct NativeBackend {
@@ -43,7 +43,7 @@ fn solve_xv_eq_m(rank: usize, v: &[f32], m: &[f32], out: &mut [f32]) -> Result<(
             .map(|i| (i, a[i * r + col].abs()))
             .max_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
             .unwrap();
-        ensure!(piv_val > 1e-30, "singular normal-equation matrix");
+        ensure_or!(piv_val > 1e-30, Numeric, "singular normal-equation matrix");
         if piv != col {
             for j in 0..r {
                 a.swap(col * r + j, piv * r + j);
@@ -102,9 +102,21 @@ impl Backend for NativeBackend {
         out: &mut [f32],
     ) -> Result<()> {
         let p = vals.len();
-        ensure!(out.len() == p * rank);
+        ensure_or!(
+            out.len() == p * rank,
+            ShapeMismatch,
+            "mttkrp_block: out len {} != P*R = {}",
+            out.len(),
+            p * rank
+        );
         for w in rows {
-            ensure!(w.len() == p * rank);
+            ensure_or!(
+                w.len() == p * rank,
+                ShapeMismatch,
+                "mttkrp_block: row buffer len {} != P*R = {}",
+                w.len(),
+                p * rank
+            );
         }
         for t in 0..p {
             let o = &mut out[t * rank..(t + 1) * rank];
@@ -147,7 +159,12 @@ impl Backend for NativeBackend {
     ) -> Result<()> {
         self.mttkrp_block(rank, vals, rows, out)?;
         let p = vals.len();
-        ensure!(seg_starts.len() == p);
+        ensure_or!(
+            seg_starts.len() == p,
+            ShapeMismatch,
+            "mttkrp_block_seg: seg_starts len {} != P = {p}",
+            seg_starts.len()
+        );
         // Sequential segmented inclusive scan (matches the kernel's
         // associative_scan semantics).
         for t in 1..p {
@@ -164,7 +181,13 @@ impl Backend for NativeBackend {
 
     fn gram_block(&self, rank: usize, y_blk: &[f32], out: &mut [f32]) -> Result<()> {
         let p = y_blk.len() / rank;
-        ensure!(out.len() == rank * rank);
+        ensure_or!(
+            out.len() == rank * rank,
+            ShapeMismatch,
+            "gram_block: out len {} != R*R = {}",
+            out.len(),
+            rank * rank
+        );
         let mut acc = vec![0.0f64; rank * rank];
         for t in 0..p {
             let row = &y_blk[t * rank..(t + 1) * rank];
@@ -195,7 +218,13 @@ impl Backend for NativeBackend {
         damp: f32,
         out: &mut [f32],
     ) -> Result<()> {
-        ensure!(grams.len() == n * rank * rank && out.len() == rank * rank);
+        ensure_or!(
+            grams.len() == n * rank * rank && out.len() == rank * rank,
+            ShapeMismatch,
+            "hadamard_grams: grams len {} / out len {} vs n {n}, rank {rank}",
+            grams.len(),
+            out.len()
+        );
         out.fill(1.0);
         for w in 0..n {
             let g = &grams[w * rank * rank..(w + 1) * rank * rank];
@@ -216,12 +245,25 @@ impl Backend for NativeBackend {
         m_blk: &[f32],
         out: &mut [f32],
     ) -> Result<()> {
-        ensure!(v.len() == rank * rank && m_blk.len() == out.len());
+        ensure_or!(
+            v.len() == rank * rank && m_blk.len() == out.len(),
+            ShapeMismatch,
+            "solve_block: v len {} / m len {} / out len {} vs rank {rank}",
+            v.len(),
+            m_blk.len(),
+            out.len()
+        );
         solve_xv_eq_m(rank, v, m_blk, out)
     }
 
     fn inner_block(&self, _rank: usize, a: &[f32], b: &[f32]) -> Result<f32> {
-        ensure!(a.len() == b.len());
+        ensure_or!(
+            a.len() == b.len(),
+            ShapeMismatch,
+            "inner_block: {} vs {}",
+            a.len(),
+            b.len()
+        );
         Ok(a.iter()
             .zip(b)
             .map(|(&x, &y)| x as f64 * y as f64)

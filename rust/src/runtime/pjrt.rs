@@ -5,8 +5,8 @@
 //! once and executes them from the hot path — the L1 Pallas kernels running
 //! under the Rust coordinator with Python never invoked at request time.
 //!
-//! The offline crate set, however, contains no XLA FFI bindings (the build
-//! is restricted to `anyhow`). So this backend enforces the *artifact
+//! The offline crate set, however, contains no XLA FFI bindings. So this
+//! backend enforces the *artifact
 //! contract* exactly as the FFI path would — manifest presence, artifact
 //! files on disk, block size `P`, available ranks, and per-call input/output
 //! shape validation — and then executes the validated block computation
@@ -27,10 +27,10 @@
 
 use std::path::Path;
 
-use anyhow::{ensure, Context, Result};
-
 use super::manifest::{Manifest, ManifestEntry};
 use super::{Backend, NativeBackend};
+use crate::api::error::ensure_or;
+use crate::api::{Error, Result};
 
 pub struct PjrtBackend {
     manifest: Manifest,
@@ -48,8 +48,9 @@ impl PjrtBackend {
 
     pub fn load(dir: &Path) -> Result<PjrtBackend> {
         let manifest = Manifest::load(dir)?;
-        ensure!(
+        ensure_or!(
             manifest.block_p > 0,
+            Backend,
             "manifest block_p must be positive, got {}",
             manifest.block_p
         );
@@ -66,11 +67,12 @@ impl PjrtBackend {
     /// CLI's `warmup` subcommand before entering the measurement loop.
     pub fn warmup(&self) -> Result<()> {
         for (name, entry) in &self.manifest.entries {
-            let text = std::fs::read_to_string(&entry.file).with_context(|| {
-                format!("artifact {name}: read {}", entry.file.display())
+            let text = std::fs::read_to_string(&entry.file).map_err(|e| {
+                Error::io(format!("artifact {name}: read {}", entry.file.display()), e)
             })?;
-            ensure!(
+            ensure_or!(
                 !text.trim().is_empty(),
+                Backend,
                 "artifact {name}: {} is empty",
                 entry.file.display()
             );
@@ -83,22 +85,25 @@ impl PjrtBackend {
     /// path performs before building device literals.
     fn dispatch(&self, name: &str, inputs: &[&[f32]], out_len: usize) -> Result<()> {
         let entry: &ManifestEntry = self.manifest.get(name)?;
-        ensure!(
+        ensure_or!(
             inputs.len() == entry.inputs.len(),
+            ShapeMismatch,
             "{name}: {} inputs given, manifest says {}",
             inputs.len(),
             entry.inputs.len()
         );
         for (i, (data, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
-            ensure!(
+            ensure_or!(
                 data.len() == spec.numel(),
+                ShapeMismatch,
                 "{name}: input {i} numel {} vs spec {:?}",
                 data.len(),
                 spec.shape
             );
         }
-        ensure!(
+        ensure_or!(
             out_len == entry.outputs[0].numel(),
+            ShapeMismatch,
             "{name}: output numel {out_len} vs spec {:?}",
             entry.outputs[0].shape
         );
@@ -208,6 +213,6 @@ mod tests {
     #[test]
     fn load_fails_with_hint_when_artifacts_missing() {
         let err = PjrtBackend::load(Path::new("/definitely/not/here")).unwrap_err();
-        assert!(format!("{err:#}").contains("make artifacts"));
+        assert!(err.to_string().contains("make artifacts"));
     }
 }

@@ -5,7 +5,8 @@
 //! sequential in memory, which matters because the coordinator plays the
 //! role of the GPU memory system.
 
-use anyhow::{bail, ensure, Result};
+use crate::api::error::{bail_with, ensure_or};
+use crate::api::Result;
 
 /// A sparse tensor with `n_modes` modes and `nnz` nonzero elements.
 #[derive(Clone, Debug, PartialEq)]
@@ -22,23 +23,34 @@ impl SparseTensorCOO {
     /// Build and validate. Duplicate coordinates are allowed here (they sum
     /// on execution); `collapse_duplicates` removes them.
     pub fn new(dims: Vec<u32>, inds: Vec<Vec<u32>>, vals: Vec<f32>) -> Result<Self> {
-        ensure!(dims.len() >= 2, "need at least 2 modes, got {}", dims.len());
-        ensure!(
+        ensure_or!(
+            dims.len() >= 2,
+            InvalidData,
+            "need at least 2 modes, got {}",
+            dims.len()
+        );
+        ensure_or!(
             inds.len() == dims.len(),
+            InvalidData,
             "inds has {} modes, dims has {}",
             inds.len(),
             dims.len()
         );
-        ensure!(dims.iter().all(|&d| d > 0), "zero-extent mode");
+        ensure_or!(dims.iter().all(|&d| d > 0), InvalidData, "zero-extent mode");
         for (w, col) in inds.iter().enumerate() {
-            ensure!(
+            ensure_or!(
                 col.len() == vals.len(),
+                InvalidData,
                 "mode {w}: {} coords vs {} vals",
                 col.len(),
                 vals.len()
             );
             if let Some(&bad) = col.iter().find(|&&i| i >= dims[w]) {
-                bail!("mode {w}: coordinate {bad} out of range (dim {})", dims[w]);
+                bail_with!(
+                    InvalidData,
+                    "mode {w}: coordinate {bad} out of range (dim {})",
+                    dims[w]
+                );
             }
         }
         Ok(SparseTensorCOO { dims, inds, vals })

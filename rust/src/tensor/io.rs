@@ -12,9 +12,9 @@ use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
 use super::{FactorSet, SparseTensorCOO};
+use crate::api::error::bail_with;
+use crate::api::{Error, Result};
 use crate::tensor::factor::Factor;
 use crate::util::json::Json;
 
@@ -22,24 +22,25 @@ use crate::util::json::Json;
 /// 1-based indices; `#` comments and blank lines ignored. Mode extents are
 /// the max index seen per mode unless `dims` is given.
 pub fn read_tns(path: &Path, dims: Option<Vec<u32>>) -> Result<SparseTensorCOO> {
-    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let f = File::open(path).map_err(|e| Error::io(format!("open {}", path.display()), e))?;
     let mut inds: Vec<Vec<u32>> = Vec::new();
     let mut vals: Vec<f32> = Vec::new();
     for (lineno, line) in BufReader::new(f).lines().enumerate() {
-        let line = line?;
+        let line = line.map_err(|e| Error::io(format!("read {}", path.display()), e))?;
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
         let toks: Vec<&str> = line.split_whitespace().collect();
         if toks.len() < 3 {
-            bail!("{}:{}: need >= 2 indices + value", path.display(), lineno + 1);
+            bail_with!(Parse, "{}:{}: need >= 2 indices + value", path.display(), lineno + 1);
         }
         let n = toks.len() - 1;
         if inds.is_empty() {
             inds = vec![Vec::new(); n];
         } else if inds.len() != n {
-            bail!(
+            bail_with!(
+                Parse,
                 "{}:{}: inconsistent mode count {} vs {}",
                 path.display(),
                 lineno + 1,
@@ -48,20 +49,20 @@ pub fn read_tns(path: &Path, dims: Option<Vec<u32>>) -> Result<SparseTensorCOO> 
             );
         }
         for (w, tok) in toks[..n].iter().enumerate() {
-            let i: u64 = tok
-                .parse()
-                .with_context(|| format!("{}:{}: bad index", path.display(), lineno + 1))?;
+            let i: u64 = tok.parse().map_err(|_| {
+                Error::Parse(format!("{}:{}: bad index", path.display(), lineno + 1))
+            })?;
             if i == 0 {
-                bail!("{}:{}: .tns indices are 1-based", path.display(), lineno + 1);
+                bail_with!(Parse, "{}:{}: .tns indices are 1-based", path.display(), lineno + 1);
             }
             inds[w].push((i - 1) as u32);
         }
-        vals.push(toks[n].parse().with_context(|| {
-            format!("{}:{}: bad value", path.display(), lineno + 1)
+        vals.push(toks[n].parse().map_err(|_| {
+            Error::Parse(format!("{}:{}: bad value", path.display(), lineno + 1))
         })?);
     }
     if vals.is_empty() {
-        bail!("{}: empty tensor", path.display());
+        bail_with!(InvalidData, "{}: empty tensor", path.display());
     }
     let dims = dims.unwrap_or_else(|| {
         inds.iter()
@@ -73,7 +74,8 @@ pub fn read_tns(path: &Path, dims: Option<Vec<u32>>) -> Result<SparseTensorCOO> 
 
 /// Write a FROSTT `.tns` file (1-based indices).
 pub fn write_tns(t: &SparseTensorCOO, path: &Path) -> Result<()> {
-    let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let f =
+        File::create(path).map_err(|e| Error::io(format!("create {}", path.display()), e))?;
     let mut w = BufWriter::new(f);
     for e in 0..t.nnz() {
         for col in &t.inds {
@@ -102,10 +104,10 @@ pub struct GoldenCase {
 fn read_f32s(path: &Path) -> Result<Vec<f32>> {
     let mut buf = Vec::new();
     File::open(path)
-        .with_context(|| format!("open {}", path.display()))?
+        .map_err(|e| Error::io(format!("open {}", path.display()), e))?
         .read_to_end(&mut buf)?;
     if buf.len() % 4 != 0 {
-        bail!("{}: length not a multiple of 4", path.display());
+        bail_with!(Parse, "{}: length not a multiple of 4", path.display());
     }
     Ok(buf
         .chunks_exact(4)
@@ -116,10 +118,10 @@ fn read_f32s(path: &Path) -> Result<Vec<f32>> {
 fn read_u32s(path: &Path) -> Result<Vec<u32>> {
     let mut buf = Vec::new();
     File::open(path)
-        .with_context(|| format!("open {}", path.display()))?
+        .map_err(|e| Error::io(format!("open {}", path.display()), e))?
         .read_to_end(&mut buf)?;
     if buf.len() % 4 != 0 {
-        bail!("{}: length not a multiple of 4", path.display());
+        bail_with!(Parse, "{}: length not a multiple of 4", path.display());
     }
     Ok(buf
         .chunks_exact(4)
@@ -131,20 +133,36 @@ fn read_u32s(path: &Path) -> Result<Vec<u32>> {
 pub fn read_golden(dir: &Path, tag: &str) -> Result<GoldenCase> {
     let prefix = dir.join(tag);
     let meta_text = std::fs::read_to_string(prefix.with_extension("meta.json"))
-        .with_context(|| format!("golden case {tag}"))?;
-    let meta = Json::parse(&meta_text).context("parse meta.json")?;
+        .map_err(|e| Error::io(format!("golden case {tag}"), e))?;
+    let meta =
+        Json::parse(&meta_text).map_err(|e| Error::Parse(format!("parse meta.json: {e}")))?;
+    let meta_field = |field: &str| Error::Parse(format!("{tag}: meta.json missing `{field}`"));
     let dims: Vec<usize> = meta
         .get("dims")
         .and_then(|d| d.as_usize_vec())
-        .context("meta.dims")?;
-    let nnz = meta.get("nnz").and_then(|v| v.as_usize()).context("meta.nnz")?;
-    let rank = meta.get("rank").and_then(|v| v.as_usize()).context("meta.rank")?;
-    let fit = meta.get("fit").and_then(|v| v.as_f64()).context("meta.fit")?;
+        .ok_or_else(|| meta_field("dims"))?;
+    let nnz = meta
+        .get("nnz")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| meta_field("nnz"))?;
+    let rank = meta
+        .get("rank")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| meta_field("rank"))?;
+    let fit = meta
+        .get("fit")
+        .and_then(|v| v.as_f64())
+        .ok_or_else(|| meta_field("fit"))?;
     let n = dims.len();
 
     let flat = read_u32s(&prefix.with_extension("indices.bin"))?;
     if flat.len() != nnz * n {
-        bail!("{tag}: indices.bin has {} u32s, want {}", flat.len(), nnz * n);
+        bail_with!(
+            ShapeMismatch,
+            "{tag}: indices.bin has {} u32s, want {}",
+            flat.len(),
+            nnz * n
+        );
     }
     // python dumps row-major [nnz, n]; convert to mode-major SoA
     let mut inds = vec![Vec::with_capacity(nnz); n];
@@ -162,7 +180,7 @@ pub fn read_golden(dir: &Path, tag: &str) -> Result<GoldenCase> {
     for w in 0..n {
         let fd = read_f32s(&dir.join(format!("{tag}.factor{w}.bin")))?;
         if fd.len() != dims[w] * rank {
-            bail!("{tag}: factor{w} wrong size");
+            bail_with!(ShapeMismatch, "{tag}: factor{w} wrong size");
         }
         factors.push(Factor {
             rows: dims[w],
@@ -171,7 +189,7 @@ pub fn read_golden(dir: &Path, tag: &str) -> Result<GoldenCase> {
         });
         let md = read_f32s(&dir.join(format!("{tag}.mttkrp{w}.bin")))?;
         if md.len() != dims[w] * rank {
-            bail!("{tag}: mttkrp{w} wrong size");
+            bail_with!(ShapeMismatch, "{tag}: mttkrp{w} wrong size");
         }
         mttkrp.push(md);
     }

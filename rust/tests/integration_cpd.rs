@@ -1,7 +1,7 @@
 //! Integration: CPD-ALS end-to-end against the jnp oracle's fit value and
 //! convergence behaviour, on both backends.
 
-use spmttkrp::coordinator::{Engine, EngineConfig};
+use spmttkrp::api::{BackendKind, ExecutorBuilder};
 use spmttkrp::cpd::{als, CpdConfig};
 use spmttkrp::tensor::synth::DatasetProfile;
 
@@ -18,16 +18,12 @@ fn engine_fit_pieces_match_oracle_fit() {
         let Some(case) = golden(tag) else { continue };
         let t = &case.tensor;
         let n = t.n_modes();
-        let engine = Engine::with_native_backend(
-            t,
-            EngineConfig {
-                sm_count: 8,
-                threads: 2,
-                rank: case.rank,
-                ..Default::default()
-            },
-        )
-        .unwrap();
+        let engine = ExecutorBuilder::new()
+            .sm_count(8)
+            .threads(2)
+            .rank(case.rank)
+            .build_engine(t)
+            .unwrap();
         let grams: Vec<Vec<f32>> = case
             .factors
             .factors
@@ -55,16 +51,12 @@ fn engine_fit_pieces_match_oracle_fit() {
 #[test]
 fn als_improves_fit_on_golden_tensors() {
     let Some(case) = golden("n3_r16") else { return };
-    let engine = Engine::with_native_backend(
-        &case.tensor,
-        EngineConfig {
-            sm_count: 8,
-            threads: 2,
-            rank: 16,
-            ..Default::default()
-        },
-    )
-    .unwrap();
+    let engine = ExecutorBuilder::new()
+        .sm_count(8)
+        .threads(2)
+        .rank(16)
+        .build_engine(&case.tensor)
+        .unwrap();
     let cfg = CpdConfig {
         rank: 16,
         max_iters: 6,
@@ -96,17 +88,14 @@ fn als_pjrt_and_native_agree() {
     }
     std::env::set_var("SPMTTKRP_ARTIFACTS", artifacts_dir());
     let t = DatasetProfile::uber().scaled(0.001).generate(3);
-    let mk = |backend: &str| {
-        let cfg = EngineConfig {
-            sm_count: 6,
-            threads: 2,
-            rank: 16,
-            ..Default::default()
-        };
-        let engine = match backend {
-            "native" => Engine::with_native_backend(&t, cfg).unwrap(),
-            _ => Engine::with_pjrt_backend(&t, cfg).unwrap(),
-        };
+    let mk = |backend: BackendKind| {
+        let engine = ExecutorBuilder::new()
+            .sm_count(6)
+            .threads(2)
+            .rank(16)
+            .backend(backend)
+            .build_engine(&t)
+            .unwrap();
         let cfg = CpdConfig {
             rank: 16,
             max_iters: 3,
@@ -116,8 +105,8 @@ fn als_pjrt_and_native_agree() {
         };
         als(&engine, &t, &cfg).unwrap()
     };
-    let a = mk("native");
-    let b = mk("pjrt");
+    let a = mk(BackendKind::Native);
+    let b = mk(BackendKind::Pjrt);
     for (fa, fb) in a.fits.iter().zip(&b.fits) {
         assert!(
             (fa - fb).abs() < 5e-3,
@@ -131,16 +120,12 @@ fn als_pjrt_and_native_agree() {
 #[test]
 fn als_reports_cover_all_modes_every_iteration() {
     let t = DatasetProfile::nips().scaled(0.001).generate(9);
-    let engine = Engine::with_native_backend(
-        &t,
-        EngineConfig {
-            sm_count: 8,
-            threads: 2,
-            rank: 16,
-            ..Default::default()
-        },
-    )
-    .unwrap();
+    let engine = ExecutorBuilder::new()
+        .sm_count(8)
+        .threads(2)
+        .rank(16)
+        .build_engine(&t)
+        .unwrap();
     let cfg = CpdConfig {
         rank: 16,
         max_iters: 2,

@@ -2,10 +2,9 @@
 //! spMTTKRP references dumped by the jnp oracle (`aot.py --golden`), across
 //! backends, load-balancing modes and kernel variants.
 
-use spmttkrp::baselines::{
-    blco_exec::BlcoExecutor, mmcsf::MmCsfExecutor, parti::PartiExecutor, MttkrpExecutor,
-};
-use spmttkrp::coordinator::{Engine, EngineConfig};
+use spmttkrp::api::{BackendKind, ExecutorBuilder, ExecutorKind};
+use spmttkrp::baselines::MttkrpExecutor;
+use spmttkrp::coordinator::EngineConfig;
 use spmttkrp::partition::{LoadBalance, VertexAssign};
 use spmttkrp::tensor::io::GoldenCase;
 
@@ -25,7 +24,10 @@ fn assert_matches_golden(got: &[f32], want: &[f32], what: &str) {
 }
 
 fn check_engine(case: &GoldenCase, cfg: EngineConfig, label: &str) {
-    let engine = Engine::with_native_backend(&case.tensor, cfg).unwrap();
+    let engine = ExecutorBuilder::new()
+        .engine_config(cfg)
+        .build_engine(&case.tensor)
+        .unwrap();
     for mode in 0..case.tensor.n_modes() {
         let (got, _) = engine.mttkrp_mode(&case.factors, mode).unwrap();
         assert_matches_golden(
@@ -99,13 +101,13 @@ fn engine_pjrt_backend_matches_golden() {
         "SPMTTKRP_ARTIFACTS",
         std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
     );
-    let cfg = EngineConfig {
-        sm_count: 8,
-        threads: 2,
-        rank: case.rank,
-        ..Default::default()
-    };
-    let engine = Engine::with_pjrt_backend(&case.tensor, cfg).unwrap();
+    let engine = ExecutorBuilder::new()
+        .sm_count(8)
+        .threads(2)
+        .rank(case.rank)
+        .backend(BackendKind::Pjrt)
+        .build_engine(&case.tensor)
+        .unwrap();
     for mode in 0..case.tensor.n_modes() {
         let (got, rep) = engine.mttkrp_mode(&case.factors, mode).unwrap();
         assert_matches_golden(&got, &case.mttkrp[mode], &format!("pjrt mode {mode}"));
@@ -117,11 +119,19 @@ fn engine_pjrt_backend_matches_golden() {
 fn all_baselines_match_golden() {
     for tag in ["n3_r16", "n4_r16", "n5_r16"] {
         let Some(case) = golden(tag) else { continue };
-        let execs: Vec<Box<dyn MttkrpExecutor>> = vec![
-            Box::new(PartiExecutor::new(&case.tensor, 8, 2, case.rank)),
-            Box::new(MmCsfExecutor::new(&case.tensor, 8, 2, case.rank)),
-            Box::new(BlcoExecutor::new(&case.tensor, 8, 2, case.rank)),
-        ];
+        let execs: Vec<Box<dyn MttkrpExecutor>> =
+            [ExecutorKind::Parti, ExecutorKind::MmCsf, ExecutorKind::Blco]
+                .into_iter()
+                .map(|kind| {
+                    ExecutorBuilder::new()
+                        .kind(kind)
+                        .sm_count(8)
+                        .threads(2)
+                        .rank(case.rank)
+                        .build(&case.tensor)
+                        .unwrap()
+                })
+                .collect();
         for ex in &execs {
             for mode in 0..case.tensor.n_modes() {
                 let (got, _) = ex.execute_mode(&case.factors, mode).unwrap();
@@ -138,17 +148,13 @@ fn all_baselines_match_golden() {
 #[test]
 fn traffic_model_ours_has_no_intermediate_bytes() {
     let Some(case) = golden("n3_r16") else { return };
-    let engine = Engine::with_native_backend(
-        &case.tensor,
-        EngineConfig {
-            sm_count: 8,
-            threads: 2,
-            rank: case.rank,
-            use_seg_kernel: true,
-            ..Default::default()
-        },
-    )
-    .unwrap();
+    let engine = ExecutorBuilder::new()
+        .sm_count(8)
+        .threads(2)
+        .rank(case.rank)
+        .seg_kernel(true)
+        .build_engine(&case.tensor)
+        .unwrap();
     let (_, rep) = engine.mttkrp_all_modes_with_report(&case.factors).unwrap();
     let t = rep.total_traffic();
     assert_eq!(
@@ -156,17 +162,13 @@ fn traffic_model_ours_has_no_intermediate_bytes() {
         "mode-specific format must not spill partials"
     );
     // Baseline with the plain kernel *does* spill.
-    let engine2 = Engine::with_native_backend(
-        &case.tensor,
-        EngineConfig {
-            sm_count: 8,
-            threads: 2,
-            rank: case.rank,
-            use_seg_kernel: false,
-            ..Default::default()
-        },
-    )
-    .unwrap();
+    let engine2 = ExecutorBuilder::new()
+        .sm_count(8)
+        .threads(2)
+        .rank(case.rank)
+        .seg_kernel(false)
+        .build_engine(&case.tensor)
+        .unwrap();
     let (_, rep2) = engine2.mttkrp_all_modes_with_report(&case.factors).unwrap();
     assert!(rep2.total_traffic().intermediate_bytes > 0);
 }

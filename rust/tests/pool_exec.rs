@@ -9,10 +9,9 @@
 
 use std::sync::Arc;
 
-use spmttkrp::baselines::{
-    blco_exec::BlcoExecutor, mmcsf::MmCsfExecutor, parti::PartiExecutor, MttkrpExecutor,
-};
-use spmttkrp::coordinator::{Engine, EngineConfig, UpdatePolicy};
+use spmttkrp::api::{ExecutorBuilder, ExecutorKind};
+use spmttkrp::baselines::MttkrpExecutor;
+use spmttkrp::coordinator::{Engine, UpdatePolicy};
 use spmttkrp::exec::SmPool;
 use spmttkrp::tensor::{DenseTensor, FactorSet, SparseTensorCOO};
 use spmttkrp::util::rng::Rng;
@@ -41,13 +40,15 @@ fn random_tensor(rng: &mut Rng) -> SparseTensorCOO {
         .collapse_duplicates()
 }
 
-fn small_cfg(kappa: usize, threads: usize, rank: usize) -> EngineConfig {
-    EngineConfig {
-        sm_count: kappa,
-        threads,
-        rank,
-        ..Default::default()
-    }
+fn small_builder(kappa: usize, threads: usize, rank: usize) -> ExecutorBuilder {
+    ExecutorBuilder::new()
+        .sm_count(kappa)
+        .threads(threads)
+        .rank(rank)
+}
+
+fn small_engine(t: &SparseTensorCOO, kappa: usize, threads: usize, rank: usize) -> Engine {
+    small_builder(kappa, threads, rank).build_engine(t).unwrap()
 }
 
 /// P8 extended: the *same* engine (one persistent pool, one set of plans
@@ -60,8 +61,7 @@ fn repeated_calls_on_one_pool_are_deterministic() {
         let mut rng = Rng::new(7700 + seed);
         let t = random_tensor(&mut rng);
         let fs = FactorSet::random(&t.dims, 8, 9 ^ seed);
-        let engine =
-            Engine::with_native_backend(&t, small_cfg(7, 3, 8)).unwrap();
+        let engine = small_engine(&t, 7, 3, 8);
         let first = engine.mttkrp_all_modes(&fs).unwrap();
         for round in 0..4 {
             let again = engine.mttkrp_all_modes(&fs).unwrap();
@@ -97,14 +97,21 @@ fn one_pool_shared_by_all_four_executors() {
         let rank = 8;
         let fs = FactorSet::random(&t.dims, rank, seed ^ 0xb);
         let pool = Arc::new(SmPool::new(3));
-        let engine =
-            Engine::native_on_pool(&t, small_cfg(6, 3, rank), Arc::clone(&pool))
-                .unwrap();
-        let execs: Vec<Box<dyn MttkrpExecutor>> = vec![
-            Box::new(PartiExecutor::with_pool(&t, 6, rank, Arc::clone(&pool))),
-            Box::new(MmCsfExecutor::with_pool(&t, 6, rank, Arc::clone(&pool))),
-            Box::new(BlcoExecutor::with_pool(&t, 6, rank, Arc::clone(&pool))),
-        ];
+        let engine = small_builder(6, 3, rank)
+            .pool(Arc::clone(&pool))
+            .build_engine(&t)
+            .unwrap();
+        let execs: Vec<Box<dyn MttkrpExecutor>> =
+            [ExecutorKind::Parti, ExecutorKind::MmCsf, ExecutorKind::Blco]
+                .into_iter()
+                .map(|kind| {
+                    small_builder(6, 3, rank)
+                        .kind(kind)
+                        .pool(Arc::clone(&pool))
+                        .build(&t)
+                        .unwrap()
+                })
+                .collect();
         let dense = DenseTensor::from_coo(&t);
         for round in 0..2 {
             for mode in 0..t.n_modes() {
@@ -140,14 +147,13 @@ fn mode_plan_reuse_matches_fresh_engine() {
     let t = random_tensor(&mut rng);
     let rank = 8;
     let fs = FactorSet::random(&t.dims, rank, 0xfeed);
-    let veteran = Engine::with_native_backend(&t, small_cfg(5, 2, rank)).unwrap();
+    let veteran = small_engine(&t, 5, 2, rank);
     // warm the plans/workspaces with two full sweeps
     for _ in 0..2 {
         veteran.mttkrp_all_modes(&fs).unwrap();
     }
     for mode in 0..t.n_modes() {
-        let fresh_engine =
-            Engine::with_native_backend(&t, small_cfg(5, 2, rank)).unwrap();
+        let fresh_engine = small_engine(&t, 5, 2, rank);
         let (fresh, _) = fresh_engine.mttkrp_mode(&fs, mode).unwrap();
         let (reused, rep) = veteran.mttkrp_mode(&fs, mode).unwrap();
         let local = matches!(veteran.update_policy(mode), UpdatePolicy::Local);
@@ -180,7 +186,7 @@ fn mttkrp_mode_into_reuses_buffers_cleanly() {
     let t = random_tensor(&mut rng);
     let rank = 8;
     let fs = FactorSet::random(&t.dims, rank, 77);
-    let engine = Engine::with_native_backend(&t, small_cfg(4, 2, rank)).unwrap();
+    let engine = small_engine(&t, 4, 2, rank);
     let (want, _) = engine.mttkrp_mode(&fs, 0).unwrap();
     let mut buf = vec![f32::NAN; 3]; // wrong size AND poisoned contents
     engine.mttkrp_mode_into(&fs, 0, &mut buf).unwrap();

@@ -13,10 +13,8 @@
 //!   P7 segmented and plain kernels give identical results
 //!   P8 determinism: same seed -> same everything
 
-use spmttkrp::baselines::{
-    blco_exec::BlcoExecutor, mmcsf::MmCsfExecutor, parti::PartiExecutor, MttkrpExecutor,
-};
-use spmttkrp::coordinator::{Engine, EngineConfig};
+use spmttkrp::api::{ExecutorBuilder, ExecutorKind};
+use spmttkrp::baselines::MttkrpExecutor;
 use spmttkrp::hypergraph::Hypergraph;
 use spmttkrp::partition::{scheme1, scheme2, stats, VertexAssign};
 use spmttkrp::tensor::{DenseTensor, FactorSet, SparseTensorCOO};
@@ -170,16 +168,12 @@ fn p5_engine_matches_dense_oracle() {
         let rank = [4usize, 8, 16][rng.next_below(3) as usize];
         let kappa = 1 + rng.next_below(20) as usize;
         let fs = FactorSet::random(&t.dims, rank, seed ^ 0xf);
-        let engine = Engine::with_native_backend(
-            &t,
-            EngineConfig {
-                sm_count: kappa,
-                threads: 1 + (seed % 3) as usize,
-                rank,
-                ..Default::default()
-            },
-        )
-        .unwrap();
+        let engine = ExecutorBuilder::new()
+            .sm_count(kappa)
+            .threads(1 + (seed % 3) as usize)
+            .rank(rank)
+            .build_engine(&t)
+            .unwrap();
         let dense = DenseTensor::from_coo(&t);
         for mode in 0..t.n_modes() {
             let (got, _) = engine.mttkrp_mode(&fs, mode).unwrap();
@@ -195,21 +189,25 @@ fn p6_all_executors_agree() {
         let t = random_tensor(&mut rng);
         let rank = 8;
         let fs = FactorSet::random(&t.dims, rank, seed ^ 0xa);
-        let engine = Engine::with_native_backend(
-            &t,
-            EngineConfig {
-                sm_count: 6,
-                threads: 2,
-                rank,
-                ..Default::default()
-            },
-        )
-        .unwrap();
-        let execs: Vec<Box<dyn MttkrpExecutor>> = vec![
-            Box::new(PartiExecutor::new(&t, 6, 2, rank)),
-            Box::new(MmCsfExecutor::new(&t, 6, 2, rank)),
-            Box::new(BlcoExecutor::new(&t, 6, 2, rank)),
-        ];
+        let engine = ExecutorBuilder::new()
+            .sm_count(6)
+            .threads(2)
+            .rank(rank)
+            .build_engine(&t)
+            .unwrap();
+        let execs: Vec<Box<dyn MttkrpExecutor>> =
+            [ExecutorKind::Parti, ExecutorKind::MmCsf, ExecutorKind::Blco]
+                .into_iter()
+                .map(|kind| {
+                    ExecutorBuilder::new()
+                        .kind(kind)
+                        .sm_count(6)
+                        .threads(2)
+                        .rank(rank)
+                        .build(&t)
+                        .unwrap()
+                })
+                .collect();
         for mode in 0..t.n_modes() {
             let (ours, _) = engine.mttkrp_mode(&fs, mode).unwrap();
             for ex in &execs {
@@ -234,17 +232,13 @@ fn p7_seg_and_plain_kernels_agree() {
         let rank = 8;
         let fs = FactorSet::random(&t.dims, rank, seed);
         let mk = |seg| {
-            Engine::with_native_backend(
-                &t,
-                EngineConfig {
-                    sm_count: 5,
-                    threads: 2,
-                    rank,
-                    use_seg_kernel: seg,
-                    ..Default::default()
-                },
-            )
-            .unwrap()
+            ExecutorBuilder::new()
+                .sm_count(5)
+                .threads(2)
+                .rank(rank)
+                .seg_kernel(seg)
+                .build_engine(&t)
+                .unwrap()
         };
         let (e1, e2) = (mk(true), mk(false));
         for mode in 0..t.n_modes() {
@@ -266,16 +260,12 @@ fn p8_determinism() {
         let mut rng = Rng::new(77);
         let t = random_tensor(&mut rng);
         let fs = FactorSet::random(&t.dims, 8, 9);
-        let engine = Engine::with_native_backend(
-            &t,
-            EngineConfig {
-                sm_count: 7,
-                threads: 3,
-                rank: 8,
-                ..Default::default()
-            },
-        )
-        .unwrap();
+        let engine = ExecutorBuilder::new()
+            .sm_count(7)
+            .threads(3)
+            .rank(8)
+            .build_engine(&t)
+            .unwrap();
         engine.mttkrp_all_modes(&fs).unwrap()
     };
     let a = mk();

@@ -1,0 +1,207 @@
+//! Integration tests for the typed API front-end (`api::{ExecutorBuilder,
+//! Session, Error}`):
+//!
+//!   * builder misuse (zero rank/SMs/shards/threads, odd block size, PJRT
+//!     without artifacts) returns typed `Error` variants — never panics;
+//!   * a session holding ≥ 3 prepared tensors on ONE pool, serving
+//!     interleaved `mttkrp`/`decompose` calls, produces outputs
+//!     bitwise-identical to freshly built single-tensor engines, with
+//!     `TrafficCounters` equal to the direct (pre-session) construction
+//!     path.
+
+use std::sync::Arc;
+
+use spmttkrp::api::{BackendKind, Error, ExecutorBuilder, ExecutorKind, Session};
+use spmttkrp::baselines::MttkrpExecutor;
+use spmttkrp::coordinator::Engine;
+use spmttkrp::cpd::CpdConfig;
+use spmttkrp::exec::SmPool;
+use spmttkrp::tensor::synth::DatasetProfile;
+use spmttkrp::tensor::{FactorSet, SparseTensorCOO};
+
+/// Three small Table III-profile tensors with different shapes/schemes.
+fn three_tensors() -> Vec<SparseTensorCOO> {
+    vec![
+        DatasetProfile::uber().scaled(0.001).generate(21),
+        DatasetProfile::nips().scaled(0.001).generate(22),
+        DatasetProfile::chicago().scaled(0.001).generate(23),
+    ]
+}
+
+/// Deterministic single-worker builder: with one pool worker, partitions
+/// drain in index order, so outputs are bitwise-reproducible even on
+/// Global-update (lock-sharded) modes.
+fn det_builder(rank: usize) -> ExecutorBuilder {
+    ExecutorBuilder::new().sm_count(6).threads(1).rank(rank)
+}
+
+#[test]
+fn builder_misuse_is_typed_never_a_panic() {
+    let t = DatasetProfile::uber().scaled(0.0005).generate(3);
+    let cases: Vec<(ExecutorBuilder, &str)> = vec![
+        (ExecutorBuilder::new().rank(0), "zero rank"),
+        (ExecutorBuilder::new().sm_count(0), "zero sm_count"),
+        (ExecutorBuilder::new().lock_shards(0), "zero lock_shards"),
+        (ExecutorBuilder::new().threads(0), "zero threads, owned pool"),
+        (ExecutorBuilder::new().block_p(0), "zero block_p"),
+        (ExecutorBuilder::new().block_p(33), "odd block_p"),
+        (
+            ExecutorBuilder::new().kind(ExecutorKind::MmCsf).backend(BackendKind::Pjrt),
+            "baseline on pjrt",
+        ),
+    ];
+    for (b, what) in cases {
+        match b.build(&t) {
+            Err(Error::InvalidConfig(_)) => {}
+            Err(e) => panic!("{what}: expected InvalidConfig, got {e:?}"),
+            Ok(_) => panic!("{what}: expected InvalidConfig, got Ok"),
+        }
+    }
+    // PJRT without an artifact set: typed error carrying the build hint.
+    let err = ExecutorBuilder::new()
+        .backend(BackendKind::Pjrt)
+        .artifacts_dir("/definitely/not/here")
+        .build(&t)
+        .unwrap_err();
+    assert!(matches!(err, Error::Io { .. }), "got {err:?}");
+    assert!(err.to_string().contains("make artifacts"));
+}
+
+#[test]
+fn executor_misuse_is_typed_never_a_panic() {
+    let t = DatasetProfile::uber().scaled(0.0005).generate(4);
+    for kind in ExecutorKind::all() {
+        let ex = det_builder(8).kind(kind).build(&t).unwrap();
+        let fs = FactorSet::random(&t.dims, 8, 1);
+        // mode out of range
+        assert!(
+            matches!(ex.execute_mode(&fs, 99), Err(Error::ShapeMismatch(_))),
+            "{}: bad mode must be typed",
+            ex.name()
+        );
+        // factor rank mismatch
+        let wrong = FactorSet::random(&t.dims, 4, 1);
+        assert!(
+            matches!(ex.execute_mode(&wrong, 0), Err(Error::ShapeMismatch(_))),
+            "{}: bad rank must be typed",
+            ex.name()
+        );
+    }
+}
+
+/// The acceptance-criteria scenario: one `SmPool`, ≥ 3 prepared tensors,
+/// interleaved `mttkrp`/`decompose` calls; outputs bitwise-identical to
+/// per-tensor fresh engines, `TrafficCounters` equal to the direct
+/// builder (PR 2 runtime) path.
+#[test]
+fn session_replay_matches_fresh_engines_bitwise() {
+    let rank = 8;
+    let tensors = three_tensors();
+    let pool = Arc::new(SmPool::new(1));
+    let mut session = Session::on_pool(Arc::clone(&pool));
+    let handles: Vec<_> = tensors
+        .iter()
+        .map(|t| session.prepare(t, &det_builder(rank)).unwrap())
+        .collect();
+    assert_eq!(session.n_prepared(), 3);
+
+    let factor_sets: Vec<FactorSet> = tensors
+        .iter()
+        .enumerate()
+        .map(|(i, t)| FactorSet::random(&t.dims, rank, 0x5e ^ i as u64))
+        .collect();
+    // Fresh single-tensor engines, each on its own single-worker pool —
+    // the pre-session construction path the session must reproduce.
+    let fresh: Vec<Engine> = tensors
+        .iter()
+        .map(|t| {
+            det_builder(rank)
+                .pool(Arc::new(SmPool::new(1)))
+                .build_engine(t)
+                .unwrap()
+        })
+        .collect();
+
+    // Interleave calls across tenants and modes, twice, so every handle
+    // replays its plans between other tenants' work.
+    let mut out = Vec::new();
+    for round in 0..2 {
+        let max_modes = tensors.iter().map(|t| t.n_modes()).max().unwrap();
+        for mode in 0..max_modes {
+            for (i, &h) in handles.iter().enumerate() {
+                if mode >= tensors[i].n_modes() {
+                    continue;
+                }
+                let rep = session.mttkrp_into(h, &factor_sets[i], mode, &mut out).unwrap();
+                let (want, want_rep) = fresh[i].mttkrp_mode(&factor_sets[i], mode).unwrap();
+                assert_eq!(out.len(), want.len());
+                for (j, (&a, &b)) in out.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "round {round} tensor {i} mode {mode} [{j}]: session {a} vs fresh {b}"
+                    );
+                }
+                assert_eq!(
+                    rep.traffic, want_rep.traffic,
+                    "round {round} tensor {i} mode {mode}: counters must be identical"
+                );
+            }
+        }
+    }
+
+    // Interleaved decompositions through the same handles: identical fit
+    // trajectories and factors vs the fresh engines (single worker →
+    // fully deterministic ALS).
+    let cfg = CpdConfig {
+        rank,
+        max_iters: 3,
+        tol: 0.0,
+        damp: 1e-4,
+        seed: 9,
+    };
+    for (i, &h) in handles.iter().enumerate() {
+        let ses = session.decompose(h, &cfg).unwrap();
+        let fre = spmttkrp::cpd::als(&fresh[i], &tensors[i], &cfg).unwrap();
+        assert_eq!(ses.fits, fre.fits, "tensor {i}: fit curves diverged");
+        for (sf, ff) in ses.factors.factors.iter().zip(&fre.factors.factors) {
+            for (a, b) in sf.data.iter().zip(&ff.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "tensor {i}: factors diverged");
+            }
+        }
+    }
+}
+
+/// Sessions also serve heterogeneous tenants: engine and baseline handles
+/// side by side on one pool, with multi-threaded interleaving (epsilon
+/// agreement vs the dense-path engine results).
+#[test]
+fn session_mixes_engine_and_baseline_tenants() {
+    let rank = 8;
+    let t = DatasetProfile::uber().scaled(0.001).generate(31);
+    let mut session = Session::new();
+    let ours = session.prepare(&t, &ExecutorBuilder::new().sm_count(6).rank(rank)).unwrap();
+    let parti = session
+        .prepare(
+            &t,
+            &ExecutorBuilder::new().kind(ExecutorKind::Parti).sm_count(6).rank(rank),
+        )
+        .unwrap();
+    let fs = FactorSet::random(&t.dims, rank, 5);
+    for mode in 0..t.n_modes() {
+        let (a, _) = session.mttkrp(ours, &fs, mode).unwrap();
+        let (b, _) = session.mttkrp(parti, &fs, mode).unwrap();
+        for (i, (&x, &y)) in a.iter().zip(&b).enumerate() {
+            assert!(
+                (x - y).abs() <= 1e-2 * (1.0 + y.abs()),
+                "mode {mode} [{i}]: ours {x} vs parti {y}"
+            );
+        }
+    }
+    // the baseline tenant cannot decompose — typed error, session intact
+    assert!(matches!(
+        session.decompose(parti, &CpdConfig { rank, ..Default::default() }),
+        Err(Error::InvalidConfig(_))
+    ));
+    assert!(session.mttkrp(ours, &fs, 0).is_ok());
+}
