@@ -8,7 +8,14 @@
 //! curve and the paper's headline metric (total spMTTKRP time across all
 //! modes, per iteration). Recorded in EXPERIMENTS.md §E2E.
 //!
+//! Multi-tenant batch mode: `SPMTTKRP_E2E_TENANTS=N` (N > 1) prepares N
+//! tenants in one session and decomposes them with lock-step batched ALS
+//! (`Session::decompose_batch`) — every iteration's per-mode spMTTKRP is
+//! one pooled dispatch across all tenants; each tenant's fit curve is
+//! asserted non-decreasing exactly as in the single-tenant path.
+//!
 //!     cargo run --release --example cpd_e2e [-- native]
+//!     SPMTTKRP_E2E_TENANTS=4 cargo run --release --example cpd_e2e -- native
 
 use spmttkrp::prelude::*;
 use spmttkrp::util::human_bytes;
@@ -23,6 +30,11 @@ fn main() -> spmttkrp::Result<()> {
         .ok()
         .and_then(|s| s.parse().ok())
         .unwrap_or(10);
+    let tenants: usize = std::env::var("SPMTTKRP_E2E_TENANTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(1);
     let profile = synth::DatasetProfile::uber().scaled(scale);
     // planted rank-8 structure + 10% noise: the fit curve has something to
     // recover (decomposing pure noise would plateau near zero fit)
@@ -55,6 +67,55 @@ fn main() -> spmttkrp::Result<()> {
             copy.partitioning.scheme,
             engine.update_policy(d)
         );
+    }
+
+    if tenants > 1 {
+        // Multi-tenant batch mode: the remaining tenants reuse the same
+        // profile with distinct seeds, all prepared on the one pool.
+        let mut handles = vec![h];
+        for i in 1..tenants {
+            let extra = profile.generate_low_rank(42 + i as u64, 8, 0.1);
+            handles.push(session.prepare(&extra, &builder)?);
+        }
+        let cfgs: Vec<CpdConfig> = (0..tenants)
+            .map(|i| CpdConfig {
+                rank: 32,
+                max_iters,
+                tol: 1e-5,
+                damp: 1e-6,
+                seed: 7 + i as u64,
+            })
+            .collect();
+        let reqs: Vec<_> = handles.iter().copied().zip(cfgs.iter()).collect();
+        let t1 = std::time::Instant::now();
+        let results = session.decompose_batch(&reqs)?;
+        let wall = t1.elapsed();
+        println!("\ntenant   fit        iters   spMTTKRP-sim");
+        for (i, res) in results.iter().enumerate() {
+            // per-tenant modeled κ-SM time (report wall is the SHARED
+            // dispatch's clock, so only `sim` is meaningful per tenant)
+            let total: f64 = res.reports.iter().map(|r| r.total_sim().as_secs_f64()).sum();
+            println!(
+                "{:>6}   {:.6}   {:>5}   {:>9.2} ms",
+                i,
+                res.final_fit(),
+                res.iterations,
+                total * 1e3
+            );
+            if !res.fits.windows(2).all(|w| w[1] >= w[0] - 1e-3) {
+                return Err(Error::Numeric(format!(
+                    "tenant {i}: fit curve must be non-decreasing: {:?}",
+                    res.fits
+                )));
+            }
+        }
+        println!(
+            "\nbatched lock-step CPD for {tenants} tenants: wall {:.2}s \
+             (every iteration's per-mode spMTTKRP was one pooled dispatch)",
+            wall.as_secs_f64()
+        );
+        println!("e2e OK");
+        return Ok(());
     }
 
     let cpd_cfg = CpdConfig {

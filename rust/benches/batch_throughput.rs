@@ -1,0 +1,54 @@
+//! Bench: batched multi-tenant spMTTKRP throughput on one shared SmPool.
+//!
+//!     cargo bench --bench batch_throughput
+//!     SPMTTKRP_BENCH_SCALE=0.02 SPMTTKRP_BENCH_REPS=3 cargo bench ...
+//!
+//! The paper's tensors are *small*, so production traffic is many tensors
+//! in flight, not one big one. This bench measures what the batch layer
+//! buys: N tenants' per-mode partitions packed into one longest-first
+//! queue (`Session::mttkrp_batch`) versus the sequential baseline (each
+//! tenant's mode alone on the device, barrier between tenants). Both
+//! numbers come from the same measured per-partition costs, so the ratio
+//! isolates the scheduling win — idle-SM backfill — from machine noise.
+//! See DESIGN.md §4 row B-T.
+
+use spmttkrp::bench_support::{
+    batch_workload, bench_reps, bench_scale, print_table, time_sim_batch,
+};
+use spmttkrp::util::geomean;
+
+fn main() {
+    let rank = 16;
+    let kappa = 82;
+    let reps = bench_reps();
+    let scale = bench_scale();
+    println!("batch throughput bench: rank {rank}, κ {kappa}, reps {reps}, scale {scale}");
+    let mut rows = Vec::new();
+    let mut wins = Vec::new();
+    for n_tenants in [1usize, 2, 4, 8] {
+        let w = batch_workload(n_tenants, rank, kappa, scale);
+        let reqs = w.all_mode_requests();
+        let (packed, sequential) = time_sim_batch(reps, &w.session, &reqs);
+        let win = sequential.median / packed.median.max(1e-9);
+        if n_tenants > 1 {
+            wins.push(win);
+        }
+        rows.push(vec![
+            n_tenants.to_string(),
+            reqs.len().to_string(),
+            format!("{:.3}±{:.3}", sequential.median * 1e3, sequential.stddev * 1e3),
+            format!("{:.3}±{:.3}", packed.median * 1e3, packed.stddev * 1e3),
+            format!("{:.2}x", win),
+        ]);
+    }
+    print_table(
+        "Batched multi-tenant spMTTKRP — modeled κ-SM time in ms, sequential barrier vs packed",
+        &["tenants", "requests", "sequential", "packed", "win"],
+        &rows,
+    );
+    println!(
+        "\ngeomean packing win (≥2 tenants): {:.2}x on κ = {kappa} simulated SMs \
+         (longest-first cross-tenant backfill)",
+        geomean(&wins)
+    );
+}

@@ -1,0 +1,227 @@
+//! Batched multi-tenant serving: many prepared tensors' requests packed
+//! into single pool dispatches.
+//!
+//! A [`Session`] replays one tenant at a time through `mttkrp`/`decompose`
+//! — correct, but a small tensor's mode (few partitions, or skewed ones)
+//! leaves most of the simulated SM array parked while it runs. The batch
+//! entry points fix that at the session level:
+//!
+//! * [`Session::mttkrp_batch`] — N `(handle, mode, factors)` requests
+//!   flattened into one longest-first `(tenant, partition)` queue
+//!   (`exec::batch::BatchScheduler`) and drained by a single dispatch;
+//!   outputs, traffic counters and per-partition costs stay separated per
+//!   request and are **bitwise-identical** to sequential per-tenant calls.
+//! * [`Session::decompose_batch`] — lock-step CPD-ALS: every iteration's
+//!   per-mode spMTTKRP is one batched dispatch across all still-active
+//!   tenants, with each tenant's dense updates (Gram/solve/normalise/fit)
+//!   applied in its own sequential order, so fits and factors match the
+//!   sequential [`Session::decompose`] bit for bit (DESIGN.md §6, B1).
+//!
+//! Misuse is typed, never a panic, and always detected *before* the pool
+//! runs: empty batches and duplicate handles are
+//! [`InvalidConfig`](super::Error::InvalidConfig), foreign handles
+//! [`UnknownHandle`](super::Error::UnknownHandle), a bad mode or rank on
+//! any one request [`ShapeMismatch`](super::Error::ShapeMismatch) — and
+//! the pool stays reusable after every rejection.
+
+use std::time::Duration;
+
+use super::error::{bail_with, ensure_or};
+use super::session::{Session, TensorHandle};
+use super::Result;
+use crate::baselines::MttkrpExecutor;
+use crate::cpd::{AlsState, CpdConfig, CpdResult};
+use crate::exec::batch::{lpt_makespan, BatchScheduler};
+use crate::metrics::ModeExecReport;
+use crate::tensor::FactorSet;
+use crate::util::stats::Imbalance;
+
+/// Dispatch-level measurements of one batched MTTKRP call.
+#[derive(Clone, Debug)]
+pub struct BatchDispatchReport {
+    /// Wallclock of the single pooled dispatch.
+    pub wall: Duration,
+    /// Modeled κ-SM makespan of the packed longest-first schedule, with
+    /// κ = the largest tenant κ in the batch — "every tenant shares the
+    /// device that the biggest tenant alone would use".
+    pub sim_packed: Duration,
+    /// Σ of per-request makespans — what sequential replay costs on the
+    /// same device (each tenant alone, a barrier between tenants). The
+    /// batching win is `sim_sequential / sim_packed`.
+    pub sim_sequential: Duration,
+    /// `(tenant, partition)` items executed.
+    pub n_items: usize,
+}
+
+/// Result of [`Session::mttkrp_batch`]: per-request outputs and reports
+/// (request order), plus the dispatch-level report.
+#[derive(Debug)]
+pub struct MttkrpBatch {
+    /// `(I_mode, R)` row-major outputs, one per request.
+    pub outputs: Vec<Vec<f32>>,
+    /// Per-request mode reports. `traffic` is per-tenant and
+    /// bitwise-identical to a sequential call (invariant B1); `sim` and
+    /// `part_costs` are per-tenant but *measured*, so they vary with
+    /// machine noise like any timing; `wall` is the shared dispatch's
+    /// wallclock (there is no narrower per-tenant wall).
+    pub reports: Vec<ModeExecReport>,
+    pub dispatch: BatchDispatchReport,
+}
+
+impl Session {
+    /// spMTTKRP for many tenants in one pooled dispatch: all requests'
+    /// partitions are flattened into a single longest-first work queue, so
+    /// small tensors' partitions backfill workers that a one-tenant-at-a-
+    /// time replay would leave idle. A handle may appear under several
+    /// *different* modes (a batched all-modes sweep); the same `(handle,
+    /// mode)` twice is rejected.
+    ///
+    /// Per request, the output factors and the [`ModeExecReport`]'s
+    /// traffic counters are bitwise-identical to the sequential
+    /// [`Session::mttkrp`] — batching changes the schedule, never the
+    /// arithmetic (invariant B1).
+    pub fn mttkrp_batch(
+        &self,
+        reqs: &[(TensorHandle, usize, &FactorSet)],
+    ) -> Result<MttkrpBatch> {
+        ensure_or!(!reqs.is_empty(), InvalidConfig, "mttkrp_batch: empty batch");
+        for i in 0..reqs.len() {
+            for j in 0..i {
+                if reqs[i].0 == reqs[j].0 && reqs[i].1 == reqs[j].1 {
+                    bail_with!(
+                        InvalidConfig,
+                        "mttkrp_batch: requests {j} and {i} both name mode {} of the same \
+                         handle — a duplicate computes the same output twice",
+                        reqs[i].1
+                    );
+                }
+            }
+        }
+        // Resolve and validate every request before anything executes: a
+        // bad handle/mode/rank anywhere rejects the whole batch untouched.
+        let execs: Vec<&dyn MttkrpExecutor> = reqs
+            .iter()
+            .map(|&(h, _, _)| self.executor(h))
+            .collect::<Result<_>>()?;
+        let mut outs: Vec<Vec<f32>> = vec![Vec::new(); reqs.len()];
+        let mut accs = Vec::with_capacity(reqs.len());
+        for ((out, &(_, mode, factors)), ex) in outs.iter_mut().zip(reqs).zip(&execs) {
+            accs.push(ex.begin_mode(factors, mode, out)?);
+        }
+        let loads: Vec<Vec<u64>> = reqs
+            .iter()
+            .zip(&execs)
+            .map(|(&(_, mode, _), ex)| ex.partition_loads(mode))
+            .collect();
+
+        let sched = BatchScheduler::new(&loads);
+        let run = sched.run(self.pool(), &|w, tenant, z, tr| {
+            let (_, mode, factors) = reqs[tenant];
+            execs[tenant].replay_partition(w, mode, z, factors, &accs[tenant], tr)
+        })?;
+        for acc in accs {
+            acc.merge();
+        }
+
+        let reports: Vec<ModeExecReport> = run
+            .tenants
+            .iter()
+            .zip(reqs)
+            .zip(&loads)
+            .map(|((tr, &(_, mode, _)), ls)| tr.to_report(mode, run.wall, Imbalance::of(ls)))
+            .collect();
+        let kappa = loads.iter().map(|l| l.len()).max().unwrap_or(1);
+        let dispatch = BatchDispatchReport {
+            wall: run.wall,
+            sim_packed: lpt_makespan(&run.item_costs, kappa),
+            sim_sequential: reports.iter().map(|r| r.sim).sum(),
+            n_items: run.item_costs.len(),
+        };
+        Ok(MttkrpBatch {
+            outputs: outs,
+            reports,
+            dispatch,
+        })
+    }
+
+    /// CPD-ALS for many tenants in lock-step: for every iteration and
+    /// every mode position, all still-active tenants' spMTTKRPs run as
+    /// **one** batched dispatch on the shared pool, then each tenant's
+    /// dense updates and fit evaluation proceed exactly as in the
+    /// sequential driver. Tenants converge (or exhaust `max_iters`)
+    /// independently and drop out of later rounds.
+    ///
+    /// Every handle must have been prepared with
+    /// [`super::ExecutorKind::Ours`] (same contract as
+    /// [`Session::decompose`]); duplicate handles are rejected. Results —
+    /// fit trajectories, factors, weights, per-iteration reports' traffic
+    /// — are bitwise-identical to per-tenant [`Session::decompose`] calls.
+    pub fn decompose_batch(
+        &self,
+        reqs: &[(TensorHandle, &CpdConfig)],
+    ) -> Result<Vec<CpdResult>> {
+        ensure_or!(!reqs.is_empty(), InvalidConfig, "decompose_batch: empty batch");
+        for i in 0..reqs.len() {
+            for j in 0..i {
+                if reqs[i].0 == reqs[j].0 {
+                    bail_with!(
+                        InvalidConfig,
+                        "decompose_batch: requests {j} and {i} name the same handle — \
+                         one tensor cannot run two lock-step decompositions at once"
+                    );
+                }
+            }
+        }
+        // Resolve every tenant up front (typed errors before any work):
+        // UnknownHandle for foreign handles, InvalidConfig for baseline
+        // handles or rank mismatches, InvalidData for a zero tensor.
+        let mut states: Vec<AlsState<'_>> = Vec::with_capacity(reqs.len());
+        for &(h, cfg) in reqs {
+            let engine = self.engine(h)?;
+            let tensor = self.tensor(h)?;
+            states.push(AlsState::new(engine, tensor, cfg)?);
+        }
+        let max_modes = states.iter().map(|s| s.n_modes()).max().unwrap_or(0);
+
+        while states.iter().any(|s| !s.is_done()) {
+            for d in 0..max_modes {
+                // Tenants taking part in this mode position (the active
+                // set is stable for the whole round — `is_done` only
+                // changes at `end_iteration`).
+                let mut idxs = Vec::new();
+                let mut loads: Vec<Vec<u64>> = Vec::new();
+                let mut parts = Vec::new();
+                for (i, st) in states.iter_mut().enumerate() {
+                    if st.is_done() || d >= st.n_modes() {
+                        continue;
+                    }
+                    let (engine, factors, out) = st.mode_io(d);
+                    idxs.push(i);
+                    loads.push(engine.partition_loads(d));
+                    let acc = engine.begin_mode(factors, d, out)?;
+                    parts.push((engine, factors, acc));
+                }
+                if idxs.is_empty() {
+                    continue;
+                }
+                let sched = BatchScheduler::new(&loads);
+                let run = sched.run(self.pool(), &|w, tenant, z, tr| {
+                    let (engine, factors, acc) = &parts[tenant];
+                    engine.replay_partition(w, d, z, factors, acc, tr)
+                })?;
+                for (_, _, acc) in parts {
+                    acc.merge();
+                }
+                for (t, &i) in idxs.iter().enumerate() {
+                    let rep =
+                        run.tenants[t].to_report(d, run.wall, Imbalance::of(&loads[t]));
+                    states[i].apply_mode(d, rep)?;
+                }
+            }
+            for st in states.iter_mut().filter(|s| !s.is_done()) {
+                st.end_iteration()?;
+            }
+        }
+        Ok(states.into_iter().map(AlsState::finish).collect())
+    }
+}

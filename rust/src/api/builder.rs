@@ -167,12 +167,6 @@ impl ExecutorBuilder {
         self
     }
 
-    /// Lock shards backing `Global_Update` (engine only).
-    pub fn lock_shards(mut self, shards: usize) -> Self {
-        self.cfg.lock_shards = shards;
-        self
-    }
-
     /// Native block size `P` (must be even; PJRT takes `P` from the
     /// manifest instead).
     pub fn block_p(mut self, p: usize) -> Self {
@@ -217,11 +211,6 @@ impl ExecutorBuilder {
     pub fn validate(&self) -> Result<()> {
         ensure_or!(self.cfg.rank > 0, InvalidConfig, "rank must be > 0");
         ensure_or!(self.cfg.sm_count > 0, InvalidConfig, "sm_count (κ) must be > 0");
-        ensure_or!(
-            self.cfg.lock_shards > 0,
-            InvalidConfig,
-            "lock_shards must be > 0 (Global_Update needs at least one shard)"
-        );
         if self.pool.is_none() {
             ensure_or!(
                 self.cfg.threads > 0,
@@ -277,9 +266,23 @@ impl ExecutorBuilder {
         }
     }
 
+    /// Validate the tensor an executor is about to be prepared over. A
+    /// 0-nonzero tensor has no work to lay out: partitioning it would
+    /// silently produce κ empty plans whose every mode call returns zeros,
+    /// so it is rejected up front as data, not configuration.
+    fn validate_tensor(tensor: &SparseTensorCOO) -> Result<()> {
+        ensure_or!(
+            tensor.nnz() > 0,
+            InvalidData,
+            "tensor has 0 nonzeros: nothing to partition or execute"
+        );
+        Ok(())
+    }
+
     /// Build the configured executor as a trait object.
     pub fn build(&self, tensor: &SparseTensorCOO) -> Result<Box<dyn MttkrpExecutor>> {
         self.validate()?;
+        Self::validate_tensor(tensor)?;
         let kappa = self.cfg.sm_count;
         let rank = self.cfg.rank;
         Ok(match self.kind {
@@ -302,6 +305,7 @@ impl ExecutorBuilder {
     /// [`ExecutorKind::Ours`].
     pub fn build_engine(&self, tensor: &SparseTensorCOO) -> Result<Engine> {
         self.validate()?;
+        Self::validate_tensor(tensor)?;
         ensure_or!(
             self.kind == ExecutorKind::Ours,
             InvalidConfig,
@@ -359,13 +363,39 @@ mod tests {
         for b in [
             ExecutorBuilder::new().rank(0),
             ExecutorBuilder::new().sm_count(0),
-            ExecutorBuilder::new().lock_shards(0),
             ExecutorBuilder::new().threads(0),
             ExecutorBuilder::new().block_p(0),
             ExecutorBuilder::new().block_p(255), // odd
         ] {
             assert!(matches!(b.build(&t), Err(Error::InvalidConfig(_))));
         }
+    }
+
+    #[test]
+    fn zero_nonzero_tensor_is_invalid_data() {
+        let empty = SparseTensorCOO::new(
+            vec![4, 3, 2],
+            vec![Vec::new(), Vec::new(), Vec::new()],
+            Vec::new(),
+        )
+        .unwrap();
+        for kind in ExecutorKind::all() {
+            let err = ExecutorBuilder::new()
+                .kind(kind)
+                .sm_count(4)
+                .threads(1)
+                .rank(8)
+                .build(&empty)
+                .unwrap_err();
+            assert!(matches!(err, Error::InvalidData(_)), "{kind:?}: got {err}");
+        }
+        let err = ExecutorBuilder::new()
+            .sm_count(4)
+            .threads(1)
+            .rank(8)
+            .build_engine(&empty)
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidData(_)));
     }
 
     #[test]

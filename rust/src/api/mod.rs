@@ -12,14 +12,20 @@
 //!   then replay `mttkrp`/`mttkrp_into`/`decompose` through
 //!   [`TensorHandle`]s on one persistent pool. Handles never rebuild
 //!   plans.
+//! * [`Session::mttkrp_batch`] / [`Session::decompose_batch`] — batched
+//!   multi-tenant serving: many tenants' partitions packed into single
+//!   pool dispatches (longest-first across tensors), bitwise-identical to
+//!   sequential replay per tenant.
 //!
 //! The layer sits over `coordinator`/`baselines`/`cpd`/`exec` and is
 //! re-exported at the crate root and in [`crate::prelude`].
 
+pub mod batch;
 pub mod builder;
 pub mod error;
 pub mod session;
 
+pub use batch::{BatchDispatchReport, MttkrpBatch};
 pub use builder::{BackendKind, ExecutorBuilder, ExecutorKind};
 pub use error::{Error, Result};
 pub use session::{Session, TensorHandle};

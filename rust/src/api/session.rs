@@ -134,7 +134,10 @@ impl Session {
     /// cloning.
     ///
     /// A builder that names a *different* shared pool is rejected — the
-    /// session's invariant is one pool for all tenants.
+    /// session's invariant is one pool for all tenants. A tensor with 0
+    /// nonzeros is rejected with [`Error::InvalidData`]: there is nothing
+    /// to partition, and registering κ empty plans would silently serve
+    /// all-zero outputs forever.
     pub fn prepare(
         &mut self,
         tensor: &SparseTensorCOO,
@@ -304,6 +307,29 @@ mod tests {
         assert!(s.engine(h).is_err());
         // but mttkrp works fine on the same handle
         let fs = FactorSet::random(&t.dims, 8, 5);
+        assert!(s.mttkrp(h, &fs, 0).is_ok());
+    }
+
+    #[test]
+    fn prepare_on_a_zero_nonzero_tensor_is_invalid_data() {
+        let mut s = Session::new();
+        let empty = SparseTensorCOO::new(
+            vec![8, 8, 8],
+            vec![Vec::new(), Vec::new(), Vec::new()],
+            Vec::new(),
+        )
+        .unwrap();
+        for kind in [ExecutorKind::Ours, ExecutorKind::Parti] {
+            let err = s
+                .prepare(&empty, &ExecutorBuilder::new().kind(kind).rank(8).sm_count(4))
+                .unwrap_err();
+            assert!(matches!(err, Error::InvalidData(_)), "{kind:?}: got {err}");
+        }
+        // nothing was registered, and the session still serves real tensors
+        assert_eq!(s.n_prepared(), 0);
+        let t = tiny(9);
+        let h = s.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4)).unwrap();
+        let fs = FactorSet::random(&t.dims, 8, 1);
         assert!(s.mttkrp(h, &fs, 0).is_ok());
     }
 

@@ -14,19 +14,16 @@
 //! non-leading modes pay decode + scattered output + global atomics.
 //!
 //! Runs on the shared persistent [`SmPool`]; the equal-nnz chunk bounds
-//! and lock shards live in per-mode [`ModePlan`]s built at construction.
+//! live in per-mode [`ModePlan`]s built at construction.
 
 use std::sync::Arc;
 
 use super::MttkrpExecutor;
-use crate::api::error::ensure_or;
 use crate::api::Result;
-use crate::coordinator::shared::SharedRows;
-use crate::exec::{ModePlan, SmPool, UpdatePolicy, WorkspaceArena};
+use crate::exec::{ModeAccumulator, ModePlan, SmPool, UpdatePolicy, WorkspaceArena};
 use crate::format::blco::BlcoTensor;
-use crate::metrics::ModeExecReport;
+use crate::metrics::TrafficCounters;
 use crate::tensor::{FactorSet, SparseTensorCOO};
-use crate::util::stats::Imbalance;
 
 /// Per-worker scratch: the per-element contribution and the running
 /// same-output merge buffer.
@@ -78,7 +75,6 @@ impl BlcoExecutor {
                     bounds.clone(),
                     (0..n).filter(|&w| w != d).collect(),
                     12, // u64 key + f32 per decoded element
-                    64,
                 )
             })
             .collect();
@@ -98,13 +94,8 @@ impl BlcoExecutor {
     }
 
     fn chunk_loads(&self) -> Vec<u64> {
-        let plan = &self.plans[0];
-        (0..self.kappa)
-            .map(|z| {
-                let (lo, hi) = plan.partition(z);
-                (hi - lo) as u64
-            })
-            .collect()
+        // equal-nnz chunk bounds are identical across modes (single copy)
+        self.plans[0].bounds_loads()
     }
 }
 
@@ -117,83 +108,82 @@ impl MttkrpExecutor for BlcoExecutor {
         self.blco.dims.len()
     }
 
-    fn execute_mode(
-        &self,
-        factors: &FactorSet,
-        mode: usize,
-    ) -> Result<(Vec<f32>, ModeExecReport)> {
-        let mut out = Vec::new();
-        let rep = self.execute_mode_into(factors, mode, &mut out)?;
-        Ok((out, rep))
+    fn pool(&self) -> &Arc<SmPool> {
+        &self.pool
     }
 
-    fn execute_mode_into(
+    fn mode_kappa(&self, _mode: usize) -> usize {
+        self.kappa
+    }
+
+    fn partition_loads(&self, _mode: usize) -> Vec<u64> {
+        // the single linearized copy serves every mode: chunk loads are
+        // mode-independent
+        self.chunk_loads()
+    }
+
+    fn begin_mode<'o>(
         &self,
         factors: &FactorSet,
         mode: usize,
-        out: &mut Vec<f32>,
-    ) -> Result<ModeExecReport> {
+        out: &'o mut Vec<f32>,
+    ) -> Result<ModeAccumulator<'o>> {
+        super::validate_mode_request(self.name(), self.n_modes(), self.rank, factors, mode)?;
+        Ok(ModeAccumulator::new(out, &self.plans[mode]))
+    }
+
+    fn replay_partition(
+        &self,
+        worker: usize,
+        mode: usize,
+        z: usize,
+        factors: &FactorSet,
+        acc: &ModeAccumulator<'_>,
+        tr: &mut TrafficCounters,
+    ) -> Result<()> {
         let rank = self.rank;
-        ensure_or!(
-            mode < self.n_modes(),
-            ShapeMismatch,
-            "mode {mode} out of range ({} modes)",
-            self.n_modes()
-        );
-        ensure_or!(
-            factors.rank() == rank,
-            ShapeMismatch,
-            "factor rank {} != executor rank {rank}",
-            factors.rank()
-        );
         let plan = &self.plans[mode];
-        out.clear();
-        out.resize(plan.out_len(), 0.0);
-        let shared = SharedRows::new(out.as_mut_slice(), rank);
-        let run = self.pool.run_partitions(self.kappa, &|wk, z, tr| {
-            self.arena.with(wk, |ws| {
-                let (lo, hi) = plan.partition(z);
-                let mut run_idx: Option<usize> = None;
-                for f in lo..hi {
-                    let (b, e) =
-                        (self.flat[f].0 as usize, self.flat[f].1 as usize);
-                    // decode (BLCO's per-element extraction cost)
-                    tr.tensor_bytes_read += plan.elem_bytes;
-                    let idx = self.blco.coord(b, e, mode) as usize;
-                    ws.contrib.fill(self.blco.blocks[b].vals[e]);
-                    for &w in &plan.input_modes {
-                        let row = factors[w].row(self.blco.coord(b, e, w) as usize);
-                        tr.factor_bytes_read += (rank * 4) as u64;
+        let mut sink = acc.sink(z);
+        self.arena.with(worker, |ws| {
+            let (lo, hi) = plan.partition(z);
+            let mut run_idx: Option<usize> = None;
+            for f in lo..hi {
+                let (b, e) = (self.flat[f].0 as usize, self.flat[f].1 as usize);
+                // decode (BLCO's per-element extraction cost)
+                tr.tensor_bytes_read += plan.elem_bytes;
+                let idx = self.blco.coord(b, e, mode) as usize;
+                ws.contrib.fill(self.blco.blocks[b].vals[e]);
+                for &w in &plan.input_modes {
+                    let row = factors[w].row(self.blco.coord(b, e, w) as usize);
+                    tr.factor_bytes_read += (rank * 4) as u64;
+                    for r in 0..rank {
+                        ws.contrib[r] *= row[r];
+                    }
+                }
+                // warp-level conflict merge: coalesce consecutive
+                // same-row updates
+                match run_idx {
+                    Some(ri) if ri == idx => {
                         for r in 0..rank {
-                            ws.contrib[r] *= row[r];
+                            ws.run[r] += ws.contrib[r];
                         }
                     }
-                    // warp-level conflict merge: coalesce consecutive
-                    // same-row updates
-                    match run_idx {
-                        Some(ri) if ri == idx => {
-                            for r in 0..rank {
-                                ws.run[r] += ws.contrib[r];
-                            }
-                        }
-                        Some(ri) => {
-                            plan.push_row(&shared, ri, &ws.run, tr);
-                            ws.run.copy_from_slice(&ws.contrib);
-                            run_idx = Some(idx);
-                        }
-                        None => {
-                            ws.run.copy_from_slice(&ws.contrib);
-                            run_idx = Some(idx);
-                        }
+                    Some(ri) => {
+                        sink.push(ri, &ws.run, tr);
+                        ws.run.copy_from_slice(&ws.contrib);
+                        run_idx = Some(idx);
+                    }
+                    None => {
+                        ws.run.copy_from_slice(&ws.contrib);
+                        run_idx = Some(idx);
                     }
                 }
-                if let Some(ri) = run_idx {
-                    plan.push_row(&shared, ri, &ws.run, tr);
-                }
-                Ok(())
-            })
-        })?;
-        Ok(run.into_report(mode, Imbalance::of(&self.chunk_loads())))
+            }
+            if let Some(ri) = run_idx {
+                sink.push(ri, &ws.run, tr);
+            }
+            Ok(())
+        })
     }
 }
 

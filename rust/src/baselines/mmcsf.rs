@@ -21,14 +21,11 @@
 use std::sync::Arc;
 
 use super::MttkrpExecutor;
-use crate::api::error::ensure_or;
 use crate::api::Result;
-use crate::coordinator::shared::SharedRows;
-use crate::exec::{ModePlan, SmPool, UpdatePolicy, WorkspaceArena};
+use crate::exec::{ModeAccumulator, ModePlan, SmPool, UpdatePolicy, WorkspaceArena};
 use crate::format::csf::CsfTree;
-use crate::metrics::{ModeExecReport, TrafficCounters};
+use crate::metrics::TrafficCounters;
 use crate::tensor::{FactorSet, SparseTensorCOO};
-use crate::util::stats::Imbalance;
 
 /// Per-worker walk scratch: the root accumulator and one running vector
 /// per tree level.
@@ -78,7 +75,6 @@ impl MmCsfExecutor {
                     bounds,
                     (0..n).filter(|&w| w != d).collect(),
                     0, // traffic charged per CSF node, not per COO element
-                    1,
                 )
             })
             .collect();
@@ -176,58 +172,55 @@ impl MttkrpExecutor for MmCsfExecutor {
         self.trees.len()
     }
 
-    fn execute_mode(
-        &self,
-        factors: &FactorSet,
-        mode: usize,
-    ) -> Result<(Vec<f32>, ModeExecReport)> {
-        let mut out = Vec::new();
-        let rep = self.execute_mode_into(factors, mode, &mut out)?;
-        Ok((out, rep))
+    fn pool(&self) -> &Arc<SmPool> {
+        &self.pool
     }
 
-    fn execute_mode_into(
+    fn mode_kappa(&self, _mode: usize) -> usize {
+        self.kappa
+    }
+
+    fn partition_loads(&self, mode: usize) -> Vec<u64> {
+        self.chunk_loads(mode)
+    }
+
+    fn begin_mode<'o>(
         &self,
         factors: &FactorSet,
         mode: usize,
-        out: &mut Vec<f32>,
-    ) -> Result<ModeExecReport> {
+        out: &'o mut Vec<f32>,
+    ) -> Result<ModeAccumulator<'o>> {
+        super::validate_mode_request(self.name(), self.n_modes(), self.rank, factors, mode)?;
+        Ok(ModeAccumulator::new(out, &self.plans[mode]))
+    }
+
+    fn replay_partition(
+        &self,
+        worker: usize,
+        mode: usize,
+        z: usize,
+        factors: &FactorSet,
+        acc: &ModeAccumulator<'_>,
+        tr: &mut TrafficCounters,
+    ) -> Result<()> {
         let rank = self.rank;
-        ensure_or!(
-            mode < self.n_modes(),
-            ShapeMismatch,
-            "mode {mode} out of range ({} modes)",
-            self.n_modes()
-        );
-        ensure_or!(
-            factors.rank() == rank,
-            ShapeMismatch,
-            "factor rank {} != executor rank {rank}",
-            factors.rank()
-        );
         let tree = &self.trees[mode];
         let plan = &self.plans[mode];
-        out.clear();
-        out.resize(plan.out_len(), 0.0);
-        let shared = SharedRows::new(out.as_mut_slice(), rank);
-        let run = self.pool.run_partitions(self.kappa, &|w, z, tr| {
-            self.arena.with(w, |ws| {
-                let (lo, hi) = plan.partition(z);
-                for root in lo..hi {
-                    ws.acc.fill(0.0);
-                    walk(
-                        tree, factors, rank, 0, root, &mut ws.acc,
-                        &mut ws.levels, tr,
-                    );
-                    let idx = tree.levels[0].idx[root] as usize;
-                    // root rows are chunk-exclusive (a root appears once in
-                    // level 0), so the plan's Local policy applies
-                    plan.push_row(&shared, idx, &ws.acc, tr);
-                }
-                Ok(())
-            })
-        })?;
-        Ok(run.into_report(mode, Imbalance::of(&self.chunk_loads(mode))))
+        let mut sink = acc.sink(z);
+        self.arena.with(worker, |ws| {
+            let (lo, hi) = plan.partition(z);
+            for root in lo..hi {
+                ws.acc.fill(0.0);
+                walk(
+                    tree, factors, rank, 0, root, &mut ws.acc, &mut ws.levels, tr,
+                );
+                let idx = tree.levels[0].idx[root] as usize;
+                // root rows are chunk-exclusive (a root appears once in
+                // level 0), so the plan's Local policy applies
+                sink.push(idx, &ws.acc, tr);
+            }
+            Ok(())
+        })
     }
 }
 

@@ -1,4 +1,5 @@
-//! Baseline spMTTKRP implementations for Fig. 3.
+//! Baseline spMTTKRP implementations for Fig. 3, and the uniform executor
+//! interface shared with the paper's engine.
 //!
 //! Algorithmic re-implementations (not CUDA ports — DESIGN.md §5,
 //! substitution 3) of the three systems the paper compares against, all
@@ -15,7 +16,7 @@
 //! * [`blco_exec::BlcoExecutor`] — BLCO-like: one linearized copy for all
 //!   modes, per-element decode + global-atomic conflict resolution.
 //!
-//! The benches run "ours" (the [`Engine`]) and the baselines on the same
+//! The benches run "ours" (the `Engine`) and the baselines on the same
 //! native arithmetic so wallclock differences come from the *algorithms*
 //! (memory layout, synchronisation, balance), not from PJRT dispatch
 //! overhead; the PJRT-vs-native delta is measured separately in
@@ -29,40 +30,133 @@ pub use blco_exec::BlcoExecutor;
 pub use mmcsf::MmCsfExecutor;
 pub use parti::PartiExecutor;
 
+use std::sync::Arc;
+
+use crate::api::error::ensure_or;
 use crate::api::Result;
-use crate::coordinator::Engine;
-use crate::metrics::{ExecReport, ModeExecReport};
+use crate::exec::{ModeAccumulator, SmPool};
+use crate::metrics::{ExecReport, ModeExecReport, TrafficCounters};
 use crate::tensor::FactorSet;
+use crate::util::stats::Imbalance;
+
+/// The request validation every `begin_mode` implementation owes its
+/// callers (S2: misuse is a typed error, never a panic), in one place so
+/// no executor can silently miss a check: `mode` in range, a factor
+/// matrix for every mode, matching rank.
+pub(crate) fn validate_mode_request(
+    name: &str,
+    n_modes: usize,
+    rank: usize,
+    factors: &FactorSet,
+    mode: usize,
+) -> Result<()> {
+    ensure_or!(
+        mode < n_modes,
+        ShapeMismatch,
+        "mode {mode} out of range ({n_modes} modes)"
+    );
+    ensure_or!(
+        factors.n_modes() == n_modes,
+        ShapeMismatch,
+        "factor set has {} modes, '{name}' executor has {n_modes}",
+        factors.n_modes()
+    );
+    ensure_or!(
+        factors.rank() == rank,
+        ShapeMismatch,
+        "factor rank {} != '{name}' executor rank {rank}",
+        factors.rank()
+    );
+    Ok(())
+}
 
 /// Uniform interface over "ours" and every baseline. Construct
 /// implementations through [`crate::api::ExecutorBuilder`].
-pub trait MttkrpExecutor {
+///
+/// A mode execution is decomposed into three phases so the *same*
+/// per-partition code serves both the sequential path (the provided
+/// [`MttkrpExecutor::execute_mode_into`] recipe) and cross-tenant batching
+/// (`exec::batch::BatchScheduler`, driven by `api::Session::mttkrp_batch`):
+///
+/// 1. [`MttkrpExecutor::begin_mode`] — validate inputs and wrap the zeroed
+///    output in a [`ModeAccumulator`];
+/// 2. [`MttkrpExecutor::replay_partition`] — one partition's serial work
+///    (one simulated SM), pushed through the accumulator's per-partition
+///    sink;
+/// 3. [`ModeAccumulator::merge`] — fold staged `Global_Update` partials in
+///    partition order.
+///
+/// Because phase 2 is schedule-independent and phase 3 is ordered, replay
+/// is bitwise deterministic at any worker count, batched or not (DESIGN.md
+/// §6, invariant B1). `Sync` is a supertrait: partitions of one executor
+/// are replayed concurrently by pool workers.
+pub trait MttkrpExecutor: Sync {
     fn name(&self) -> &'static str;
+
+    fn n_modes(&self) -> usize;
+
+    /// The persistent pool this executor replays on.
+    fn pool(&self) -> &Arc<SmPool>;
+
+    /// Partition (simulated-SM) count for `mode`.
+    fn mode_kappa(&self, mode: usize) -> usize;
+
+    /// Per-partition nnz-load estimates for `mode` — the cost estimates
+    /// the batch queue orders by (longest-first) and the imbalance the
+    /// per-mode report summarises. `mode` must be in range.
+    fn partition_loads(&self, mode: usize) -> Vec<u64>;
+
+    /// Validate `factors`/`mode` against the prepared layout and set up
+    /// the mode's output accumulator over `out` (resized and zeroed).
+    fn begin_mode<'o>(
+        &self,
+        factors: &FactorSet,
+        mode: usize,
+        out: &'o mut Vec<f32>,
+    ) -> Result<ModeAccumulator<'o>>;
+
+    /// Replay partition `z` of `mode` — one simulated SM's serial work —
+    /// on pool worker `worker`, accumulating through `acc` and counting
+    /// into `traffic`. Inputs must have passed [`MttkrpExecutor::begin_mode`].
+    fn replay_partition(
+        &self,
+        worker: usize,
+        mode: usize,
+        z: usize,
+        factors: &FactorSet,
+        acc: &ModeAccumulator<'_>,
+        traffic: &mut TrafficCounters,
+    ) -> Result<()>;
 
     /// spMTTKRP along `mode`: returns the `(I_mode, R)` output row-major.
     fn execute_mode(
         &self,
         factors: &FactorSet,
         mode: usize,
-    ) -> Result<(Vec<f32>, ModeExecReport)>;
-
-    fn n_modes(&self) -> usize;
+    ) -> Result<(Vec<f32>, ModeExecReport)> {
+        let mut out = Vec::new();
+        let rep = self.execute_mode_into(factors, mode, &mut out)?;
+        Ok((out, rep))
+    }
 
     /// As [`MttkrpExecutor::execute_mode`], but reusing a caller-owned
     /// output buffer (resized and zeroed by the callee) — the replay path
-    /// for ALS loops and repeated-measurement benches, uniform over trait
-    /// objects. The default delegates to `execute_mode` and moves the
-    /// result; all in-tree executors override it with genuine buffer
-    /// reuse (no per-call output allocation).
+    /// for ALS loops and repeated-measurement benches. This provided
+    /// recipe (`begin_mode` → pooled partition drain → ordered merge) is
+    /// the one sequential code path every executor shares; the batch layer
+    /// runs the same phases with the drain interleaved across tenants.
     fn execute_mode_into(
         &self,
         factors: &FactorSet,
         mode: usize,
         out: &mut Vec<f32>,
     ) -> Result<ModeExecReport> {
-        let (o, rep) = self.execute_mode(factors, mode)?;
-        *out = o;
-        Ok(rep)
+        let acc = self.begin_mode(factors, mode, out)?;
+        let run = self.pool().run_partitions(self.mode_kappa(mode), &|w, z, tr| {
+            self.replay_partition(w, mode, z, factors, &acc, tr)
+        })?;
+        acc.merge();
+        Ok(run.into_report(mode, Imbalance::of(&self.partition_loads(mode))))
     }
 
     /// Total execution time across all modes (the paper's Fig. 3 metric:
@@ -87,32 +181,5 @@ pub trait MttkrpExecutor {
             modes.push(self.execute_mode_into(factors, d, out)?);
         }
         Ok(ExecReport { modes })
-    }
-}
-
-impl MttkrpExecutor for Engine {
-    fn name(&self) -> &'static str {
-        "ours"
-    }
-
-    fn execute_mode(
-        &self,
-        factors: &FactorSet,
-        mode: usize,
-    ) -> Result<(Vec<f32>, ModeExecReport)> {
-        self.mttkrp_mode(factors, mode)
-    }
-
-    fn execute_mode_into(
-        &self,
-        factors: &FactorSet,
-        mode: usize,
-        out: &mut Vec<f32>,
-    ) -> Result<ModeExecReport> {
-        self.mttkrp_mode_into(factors, mode, out)
-    }
-
-    fn n_modes(&self) -> usize {
-        Engine::n_modes(self)
     }
 }

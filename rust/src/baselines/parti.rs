@@ -10,20 +10,17 @@
 //!   nnz-balanced only as far as block population is uniform.
 //!
 //! Runs on the shared persistent [`SmPool`]: the round-robin chunk
-//! assignment and the per-mode [`ModePlan`]s (Global policy + lock shards)
-//! are built once at construction and replayed by every call.
+//! assignment and the per-mode [`ModePlan`]s (Global policy) are built
+//! once at construction and replayed by every call.
 
 use std::sync::Arc;
 
 use super::MttkrpExecutor;
-use crate::api::error::ensure_or;
 use crate::api::Result;
-use crate::coordinator::shared::SharedRows;
-use crate::exec::{ModePlan, SmPool, UpdatePolicy, WorkspaceArena};
+use crate::exec::{ModeAccumulator, ModePlan, SmPool, UpdatePolicy, WorkspaceArena};
 use crate::format::hicoo::HicooTensor;
-use crate::metrics::ModeExecReport;
+use crate::metrics::TrafficCounters;
 use crate::tensor::{FactorSet, SparseTensorCOO};
-use crate::util::stats::Imbalance;
 
 pub struct PartiExecutor {
     pub hicoo: HicooTensor,
@@ -32,7 +29,7 @@ pub struct PartiExecutor {
     /// Round-robin assignment: `chunks[z]` = block ids of SM-chunk z.
     chunks: Vec<Vec<u32>>,
     pool: Arc<SmPool>,
-    /// One plan per mode: Global policy, lock shards, traffic constants.
+    /// One plan per mode: Global policy, traffic constants.
     plans: Vec<ModePlan>,
     /// Per-worker rank-vector contribution scratch.
     arena: WorkspaceArena<Vec<f32>>,
@@ -65,7 +62,6 @@ impl PartiExecutor {
                     Vec::new(), // chunks are block lists, not contiguous ranges
                     (0..n).filter(|&w| w != d).collect(),
                     (n as u64) + 4, // compressed HiCOO element bytes
-                    64,
                 )
             })
             .collect();
@@ -102,61 +98,65 @@ impl MttkrpExecutor for PartiExecutor {
         self.hicoo.dims.len()
     }
 
-    fn execute_mode(
-        &self,
-        factors: &FactorSet,
-        mode: usize,
-    ) -> Result<(Vec<f32>, ModeExecReport)> {
-        let mut out = Vec::new();
-        let rep = self.execute_mode_into(factors, mode, &mut out)?;
-        Ok((out, rep))
+    fn pool(&self) -> &Arc<SmPool> {
+        &self.pool
     }
 
-    fn execute_mode_into(
+    fn mode_kappa(&self, _mode: usize) -> usize {
+        self.kappa
+    }
+
+    fn partition_loads(&self, _mode: usize) -> Vec<u64> {
+        // the single HiCOO copy serves every mode: chunk loads are
+        // mode-independent
+        self.chunk_loads()
+    }
+
+    fn begin_mode<'o>(
         &self,
         factors: &FactorSet,
         mode: usize,
-        out: &mut Vec<f32>,
-    ) -> Result<ModeExecReport> {
+        out: &'o mut Vec<f32>,
+    ) -> Result<ModeAccumulator<'o>> {
+        super::validate_mode_request(self.name(), self.n_modes(), self.rank, factors, mode)?;
+        Ok(ModeAccumulator::new(out, &self.plans[mode]))
+    }
+
+    fn replay_partition(
+        &self,
+        worker: usize,
+        mode: usize,
+        z: usize,
+        factors: &FactorSet,
+        acc: &ModeAccumulator<'_>,
+        tr: &mut TrafficCounters,
+    ) -> Result<()> {
         let rank = self.rank;
         let n = self.n_modes();
-        ensure_or!(mode < n, ShapeMismatch, "mode {mode} out of range ({n} modes)");
-        ensure_or!(
-            factors.rank() == rank,
-            ShapeMismatch,
-            "factor rank {} != executor rank {rank}",
-            factors.rank()
-        );
         let plan = &self.plans[mode];
-        out.clear();
-        out.resize(plan.out_len(), 0.0);
-        let shared = SharedRows::new(out.as_mut_slice(), rank);
-        let run = self.pool.run_partitions(self.kappa, &|wk, z, tr| {
-            self.arena.with(wk, |contrib| {
-                for &b in &self.chunks[z] {
-                    let blk = &self.hicoo.blocks[b as usize];
-                    // block header + compressed elements
-                    tr.tensor_bytes_read +=
-                        n as u64 * 4 + blk.nnz() as u64 * plan.elem_bytes;
-                    for e in 0..blk.nnz() {
-                        contrib.fill(blk.vals[e]);
-                        for &w in &plan.input_modes {
-                            let row = factors[w].row(blk.coord(e, w) as usize);
-                            for r in 0..rank {
-                                contrib[r] *= row[r];
-                            }
-                            tr.factor_bytes_read += (rank * 4) as u64;
+        let mut sink = acc.sink(z);
+        self.arena.with(worker, |contrib| {
+            for &b in &self.chunks[z] {
+                let blk = &self.hicoo.blocks[b as usize];
+                // block header + compressed elements
+                tr.tensor_bytes_read += n as u64 * 4 + blk.nnz() as u64 * plan.elem_bytes;
+                for e in 0..blk.nnz() {
+                    contrib.fill(blk.vals[e]);
+                    for &w in &plan.input_modes {
+                        let row = factors[w].row(blk.coord(e, w) as usize);
+                        for r in 0..rank {
+                            contrib[r] *= row[r];
                         }
-                        let idx = blk.coord(e, mode) as usize;
-                        plan.push_row(&shared, idx, contrib, tr);
-                        // per-nnz partial pushed to global memory
-                        tr.intermediate_bytes += (rank * 4) as u64;
+                        tr.factor_bytes_read += (rank * 4) as u64;
                     }
+                    let idx = blk.coord(e, mode) as usize;
+                    sink.push(idx, contrib, tr);
+                    // per-nnz partial pushed to global memory
+                    tr.intermediate_bytes += (rank * 4) as u64;
                 }
-                Ok(())
-            })
-        })?;
-        Ok(run.into_report(mode, Imbalance::of(&self.chunk_loads())))
+            }
+            Ok(())
+        })
     }
 }
 

@@ -13,13 +13,15 @@
 //!   [`Backend`] (the AOT Pallas kernel under PJRT, or the native mirror).
 //! * **`Local_Update`** → unsynchronised accumulation into output rows the
 //!   partition *owns* (Scheme 1 guarantees ownership).
-//! * **`Global_Update`** → sharded-lock accumulation (Scheme 2 rows may be
-//!   shared between partitions), counted as global atomics.
+//! * **`Global_Update`** → per-partition staged accumulation merged in
+//!   partition order (Scheme 2 rows may be shared between partitions),
+//!   counted as global atomics; deterministic at any worker count — see
+//!   `exec::accum` and DESIGN.md §6 invariant B1.
 //! * **Global barrier between modes** → each `mttkrp_mode` call blocks
 //!   until every pool worker has finished (Alg. 1 line 8).
 //!
 //! Everything a mode call needs that does not depend on the factor values
-//! — partition bounds, update policy, lock shards, traffic constants — is
+//! — partition bounds, update policy, traffic constants — is
 //! precomputed into a per-mode [`ModePlan`] at engine construction and
 //! reused across every call and ALS iteration; per-worker gather/compute
 //! scratch lives in a [`WorkspaceArena`], allocated once.
@@ -34,15 +36,14 @@ use std::sync::Arc;
 
 use crate::api::error::ensure_or;
 use crate::api::Result;
-use crate::exec::{ModePlan, SmPool, WorkspaceArena};
+use crate::baselines::MttkrpExecutor;
+use crate::exec::{ModeAccumulator, ModePlan, RowSink, SmPool, WorkspaceArena};
 use crate::format::mode_specific::ModeSpecificFormat;
 use crate::metrics::{ExecReport, ModeExecReport, TrafficCounters};
 use crate::partition::{LoadBalance, VertexAssign};
 use crate::runtime::Backend;
 use crate::tensor::factor::Factor;
 use crate::tensor::{FactorSet, SparseTensorCOO};
-use crate::util::stats::Imbalance;
-use shared::SharedRows;
 
 pub use crate::exec::UpdatePolicy;
 
@@ -66,8 +67,6 @@ pub struct EngineConfig {
     /// "no intermediate values to global memory" path). Disabling it is
     /// the `ablate_segreduce` baseline: one update per nonzero.
     pub use_seg_kernel: bool,
-    /// Lock shards for Global_Update.
-    pub lock_shards: usize,
     /// Fuse gather+compute+reduce into one register-resident loop when the
     /// backend supports it (native only — PJRT needs staged `(P, R)` block
     /// buffers). This *is* the paper's SM loop: rows multiplied as they
@@ -84,7 +83,6 @@ impl Default for EngineConfig {
             lb: LoadBalance::Adaptive,
             assign: VertexAssign::Cyclic,
             use_seg_kernel: true,
-            lock_shards: 64,
             fused: true,
         }
     }
@@ -183,7 +181,6 @@ impl Engine {
                     copy.partitioning.bounds.clone(),
                     (0..n).filter(|&w| w != d).collect(),
                     elem_bytes,
-                    config.lock_shards,
                 )
             })
             .collect();
@@ -238,37 +235,16 @@ impl Engine {
 
     /// As [`Engine::mttkrp_mode`], but reusing a caller-owned output
     /// buffer (resized and zeroed here) — the ALS hot loop allocates its
-    /// `(I_d, R)` outputs once and replays them every iteration.
+    /// `(I_d, R)` outputs once and replays them every iteration. This is
+    /// the trait recipe (`begin_mode` → pooled partition replay → ordered
+    /// merge), so sequential and batched execution share one code path.
     pub fn mttkrp_mode_into(
         &self,
         factors: &FactorSet,
         mode: usize,
         out: &mut Vec<f32>,
     ) -> Result<ModeExecReport> {
-        ensure_or!(
-            mode < self.n_modes(),
-            ShapeMismatch,
-            "mode {mode} out of range ({} modes)",
-            self.n_modes()
-        );
-        ensure_or!(
-            factors.rank() == self.config.rank,
-            ShapeMismatch,
-            "factor rank {} != engine rank {}",
-            factors.rank(),
-            self.config.rank
-        );
-        let plan = &self.plans[mode];
-        out.clear();
-        out.resize(plan.out_len(), 0.0);
-        let shared = SharedRows::new(out.as_mut_slice(), plan.rank);
-        let run = self.pool.run_partitions(plan.kappa, &|w, z, traffic| {
-            self.arena.with(w, |ws| {
-                self.run_partition(plan, z, ws, factors, &shared, traffic)
-            })
-        })?;
-        let copy = &self.format.copies[mode];
-        Ok(run.into_report(mode, Imbalance::of(&copy.partitioning.loads())))
+        MttkrpExecutor::execute_mode_into(self, factors, mode, out)
     }
 
     /// Alg. 1: spMTTKRP along every mode with a barrier in between.
@@ -303,7 +279,7 @@ impl Engine {
         z: usize,
         ws: &mut EngineWorkspace,
         factors: &FactorSet,
-        shared: &SharedRows,
+        sink: &mut RowSink<'_, '_>,
         traffic: &mut TrafficCounters,
     ) -> Result<()> {
         let (lo, hi) = plan.partition(z);
@@ -311,9 +287,9 @@ impl Engine {
             return Ok(());
         }
         if self.config.fused && self.backend.name() == "native" {
-            self.run_partition_fused(plan, z, ws, factors, shared, traffic)
+            self.run_partition_fused(plan, z, ws, factors, sink, traffic)
         } else {
-            self.run_partition_staged(plan, z, ws, factors, shared, traffic)
+            self.run_partition_staged(plan, z, ws, factors, sink, traffic)
         }
     }
 
@@ -325,7 +301,7 @@ impl Engine {
         z: usize,
         ws: &mut EngineWorkspace,
         factors: &FactorSet,
-        shared: &SharedRows,
+        sink: &mut RowSink<'_, '_>,
         traffic: &mut TrafficCounters,
     ) -> Result<()> {
         let copy = &self.format.copies[plan.mode];
@@ -390,7 +366,7 @@ impl Engine {
                         j += 1;
                     }
                     let row = &ws.lout[j * rank..(j + 1) * rank];
-                    plan.push_row(shared, idx as usize, row, traffic);
+                    sink.push(idx as usize, row, traffic);
                     i = j + 1;
                 }
             } else {
@@ -407,7 +383,7 @@ impl Engine {
                 // they are Alg. 2's per-nonzero Global_Updates.
                 for i in 0..take {
                     let row = &ws.lout[i * rank..(i + 1) * rank];
-                    plan.push_row(shared, out_col[t + i] as usize, row, traffic);
+                    sink.push(out_col[t + i] as usize, row, traffic);
                     if matches!(plan.policy, UpdatePolicy::Local) {
                         traffic.intermediate_bytes += (rank * 4) as u64;
                     }
@@ -431,7 +407,7 @@ impl Engine {
         z: usize,
         ws: &mut EngineWorkspace,
         factors: &FactorSet,
-        shared: &SharedRows,
+        sink: &mut RowSink<'_, '_>,
         traffic: &mut TrafficCounters,
     ) -> Result<()> {
         let copy = &self.format.copies[plan.mode];
@@ -453,13 +429,13 @@ impl Engine {
                         acc[r] += contrib[r];
                     }
                 }
-                plan.push_row(shared, seg.out_index as usize, acc, traffic);
+                sink.push(seg.out_index as usize, acc, traffic);
             }
         } else {
             let out_col = &tensor.inds[plan.mode];
             for t in lo..hi {
                 contribution(tensor, &plan.input_modes, factors, t, contrib);
-                plan.push_row(shared, out_col[t] as usize, contrib, traffic);
+                sink.push(out_col[t] as usize, contrib, traffic);
                 if matches!(plan.policy, UpdatePolicy::Local) {
                     // seg reduction disabled (ablation): partials spill
                     traffic.intermediate_bytes += (rank * 4) as u64;
@@ -584,6 +560,63 @@ impl Engine {
             stacked.extend_from_slice(g);
         }
         Ok(self.backend.weighted_gram(rank, n, &stacked, weights)? as f64)
+    }
+}
+
+/// The engine on the uniform executor interface. Lives here (not in
+/// `baselines`) because `begin_mode`/`replay_partition` reach into the
+/// engine's private plans and workspace arena.
+impl MttkrpExecutor for Engine {
+    fn name(&self) -> &'static str {
+        "ours"
+    }
+
+    fn n_modes(&self) -> usize {
+        Engine::n_modes(self)
+    }
+
+    fn pool(&self) -> &Arc<SmPool> {
+        Engine::pool(self)
+    }
+
+    fn mode_kappa(&self, mode: usize) -> usize {
+        self.plans[mode].kappa
+    }
+
+    fn partition_loads(&self, mode: usize) -> Vec<u64> {
+        self.format.copies[mode].partitioning.loads()
+    }
+
+    fn begin_mode<'o>(
+        &self,
+        factors: &FactorSet,
+        mode: usize,
+        out: &'o mut Vec<f32>,
+    ) -> Result<ModeAccumulator<'o>> {
+        crate::baselines::validate_mode_request(
+            self.name(),
+            self.n_modes(),
+            self.config.rank,
+            factors,
+            mode,
+        )?;
+        Ok(ModeAccumulator::new(out, &self.plans[mode]))
+    }
+
+    fn replay_partition(
+        &self,
+        worker: usize,
+        mode: usize,
+        z: usize,
+        factors: &FactorSet,
+        acc: &ModeAccumulator<'_>,
+        traffic: &mut TrafficCounters,
+    ) -> Result<()> {
+        let plan = &self.plans[mode];
+        let mut sink = acc.sink(z);
+        self.arena.with(worker, |ws| {
+            self.run_partition(plan, z, ws, factors, &mut sink, traffic)
+        })
     }
 }
 

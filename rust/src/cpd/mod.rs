@@ -13,7 +13,7 @@
 use crate::api::error::ensure_or;
 use crate::api::Result;
 use crate::coordinator::Engine;
-use crate::metrics::ExecReport;
+use crate::metrics::{ExecReport, ModeExecReport};
 use crate::tensor::{FactorSet, SparseTensorCOO};
 
 #[derive(Clone, Debug)]
@@ -58,90 +58,187 @@ impl CpdResult {
     }
 }
 
-/// Run CPD-ALS on `tensor` using `engine` (which must have been built over
-/// the same tensor with `rank == cfg.rank`).
-pub fn als(engine: &Engine, tensor: &SparseTensorCOO, cfg: &CpdConfig) -> Result<CpdResult> {
-    ensure_or!(
-        engine.config.rank == cfg.rank,
-        InvalidConfig,
-        "engine rank {} != CPD rank {}",
-        engine.config.rank,
-        cfg.rank
-    );
-    let n = tensor.n_modes();
-    let rank = cfg.rank;
-    let mut factors = FactorSet::random(&tensor.dims, rank, cfg.seed);
-    let norm_x_sq = tensor.norm_sq();
-    ensure_or!(norm_x_sq > 0.0, InvalidData, "zero tensor");
+/// One tenant's ALS iteration state, stepped mode by mode.
+///
+/// This is `als` opened up so a lock-step batch driver
+/// (`api::Session::decompose_batch`) can interleave many tenants'
+/// iterations: for each mode position the driver runs every tenant's
+/// spMTTKRP in **one** batched dispatch, then calls
+/// [`AlsState::apply_mode`] per tenant for the dense updates, and
+/// [`AlsState::end_iteration`] after each full sweep. The sequential
+/// [`als`] drives the *same* state machine one tenant at a time, so a
+/// tenant's arithmetic — and therefore its factors, fits and counters —
+/// is identical either way (DESIGN.md §6, invariant B1).
+pub(crate) struct AlsState<'a> {
+    engine: &'a Engine,
+    tensor: &'a SparseTensorCOO,
+    cfg: CpdConfig,
+    factors: FactorSet,
+    /// Cached Gram matrices, refreshed after each factor update.
+    grams: Vec<Vec<f32>>,
+    weights: Vec<f64>,
+    fits: Vec<f64>,
+    reports: Vec<ExecReport>,
+    /// Per-mode reports of the sweep in progress.
+    sweep: Vec<ModeExecReport>,
+    /// Per-mode `(I_d, R)` MTTKRP outputs, allocated once and replayed
+    /// every iteration (the engine's pool + plans are likewise persistent
+    /// — the whole ALS run executes on one set of workers).
+    mttkrp_out: Vec<Vec<f32>>,
+    norm_x_sq: f64,
+    iters_run: usize,
+    done: bool,
+}
 
-    // Cached Gram matrices, refreshed after each factor update.
-    let mut grams: Vec<Vec<f32>> = factors
-        .factors
-        .iter()
-        .map(|f| engine.gram(f))
-        .collect::<Result<_>>()?;
+impl<'a> AlsState<'a> {
+    pub(crate) fn new(
+        engine: &'a Engine,
+        tensor: &'a SparseTensorCOO,
+        cfg: &CpdConfig,
+    ) -> Result<AlsState<'a>> {
+        ensure_or!(
+            engine.config.rank == cfg.rank,
+            InvalidConfig,
+            "engine rank {} != CPD rank {}",
+            engine.config.rank,
+            cfg.rank
+        );
+        let n = tensor.n_modes();
+        let rank = cfg.rank;
+        let factors = FactorSet::random(&tensor.dims, rank, cfg.seed);
+        let norm_x_sq = tensor.norm_sq();
+        ensure_or!(norm_x_sq > 0.0, InvalidData, "zero tensor");
+        let grams: Vec<Vec<f32>> = factors
+            .factors
+            .iter()
+            .map(|f| engine.gram(f))
+            .collect::<Result<_>>()?;
+        Ok(AlsState {
+            engine,
+            tensor,
+            cfg: cfg.clone(),
+            factors,
+            grams,
+            weights: vec![1.0f64; rank],
+            fits: Vec::new(),
+            reports: Vec::new(),
+            sweep: Vec::with_capacity(n),
+            mttkrp_out: vec![Vec::new(); n],
+            norm_x_sq,
+            iters_run: 0,
+            done: cfg.max_iters == 0,
+        })
+    }
 
-    let mut fits = Vec::new();
-    let mut reports = Vec::new();
-    let mut weights = vec![1.0f64; rank];
-    // Per-mode `(I_d, R)` MTTKRP outputs, allocated once and replayed
-    // every iteration (the engine's pool + plans are likewise persistent —
-    // the whole ALS run executes on one set of workers).
-    let mut mttkrp_out: Vec<Vec<f32>> = vec![Vec::new(); n];
-    for _iter in 0..cfg.max_iters {
-        let mut sweep = Vec::with_capacity(n);
-        for d in 0..n {
-            let rep = engine.mttkrp_mode_into(&factors, d, &mut mttkrp_out[d])?;
-            sweep.push(rep);
-            // V = hadamard of the *other* modes' Grams (borrowed, not
-            // cloned — the Gram cache is read-only here).
-            let others: Vec<&[f32]> = (0..n)
-                .filter(|&w| w != d)
-                .map(|w| grams[w].as_slice())
-                .collect();
-            let v = engine.hadamard(&others, cfg.damp)?;
-            let rows = tensor.dims[d] as usize;
-            let y = engine.solve(&v, &mttkrp_out[d], rows)?;
-            factors[d].data = y;
-            let lam = factors[d].normalize_columns();
-            if d == n - 1 {
-                weights = lam;
-            }
-            grams[d] = engine.gram(&factors[d])?;
+    pub(crate) fn n_modes(&self) -> usize {
+        self.tensor.n_modes()
+    }
+
+    /// Converged or out of iterations — no further sweeps will run.
+    pub(crate) fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Split borrows for one batched MTTKRP of mode `d`: the engine, the
+    /// current factors (input), and the reusable mode-`d` output buffer.
+    pub(crate) fn mode_io(&mut self, d: usize) -> (&'a Engine, &FactorSet, &mut Vec<f32>) {
+        (self.engine, &self.factors, &mut self.mttkrp_out[d])
+    }
+
+    /// Sequential step: run mode `d`'s spMTTKRP on the engine, then the
+    /// dense updates.
+    fn step_mode(&mut self, d: usize) -> Result<()> {
+        let rep = self
+            .engine
+            .mttkrp_mode_into(&self.factors, d, &mut self.mttkrp_out[d])?;
+        self.apply_mode(d, rep)
+    }
+
+    /// Dense ALS updates for mode `d`, after `mttkrp_out[d]` was computed
+    /// (sequentially or as part of a batched dispatch): form `V` from the
+    /// other modes' Grams, solve, re-normalise, refresh mode `d`'s Gram.
+    pub(crate) fn apply_mode(&mut self, d: usize, rep: ModeExecReport) -> Result<()> {
+        let n = self.n_modes();
+        self.sweep.push(rep);
+        // V = hadamard of the *other* modes' Grams (borrowed, not
+        // cloned — the Gram cache is read-only here).
+        let others: Vec<&[f32]> = (0..n)
+            .filter(|&w| w != d)
+            .map(|w| self.grams[w].as_slice())
+            .collect();
+        let v = self.engine.hadamard(&others, self.cfg.damp)?;
+        let rows = self.tensor.dims[d] as usize;
+        let y = self.engine.solve(&v, &self.mttkrp_out[d], rows)?;
+        self.factors[d].data = y;
+        let lam = self.factors[d].normalize_columns();
+        if d == n - 1 {
+            self.weights = lam;
         }
-        reports.push(ExecReport { modes: sweep });
+        self.grams[d] = self.engine.gram(&self.factors[d])?;
+        Ok(())
+    }
+
+    /// Close a full sweep: record its reports, evaluate the matrix-free
+    /// fit, and decide convergence (tolerance or iteration budget).
+    pub(crate) fn end_iteration(&mut self) -> Result<()> {
+        let n = self.n_modes();
+        let rank = self.cfg.rank;
+        self.reports.push(ExecReport {
+            modes: std::mem::take(&mut self.sweep),
+        });
 
         // Matrix-free fit from the mode-(n-1) MTTKRP result.
-        let w32: Vec<f32> = weights.iter().map(|&w| w as f32).collect();
-        let gram_refs: Vec<&[f32]> = grams.iter().map(|g| g.as_slice()).collect();
-        let norm_model_sq = engine.weighted_gram(&gram_refs, &w32)?;
+        let w32: Vec<f32> = self.weights.iter().map(|&w| w as f32).collect();
+        let gram_refs: Vec<&[f32]> = self.grams.iter().map(|g| g.as_slice()).collect();
+        let norm_model_sq = self.engine.weighted_gram(&gram_refs, &w32)?;
         // <X, Xhat> = sum(M_last ⊙ (Y_last * lambda))
-        let y_last = &factors[n - 1];
+        let y_last = &self.factors[n - 1];
         let mut y_weighted = vec![0.0f32; y_last.data.len()];
         for i in 0..y_last.rows {
             for r in 0..rank {
                 y_weighted[i * rank + r] =
-                    (y_last.data[i * rank + r] as f64 * weights[r]) as f32;
+                    (y_last.data[i * rank + r] as f64 * self.weights[r]) as f32;
             }
         }
-        let inner = engine.inner(&mttkrp_out[n - 1], &y_weighted)?;
-        let resid_sq = (norm_x_sq + norm_model_sq - 2.0 * inner).max(0.0);
-        let fit = 1.0 - resid_sq.sqrt() / norm_x_sq.sqrt();
-        let prev = fits.last().copied();
-        fits.push(fit);
+        let inner = self.engine.inner(&self.mttkrp_out[n - 1], &y_weighted)?;
+        let resid_sq = (self.norm_x_sq + norm_model_sq - 2.0 * inner).max(0.0);
+        let fit = 1.0 - resid_sq.sqrt() / self.norm_x_sq.sqrt();
+        let prev = self.fits.last().copied();
+        self.fits.push(fit);
+        self.iters_run += 1;
         if let Some(p) = prev {
-            if (fit - p).abs() < cfg.tol {
-                break;
+            if (fit - p).abs() < self.cfg.tol {
+                self.done = true;
             }
+        }
+        if self.iters_run >= self.cfg.max_iters {
+            self.done = true;
+        }
+        Ok(())
+    }
+
+    pub(crate) fn finish(self) -> CpdResult {
+        CpdResult {
+            iterations: self.fits.len(),
+            factors: self.factors,
+            weights: self.weights,
+            fits: self.fits,
+            reports: self.reports,
         }
     }
-    Ok(CpdResult {
-        iterations: fits.len(),
-        factors,
-        weights,
-        fits,
-        reports,
-    })
+}
+
+/// Run CPD-ALS on `tensor` using `engine` (which must have been built over
+/// the same tensor with `rank == cfg.rank`).
+pub fn als(engine: &Engine, tensor: &SparseTensorCOO, cfg: &CpdConfig) -> Result<CpdResult> {
+    let mut state = AlsState::new(engine, tensor, cfg)?;
+    while !state.is_done() {
+        for d in 0..state.n_modes() {
+            state.step_mode(d)?;
+        }
+        state.end_iteration()?;
+    }
+    Ok(state.finish())
 }
 
 #[cfg(test)]

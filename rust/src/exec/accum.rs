@@ -1,0 +1,300 @@
+//! Deterministic output accumulation for one mode execution.
+//!
+//! The paper's two update disciplines map onto one `(I_d, R)` output
+//! buffer:
+//!
+//! * `Local_Update` (Scheme 1): every output row is owned by exactly one
+//!   partition, so workers write straight through — exclusive by
+//!   construction, and bitwise deterministic because each row's additions
+//!   all come from one partition's serial loop.
+//! * `Global_Update` (Scheme 2 / baseline conflict resolution): a row may
+//!   be touched by several partitions. A GPU resolves this with
+//!   `atomicAdd` in arrival order, which makes f32 results depend on the
+//!   thread schedule. This substrate instead **stages** each partition's
+//!   row-partials in a per-partition buffer and merges them into the
+//!   output *in partition order* after the parallel section — same update
+//!   counts (each staged push is still counted as `global_atomics`), but
+//!   the addition order is a pure function of the layout, never of OS
+//!   scheduling.
+//!
+//! That ordering guarantee is what DESIGN.md §6 invariant **B1** stands
+//! on: replaying a tenant's partitions — alone, or interleaved with other
+//! tenants' partitions by `exec::batch` — produces bitwise-identical
+//! outputs, because per-partition serial math and the z-ordered merge are
+//! both schedule-independent.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, MutexGuard};
+
+use crate::coordinator::shared::SharedRows;
+use crate::exec::{ModePlan, UpdatePolicy};
+use crate::metrics::TrafficCounters;
+
+/// One partition's staged `Global_Update` rows: one entry per **distinct**
+/// output index the partition touched, in first-push order. A push to the
+/// same index as the previous push accumulates in place without a lookup
+/// (the engine's Scheme-2 copies are sorted by output index, so that fast
+/// path covers them); a non-consecutive repeat is folded into its first
+/// occurrence through an index map. Memory is therefore bounded by the
+/// partition's *distinct* rows (≤ `I_d`), never by its nonzero count —
+/// ParTI's block order and BLCO's non-leading modes revisit rows
+/// arbitrarily, and a per-push entry would scale the stage with nnz.
+pub struct GlobalStage {
+    rank: usize,
+    /// Distinct output indices in first-push order (the merge order).
+    idxs: Vec<u32>,
+    /// Rank-strided row partials, parallel to `idxs`.
+    rows: Vec<f32>,
+    /// Output index → entry position, for non-consecutive repeats.
+    lookup: HashMap<u32, u32>,
+}
+
+impl GlobalStage {
+    fn new(rank: usize) -> GlobalStage {
+        GlobalStage {
+            rank,
+            idxs: Vec::new(),
+            rows: Vec::new(),
+            lookup: HashMap::new(),
+        }
+    }
+
+    /// Staged entries (distinct output rows pushed so far).
+    pub fn n_entries(&self) -> usize {
+        self.idxs.len()
+    }
+
+    #[inline]
+    fn accumulate(&mut self, entry: usize, row: &[f32]) {
+        let off = entry * self.rank;
+        for (a, &v) in self.rows[off..off + self.rank].iter_mut().zip(row) {
+            *a += v;
+        }
+    }
+
+    #[inline]
+    fn push(&mut self, idx: usize, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.rank);
+        let idx = idx as u32;
+        if self.idxs.last() == Some(&idx) {
+            self.accumulate(self.idxs.len() - 1, row);
+        } else if let Some(&entry) = self.lookup.get(&idx) {
+            self.accumulate(entry as usize, row);
+        } else {
+            self.lookup.insert(idx, self.idxs.len() as u32);
+            self.idxs.push(idx);
+            self.rows.extend_from_slice(row);
+        }
+    }
+}
+
+/// Where one partition's `push` calls land: straight into the shared
+/// output (Local policy) or into the partition's stage (Global policy).
+/// Obtained per partition from [`ModeAccumulator::sink`].
+pub enum RowSink<'s, 'a> {
+    /// `Local_Update`: exclusive direct writes into the shared output.
+    Local(&'s SharedRows<'a>),
+    /// `Global_Update`: partition-staged rows, merged in partition order
+    /// by [`ModeAccumulator::merge`].
+    Global(MutexGuard<'s, GlobalStage>),
+}
+
+impl RowSink<'_, '_> {
+    /// The single update primitive shared by all executors and both code
+    /// paths (`Local_Update` / `Global_Update`): `out[idx, :] += row`,
+    /// counted per the policy the sink was built from.
+    #[inline]
+    pub fn push(&mut self, idx: usize, row: &[f32], traffic: &mut TrafficCounters) {
+        let rank = row.len() as u64;
+        match self {
+            RowSink::Local(shared) => {
+                // SAFETY (exclusivity): Scheme-1 partitions own disjoint
+                // output indices (proptested in rust/tests/), and a single
+                // partition is processed by one worker at a time.
+                unsafe { shared.add_row_exclusive(idx, row) };
+                traffic.local_updates += rank;
+            }
+            RowSink::Global(stage) => {
+                stage.push(idx, row);
+                traffic.global_atomics += rank;
+            }
+        }
+        traffic.output_bytes_written += rank * 4;
+    }
+}
+
+/// The accumulation state of one mode execution: the zeroed `(I_d, R)`
+/// output viewed as [`SharedRows`], plus (under Global policy) one staged
+/// buffer per partition. Built by an executor's `begin_mode`, fed by
+/// `replay_partition` through per-partition [`RowSink`]s, and finalised by
+/// [`ModeAccumulator::merge`] once every partition has run.
+pub struct ModeAccumulator<'a> {
+    shared: SharedRows<'a>,
+    policy: UpdatePolicy,
+    rank: usize,
+    /// One stage per partition under Global policy; empty under Local.
+    stages: Vec<Mutex<GlobalStage>>,
+}
+
+impl<'a> ModeAccumulator<'a> {
+    /// Size + zero `out` for `plan` and wrap it. Under Global policy one
+    /// empty stage per partition is allocated here.
+    ///
+    /// Stages are deliberately per-*call*, not cached in the executor like
+    /// [`super::WorkspaceArena`] scratch: mode calls take `&self` and a
+    /// session may serve the same prepared mode from several threads at
+    /// once, so call-owned staging is what keeps concurrent replays
+    /// independent. The cost is bounded — a stage holds one entry per
+    /// *distinct* output row its partition touches (≤ `I_d`). For the
+    /// engine that is tiny (Global only arises under Scheme 2, `I_d < κ`);
+    /// ParTI/BLCO mark every mode Global, so their replays do pay per-call
+    /// stage growth plus a hash lookup per non-consecutive push — the
+    /// deterministic-replay price those baselines' nondeterministic
+    /// `atomicAdd` originals never paid. (A checkout/return pool of stage
+    /// buffers could amortise the allocation without giving up `&self`
+    /// concurrency, if baseline replay throughput ever matters.)
+    pub fn new(out: &'a mut Vec<f32>, plan: &ModePlan) -> ModeAccumulator<'a> {
+        out.clear();
+        out.resize(plan.out_len(), 0.0);
+        let shared = SharedRows::new(out.as_mut_slice(), plan.rank);
+        let stages = match plan.policy {
+            UpdatePolicy::Local => Vec::new(),
+            UpdatePolicy::Global => (0..plan.kappa)
+                .map(|_| Mutex::new(GlobalStage::new(plan.rank)))
+                .collect(),
+        };
+        ModeAccumulator {
+            shared,
+            policy: plan.policy,
+            rank: plan.rank,
+            stages,
+        }
+    }
+
+    /// The policy this accumulator was built for.
+    pub fn policy(&self) -> UpdatePolicy {
+        self.policy
+    }
+
+    /// The sink partition `z`'s replay must push through. Under Global
+    /// policy this locks partition `z`'s stage for the replay's duration
+    /// (uncontended: the pool hands each partition to exactly one worker;
+    /// a poisoned stage from a caught panic is recovered — it is rebuilt
+    /// from scratch on the retry's `begin_mode`).
+    pub fn sink(&self, z: usize) -> RowSink<'_, 'a> {
+        match self.policy {
+            UpdatePolicy::Local => RowSink::Local(&self.shared),
+            UpdatePolicy::Global => RowSink::Global(
+                self.stages[z].lock().unwrap_or_else(std::sync::PoisonError::into_inner),
+            ),
+        }
+    }
+
+    /// Fold every partition's staged rows into the output **in partition
+    /// order** — the deterministic rendering of `Global_Update`. Must be
+    /// called after the parallel section (single-threaded); a no-op under
+    /// Local policy.
+    pub fn merge(self) {
+        let ModeAccumulator {
+            shared,
+            rank,
+            stages,
+            ..
+        } = self;
+        for stage in stages {
+            let st = stage.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+            for (i, &idx) in st.idxs.iter().enumerate() {
+                let row = &st.rows[i * rank..(i + 1) * rank];
+                // SAFETY: the parallel section is over; this is the only
+                // thread touching the buffer.
+                unsafe { shared.add_row_exclusive(idx as usize, row) };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(policy: UpdatePolicy) -> ModePlan {
+        ModePlan::new(0, 2, 2, 4, policy, vec![0, 3, 6], vec![1, 2], 20)
+    }
+
+    #[test]
+    fn local_sink_writes_through_and_counts() {
+        let p = plan(UpdatePolicy::Local);
+        let mut buf = Vec::new();
+        let acc = ModeAccumulator::new(&mut buf, &p);
+        let mut tr = TrafficCounters::default();
+        acc.sink(0).push(1, &[1.0, 2.0], &mut tr);
+        acc.sink(1).push(1, &[0.5, 0.5], &mut tr);
+        acc.merge();
+        assert_eq!(&buf[2..4], &[1.5, 2.5]);
+        assert_eq!(tr.local_updates, 4);
+        assert_eq!(tr.global_atomics, 0);
+        assert_eq!(tr.output_bytes_written, 16);
+    }
+
+    #[test]
+    fn global_sink_stages_until_merge_and_counts() {
+        let p = plan(UpdatePolicy::Global);
+        let mut buf = Vec::new();
+        let acc = ModeAccumulator::new(&mut buf, &p);
+        let mut tr = TrafficCounters::default();
+        {
+            let mut sink = acc.sink(1);
+            sink.push(2, &[1.0, 1.0], &mut tr);
+            sink.push(2, &[2.0, 2.0], &mut tr); // consecutive: accumulated in place
+            sink.push(0, &[5.0, 5.0], &mut tr);
+        }
+        acc.sink(0).push(2, &[10.0, 10.0], &mut tr);
+        assert_eq!(tr.global_atomics, 8);
+        assert_eq!(tr.local_updates, 0);
+        acc.merge();
+        assert_eq!(&buf[4..6], &[13.0, 13.0]); // row 2: 1+2 (z=1) + 10 (z=0)
+        assert_eq!(&buf[0..2], &[5.0, 5.0]);
+    }
+
+    #[test]
+    fn global_merge_order_is_partition_order_not_arrival_order() {
+        // Two runs pushing partitions in opposite arrival orders must
+        // produce bitwise-identical outputs: the merge replays stages in
+        // z order regardless of which worker finished first.
+        let vals: [f32; 3] = [1.0e-7, 3.0e7, -3.0e7]; // order-sensitive in f32
+        let run = |order: [usize; 2]| -> Vec<f32> {
+            let p = plan(UpdatePolicy::Global);
+            let mut buf = Vec::new();
+            let acc = ModeAccumulator::new(&mut buf, &p);
+            let mut tr = TrafficCounters::default();
+            for &z in &order {
+                let mut sink = acc.sink(z);
+                if z == 0 {
+                    sink.push(3, &[vals[0], vals[0]], &mut tr);
+                } else {
+                    sink.push(3, &[vals[1], vals[1]], &mut tr);
+                    sink.push(1, &[vals[2], vals[2]], &mut tr);
+                }
+            }
+            acc.merge();
+            buf
+        };
+        let a = run([0, 1]);
+        let b = run([1, 0]);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn stage_folds_repeats_into_first_occurrence() {
+        let mut st = GlobalStage::new(1);
+        st.push(4, &[1.0]);
+        st.push(4, &[1.0]); // consecutive: fast path, no lookup
+        st.push(2, &[1.0]);
+        st.push(4, &[1.0]); // non-consecutive repeat: folded via the map
+        assert_eq!(st.n_entries(), 2, "memory is bounded by distinct rows");
+        assert_eq!(st.idxs, vec![4, 2]);
+        assert_eq!(st.rows, vec![3.0, 1.0]);
+    }
+}

@@ -1,0 +1,343 @@
+//! Cross-tenant batch dispatch: one work queue over many executors'
+//! partitions, drained by the shared [`SmPool`].
+//!
+//! The paper targets *small* tensors, so a single tenant often cannot keep
+//! a κ-SM device busy: a Scheme-2 mode with few partitions (or a Scheme-1
+//! mode whose partitions are skewed) leaves simulated SMs parked. The
+//! batch layer fixes that at the scheduling level — N prepared tenants'
+//! `(tenant, partition)` items are flattened into **one** queue, ordered
+//! longest-first by the per-partition load estimates already computed at
+//! layout time (the same LPT rule Graham's bound covers, now applied
+//! *across* tensors), and drained by a single pool dispatch so small
+//! tenants' partitions backfill workers that would otherwise idle.
+//!
+//! Traffic counters and per-partition costs stay separated per tenant
+//! ([`TenantRun`]); the per-partition math is byte-for-byte the same code
+//! the sequential path runs (`replay_partition` on the executor trait),
+//! and `Global_Update` staging merges in partition order either way, so a
+//! batched replay is bitwise-identical to a sequential one (DESIGN.md §6,
+//! invariant B1).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::api::{Error, Result};
+use crate::exec::SmPool;
+use crate::metrics::TrafficCounters;
+use crate::util::stats::Imbalance;
+
+/// One unit of batched work: partition `partition` of tenant `tenant`,
+/// with the layout-time load estimate the queue was ordered by.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchItem {
+    pub tenant: usize,
+    pub partition: usize,
+    /// Estimated cost (nnz assigned to the partition).
+    pub cost: u64,
+}
+
+/// Flatten per-tenant partition loads into one longest-first queue.
+/// Ordering is total — ties break on `(tenant, partition)` ascending — so
+/// the schedule is stable and reproducible.
+pub fn cost_ordered_queue(loads: &[Vec<u64>]) -> Vec<BatchItem> {
+    let mut items: Vec<BatchItem> = loads
+        .iter()
+        .enumerate()
+        .flat_map(|(t, ls)| {
+            ls.iter().enumerate().map(move |(z, &c)| BatchItem {
+                tenant: t,
+                partition: z,
+                cost: c,
+            })
+        })
+        .collect();
+    items.sort_by(|a, b| {
+        b.cost
+            .cmp(&a.cost)
+            .then(a.tenant.cmp(&b.tenant))
+            .then(a.partition.cmp(&b.partition))
+    });
+    items
+}
+
+/// Greedy list-schedule makespan: assign `costs` (already ordered — the
+/// batch queue is longest-first, i.e. LPT) to the least-loaded of `kappa`
+/// simulated SMs. This is the modeled κ-SM time of a packed batch, the
+/// quantity `sim_sequential / sim_packed` speedups compare against.
+pub fn lpt_makespan(costs: &[Duration], kappa: usize) -> Duration {
+    let mut sms = vec![Duration::ZERO; kappa.max(1)];
+    for &c in costs {
+        let z = (0..sms.len()).min_by_key(|&z| sms[z]).unwrap();
+        sms[z] += c;
+    }
+    sms.into_iter().max().unwrap_or_default()
+}
+
+/// One tenant's share of a batch dispatch: its merged traffic counters and
+/// per-partition simulated costs — the same quantities a sequential
+/// `run_partitions` call reports for that tenant alone.
+pub struct TenantRun {
+    pub traffic: TrafficCounters,
+    /// `len ==` the tenant's κ; entry `z` is partition `z`'s serial time
+    /// plus the modeled atomic penalty.
+    pub part_costs: Vec<Duration>,
+}
+
+impl TenantRun {
+    /// Assemble the standard per-mode report for this tenant. `wall` is
+    /// the whole batch dispatch's wallclock (tenants share the dispatch,
+    /// so there is no narrower per-tenant wall).
+    pub fn to_report(
+        &self,
+        mode: usize,
+        wall: Duration,
+        imbalance: Imbalance,
+    ) -> crate::metrics::ModeExecReport {
+        crate::metrics::ModeExecReport {
+            mode,
+            wall,
+            sim: crate::metrics::makespan(&self.part_costs),
+            part_costs: self.part_costs.clone(),
+            traffic: self.traffic,
+            imbalance,
+        }
+    }
+}
+
+/// Result of one [`BatchScheduler::run`]: per-tenant runs plus the
+/// dispatch-level measurements.
+pub struct BatchRun {
+    pub tenants: Vec<TenantRun>,
+    /// Wallclock of the single pooled dispatch.
+    pub wall: Duration,
+    /// Measured cost of each queue item, in queue (longest-first) order —
+    /// feed to [`lpt_makespan`] for the packed-schedule model.
+    pub item_costs: Vec<Duration>,
+}
+
+/// The cross-tensor scheduler: a cost-ordered queue of `(tenant,
+/// partition)` items over N tenants, dispatched through one [`SmPool`]
+/// with per-tenant accumulators (a `run_partitions`-style drain, but the
+/// shared counter walks the global queue instead of `0..κ`).
+pub struct BatchScheduler {
+    items: Vec<BatchItem>,
+    /// Per-tenant partition counts (`loads[t].len()`).
+    kappas: Vec<usize>,
+}
+
+impl BatchScheduler {
+    /// Build the longest-first queue from per-tenant partition loads
+    /// (tenant `t` has `loads[t].len()` partitions).
+    pub fn new(loads: &[Vec<u64>]) -> BatchScheduler {
+        BatchScheduler {
+            items: cost_ordered_queue(loads),
+            kappas: loads.iter().map(|l| l.len()).collect(),
+        }
+    }
+
+    /// The queue, longest-first.
+    pub fn items(&self) -> &[BatchItem] {
+        &self.items
+    }
+
+    pub fn n_tenants(&self) -> usize {
+        self.kappas.len()
+    }
+
+    /// Drain the queue through `pool`. `body(worker, tenant, partition,
+    /// traffic)` replays one partition of one tenant with that tenant's
+    /// worker-local counters; timing and the modeled global-atomic penalty
+    /// are collected per item exactly as `SmPool::run_partitions` does per
+    /// partition, then folded into per-tenant runs. On a body error the
+    /// erroring worker stops, the rest drain, and the first error is
+    /// returned — the pool stays reusable.
+    pub fn run(
+        &self,
+        pool: &SmPool,
+        body: &(dyn Fn(usize, usize, usize, &mut TrafficCounters) -> Result<()> + Sync),
+    ) -> Result<BatchRun> {
+        struct WorkerOut {
+            /// One counter set per tenant — the per-tenant separation.
+            traffic: Vec<TrafficCounters>,
+            /// `(queue_pos, serial_time, global_atomics)` per drained item.
+            costs: Vec<(usize, Duration, u64)>,
+            err: Option<Error>,
+        }
+        let n_tenants = self.kappas.len();
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<WorkerOut>> = (0..pool.n_workers())
+            .map(|_| {
+                Mutex::new(WorkerOut {
+                    traffic: vec![TrafficCounters::default(); n_tenants],
+                    costs: Vec::new(),
+                    err: None,
+                })
+            })
+            .collect();
+        let start = Instant::now();
+        if !self.items.is_empty() {
+            pool.run(&|w| {
+                let mut out = slots[w].lock().unwrap();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= self.items.len() {
+                        break;
+                    }
+                    let it = self.items[i];
+                    let before = out.traffic[it.tenant].global_atomics;
+                    let t0 = Instant::now();
+                    if let Err(e) = body(w, it.tenant, it.partition, &mut out.traffic[it.tenant])
+                    {
+                        out.err = Some(e);
+                        break;
+                    }
+                    let atomics = out.traffic[it.tenant].global_atomics - before;
+                    out.costs.push((i, t0.elapsed(), atomics));
+                }
+            });
+        }
+        let wall = start.elapsed();
+        let mut tenants: Vec<TenantRun> = self
+            .kappas
+            .iter()
+            .map(|&k| TenantRun {
+                traffic: TrafficCounters::default(),
+                part_costs: vec![Duration::ZERO; k],
+            })
+            .collect();
+        let mut item_costs = vec![Duration::ZERO; self.items.len()];
+        let penalty_ns = crate::metrics::global_atomic_penalty_ns();
+        for slot in slots {
+            let out = slot.into_inner().unwrap();
+            if let Some(e) = out.err {
+                return Err(e);
+            }
+            for (t, tr) in out.traffic.iter().enumerate() {
+                tenants[t].traffic.add(tr);
+            }
+            for (i, dur, atomics) in out.costs {
+                let penalty = Duration::from_nanos((atomics as f64 * penalty_ns) as u64);
+                let it = self.items[i];
+                tenants[it.tenant].part_costs[it.partition] = dur + penalty;
+                item_costs[i] = dur + penalty;
+            }
+        }
+        Ok(BatchRun {
+            tenants,
+            wall,
+            item_costs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::equal_bounds;
+
+    #[test]
+    fn queue_covers_every_tenant_partition_exactly_once() {
+        let loads = vec![vec![3, 0, 5], vec![7], vec![2, 2]];
+        let q = cost_ordered_queue(&loads);
+        assert_eq!(q.len(), 6);
+        let mut seen = std::collections::HashSet::new();
+        for it in &q {
+            assert!(seen.insert((it.tenant, it.partition)), "duplicate {it:?}");
+            assert_eq!(it.cost, loads[it.tenant][it.partition]);
+        }
+        for (t, ls) in loads.iter().enumerate() {
+            for z in 0..ls.len() {
+                assert!(seen.contains(&(t, z)), "missing ({t}, {z})");
+            }
+        }
+    }
+
+    #[test]
+    fn queue_is_longest_first_and_stable_under_ties() {
+        let loads = vec![vec![3, 3], vec![3, 5]];
+        let q = cost_ordered_queue(&loads);
+        let key: Vec<(usize, usize, u64)> =
+            q.iter().map(|i| (i.tenant, i.partition, i.cost)).collect();
+        // 5 first, then the three cost-3 items in (tenant, partition) order
+        assert_eq!(key, vec![(1, 1, 5), (0, 0, 3), (0, 1, 3), (1, 0, 3)]);
+        // identical input → identical queue (total order, no hidden state)
+        assert_eq!(q, cost_ordered_queue(&loads));
+    }
+
+    #[test]
+    fn queue_from_equal_bounds_loads() {
+        // the Scheme-2 splitting rule feeds the queue directly
+        let bounds = equal_bounds(10, 4);
+        let loads: Vec<u64> = bounds.windows(2).map(|w| (w[1] - w[0]) as u64).collect();
+        let q = cost_ordered_queue(&[loads.clone()]);
+        assert_eq!(q.len(), 4);
+        assert_eq!(q[0].cost, 3); // 10 = 3+3+2+2
+        assert_eq!(q.iter().map(|i| i.cost).sum::<u64>(), 10);
+    }
+
+    #[test]
+    fn more_workers_than_items_drains_without_deadlock() {
+        let pool = SmPool::new(8); // 8 workers, 3 items
+        let sched = BatchScheduler::new(&[vec![4, 1], vec![2]]);
+        let hits = std::sync::atomic::AtomicUsize::new(0);
+        let run = sched
+            .run(&pool, &|_w, t, z, tr| {
+                hits.fetch_add(1, Ordering::Relaxed);
+                tr.local_updates += (t * 10 + z) as u64 + 1;
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
+        assert_eq!(run.tenants.len(), 2);
+        assert_eq!(run.tenants[0].part_costs.len(), 2);
+        assert_eq!(run.tenants[1].part_costs.len(), 1);
+        // per-tenant counter separation: 1 + 2 for tenant 0, 11 for tenant 1
+        assert_eq!(run.tenants[0].traffic.local_updates, 3);
+        assert_eq!(run.tenants[1].traffic.local_updates, 11);
+        // the pool survives and is reusable for plain dispatches
+        let ok = pool.run_partitions(2, &|_w, _z, _tr| Ok(())).unwrap();
+        assert_eq!(ok.part_costs.len(), 2);
+    }
+
+    #[test]
+    fn errors_propagate_per_tenant_and_pool_survives() {
+        let pool = SmPool::new(2);
+        let sched = BatchScheduler::new(&[vec![1, 1], vec![1, 1]]);
+        let err = sched.run(&pool, &|_w, t, z, _tr| {
+            if t == 1 && z == 0 {
+                return Err(Error::Numeric("tenant 1 partition 0 exploded".into()));
+            }
+            Ok(())
+        });
+        assert!(matches!(err, Err(Error::Numeric(_))));
+        let again = sched.run(&pool, &|_w, _t, _z, _tr| Ok(())).unwrap();
+        assert_eq!(again.item_costs.len(), 4);
+    }
+
+    #[test]
+    fn empty_queue_is_a_no_op() {
+        let pool = SmPool::new(2);
+        let sched = BatchScheduler::new(&[]);
+        let run = sched.run(&pool, &|_w, _t, _z, _tr| Ok(())).unwrap();
+        assert!(run.tenants.is_empty());
+        assert!(run.item_costs.is_empty());
+    }
+
+    #[test]
+    fn lpt_makespan_packs_longest_first() {
+        let ms = |cs: &[u64], k| {
+            lpt_makespan(
+                &cs.iter().map(|&c| Duration::from_micros(c)).collect::<Vec<_>>(),
+                k,
+            )
+        };
+        // [4,3,3,2] on 2 SMs: 4+2 vs 3+3 → makespan 6
+        assert_eq!(ms(&[4, 3, 3, 2], 2), Duration::from_micros(6));
+        // one SM serialises everything
+        assert_eq!(ms(&[4, 3, 3, 2], 1), Duration::from_micros(12));
+        // more SMs than items: makespan = longest item
+        assert_eq!(ms(&[4, 3], 8), Duration::from_micros(4));
+        assert_eq!(ms(&[], 3), Duration::ZERO);
+    }
+}

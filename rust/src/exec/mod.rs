@@ -12,22 +12,34 @@
 //!   counter, and per-partition timing + the modeled global-atomic penalty
 //!   are collected centrally ([`SmPool::run_partitions`]).
 //! * [`ModePlan`] — the precomputed per-mode execution plan (partition
-//!   bounds, update policy, input-mode list, traffic constants, lock
-//!   shards) built at executor *construction* and reused across every mode
-//!   call and ALS iteration. Its [`ModePlan::push_row`] is the single
-//!   update primitive implementing `Local_Update` / `Global_Update`.
+//!   bounds, update policy, input-mode list, traffic constants) built at
+//!   executor *construction* and reused across every mode call and ALS
+//!   iteration.
+//! * [`ModeAccumulator`] / [`RowSink`] — deterministic output
+//!   accumulation: `Local_Update` writes through (rows are partition-
+//!   owned), `Global_Update` stages per-partition partials and merges them
+//!   in partition order, so replay is bitwise-reproducible at any worker
+//!   count. [`RowSink::push`] is the single update primitive.
 //! * [`WorkspaceArena`] — per-worker scratch slots allocated once per
 //!   executor, so gather/compute buffers are not re-allocated per call.
+//! * [`BatchScheduler`] — cross-tenant dispatch: N executors' `(tenant,
+//!   partition)` items flattened into one longest-first queue and drained
+//!   by a single pool dispatch with per-tenant accumulators, so small
+//!   tenants backfill simulated SMs that would otherwise idle.
 //!
 //! Executors differ only in layout, balance and synchronisation — the
 //! DESIGN.md "same substrate" claim is structural: `coordinator::Engine`,
 //! `baselines::{PartiExecutor, MmCsfExecutor, BlcoExecutor}` all run on
 //! one (optionally shared) `SmPool`.
 
+pub mod accum;
+pub mod batch;
 pub mod plan;
 pub mod pool;
 pub mod workspace;
 
+pub use accum::{GlobalStage, ModeAccumulator, RowSink};
+pub use batch::{cost_ordered_queue, lpt_makespan, BatchItem, BatchRun, BatchScheduler, TenantRun};
 pub use plan::{equal_bounds, ModePlan, UpdatePolicy};
 pub use pool::{PartitionRun, SmPool};
 pub use workspace::WorkspaceArena;

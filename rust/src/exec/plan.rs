@@ -3,11 +3,6 @@
 //! and replayed every call / ALS iteration (the paper builds its layout
 //! and partitioning once and reuses it for the decomposition's lifetime).
 
-use std::sync::Mutex;
-
-use crate::coordinator::shared::SharedRows;
-use crate::metrics::TrafficCounters;
-
 /// `κ + 1` offsets splitting `0..n` into κ near-equal contiguous chunks
 /// (the first `n % κ` chunks get one extra element). Shared by Scheme 2
 /// and the equal-count baselines so the splitting rule cannot diverge.
@@ -30,15 +25,19 @@ pub fn equal_bounds(n: usize, kappa: usize) -> Vec<usize> {
 pub enum UpdatePolicy {
     /// Rows owned by one partition — no cross-SM synchronisation.
     Local,
-    /// Rows may be shared — global (sharded-lock) accumulation.
+    /// Rows may be shared — staged accumulation merged in partition order
+    /// (the deterministic rendering of `Global_Update`; counted as global
+    /// atomics — see [`super::accum`]).
     Global,
 }
 
 /// The precomputed plan for executing one output mode: partition bounds,
-/// update policy, input-mode list, traffic constants, and the lock shards
-/// backing `Global_Update`. Segment-run boundaries live in the format's
-/// `ModeCopy::segments` (built once alongside the partitioning); the plan
-/// is the executable view over them, keyed by `mode`.
+/// update policy, input-mode list, and traffic constants. Segment-run
+/// boundaries live in the format's `ModeCopy::segments` (built once
+/// alongside the partitioning); the plan is the executable view over them,
+/// keyed by `mode`. The update primitive itself is
+/// [`super::accum::RowSink::push`], fed through a per-call
+/// [`super::accum::ModeAccumulator`] built over this plan.
 pub struct ModePlan {
     pub mode: usize,
     /// Partition (simulated-SM) count for this mode.
@@ -54,8 +53,6 @@ pub struct ModePlan {
     pub input_modes: Vec<usize>,
     /// Traffic constant: bytes per stored nonzero of this tensor.
     pub elem_bytes: u64,
-    /// Lock shards for `Global_Update`, allocated once per plan.
-    locks: Vec<Mutex<()>>,
 }
 
 impl ModePlan {
@@ -68,9 +65,8 @@ impl ModePlan {
         bounds: Vec<usize>,
         input_modes: Vec<usize>,
         elem_bytes: u64,
-        lock_shards: usize,
     ) -> ModePlan {
-        assert!(kappa > 0 && rank > 0 && lock_shards > 0);
+        assert!(kappa > 0 && rank > 0);
         assert!(bounds.is_empty() || bounds.len() == kappa + 1);
         ModePlan {
             mode,
@@ -81,7 +77,6 @@ impl ModePlan {
             bounds,
             input_modes,
             elem_bytes,
-            locks: (0..lock_shards).map(|_| Mutex::new(())).collect(),
         }
     }
 
@@ -96,39 +91,14 @@ impl ModePlan {
         (self.bounds[z], self.bounds[z + 1])
     }
 
-    /// The single update primitive shared by all executors and both code
-    /// paths (`Local_Update` / `Global_Update`): `out[idx, :] += row`,
-    /// counted per the policy.
-    #[inline]
-    pub fn push_row(
-        &self,
-        shared: &SharedRows,
-        idx: usize,
-        row: &[f32],
-        traffic: &mut TrafficCounters,
-    ) {
-        let rank = row.len();
-        match self.policy {
-            UpdatePolicy::Local => {
-                // SAFETY (exclusivity): Scheme-1 partitions own disjoint
-                // output indices (proptested in rust/tests/), and a single
-                // partition is processed by one worker at a time.
-                unsafe { shared.add_row_exclusive(idx, row) };
-                traffic.local_updates += rank as u64;
-            }
-            UpdatePolicy::Global => {
-                // a poisoned shard (panic in an earlier job) is recovered:
-                // the () payload carries no invariant
-                let _g = self.locks[idx % self.locks.len()]
-                    .lock()
-                    .unwrap_or_else(std::sync::PoisonError::into_inner);
-                // SAFETY: all writers of rows hashing to this shard hold
-                // the same lock.
-                unsafe { shared.add_row_exclusive(idx, row) };
-                traffic.global_atomics += rank as u64;
-            }
-        }
-        traffic.output_bytes_written += (rank * 4) as u64;
+    /// Per-partition nnz loads for contiguous plans — the per-partition
+    /// cost estimates the batch queue orders by and the imbalance reports
+    /// summarise. Executors with non-contiguous partitions provide their
+    /// own (`partition_loads` on the executor trait).
+    pub fn bounds_loads(&self) -> Vec<u64> {
+        (0..self.kappa)
+            .map(|z| (self.bounds[z + 1] - self.bounds[z]) as u64)
+            .collect()
     }
 }
 
@@ -137,7 +107,7 @@ mod tests {
     use super::*;
 
     fn plan(policy: UpdatePolicy) -> ModePlan {
-        ModePlan::new(0, 2, 2, 4, policy, vec![0, 3, 6], vec![1, 2], 20, 8)
+        ModePlan::new(0, 2, 2, 4, policy, vec![0, 3, 6], vec![1, 2], 20)
     }
 
     #[test]
@@ -146,6 +116,24 @@ mod tests {
         assert_eq!(equal_bounds(6, 3), vec![0, 2, 4, 6]);
         assert_eq!(equal_bounds(2, 4), vec![0, 1, 2, 2, 2]);
         assert_eq!(equal_bounds(0, 2), vec![0, 0, 0]);
+        assert_eq!(equal_bounds(5, 1), vec![0, 5]);
+    }
+
+    #[test]
+    fn equal_bounds_covers_and_balances_for_any_n_kappa() {
+        for n in [0usize, 1, 2, 7, 64, 1000] {
+            for kappa in [1usize, 2, 7, 82, 1500] {
+                let b = equal_bounds(n, kappa);
+                assert_eq!(b.len(), kappa + 1);
+                assert_eq!(b[0], 0);
+                assert_eq!(*b.last().unwrap(), n, "n={n} kappa={kappa}");
+                // monotone, and chunk sizes differ by at most 1
+                let sizes: Vec<usize> = b.windows(2).map(|w| w[1] - w[0]).collect();
+                let max = *sizes.iter().max().unwrap();
+                let min = *sizes.iter().min().unwrap();
+                assert!(max - min <= 1, "n={n} kappa={kappa}: {sizes:?}");
+            }
+        }
     }
 
     #[test]
@@ -157,20 +145,8 @@ mod tests {
     }
 
     #[test]
-    fn push_row_counts_local_vs_global() {
-        for (policy, want_local, want_global) in [
-            (UpdatePolicy::Local, 2u64, 0u64),
-            (UpdatePolicy::Global, 0, 2),
-        ] {
-            let p = plan(policy);
-            let mut buf = vec![0.0f32; p.out_len()];
-            let shared = SharedRows::new(&mut buf, p.rank);
-            let mut tr = TrafficCounters::default();
-            p.push_row(&shared, 1, &[1.0, 2.0], &mut tr);
-            assert_eq!(tr.local_updates, want_local);
-            assert_eq!(tr.global_atomics, want_global);
-            assert_eq!(tr.output_bytes_written, 8);
-            assert_eq!(&buf[2..4], &[1.0, 2.0]);
-        }
+    fn bounds_loads_are_partition_sizes() {
+        let p = plan(UpdatePolicy::Global);
+        assert_eq!(p.bounds_loads(), vec![3, 3]);
     }
 }

@@ -9,12 +9,12 @@
 //! modes).
 
 use std::any::Any;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use crate::api::{Error, Result};
+use crate::api::Result;
+use crate::exec::batch::BatchScheduler;
 use crate::metrics::TrafficCounters;
 use crate::util::stats::Imbalance;
 
@@ -133,64 +133,25 @@ impl SmPool {
     /// Execute one mode: drain partitions `0..kappa` (the simulated SMs)
     /// through the pool. `body(worker, z, traffic)` processes partition
     /// `z` with worker-local counters; timing and the modeled global-
-    /// atomic penalty per partition are collected here, so every executor
-    /// reports costs identically.
+    /// atomic penalty per partition are collected by the shared drain in
+    /// [`BatchScheduler::run`], so every executor — sequential or batched
+    /// — reports costs through ONE implementation of the cost model.
+    ///
+    /// This is exactly a single-tenant batch with uniform cost estimates:
+    /// the queue degenerates to partitions in ascending index order, the
+    /// drain this method always had.
     pub fn run_partitions(
         &self,
         kappa: usize,
         body: &(dyn Fn(usize, usize, &mut TrafficCounters) -> Result<()> + Sync),
     ) -> Result<PartitionRun> {
-        #[derive(Default)]
-        struct WorkerOut {
-            traffic: TrafficCounters,
-            costs: Vec<(usize, Duration, u64)>,
-            err: Option<Error>,
-        }
-        let next = AtomicUsize::new(0);
-        let slots: Vec<Mutex<WorkerOut>> =
-            (0..self.workers).map(|_| Mutex::new(WorkerOut::default())).collect();
-        let start = Instant::now();
-        self.run(&|w| {
-            let mut out = slots[w].lock().unwrap();
-            loop {
-                let z = next.fetch_add(1, Ordering::Relaxed);
-                if z >= kappa {
-                    break;
-                }
-                let before_atomics = out.traffic.global_atomics;
-                let t0 = Instant::now();
-                if let Err(e) = body(w, z, &mut out.traffic) {
-                    // This worker stops; others keep draining (matches the
-                    // old per-call thread-scope behaviour).
-                    out.err = Some(e);
-                    break;
-                }
-                let atomics = out.traffic.global_atomics - before_atomics;
-                out.costs.push((z, t0.elapsed(), atomics));
-            }
-        });
-        let wall = start.elapsed();
-        let mut traffic = TrafficCounters::default();
-        let mut part_costs = vec![Duration::ZERO; kappa];
-        let penalty_ns = crate::metrics::global_atomic_penalty_ns();
-        for slot in slots {
-            let out = slot.into_inner().unwrap();
-            if let Some(e) = out.err {
-                return Err(e);
-            }
-            traffic.add(&out.traffic);
-            for (z, dur, atomics) in out.costs {
-                // simulated SM cost: measured serial time + modeled global
-                // atomic penalty (local updates are L1-resident, free)
-                let penalty =
-                    Duration::from_nanos((atomics as f64 * penalty_ns) as u64);
-                part_costs[z] = dur + penalty;
-            }
-        }
+        let sched = BatchScheduler::new(&[vec![0u64; kappa]]);
+        let run = sched.run(self, &|w, _tenant, z, tr| body(w, z, tr))?;
+        let tenant = run.tenants.into_iter().next().expect("single-tenant batch");
         Ok(PartitionRun {
-            traffic,
-            part_costs,
-            wall,
+            traffic: tenant.traffic,
+            part_costs: tenant.part_costs,
+            wall: run.wall,
         })
     }
 }
@@ -270,7 +231,10 @@ impl PartitionRun {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
     use super::*;
+    use crate::api::Error;
 
     #[test]
     fn every_partition_processed_exactly_once() {

@@ -59,7 +59,10 @@ pub mod runtime;
 pub mod tensor;
 pub mod util;
 
-pub use api::{BackendKind, Error, ExecutorBuilder, ExecutorKind, Result, Session, TensorHandle};
+pub use api::{
+    BackendKind, BatchDispatchReport, Error, ExecutorBuilder, ExecutorKind, MttkrpBatch, Result,
+    Session, TensorHandle,
+};
 
 /// Most-used types, re-exported for `use spmttkrp::prelude::*`.
 ///
@@ -68,7 +71,8 @@ pub use api::{BackendKind, Error, ExecutorBuilder, ExecutorKind, Result, Session
 /// executor trait, the engine and CPD types, and the tensor substrate.
 pub mod prelude {
     pub use crate::api::{
-        BackendKind, Error, ExecutorBuilder, ExecutorKind, Result, Session, TensorHandle,
+        BackendKind, BatchDispatchReport, Error, ExecutorBuilder, ExecutorKind, MttkrpBatch,
+        Result, Session, TensorHandle,
     };
     pub use crate::baselines::MttkrpExecutor;
     pub use crate::coordinator::{Engine, EngineConfig, UpdatePolicy};

@@ -1,0 +1,328 @@
+//! The property-test harness pinning the batch layer (DESIGN.md §6,
+//! invariant B1):
+//!
+//!   * `Session::mttkrp_batch` over randomized multi-tenant batches is
+//!     **bitwise-equal** to sequential per-tenant `mttkrp` — output
+//!     factors AND per-tenant `TrafficCounters` — across tensor counts
+//!     1–6, random shapes, per-tenant ranks, κ ∈ {1, 2, 7}, and mixed
+//!     executor kinds, at any `SPMTTKRP_THREADS` (CI runs 1 and 4);
+//!   * `Session::decompose_batch` (lock-step batched ALS) reproduces
+//!     sequential `decompose` exactly: fit trajectories, factor bits,
+//!     weights, iteration counts, and per-iteration traffic;
+//!   * adversarial batches (empty, duplicate handles, a foreign session's
+//!     handle, mode out of range on one tenant, rank mismatch, baseline
+//!     decompose) fail with the right typed `api::Error` *before* any
+//!     work runs, and the pool stays reusable after every rejection.
+//!
+//! Generators are seeded through `util::rng`; every assertion message
+//! carries the case seed for replay.
+
+use spmttkrp::api::{Error, ExecutorBuilder, ExecutorKind, Session};
+use spmttkrp::cpd::CpdConfig;
+use spmttkrp::tensor::{FactorSet, SparseTensorCOO};
+use spmttkrp::util::rng::Rng;
+
+/// Random small tensor: 2–4 modes, dims 1..28, nnz 1..400 — small enough
+/// that κ = 7 regularly forces Scheme 2 (Global updates), the policy
+/// whose determinism the staged merge exists for.
+fn random_tensor(rng: &mut Rng) -> SparseTensorCOO {
+    let n = 2 + rng.next_below(3) as usize;
+    let dims: Vec<u32> = (0..n).map(|_| 1 + rng.next_below(28) as u32).collect();
+    let nnz = 1 + rng.next_below(400) as usize;
+    let mut inds: Vec<Vec<u32>> = vec![Vec::with_capacity(nnz); n];
+    let mut vals = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        for (w, col) in inds.iter_mut().enumerate() {
+            let i = if rng.next_f64() < 0.5 {
+                rng.next_below(dims[w] as u64)
+            } else {
+                rng.next_power_law(dims[w] as u64, 2.0)
+            };
+            col.push(i as u32);
+        }
+        vals.push(rng.next_normal() as f32);
+    }
+    SparseTensorCOO::new(dims, inds, vals)
+        .unwrap()
+        .collapse_duplicates()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what} [{i}]: batch {x} vs sequential {y}");
+    }
+}
+
+/// One prepared tenant of a property case.
+struct Tenant {
+    handle: spmttkrp::TensorHandle,
+    factors: FactorSet,
+    modes: Vec<usize>,
+    kind: ExecutorKind,
+}
+
+/// B1, MTTKRP: ≥ 32 randomized multi-tenant batches, each checked
+/// bitwise (outputs + counters) against sequential replay of the same
+/// handles on the same session.
+#[test]
+fn prop_mttkrp_batch_bitwise_equals_sequential() {
+    let mut rng = Rng::new(0xba7c_4001);
+    for case in 0..32u64 {
+        let seed = 0xba7c_4001u64 + case;
+        let n_tenants = 1 + rng.next_below(6) as usize;
+        let mut session = Session::new();
+        let mut tenants: Vec<Tenant> = Vec::with_capacity(n_tenants);
+        for ti in 0..n_tenants {
+            let t = random_tensor(&mut rng);
+            let kappa = [1usize, 2, 7][rng.next_below(3) as usize];
+            let rank = [4usize, 8][rng.next_below(2) as usize];
+            // mostly the engine; sometimes a baseline tenant, whose
+            // replay must be just as deterministic under batching
+            let kind = match rng.next_below(6) {
+                0 => ExecutorKind::Parti,
+                1 => ExecutorKind::Blco,
+                2 => ExecutorKind::MmCsf,
+                _ => ExecutorKind::Ours,
+            };
+            let handle = session
+                .prepare(&t, &ExecutorBuilder::new().kind(kind).rank(rank).sm_count(kappa))
+                .unwrap_or_else(|e| panic!("case {seed} tenant {ti}: prepare failed: {e}"));
+            let factors = FactorSet::random(&t.dims, rank, seed ^ (ti as u64) << 8);
+            // one random mode, or the tenant's full mode sweep
+            let modes: Vec<usize> = if rng.next_f64() < 0.4 {
+                (0..t.n_modes()).collect()
+            } else {
+                vec![rng.next_below(t.n_modes() as u64) as usize]
+            };
+            tenants.push(Tenant {
+                handle,
+                factors,
+                modes,
+                kind,
+            });
+        }
+        let reqs: Vec<(spmttkrp::TensorHandle, usize, &FactorSet)> = tenants
+            .iter()
+            .flat_map(|t| t.modes.iter().map(move |&d| (t.handle, d, &t.factors)))
+            .collect();
+
+        let batch = session
+            .mttkrp_batch(&reqs)
+            .unwrap_or_else(|e| panic!("case {seed}: batch failed: {e}"));
+        assert_eq!(batch.outputs.len(), reqs.len());
+        assert_eq!(
+            batch.dispatch.n_items,
+            batch.reports.iter().map(|r| r.part_costs.len()).sum::<usize>(),
+            "case {seed}: every (tenant, partition) item executed exactly once"
+        );
+
+        for (r, &(h, mode, factors)) in reqs.iter().enumerate() {
+            let (want, want_rep) = session.mttkrp(h, factors, mode).unwrap();
+            let kind = tenants.iter().find(|t| t.handle == h).unwrap().kind;
+            assert_bits_eq(
+                &batch.outputs[r],
+                &want,
+                &format!("case {seed} req {r} ({kind:?} mode {mode})"),
+            );
+            assert_eq!(
+                batch.reports[r].traffic, want_rep.traffic,
+                "case {seed} req {r} ({kind:?} mode {mode}): counters must be identical"
+            );
+        }
+    }
+}
+
+/// B1, end-to-end ALS: lock-step `decompose_batch` reproduces sequential
+/// `decompose` exactly — fits, factor bits, weights, iterations, and
+/// per-iteration traffic — including tenants with different mode counts
+/// and iteration budgets converging at different rounds.
+#[test]
+fn prop_decompose_batch_matches_sequential() {
+    let mut rng = Rng::new(0xba7c_de00);
+    for case in 0..8u64 {
+        let seed = 0xba7c_de00u64 + case;
+        let n_tenants = 1 + rng.next_below(3) as usize;
+        let mut session = Session::new();
+        let mut handles = Vec::new();
+        let mut cfgs = Vec::new();
+        for ti in 0..n_tenants {
+            let t = random_tensor(&mut rng);
+            let kappa = [1usize, 2, 7][rng.next_below(3) as usize];
+            let h = session
+                .prepare(&t, &ExecutorBuilder::new().rank(4).sm_count(kappa))
+                .unwrap_or_else(|e| panic!("case {seed} tenant {ti}: prepare failed: {e}"));
+            handles.push(h);
+            cfgs.push(CpdConfig {
+                rank: 4,
+                max_iters: 2 + rng.next_below(2) as usize,
+                tol: 0.0,
+                damp: 1e-4,
+                seed: seed ^ ti as u64,
+            });
+        }
+        let reqs: Vec<_> = handles.iter().copied().zip(cfgs.iter()).collect();
+        let batch = session
+            .decompose_batch(&reqs)
+            .unwrap_or_else(|e| panic!("case {seed}: decompose_batch failed: {e}"));
+        assert_eq!(batch.len(), n_tenants);
+
+        for (ti, (&h, cfg)) in handles.iter().zip(&cfgs).enumerate() {
+            let seq = session.decompose(h, cfg).unwrap();
+            let b = &batch[ti];
+            assert_eq!(b.fits, seq.fits, "case {seed} tenant {ti}: fit trajectories");
+            assert_eq!(b.iterations, seq.iterations, "case {seed} tenant {ti}: iterations");
+            assert_eq!(b.weights, seq.weights, "case {seed} tenant {ti}: weights");
+            for (m, (bf, sf)) in b.factors.factors.iter().zip(&seq.factors.factors).enumerate()
+            {
+                assert_bits_eq(&bf.data, &sf.data, &format!("case {seed} tenant {ti} mode {m}"));
+            }
+            assert_eq!(b.reports.len(), seq.reports.len());
+            for (it, (br, sr)) in b.reports.iter().zip(&seq.reports).enumerate() {
+                assert_eq!(
+                    br.total_traffic(),
+                    sr.total_traffic(),
+                    "case {seed} tenant {ti} iter {it}: traffic"
+                );
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------- adversarial
+
+/// After every rejected batch the pool must still serve normal requests.
+fn assert_pool_usable(session: &Session, h: spmttkrp::TensorHandle, fs: &FactorSet) {
+    assert!(session.mttkrp(h, fs, 0).is_ok(), "pool unusable after a rejected batch");
+}
+
+#[test]
+fn adversarial_empty_batch_is_invalid_config() {
+    let mut session = Session::new();
+    let mut rng = Rng::new(0xad_0001);
+    let t = random_tensor(&mut rng);
+    let h = session.prepare(&t, &ExecutorBuilder::new().rank(4).sm_count(2)).unwrap();
+    let fs = FactorSet::random(&t.dims, 4, 1);
+
+    assert!(matches!(session.mttkrp_batch(&[]), Err(Error::InvalidConfig(_))));
+    assert_pool_usable(&session, h, &fs);
+    assert!(matches!(session.decompose_batch(&[]), Err(Error::InvalidConfig(_))));
+    assert_pool_usable(&session, h, &fs);
+}
+
+#[test]
+fn adversarial_duplicate_handles_are_invalid_config() {
+    let mut session = Session::new();
+    let mut rng = Rng::new(0xad_0002);
+    let t = random_tensor(&mut rng);
+    let h = session.prepare(&t, &ExecutorBuilder::new().rank(4).sm_count(2)).unwrap();
+    let fs = FactorSet::random(&t.dims, 4, 2);
+
+    // the same (handle, mode) twice is rejected...
+    let err = session.mttkrp_batch(&[(h, 0, &fs), (h, 0, &fs)]).unwrap_err();
+    assert!(matches!(err, Error::InvalidConfig(_)), "got {err}");
+    assert_pool_usable(&session, h, &fs);
+    // ...but the same handle under different modes is a legitimate
+    // batched sweep
+    let ok = session.mttkrp_batch(&[(h, 0, &fs), (h, 1, &fs)]).unwrap();
+    assert_eq!(ok.outputs.len(), 2);
+
+    let cfg = CpdConfig { rank: 4, max_iters: 1, ..Default::default() };
+    let err = session.decompose_batch(&[(h, &cfg), (h, &cfg)]).unwrap_err();
+    assert!(matches!(err, Error::InvalidConfig(_)), "got {err}");
+    assert_pool_usable(&session, h, &fs);
+}
+
+#[test]
+fn adversarial_foreign_handle_is_unknown_handle() {
+    let mut session = Session::new();
+    let mut other = Session::new();
+    let mut rng = Rng::new(0xad_0003);
+    let t = random_tensor(&mut rng);
+    let h = session.prepare(&t, &ExecutorBuilder::new().rank(4).sm_count(2)).unwrap();
+    let foreign = other.prepare(&t, &ExecutorBuilder::new().rank(4).sm_count(2)).unwrap();
+    let fs = FactorSet::random(&t.dims, 4, 3);
+
+    // an otherwise-valid batch with one foreign handle mixed in
+    let err = session.mttkrp_batch(&[(h, 0, &fs), (foreign, 0, &fs)]).unwrap_err();
+    assert!(matches!(err, Error::UnknownHandle(_)), "got {err}");
+    assert_pool_usable(&session, h, &fs);
+
+    let cfg = CpdConfig { rank: 4, max_iters: 1, ..Default::default() };
+    let err = session.decompose_batch(&[(h, &cfg), (foreign, &cfg)]).unwrap_err();
+    assert!(matches!(err, Error::UnknownHandle(_)), "got {err}");
+    assert_pool_usable(&session, h, &fs);
+}
+
+#[test]
+fn adversarial_bad_mode_or_rank_on_one_tenant_is_shape_mismatch() {
+    let mut session = Session::new();
+    let mut rng = Rng::new(0xad_0004);
+    let ta = random_tensor(&mut rng);
+    let tb = random_tensor(&mut rng);
+    let ha = session.prepare(&ta, &ExecutorBuilder::new().rank(4).sm_count(2)).unwrap();
+    let hb = session.prepare(&tb, &ExecutorBuilder::new().rank(4).sm_count(2)).unwrap();
+    let fa = FactorSet::random(&ta.dims, 4, 4);
+    let fb = FactorSet::random(&tb.dims, 4, 5);
+
+    // mode out of range on the SECOND tenant rejects the whole batch
+    let err = session.mttkrp_batch(&[(ha, 0, &fa), (hb, 99, &fb)]).unwrap_err();
+    assert!(matches!(err, Error::ShapeMismatch(_)), "got {err}");
+    assert_pool_usable(&session, ha, &fa);
+
+    // factor rank mismatch on one tenant likewise
+    let wrong = FactorSet::random(&tb.dims, 8, 6);
+    let err = session.mttkrp_batch(&[(ha, 0, &fa), (hb, 0, &wrong)]).unwrap_err();
+    assert!(matches!(err, Error::ShapeMismatch(_)), "got {err}");
+    assert_pool_usable(&session, ha, &fa);
+}
+
+#[test]
+fn adversarial_wrong_mode_count_factors_are_typed_for_every_kind() {
+    // regression: a factor set with the right rank but too few modes must
+    // be a typed ShapeMismatch for ALL executor kinds — the baselines used
+    // to index factors[w] out of bounds inside a pool worker (a panic)
+    let mut session = Session::new();
+    let mut rng = Rng::new(0xad_0006);
+    let t = loop {
+        let t = random_tensor(&mut rng);
+        if t.n_modes() >= 3 {
+            break t;
+        }
+    };
+    let short = FactorSet::random(&t.dims[..t.n_modes() - 1], 4, 8);
+    for kind in ExecutorKind::all() {
+        let h = session
+            .prepare(&t, &ExecutorBuilder::new().kind(kind).rank(4).sm_count(2))
+            .unwrap();
+        let err = session.mttkrp(h, &short, 0).unwrap_err();
+        assert!(matches!(err, Error::ShapeMismatch(_)), "{kind:?}: got {err}");
+        let err = session.mttkrp_batch(&[(h, 0, &short)]).unwrap_err();
+        assert!(matches!(err, Error::ShapeMismatch(_)), "{kind:?} batch: got {err}");
+        let good = FactorSet::random(&t.dims, 4, 9);
+        assert_pool_usable(&session, h, &good);
+    }
+}
+
+#[test]
+fn adversarial_baseline_handle_in_decompose_batch_is_invalid_config() {
+    let mut session = Session::new();
+    let mut rng = Rng::new(0xad_0005);
+    let t = random_tensor(&mut rng);
+    let ours = session.prepare(&t, &ExecutorBuilder::new().rank(4).sm_count(2)).unwrap();
+    let parti = session
+        .prepare(
+            &t,
+            &ExecutorBuilder::new().kind(ExecutorKind::Parti).rank(4).sm_count(2),
+        )
+        .unwrap();
+    let fs = FactorSet::random(&t.dims, 4, 7);
+
+    let cfg = CpdConfig { rank: 4, max_iters: 1, ..Default::default() };
+    let err = session.decompose_batch(&[(ours, &cfg), (parti, &cfg)]).unwrap_err();
+    assert!(matches!(err, Error::InvalidConfig(_)), "got {err}");
+    assert_pool_usable(&session, ours, &fs);
+    // the baseline handle still serves batched mttkrp fine
+    let ok = session.mttkrp_batch(&[(ours, 0, &fs), (parti, 0, &fs)]).unwrap();
+    assert_eq!(ok.outputs.len(), 2);
+}

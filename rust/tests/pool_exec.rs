@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use spmttkrp::api::{ExecutorBuilder, ExecutorKind};
 use spmttkrp::baselines::MttkrpExecutor;
-use spmttkrp::coordinator::{Engine, UpdatePolicy};
+use spmttkrp::coordinator::Engine;
 use spmttkrp::exec::SmPool;
 use spmttkrp::tensor::{DenseTensor, FactorSet, SparseTensorCOO};
 use spmttkrp::util::rng::Rng;
@@ -53,8 +53,10 @@ fn small_engine(t: &SparseTensorCOO, kappa: usize, threads: usize, rank: usize) 
 
 /// P8 extended: the *same* engine (one persistent pool, one set of plans
 /// and workspaces) called many times must reproduce its own results —
-/// bitwise for Local-policy modes (fixed per-partition update order),
-/// tight epsilon for Global modes (lock interleaving reorders f32 adds).
+/// bitwise for EVERY mode. Local modes have a fixed per-partition update
+/// order by ownership; Global modes stage per-partition partials and
+/// merge them in partition order (invariant B1's foundation), so thread
+/// interleaving can no longer reorder f32 adds.
 #[test]
 fn repeated_calls_on_one_pool_are_deterministic() {
     for seed in 0..5u64 {
@@ -66,21 +68,13 @@ fn repeated_calls_on_one_pool_are_deterministic() {
         for round in 0..4 {
             let again = engine.mttkrp_all_modes(&fs).unwrap();
             for (d, (va, vb)) in first.iter().zip(&again).enumerate() {
-                let local =
-                    matches!(engine.update_policy(d), UpdatePolicy::Local);
                 for (i, (&x, &y)) in va.iter().zip(vb).enumerate() {
-                    if local {
-                        assert_eq!(
-                            x.to_bits(),
-                            y.to_bits(),
-                            "seed {seed} round {round} mode {d} [{i}]: {x} vs {y}"
-                        );
-                    } else {
-                        assert!(
-                            (x - y).abs() <= 1e-4 * (1.0 + y.abs()),
-                            "seed {seed} round {round} mode {d} [{i}]: {x} vs {y}"
-                        );
-                    }
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "seed {seed} round {round} mode {d} ({:?}) [{i}]: {x} vs {y}",
+                        engine.update_policy(d)
+                    );
                 }
             }
         }
@@ -156,20 +150,14 @@ fn mode_plan_reuse_matches_fresh_engine() {
         let fresh_engine = small_engine(&t, 5, 2, rank);
         let (fresh, _) = fresh_engine.mttkrp_mode(&fs, mode).unwrap();
         let (reused, rep) = veteran.mttkrp_mode(&fs, mode).unwrap();
-        let local = matches!(veteran.update_policy(mode), UpdatePolicy::Local);
+        // bitwise for every policy: replay is schedule-independent (B1)
         for (i, (&a, &b)) in reused.iter().zip(&fresh).enumerate() {
-            if local {
-                assert_eq!(
-                    a.to_bits(),
-                    b.to_bits(),
-                    "mode {mode} [{i}]: reused {a} vs fresh {b}"
-                );
-            } else {
-                assert!(
-                    (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
-                    "mode {mode} [{i}]: reused {a} vs fresh {b}"
-                );
-            }
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "mode {mode} ({:?}) [{i}]: reused {a} vs fresh {b}",
+                veteran.update_policy(mode)
+            );
         }
         // traffic counters are pure counts — bit-identical regardless of
         // pool/plan age or thread interleaving
