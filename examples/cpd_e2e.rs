@@ -114,6 +114,13 @@ fn main() -> spmttkrp::Result<()> {
              (every iteration's per-mode spMTTKRP was one pooled dispatch)",
             wall.as_secs_f64()
         );
+        // Machine-readable fit curves: the CI budget leg diffs these
+        // against an unbudgeted run (invariant M1 — a byte budget changes
+        // residency, never arithmetic). f64 Debug printing round-trips.
+        for (i, res) in results.iter().enumerate() {
+            println!("fit-curve tenant={i}: {:?}", res.fits);
+        }
+        print_residency(&session);
         println!("e2e OK");
         return Ok(());
     }
@@ -160,6 +167,23 @@ fn main() -> spmttkrp::Result<()> {
             res.fits
         )));
     }
+    println!("fit-curve tenant=0: {:?}", res.fits);
+    print_residency(&session);
     println!("e2e OK");
     Ok(())
+}
+
+/// One grep-able residency line: the CI budget leg asserts `evictions=`
+/// is nonzero when `SPMTTKRP_BUDGET_BYTES` forces pressure.
+fn print_residency(session: &Session) {
+    let r = session.residency_report();
+    println!(
+        "residency: evictions={} rebuilds={} rebuild-bytes={} resident={} peak={} budget={}",
+        r.counters.evictions,
+        r.counters.rebuilds,
+        r.counters.rebuild_bytes,
+        human_bytes(r.resident_bytes),
+        human_bytes(r.peak_resident_bytes),
+        r.budget.map(|b| b.to_string()).unwrap_or_else(|| "unbounded".into()),
+    );
 }

@@ -105,6 +105,10 @@ impl Session {
             .collect::<Result<_>>()?;
         let mut outs: Vec<Vec<f32>> = vec![Vec::new(); reqs.len()];
         let mut accs = Vec::with_capacity(reqs.len());
+        // begin_mode also faults any evicted layout back in — every
+        // tenant's mode copy is resident BEFORE the cross-tenant queue is
+        // built and dispatched, so batching replays exactly what the
+        // sequential path replays (B1 over governed residency, M1).
         for ((out, &(_, mode, factors)), ex) in outs.iter_mut().zip(reqs).zip(&execs) {
             accs.push(ex.begin_mode(factors, mode, out)?);
         }
@@ -133,7 +137,7 @@ impl Session {
         let kappa = loads.iter().map(|l| l.len()).max().unwrap_or(1);
         let dispatch = BatchDispatchReport {
             wall: run.wall,
-            sim_packed: lpt_makespan(&run.item_costs, kappa),
+            sim_packed: lpt_makespan(&run.item_costs, kappa)?,
             sim_sequential: reports.iter().map(|r| r.sim).sum(),
             n_items: run.item_costs.len(),
         };
@@ -198,6 +202,8 @@ impl Session {
                     let (engine, factors, out) = st.mode_io(d);
                     idxs.push(i);
                     loads.push(engine.partition_loads(d));
+                    // faults an evicted mode-d layout back in before the
+                    // lock-step queue below is built (B1/M1)
                     let acc = engine.begin_mode(factors, d, out)?;
                     parts.push((engine, factors, acc));
                 }

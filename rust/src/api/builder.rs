@@ -16,6 +16,7 @@ use super::error::{bail_with, ensure_or};
 use super::{Error, Result};
 use crate::baselines::{BlcoExecutor, MmCsfExecutor, MttkrpExecutor, PartiExecutor};
 use crate::coordinator::{Engine, EngineConfig};
+use crate::exec::memgr::MemoryGovernor;
 use crate::exec::SmPool;
 use crate::partition::{LoadBalance, VertexAssign};
 use crate::runtime::{Backend, NativeBackend, PjrtBackend};
@@ -87,6 +88,7 @@ pub struct ExecutorBuilder {
     cfg: EngineConfig,
     block_p: usize,
     pool: Option<Arc<SmPool>>,
+    governor: Option<Arc<MemoryGovernor>>,
     artifacts: Option<PathBuf>,
 }
 
@@ -107,6 +109,7 @@ impl ExecutorBuilder {
             cfg: EngineConfig::default(),
             block_p: 256,
             pool: None,
+            governor: None,
             artifacts: None,
         }
     }
@@ -182,6 +185,18 @@ impl ExecutorBuilder {
         self
     }
 
+    /// Admit the engine's per-mode layouts against an existing memory
+    /// governor (`exec::memgr`) instead of an engine-private unbounded
+    /// one — the governed-residency path: under the governor's byte
+    /// budget, layout copies can be evicted (LRU) and are rebuilt
+    /// bitwise-identically on demand. [`crate::api::Session::prepare`]
+    /// installs the session's governor here. Engine kind only; the
+    /// baselines' formats are not governed.
+    pub fn governor(mut self, governor: Arc<MemoryGovernor>) -> Self {
+        self.governor = Some(governor);
+        self
+    }
+
     /// Override the PJRT artifact directory (default:
     /// `$SPMTTKRP_ARTIFACTS`, else `./artifacts`).
     pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
@@ -199,6 +214,11 @@ impl ExecutorBuilder {
     /// The shared pool this builder was given, if any.
     pub fn shared_pool(&self) -> Option<&Arc<SmPool>> {
         self.pool.as_ref()
+    }
+
+    /// The shared memory governor this builder was given, if any.
+    pub fn shared_governor(&self) -> Option<&Arc<MemoryGovernor>> {
+        self.governor.as_ref()
     }
 
     /// The executor kind this builder will construct.
@@ -286,7 +306,10 @@ impl ExecutorBuilder {
         let kappa = self.cfg.sm_count;
         let rank = self.cfg.rank;
         Ok(match self.kind {
-            ExecutorKind::Ours => Box::new(self.build_engine(tensor)?),
+            // the engine retains the COO as its layout-rebuild source
+            ExecutorKind::Ours => {
+                Box::new(self.build_engine_shared(Arc::new(tensor.clone()))?)
+            }
             ExecutorKind::Parti => {
                 Box::new(PartiExecutor::with_pool(tensor, kappa, rank, self.resolve_pool()))
             }
@@ -299,20 +322,46 @@ impl ExecutorBuilder {
         })
     }
 
+    /// As [`ExecutorBuilder::build`], but taking shared ownership of the
+    /// tensor — no copy is made when the engine retains it as its
+    /// layout-rebuild source ([`crate::api::Session::prepare_shared`]'s
+    /// path).
+    pub fn build_shared(&self, tensor: Arc<SparseTensorCOO>) -> Result<Box<dyn MttkrpExecutor>> {
+        if self.kind == ExecutorKind::Ours {
+            return Ok(Box::new(self.build_engine_shared(tensor)?));
+        }
+        self.build(&tensor)
+    }
+
     /// Build the paper's engine concretely — needed for the dense ALS
     /// helpers (`gram`/`hadamard`/`solve`) and [`crate::cpd::als`].
     /// Errors with [`Error::InvalidConfig`] unless the kind is
-    /// [`ExecutorKind::Ours`].
+    /// [`ExecutorKind::Ours`]. The tensor is copied — it becomes the
+    /// engine's retained layout-rebuild source; use
+    /// [`ExecutorBuilder::build_engine_shared`] to share instead.
     pub fn build_engine(&self, tensor: &SparseTensorCOO) -> Result<Engine> {
         self.validate()?;
         Self::validate_tensor(tensor)?;
+        self.build_engine_shared(Arc::new(tensor.clone()))
+    }
+
+    /// As [`ExecutorBuilder::build_engine`], taking shared ownership.
+    pub fn build_engine_shared(&self, tensor: Arc<SparseTensorCOO>) -> Result<Engine> {
+        self.validate()?;
+        Self::validate_tensor(&tensor)?;
         ensure_or!(
             self.kind == ExecutorKind::Ours,
             InvalidConfig,
             "build_engine requires ExecutorKind::Ours, got {:?}",
             self.kind
         );
-        Engine::from_parts(tensor, self.make_backend()?, self.cfg.clone(), self.resolve_pool())
+        Engine::from_parts(
+            tensor,
+            self.make_backend()?,
+            self.cfg.clone(),
+            self.resolve_pool(),
+            self.governor.clone(),
+        )
     }
 }
 

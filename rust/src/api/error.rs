@@ -43,6 +43,16 @@ pub enum Error {
     },
     /// A [`crate::api::TensorHandle`] this session never issued.
     UnknownHandle(usize),
+    /// Admission rejected by the session memory governor: the layout
+    /// bytes that would have to be resident do not fit the configured
+    /// byte budget even after evicting every other resident copy
+    /// (`exec::memgr`, `SPMTTKRP_BUDGET_BYTES`).
+    BudgetExceeded {
+        /// Bytes that would need to be resident at once.
+        needed: u64,
+        /// The configured budget.
+        budget: u64,
+    },
 }
 
 impl Error {
@@ -68,6 +78,11 @@ impl fmt::Display for Error {
             Error::UnknownHandle(h) => {
                 write!(f, "unknown session handle {h} (not issued by this session)")
             }
+            Error::BudgetExceeded { needed, budget } => write!(
+                f,
+                "memory budget exceeded: {needed} B would need to be resident, \
+                 budget is {budget} B (SPMTTKRP_BUDGET_BYTES)"
+            ),
         }
     }
 }
@@ -120,6 +135,17 @@ mod tests {
         assert_eq!(e.to_string(), "invalid configuration: rank must be > 0");
         let e = Error::UnknownHandle(3);
         assert!(e.to_string().contains("handle 3"));
+    }
+
+    #[test]
+    fn budget_exceeded_names_both_sides() {
+        let e = Error::BudgetExceeded {
+            needed: 100,
+            budget: 64,
+        };
+        let s = e.to_string();
+        assert!(s.contains("100 B"), "{s}");
+        assert!(s.contains("64 B"), "{s}");
     }
 
     #[test]

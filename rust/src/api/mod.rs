@@ -16,6 +16,12 @@
 //!   multi-tenant serving: many tenants' partitions packed into single
 //!   pool dispatches (longest-first across tensors), bitwise-identical to
 //!   sequential replay per tenant.
+//! * Governed residency — a session carries one memory governor
+//!   (`exec::memgr`): per-mode layout copies are admitted against a byte
+//!   budget (`SPMTTKRP_BUDGET_BYTES`, [`Session::with_budget`]), evicted
+//!   LRU under pressure ([`Session::evict`] forces it), and rebuilt
+//!   bitwise-identically on demand; admission failures are
+//!   [`Error::BudgetExceeded`].
 //!
 //! The layer sits over `coordinator`/`baselines`/`cpd`/`exec` and is
 //! re-exported at the crate root and in [`crate::prelude`].

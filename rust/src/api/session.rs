@@ -23,6 +23,7 @@ use super::{Error, Result};
 use crate::baselines::MttkrpExecutor;
 use crate::coordinator::Engine;
 use crate::cpd::{als, CpdConfig, CpdResult};
+use crate::exec::memgr::{MemoryBudget, MemoryGovernor, ResidencyReport, SlotResidency};
 use crate::exec::SmPool;
 use crate::metrics::{ExecReport, ModeExecReport};
 use crate::tensor::{FactorSet, SparseTensorCOO};
@@ -90,6 +91,10 @@ impl Prepared {
 pub struct Session {
     id: u64,
     pool: Arc<SmPool>,
+    /// The memory governor every engine tenant's layouts are admitted
+    /// against: one byte budget for the whole session (DESIGN.md §2 —
+    /// the session-level analogue of the paper's 24 GB device memory).
+    governor: Arc<MemoryGovernor>,
     entries: Vec<Entry>,
 }
 
@@ -101,17 +106,35 @@ impl Default for Session {
 
 impl Session {
     /// Session on a fresh pool with the default worker count
-    /// (`SPMTTKRP_THREADS`, else available parallelism).
+    /// (`SPMTTKRP_THREADS`, else available parallelism) and the
+    /// environment byte budget (`SPMTTKRP_BUDGET_BYTES`, else unbounded).
     pub fn new() -> Session {
         Session::on_pool(Arc::new(SmPool::with_default_threads()))
     }
 
     /// Session on an existing pool (shareable with executors built
-    /// elsewhere via [`ExecutorBuilder::pool`]).
+    /// elsewhere via [`ExecutorBuilder::pool`]), with the environment
+    /// byte budget.
     pub fn on_pool(pool: Arc<SmPool>) -> Session {
+        Session::on_pool_with_budget(pool, MemoryBudget::from_env())
+    }
+
+    /// Session with an explicit layout byte budget: prepared engines'
+    /// per-mode layout copies are admitted against it (priced by the
+    /// paper's packed-bits model), LRU-evicted under pressure, and
+    /// rebuilt bitwise-identically on demand. A tensor whose single
+    /// largest copy cannot fit is rejected at `prepare` with
+    /// [`Error::BudgetExceeded`].
+    pub fn with_budget(budget: MemoryBudget) -> Session {
+        Session::on_pool_with_budget(Arc::new(SmPool::with_default_threads()), budget)
+    }
+
+    /// Existing pool + explicit budget.
+    pub fn on_pool_with_budget(pool: Arc<SmPool>, budget: MemoryBudget) -> Session {
         Session {
             id: NEXT_SESSION_ID.fetch_add(1, Ordering::Relaxed),
             pool,
+            governor: MemoryGovernor::new(budget),
             entries: Vec::new(),
         }
     }
@@ -119,6 +142,11 @@ impl Session {
     /// The persistent pool every prepared executor runs on.
     pub fn pool(&self) -> &Arc<SmPool> {
         &self.pool
+    }
+
+    /// The memory governor shared by every prepared engine tenant.
+    pub fn governor(&self) -> &Arc<MemoryGovernor> {
+        &self.governor
     }
 
     /// Number of prepared tensors.
@@ -133,11 +161,16 @@ impl Session {
     /// prefer [`Session::prepare_shared`], which shares instead of
     /// cloning.
     ///
-    /// A builder that names a *different* shared pool is rejected — the
-    /// session's invariant is one pool for all tenants. A tensor with 0
-    /// nonzeros is rejected with [`Error::InvalidData`]: there is nothing
-    /// to partition, and registering κ empty plans would silently serve
-    /// all-zero outputs forever.
+    /// A builder that names a *different* shared pool or memory governor
+    /// is rejected — the session's invariant is one pool and one byte
+    /// budget for all tenants. A tensor with 0 nonzeros is rejected with
+    /// [`Error::InvalidData`]: there is nothing to partition, and
+    /// registering κ empty plans would silently serve all-zero outputs
+    /// forever. Under a configured budget
+    /// ([`Session::with_budget`] / `SPMTTKRP_BUDGET_BYTES`), a tensor
+    /// whose single largest mode copy cannot fit even after evicting
+    /// every other resident copy is rejected with
+    /// [`Error::BudgetExceeded`].
     pub fn prepare(
         &mut self,
         tensor: &SparseTensorCOO,
@@ -160,11 +193,22 @@ impl Session {
                 "builder names a different shared pool; Session::prepare installs its own"
             );
         }
-        let on_pool = builder.clone().pool(Arc::clone(&self.pool));
+        if let Some(g) = builder.shared_governor() {
+            ensure_or!(
+                Arc::ptr_eq(g, &self.governor),
+                InvalidConfig,
+                "builder names a different memory governor; Session::prepare installs the \
+                 session's (one byte budget for all tenants)"
+            );
+        }
+        let on_pool = builder
+            .clone()
+            .pool(Arc::clone(&self.pool))
+            .governor(Arc::clone(&self.governor));
         let prepared = if on_pool.configured_kind() == ExecutorKind::Ours {
-            Prepared::Engine(Box::new(on_pool.build_engine(&tensor)?))
+            Prepared::Engine(Box::new(on_pool.build_engine_shared(Arc::clone(&tensor))?))
         } else {
-            Prepared::Baseline(on_pool.build(&tensor)?)
+            Prepared::Baseline(on_pool.build_shared(Arc::clone(&tensor))?)
         };
         self.entries.push(Entry { tensor, prepared });
         Ok(TensorHandle {
@@ -247,6 +291,38 @@ impl Session {
                 b.name()
             ),
         }
+    }
+
+    // ------------------------------------------------- layout residency
+
+    /// Drop `mode`'s layout copy of `h`'s engine (plans, partitioning and
+    /// the retained COO stay; the next call that needs the mode rebuilds
+    /// it bitwise-identically — invariant M1). Returns whether a resident
+    /// layout was dropped; `Ok(false)` for baseline handles (their
+    /// formats are not governed) and already-evicted modes. Takes
+    /// `&self`: eviction is safe concurrently with in-flight calls, which
+    /// pin the layouts they replay.
+    pub fn evict(&self, h: TensorHandle, mode: usize) -> Result<bool> {
+        match &self.entry(h)?.prepared {
+            Prepared::Engine(e) => e.evict_mode(mode),
+            Prepared::Baseline(_) => Ok(false),
+        }
+    }
+
+    /// Per-mode residency snapshots of `h`'s engine (resident?, packed-
+    /// bits price, rebuild/eviction counts). Empty for baseline handles.
+    pub fn residency(&self, h: TensorHandle) -> Result<Vec<SlotResidency>> {
+        match &self.entry(h)?.prepared {
+            Prepared::Engine(e) => Ok(e.residency()),
+            Prepared::Baseline(_) => Ok(Vec::new()),
+        }
+    }
+
+    /// Whole-session residency: budget, resident/peak bytes, and the
+    /// eviction/rebuild counters (rebuild traffic is reported here, never
+    /// folded into per-call [`crate::metrics::TrafficCounters`] — M1).
+    pub fn residency_report(&self) -> ResidencyReport {
+        self.governor.report()
     }
 }
 
@@ -351,5 +427,84 @@ mod tests {
         let h = s.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4)).unwrap();
         assert!(Arc::ptr_eq(s.engine(h).unwrap().pool(), s.pool()));
         assert_eq!(s.n_prepared(), 1);
+    }
+
+    #[test]
+    fn prepare_rejects_a_foreign_governor() {
+        let mut s = Session::new();
+        let t = tiny(5);
+        let foreign = crate::exec::memgr::MemoryGovernor::new(
+            crate::exec::memgr::MemoryBudget::unbounded(),
+        );
+        let err = s
+            .prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4).governor(foreign))
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)));
+        // naming the session's own governor is fine
+        let own = Arc::clone(s.governor());
+        let h = s
+            .prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4).governor(own))
+            .unwrap();
+        assert!(s.engine(h).is_ok());
+    }
+
+    #[test]
+    fn all_engine_tenants_share_the_session_governor() {
+        // explicit unbounded budget: immune to SPMTTKRP_BUDGET_BYTES in
+        // the test environment
+        let mut s = Session::with_budget(crate::exec::memgr::MemoryBudget::unbounded());
+        let t = tiny(6);
+        let h = s.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4)).unwrap();
+        assert!(Arc::ptr_eq(s.engine(h).unwrap().governor(), s.governor()));
+        let r = s.residency_report();
+        assert_eq!(r.resident_slots, t.n_modes());
+        assert_eq!(r.evicted_slots, 0);
+        assert_eq!(r.budget, None);
+    }
+
+    #[test]
+    fn evict_and_replay_is_bitwise_identical() {
+        let mut s = Session::with_budget(crate::exec::memgr::MemoryBudget::unbounded());
+        let t = tiny(7);
+        let h = s.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4)).unwrap();
+        let fs = FactorSet::random(&t.dims, 8, 11);
+        let (want, want_rep) = s.mttkrp(h, &fs, 0).unwrap();
+        assert!(s.evict(h, 0).unwrap());
+        assert!(!s.residency(h).unwrap()[0].resident);
+        let (got, got_rep) = s.mttkrp(h, &fs, 0).unwrap();
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(want_rep.traffic, got_rep.traffic, "replay counters must be identical");
+        let r = s.residency_report();
+        assert_eq!(r.counters.evictions, 1);
+        assert_eq!(r.counters.rebuilds, 1);
+        assert!(r.counters.rebuild_bytes > 0);
+        // bad mode is typed, baseline handles are ungoverned no-ops
+        assert!(matches!(s.evict(h, 99), Err(Error::ShapeMismatch(_))));
+        let hb = s
+            .prepare(&t, &ExecutorBuilder::new().kind(ExecutorKind::Parti).rank(8).sm_count(4))
+            .unwrap();
+        assert!(!s.evict(hb, 0).unwrap());
+        assert!(s.residency(hb).unwrap().is_empty());
+    }
+
+    #[test]
+    fn budgeted_prepare_rejects_an_oversized_tensor() {
+        use crate::format::memory::packed_copy_bytes;
+        let t = tiny(8);
+        let price = packed_copy_bytes(&t.dims, t.nnz() as u64);
+        let mut s = Session::with_budget(crate::exec::memgr::MemoryBudget::bytes(price - 1));
+        let err = s
+            .prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4))
+            .unwrap_err();
+        assert!(matches!(err, Error::BudgetExceeded { .. }), "got {err}");
+        assert_eq!(s.n_prepared(), 0);
+        // a budget of exactly one copy admits, evicting earlier modes
+        let mut s = Session::with_budget(crate::exec::memgr::MemoryBudget::bytes(price));
+        let h = s.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4)).unwrap();
+        let fs = FactorSet::random(&t.dims, 8, 13);
+        assert!(s.mttkrp(h, &fs, 0).is_ok());
+        assert!(s.residency_report().resident_bytes <= price);
     }
 }

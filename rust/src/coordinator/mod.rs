@@ -24,7 +24,11 @@
 //! — partition bounds, update policy, traffic constants — is
 //! precomputed into a per-mode [`ModePlan`] at engine construction and
 //! reused across every call and ALS iteration; per-worker gather/compute
-//! scratch lives in a [`WorkspaceArena`], allocated once.
+//! scratch lives in a [`WorkspaceArena`], allocated once. The bulky part
+//! of each mode copy (permuted tensor + segment tables) is **governed
+//! residency** (`exec::memgr`): it can be evicted under a session byte
+//! budget and is rebuilt bitwise-identically on demand from the retained
+//! COO — plans and partitionings always stay (invariant M1).
 //!
 //! The engine also offloads the dense ALS-side computations (Gram,
 //! Hadamard+solve, fit reductions) through the same backend so the PJRT
@@ -37,8 +41,9 @@ use std::sync::Arc;
 use crate::api::error::ensure_or;
 use crate::api::Result;
 use crate::baselines::MttkrpExecutor;
+use crate::exec::memgr::{MemoryBudget, MemoryGovernor, SlotResidency};
 use crate::exec::{ModeAccumulator, ModePlan, RowSink, SmPool, WorkspaceArena};
-use crate::format::mode_specific::ModeSpecificFormat;
+use crate::format::mode_specific::{ModeLayout, ModeSpecificFormat};
 use crate::metrics::{ExecReport, ModeExecReport, TrafficCounters};
 use crate::partition::{LoadBalance, VertexAssign};
 use crate::runtime::Backend;
@@ -135,11 +140,17 @@ impl Engine {
     /// This is the single construction path; the public way in is
     /// [`crate::api::ExecutorBuilder`], which validates the configuration
     /// up front and delegates here.
+    ///
+    /// `governor` is the memory governor the per-mode layouts are
+    /// admitted against (a `Session` passes its shared one so all tenants
+    /// compete for one budget); `None` means an engine-private unbounded
+    /// governor — everything stays resident, the pre-governor behavior.
     pub(crate) fn from_parts(
-        tensor: &SparseTensorCOO,
+        tensor: Arc<SparseTensorCOO>,
         backend: Box<dyn Backend>,
         config: EngineConfig,
         pool: Arc<SmPool>,
+        governor: Option<Arc<MemoryGovernor>>,
     ) -> Result<Engine> {
         ensure_or!(
             config.sm_count > 0 && config.rank > 0,
@@ -154,14 +165,22 @@ impl Engine {
             "block_p must be even, got {}",
             backend.block_p()
         );
-        let format = ModeSpecificFormat::build(
+        let governor =
+            governor.unwrap_or_else(|| MemoryGovernor::new(MemoryBudget::unbounded()));
+        let n = tensor.n_modes();
+        let dims = tensor.dims.clone();
+        let format = ModeSpecificFormat::build_governed(
             tensor,
             config.sm_count,
             config.lb,
             config.assign,
-        );
-        let n = tensor.n_modes();
+            governor,
+        )?;
         let elem_bytes = (n * 4 + 4) as u64;
+        // Plans are built from the retained partitionings, never from the
+        // evictable layouts — they survive eviction for the engine's
+        // lifetime (only the partition-ordered copy + segment tables
+        // drop).
         let plans = format
             .copies
             .iter()
@@ -176,7 +195,7 @@ impl Engine {
                     d,
                     config.sm_count,
                     config.rank,
-                    tensor.dims[d] as usize,
+                    dims[d] as usize,
                     policy,
                     copy.partitioning.bounds.clone(),
                     (0..n).filter(|&w| w != d).collect(),
@@ -219,6 +238,50 @@ impl Engine {
     /// The update policy mode `d` will execute with.
     pub fn update_policy(&self, mode: usize) -> UpdatePolicy {
         self.plans[mode].policy
+    }
+
+    // ------------------------------------------------- layout residency
+
+    /// The memory governor this engine's layouts are admitted against.
+    pub fn governor(&self) -> &Arc<MemoryGovernor> {
+        self.format.governor()
+    }
+
+    /// Mode `d`'s layout, faulted back in if it was evicted. The rebuild
+    /// is a pure function of the retained COO + partitioning, so replay
+    /// on the returned layout is bitwise-identical whether or not an
+    /// eviction happened in between (invariant M1).
+    fn layout(&self, mode: usize) -> Result<Arc<ModeLayout>> {
+        self.format.copies[mode].layout()
+    }
+
+    /// Drop mode `d`'s layout copy (plans and partitioning stay). Returns
+    /// whether a resident layout was dropped; a bad mode is a typed
+    /// error, never a panic.
+    pub fn evict_mode(&self, mode: usize) -> Result<bool> {
+        ensure_or!(
+            mode < self.n_modes(),
+            ShapeMismatch,
+            "evict_mode: mode {mode} out of range ({} modes)",
+            self.n_modes()
+        );
+        Ok(self.format.copies[mode].evict())
+    }
+
+    /// Is mode `d`'s layout currently materialized?
+    pub fn mode_resident(&self, mode: usize) -> Result<bool> {
+        ensure_or!(
+            mode < self.n_modes(),
+            ShapeMismatch,
+            "mode_resident: mode {mode} out of range ({} modes)",
+            self.n_modes()
+        );
+        Ok(self.format.copies[mode].resident())
+    }
+
+    /// Per-mode residency snapshots for this engine's tenant.
+    pub fn residency(&self) -> Vec<SlotResidency> {
+        self.format.residency()
     }
 
     /// spMTTKRP along one mode (Alg. 2 over all partitions of the mode's
@@ -273,9 +336,13 @@ impl Engine {
     // ------------------------------------------------ partition execution
 
     /// Alg. 2 over one partition (one simulated SM's serial work).
+    /// `layout` is the mode copy faulted in by `replay_partition` — the
+    /// caller-held `Arc` keeps it valid even if the governor evicts the
+    /// slot mid-call.
     fn run_partition(
         &self,
         plan: &ModePlan,
+        layout: &ModeLayout,
         z: usize,
         ws: &mut EngineWorkspace,
         factors: &FactorSet,
@@ -287,9 +354,9 @@ impl Engine {
             return Ok(());
         }
         if self.config.fused && self.backend.name() == "native" {
-            self.run_partition_fused(plan, z, ws, factors, sink, traffic)
+            self.run_partition_fused(plan, layout, z, ws, factors, sink, traffic)
         } else {
-            self.run_partition_staged(plan, z, ws, factors, sink, traffic)
+            self.run_partition_staged(plan, layout, z, ws, factors, sink, traffic)
         }
     }
 
@@ -298,14 +365,14 @@ impl Engine {
     fn run_partition_staged(
         &self,
         plan: &ModePlan,
+        layout: &ModeLayout,
         z: usize,
         ws: &mut EngineWorkspace,
         factors: &FactorSet,
         sink: &mut RowSink<'_, '_>,
         traffic: &mut TrafficCounters,
     ) -> Result<()> {
-        let copy = &self.format.copies[plan.mode];
-        let tensor = &copy.tensor;
+        let tensor = &layout.tensor;
         let (lo, hi) = plan.partition(z);
         let p = self.backend.block_p();
         let rank = plan.rank;
@@ -404,14 +471,14 @@ impl Engine {
     fn run_partition_fused(
         &self,
         plan: &ModePlan,
+        layout: &ModeLayout,
         z: usize,
         ws: &mut EngineWorkspace,
         factors: &FactorSet,
         sink: &mut RowSink<'_, '_>,
         traffic: &mut TrafficCounters,
     ) -> Result<()> {
-        let copy = &self.format.copies[plan.mode];
-        let tensor = &copy.tensor;
+        let tensor = &layout.tensor;
         let (lo, hi) = plan.partition(z);
         let rank = plan.rank;
         // acc + contrib reuse the first `2R` slots of the (otherwise
@@ -419,9 +486,9 @@ impl Engine {
         let (acc, contrib_buf) = ws.lout.split_at_mut(rank);
         let contrib = &mut contrib_buf[..rank];
         if matches!(plan.policy, UpdatePolicy::Local) && self.config.use_seg_kernel {
-            // segment runs were precomputed when the format was built —
-            // one on-chip-reduced write per run
-            for seg in &copy.segments[z] {
+            // segment runs were precomputed when the layout was built
+            // (or rebuilt) — one on-chip-reduced write per run
+            for seg in &layout.segments[z] {
                 acc.fill(0.0);
                 for t in seg.start as usize..seg.end as usize {
                     contribution(tensor, &plan.input_modes, factors, t, contrib);
@@ -600,7 +667,14 @@ impl MttkrpExecutor for Engine {
             factors,
             mode,
         )?;
-        Ok(ModeAccumulator::new(out, &self.plans[mode]))
+        // Fault the mode's layout in HERE — before the caller builds any
+        // dispatch queue over this mode's partitions (sequential drain or
+        // cross-tenant batch alike) — and PIN it in the accumulator: the
+        // whole call replays this one materialization (one fault, one
+        // LRU touch per call; a concurrent eviction cannot make replays
+        // rebuild partition by partition under the pool — B1/M1).
+        let layout = self.layout(mode)?;
+        Ok(ModeAccumulator::with_pin(out, &self.plans[mode], layout))
     }
 
     fn replay_partition(
@@ -613,9 +687,20 @@ impl MttkrpExecutor for Engine {
         traffic: &mut TrafficCounters,
     ) -> Result<()> {
         let plan = &self.plans[mode];
+        // The layout pinned by begin_mode; the governed fetch is only a
+        // fallback for an accumulator built without one (never the case
+        // for the engine's own begin_mode).
+        let fetched;
+        let layout: &ModeLayout = match acc.pinned::<ModeLayout>() {
+            Some(l) => l,
+            None => {
+                fetched = self.layout(mode)?;
+                &fetched
+            }
+        };
         let mut sink = acc.sink(z);
         self.arena.with(worker, |ws| {
-            self.run_partition(plan, z, ws, factors, &mut sink, traffic)
+            self.run_partition(plan, layout, z, ws, factors, &mut sink, traffic)
         })
     }
 }

@@ -23,8 +23,9 @@
 //! outputs, because per-partition serial math and the z-ordered merge are
 //! both schedule-independent.
 
+use std::any::Any;
 use std::collections::HashMap;
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::coordinator::shared::SharedRows;
 use crate::exec::{ModePlan, UpdatePolicy};
@@ -134,6 +135,13 @@ pub struct ModeAccumulator<'a> {
     rank: usize,
     /// One stage per partition under Global policy; empty under Local.
     stages: Vec<Mutex<GlobalStage>>,
+    /// Opaque call-lifetime pin for phase-2 resources that must survive
+    /// concurrent eviction: the engine pins the `ModeLayout` its
+    /// `begin_mode` faulted in, so every `replay_partition` of the call
+    /// replays that one materialization — no per-partition governor
+    /// traffic, no mid-dispatch rebuild thrash (M1). Baselines pin
+    /// nothing.
+    pin: Option<Arc<dyn Any + Send + Sync>>,
 }
 
 impl<'a> ModeAccumulator<'a> {
@@ -168,7 +176,27 @@ impl<'a> ModeAccumulator<'a> {
             policy: plan.policy,
             rank: plan.rank,
             stages,
+            pin: None,
         }
+    }
+
+    /// As [`ModeAccumulator::new`], pinning a call-lifetime resource
+    /// (e.g. the engine's faulted-in mode layout) retrievable by
+    /// [`ModeAccumulator::pinned`] from every partition replay.
+    pub fn with_pin(
+        out: &'a mut Vec<f32>,
+        plan: &ModePlan,
+        pin: Arc<dyn Any + Send + Sync>,
+    ) -> ModeAccumulator<'a> {
+        let mut acc = ModeAccumulator::new(out, plan);
+        acc.pin = Some(pin);
+        acc
+    }
+
+    /// The pinned resource, downcast to its concrete type (`None` when
+    /// nothing was pinned or the type does not match).
+    pub fn pinned<T: Send + Sync + 'static>(&self) -> Option<&T> {
+        self.pin.as_ref()?.downcast_ref::<T>()
     }
 
     /// The policy this accumulator was built for.
@@ -284,6 +312,18 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.to_bits(), y.to_bits(), "{x} vs {y}");
         }
+    }
+
+    #[test]
+    fn pinned_resource_is_retrievable_by_type() {
+        let p = plan(UpdatePolicy::Local);
+        let mut buf = Vec::new();
+        let acc = ModeAccumulator::with_pin(&mut buf, &p, Arc::new(42u64));
+        assert_eq!(acc.pinned::<u64>(), Some(&42));
+        assert!(acc.pinned::<String>().is_none(), "wrong type must not downcast");
+        let mut buf2 = Vec::new();
+        let bare = ModeAccumulator::new(&mut buf2, &p);
+        assert!(bare.pinned::<u64>().is_none(), "nothing pinned");
     }
 
     #[test]

@@ -22,8 +22,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::api::error::ensure_or;
 use crate::api::{Error, Result};
-use crate::exec::SmPool;
+use crate::exec::{lock_unpoisoned, SmPool};
 use crate::metrics::TrafficCounters;
 use crate::util::stats::Imbalance;
 
@@ -65,13 +66,28 @@ pub fn cost_ordered_queue(loads: &[Vec<u64>]) -> Vec<BatchItem> {
 /// batch queue is longest-first, i.e. LPT) to the least-loaded of `kappa`
 /// simulated SMs. This is the modeled κ-SM time of a packed batch, the
 /// quantity `sim_sequential / sim_packed` speedups compare against.
-pub fn lpt_makespan(costs: &[Duration], kappa: usize) -> Duration {
-    let mut sms = vec![Duration::ZERO; kappa.max(1)];
+///
+/// No items is a zero-duration makespan regardless of `kappa`; items on a
+/// zero-SM device is [`Error::InvalidConfig`] — a typed error, never the
+/// panic the old `min_by_key(..).unwrap()` formulation risked.
+pub fn lpt_makespan(costs: &[Duration], kappa: usize) -> Result<Duration> {
+    if costs.is_empty() {
+        return Ok(Duration::ZERO);
+    }
+    ensure_or!(
+        kappa > 0,
+        InvalidConfig,
+        "lpt_makespan: {} items cannot be scheduled on 0 SMs",
+        costs.len()
+    );
+    let mut sms = vec![Duration::ZERO; kappa];
     for &c in costs {
-        let z = (0..sms.len()).min_by_key(|&z| sms[z]).unwrap();
+        // kappa > 0 is guarded above, so the range is never empty; the
+        // unwrap_or keeps even a hypothetical regression panic-free
+        let z = (0..sms.len()).min_by_key(|&z| sms[z]).unwrap_or(0);
         sms[z] += c;
     }
-    sms.into_iter().max().unwrap_or_default()
+    Ok(sms.into_iter().max().unwrap_or_default())
 }
 
 /// One tenant's share of a batch dispatch: its merged traffic counters and
@@ -178,7 +194,9 @@ impl BatchScheduler {
         let start = Instant::now();
         if !self.items.is_empty() {
             pool.run(&|w| {
-                let mut out = slots[w].lock().unwrap();
+                // poison-tolerant: a panic in an earlier job must not
+                // turn this worker's slot into a second panic source
+                let mut out = lock_unpoisoned(&slots[w]);
                 loop {
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= self.items.len() {
@@ -209,7 +227,9 @@ impl BatchScheduler {
         let mut item_costs = vec![Duration::ZERO; self.items.len()];
         let penalty_ns = crate::metrics::global_atomic_penalty_ns();
         for slot in slots {
-            let out = slot.into_inner().unwrap();
+            let out = slot
+                .into_inner()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             if let Some(e) = out.err {
                 return Err(e);
             }
@@ -331,6 +351,7 @@ mod tests {
                 &cs.iter().map(|&c| Duration::from_micros(c)).collect::<Vec<_>>(),
                 k,
             )
+            .unwrap()
         };
         // [4,3,3,2] on 2 SMs: 4+2 vs 3+3 → makespan 6
         assert_eq!(ms(&[4, 3, 3, 2], 2), Duration::from_micros(6));
@@ -339,5 +360,43 @@ mod tests {
         // more SMs than items: makespan = longest item
         assert_eq!(ms(&[4, 3], 8), Duration::from_micros(4));
         assert_eq!(ms(&[], 3), Duration::ZERO);
+    }
+
+    #[test]
+    fn lpt_makespan_zero_kappa_is_typed_not_a_panic() {
+        // no items: a zero-duration makespan whatever the SM count
+        assert_eq!(lpt_makespan(&[], 0).unwrap(), Duration::ZERO);
+        // items on a zero-SM device cannot be scheduled
+        let err = lpt_makespan(&[Duration::from_micros(1)], 0).unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "got {err}");
+    }
+
+    #[test]
+    fn body_panic_propagates_and_scheduler_stays_usable() {
+        // A body panic poisons the panicking worker's output slot; the
+        // documented contract is survive-and-propagate — the panic
+        // reaches the dispatching caller and the pool + scheduler serve
+        // the next call cleanly (PoisonError::into_inner recovery).
+        let pool = SmPool::new(2);
+        let sched = BatchScheduler::new(&[vec![1, 1], vec![1, 1]]);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = sched.run(&pool, &|_w, t, z, _tr| {
+                if t == 0 && z == 1 {
+                    panic!("tenant 0 partition 1 died");
+                }
+                Ok(())
+            });
+        }));
+        assert!(caught.is_err(), "the panic must reach the caller");
+        let run = sched.run(&pool, &|_w, _t, _z, tr| {
+            tr.local_updates += 1;
+            Ok(())
+        });
+        let run = run.unwrap();
+        assert_eq!(run.item_costs.len(), 4);
+        assert_eq!(
+            run.tenants.iter().map(|t| t.traffic.local_updates).sum::<u64>(),
+            4
+        );
     }
 }

@@ -1,0 +1,646 @@
+//! The session-layer memory governor: budgeted residency for per-mode
+//! layout copies, with LRU eviction and deterministic on-demand rebuild.
+//!
+//! Fig. 5's argument is that the mode-specific format's `N` tensor copies
+//! fit a 24 GB device *for one small tensor*. A multi-tenant `Session`
+//! holds many prepared tensors at once, so this repo's analogue of "24 GB
+//! of device global memory" is a **byte budget over every prepared
+//! layout** (`SPMTTKRP_BUDGET_BYTES`, [`MemoryBudget`]). Each per-mode
+//! copy is priced with the paper's packed-bits model
+//! (`format::memory::packed_copy_bytes`) and held in an evictable
+//! [`Slot`]: under pressure the least-recently-used resident copy is
+//! dropped, and a later call that needs it **rebuilds** it from the
+//! retained COO + partitioning. The rebuild is a pure function of
+//! retained state, so replay after evict+rebuild is bitwise-identical to
+//! an always-resident run — outputs *and* `TrafficCounters` (DESIGN.md
+//! §6, invariant M1); residency costs are reported separately
+//! ([`ResidencyReport`]). Out-of-memory MTTKRP streaming (Nguyen et al.,
+//! arXiv:2201.12523) is the precedent: the kernel tolerates layouts that
+//! are re-materialized rather than fully resident.
+//!
+//! Accounting models *device* residency: an in-flight call keeps an
+//! `Arc` to the layout it is replaying, so evicting mid-call never
+//! invalidates running work — the governor's books say the bytes are
+//! free (they are, once the call's clone drops), and the configured
+//! budget is never exceeded **between** calls.
+//!
+//! Lock order: the governor's mutex may take a slot's `data` mutex (to
+//! clear a victim); no path acquires the governor mutex while holding a
+//! `data` mutex, so the order is acyclic. A slot's `rebuild` mutex wraps
+//! the governor mutex, never the reverse.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError, Weak};
+
+use crate::api::{Error, Result};
+use crate::metrics::ResidencyCounters;
+
+use super::lock_unpoisoned;
+
+/// Byte budget over every layout governed by one [`MemoryGovernor`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MemoryBudget {
+    limit: Option<u64>,
+}
+
+impl MemoryBudget {
+    /// No limit: everything prepared stays resident (the pre-governor
+    /// behavior, and the default when `SPMTTKRP_BUDGET_BYTES` is unset).
+    pub fn unbounded() -> MemoryBudget {
+        MemoryBudget { limit: None }
+    }
+
+    /// Hard byte limit on resident layout copies.
+    pub fn bytes(limit: u64) -> MemoryBudget {
+        MemoryBudget { limit: Some(limit) }
+    }
+
+    /// `SPMTTKRP_BUDGET_BYTES` if set to a positive integer, else
+    /// unbounded. Read per call — cheap, and tests stay free to vary the
+    /// variable.
+    pub fn from_env() -> MemoryBudget {
+        std::env::var("SPMTTKRP_BUDGET_BYTES")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+            .filter(|&n| n > 0)
+            .map(MemoryBudget::bytes)
+            .unwrap_or_else(MemoryBudget::unbounded)
+    }
+
+    pub fn limit(&self) -> Option<u64> {
+        self.limit
+    }
+}
+
+/// One governed tenant (one prepared tensor's set of mode slots).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TenantId(u64);
+
+impl TenantId {
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+}
+
+/// Identity of one governed slot: mode `mode` of tenant `tenant`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SlotKey {
+    pub tenant: TenantId,
+    pub mode: usize,
+}
+
+/// Residency snapshot of one slot, for per-tenant reporting
+/// (`Session::residency`).
+#[derive(Clone, Copy, Debug)]
+pub struct SlotResidency {
+    pub mode: usize,
+    pub resident: bool,
+    /// Packed-bits price the budget charges while resident.
+    pub price_bytes: u64,
+    pub rebuilds: u64,
+    pub evictions: u64,
+}
+
+/// Whole-governor snapshot (`Session::residency_report`).
+#[derive(Clone, Debug)]
+pub struct ResidencyReport {
+    /// Configured limit (`None` = unbounded).
+    pub budget: Option<u64>,
+    /// Bytes currently charged for resident (or mid-rebuild) layouts.
+    /// Never exceeds `budget` between calls.
+    pub resident_bytes: u64,
+    pub peak_resident_bytes: u64,
+    pub resident_slots: usize,
+    /// Registered slots whose layout is currently dropped.
+    pub evicted_slots: usize,
+    pub counters: ResidencyCounters,
+}
+
+/// Governor-facing view of a slot: just enough to clear a victim. Private
+/// — the governor is the only evictor.
+trait Evictable: Send + Sync {
+    fn clear(&self);
+}
+
+/// One evictable, rebuildable payload under governor accounting. `T` is
+/// the resident representation (the engine's `format::ModeLayout`); the
+/// slot itself (key, price, counters) is the part that always stays.
+pub struct Slot<T> {
+    key: SlotKey,
+    price: u64,
+    data: Mutex<Option<Arc<T>>>,
+    /// Serializes faulters so a layout is rebuilt — and its budget
+    /// reserved — exactly once per fault.
+    rebuild: Mutex<()>,
+    built_once: AtomicBool,
+    rebuilds: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl<T: Send + Sync> Slot<T> {
+    /// A new, non-resident slot. Register it with the governor before the
+    /// first [`Slot::ensure`] so eviction and reporting can see it.
+    pub fn new(key: SlotKey, price: u64) -> Arc<Slot<T>> {
+        Arc::new(Slot {
+            key,
+            price,
+            data: Mutex::new(None),
+            rebuild: Mutex::new(()),
+            built_once: AtomicBool::new(false),
+            rebuilds: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        })
+    }
+
+    pub fn key(&self) -> SlotKey {
+        self.key
+    }
+
+    /// Packed-bits price charged to the budget while resident.
+    pub fn price(&self) -> u64 {
+        self.price
+    }
+
+    pub fn resident(&self) -> bool {
+        lock_unpoisoned(&self.data).is_some()
+    }
+
+    /// The resident payload, if any (no fault-in, no LRU touch).
+    pub fn get(&self) -> Option<Arc<T>> {
+        lock_unpoisoned(&self.data).clone()
+    }
+
+    /// Rebuilds after eviction (the initial build is not counted).
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn residency(&self) -> SlotResidency {
+        SlotResidency {
+            mode: self.key.mode,
+            resident: self.resident(),
+            price_bytes: self.price,
+            rebuilds: self.rebuilds(),
+            evictions: self.evictions(),
+        }
+    }
+
+    /// Fault the payload in: return it if resident (touching the LRU),
+    /// else reserve budget with `gov` (evicting LRU victims as needed —
+    /// [`Error::BudgetExceeded`] if even that cannot make room), build
+    /// with `build`, and commit residency. `build` must be a pure
+    /// function of retained state — that purity is what makes invariant
+    /// M1 (bitwise replay after evict+rebuild) hold by construction.
+    pub fn ensure(&self, gov: &MemoryGovernor, build: impl FnOnce() -> T) -> Result<Arc<T>> {
+        if let Some(v) = self.get() {
+            gov.touch(self.key);
+            return Ok(v);
+        }
+        let _rebuilding = lock_unpoisoned(&self.rebuild);
+        if let Some(v) = self.get() {
+            // lost the race to another faulter — its build serves us
+            gov.touch(self.key);
+            return Ok(v);
+        }
+        gov.reserve(self.price)?;
+        // Roll the reservation back if `build` unwinds: a panicking
+        // worker must not inflate the governor's books forever (the
+        // survive-and-propagate contract keeps the session usable after).
+        struct Unreserve<'g> {
+            gov: &'g MemoryGovernor,
+            price: u64,
+            armed: bool,
+        }
+        impl Drop for Unreserve<'_> {
+            fn drop(&mut self) {
+                if self.armed {
+                    self.gov.rollback(self.price);
+                }
+            }
+        }
+        let mut rollback = Unreserve {
+            gov,
+            price: self.price,
+            armed: true,
+        };
+        let rebuilt = self.built_once.load(Ordering::Relaxed);
+        let value = Arc::new(build());
+        *lock_unpoisoned(&self.data) = Some(Arc::clone(&value));
+        // only a COMPLETED build flips these — an unwound build must not
+        // make the next successful initial build count as a rebuild
+        self.built_once.store(true, Ordering::Relaxed);
+        if rebuilt {
+            self.rebuilds.fetch_add(1, Ordering::Relaxed);
+        }
+        rollback.armed = false;
+        gov.commit(self.key, self.price, rebuilt);
+        Ok(value)
+    }
+}
+
+impl<T: Send + Sync> Evictable for Slot<T> {
+    fn clear(&self) {
+        *lock_unpoisoned(&self.data) = None;
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Governor-side record of one registered slot.
+struct SlotEntry {
+    key: SlotKey,
+    price: u64,
+    slot: Weak<dyn Evictable>,
+    /// Committed resident (a reserved-but-uncommitted rebuild is *not*
+    /// resident, so it can never be chosen as its own victim).
+    resident: bool,
+    last_touch: u64,
+}
+
+struct GovInner {
+    /// Bytes charged: committed residents plus in-flight reservations.
+    used: u64,
+    /// The in-flight-reservation share of `used` (reserved by `reserve`,
+    /// not yet flipped resident by `commit`). Nonzero means some faulter
+    /// is mid-build — its bytes become evictable the moment it commits,
+    /// so a reserver that finds no victim *waits* instead of failing.
+    reserved: u64,
+    peak: u64,
+    clock: u64,
+    next_tenant: u64,
+    counters: ResidencyCounters,
+    slots: Vec<SlotEntry>,
+}
+
+/// Budgeted LRU residency accounting shared by every executor of one
+/// session (or standing alone for a single engine). All methods take
+/// `&self`; state lives behind one mutex.
+pub struct MemoryGovernor {
+    budget: MemoryBudget,
+    inner: Mutex<GovInner>,
+    /// Signalled on every `commit`/`rollback`: reservers blocked on
+    /// in-flight rebuilds re-check for victims.
+    committed: Condvar,
+}
+
+impl MemoryGovernor {
+    pub fn new(budget: MemoryBudget) -> Arc<MemoryGovernor> {
+        Arc::new(MemoryGovernor {
+            budget,
+            inner: Mutex::new(GovInner {
+                used: 0,
+                reserved: 0,
+                peak: 0,
+                clock: 0,
+                next_tenant: 0,
+                counters: ResidencyCounters::default(),
+                slots: Vec::new(),
+            }),
+            committed: Condvar::new(),
+        })
+    }
+
+    pub fn budget(&self) -> MemoryBudget {
+        self.budget
+    }
+
+    /// A fresh tenant id for one prepared tensor's slot set.
+    pub fn register_tenant(&self) -> TenantId {
+        let mut g = lock_unpoisoned(&self.inner);
+        let id = g.next_tenant;
+        g.next_tenant += 1;
+        TenantId(id)
+    }
+
+    /// Register a slot for eviction and reporting. The governor holds the
+    /// slot weakly: a dropped executor's slots are pruned lazily, their
+    /// resident bytes reclaimed without counting as evictions.
+    pub fn register<T: Send + Sync + 'static>(&self, slot: &Arc<Slot<T>>) {
+        let obj: Arc<dyn Evictable> = Arc::clone(slot);
+        let mut g = lock_unpoisoned(&self.inner);
+        g.slots.push(SlotEntry {
+            key: slot.key(),
+            price: slot.price(),
+            slot: Arc::downgrade(&obj),
+            resident: false,
+            last_touch: 0,
+        });
+    }
+
+    /// Mark `key` most-recently-used (resident slots only).
+    fn touch(&self, key: SlotKey) {
+        let mut g = lock_unpoisoned(&self.inner);
+        g.clock += 1;
+        let clock = g.clock;
+        if let Some(e) = g.slots.iter_mut().find(|e| e.key == key && e.resident) {
+            e.last_touch = clock;
+        }
+    }
+
+    /// Charge `price` bytes, evicting LRU residents until it fits. When
+    /// nothing is evictable *yet* because another thread's rebuild is
+    /// mid-flight (reserved but uncommitted), this waits for that commit
+    /// — the freshly committed layout is a victim candidate — rather
+    /// than failing a replay with a timing-dependent `BudgetExceeded`.
+    /// The only hard failures are deterministic: a price over the whole
+    /// budget, or nothing reserved anywhere to wait for.
+    fn reserve(&self, price: u64) -> Result<()> {
+        let mut g = lock_unpoisoned(&self.inner);
+        loop {
+            prune_dead(&mut g);
+            let Some(limit) = self.budget.limit else {
+                g.used += price;
+                g.reserved += price;
+                g.peak = g.peak.max(g.used);
+                return Ok(());
+            };
+            if price > limit {
+                return Err(Error::BudgetExceeded {
+                    needed: price,
+                    budget: limit,
+                });
+            }
+            if g.used + price <= limit {
+                g.used += price;
+                g.reserved += price;
+                g.peak = g.peak.max(g.used);
+                return Ok(());
+            }
+            let victim = g
+                .slots
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.resident)
+                .min_by_key(|(_, e)| e.last_touch)
+                .map(|(i, _)| i);
+            if let Some(i) = victim {
+                g.slots[i].resident = false;
+                let freed = g.slots[i].price;
+                let alive = g.slots[i].slot.upgrade();
+                g.used -= freed;
+                match alive {
+                    Some(s) => {
+                        s.clear();
+                        g.counters.evictions += 1;
+                    }
+                    None => {
+                        g.slots.swap_remove(i);
+                    }
+                }
+                continue;
+            }
+            if g.reserved > 0 {
+                // an in-flight rebuild holds the remaining bytes; once it
+                // commits (or rolls back) there is something to evict
+                g = self.committed.wait(g).unwrap_or_else(PoisonError::into_inner);
+                continue;
+            }
+            return Err(Error::BudgetExceeded {
+                needed: g.used + price,
+                budget: limit,
+            });
+        }
+    }
+
+    /// Flip a reserved slot to committed-resident; record a rebuild when
+    /// this was a re-materialization rather than the initial build.
+    fn commit(&self, key: SlotKey, price: u64, rebuilt: bool) {
+        let mut g = lock_unpoisoned(&self.inner);
+        g.reserved = g.reserved.saturating_sub(price);
+        g.clock += 1;
+        let clock = g.clock;
+        if let Some(e) = g.slots.iter_mut().find(|e| e.key == key) {
+            e.resident = true;
+            e.last_touch = clock;
+        }
+        if rebuilt {
+            g.counters.rebuilds += 1;
+            g.counters.rebuild_bytes += price;
+        }
+        drop(g);
+        self.committed.notify_all();
+    }
+
+    /// Release a reservation whose build never completed (the faulter
+    /// unwound): undo the `reserve` charge and wake blocked reservers.
+    fn rollback(&self, price: u64) {
+        let mut g = lock_unpoisoned(&self.inner);
+        g.used = g.used.saturating_sub(price);
+        g.reserved = g.reserved.saturating_sub(price);
+        drop(g);
+        self.committed.notify_all();
+    }
+
+    /// Explicitly evict `key`'s layout. Returns whether a resident layout
+    /// was actually dropped (`false`: already evicted, unknown, or
+    /// mid-rebuild on another thread).
+    pub fn evict(&self, key: SlotKey) -> bool {
+        let mut g = lock_unpoisoned(&self.inner);
+        let Some(i) = g.slots.iter().position(|e| e.key == key && e.resident) else {
+            return false;
+        };
+        g.slots[i].resident = false;
+        let freed = g.slots[i].price;
+        let alive = g.slots[i].slot.upgrade();
+        g.used -= freed;
+        match alive {
+            Some(s) => {
+                s.clear();
+                g.counters.evictions += 1;
+                true
+            }
+            None => {
+                g.slots.swap_remove(i);
+                false
+            }
+        }
+    }
+
+    /// Bytes currently charged for resident layouts.
+    pub fn resident_bytes(&self) -> u64 {
+        let mut g = lock_unpoisoned(&self.inner);
+        prune_dead(&mut g);
+        g.used
+    }
+
+    pub fn counters(&self) -> ResidencyCounters {
+        lock_unpoisoned(&self.inner).counters
+    }
+
+    pub fn report(&self) -> ResidencyReport {
+        let mut g = lock_unpoisoned(&self.inner);
+        prune_dead(&mut g);
+        let resident_slots = g.slots.iter().filter(|e| e.resident).count();
+        ResidencyReport {
+            budget: self.budget.limit,
+            resident_bytes: g.used,
+            peak_resident_bytes: g.peak,
+            resident_slots,
+            evicted_slots: g.slots.len() - resident_slots,
+            counters: g.counters,
+        }
+    }
+}
+
+/// Drop registry entries whose slot died with its executor, reclaiming
+/// any bytes still charged for them (not counted as evictions — nothing
+/// was dropped under pressure).
+fn prune_dead(g: &mut GovInner) {
+    let mut i = 0;
+    while i < g.slots.len() {
+        if g.slots[i].slot.strong_count() == 0 {
+            if g.slots[i].resident {
+                g.used -= g.slots[i].price;
+            }
+            g.slots.swap_remove(i);
+        } else {
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(tenant: u64, mode: usize) -> SlotKey {
+        SlotKey {
+            tenant: TenantId(tenant),
+            mode,
+        }
+    }
+
+    fn slot(gov: &MemoryGovernor, tenant: u64, mode: usize, price: u64) -> Arc<Slot<u64>> {
+        let s = Slot::new(key(tenant, mode), price);
+        gov.register(&s);
+        s
+    }
+
+    #[test]
+    fn unbounded_governor_never_evicts_and_counts_peak() {
+        let gov = MemoryGovernor::new(MemoryBudget::unbounded());
+        let a = slot(&gov, 0, 0, 100);
+        let b = slot(&gov, 0, 1, 200);
+        assert_eq!(*a.ensure(&gov, || 7).unwrap(), 7);
+        assert_eq!(*b.ensure(&gov, || 8).unwrap(), 8);
+        assert!(a.resident() && b.resident());
+        let r = gov.report();
+        assert_eq!(r.resident_bytes, 300);
+        assert_eq!(r.peak_resident_bytes, 300);
+        assert_eq!(r.resident_slots, 2);
+        assert_eq!(r.evicted_slots, 0);
+        assert_eq!(r.counters.evictions, 0);
+        assert_eq!(r.counters.rebuilds, 0);
+    }
+
+    #[test]
+    fn lru_victim_is_the_least_recently_touched() {
+        let gov = MemoryGovernor::new(MemoryBudget::bytes(20));
+        let a = slot(&gov, 0, 0, 10);
+        let b = slot(&gov, 0, 1, 10);
+        let c = slot(&gov, 0, 2, 10);
+        a.ensure(&gov, || 1).unwrap();
+        b.ensure(&gov, || 2).unwrap();
+        a.ensure(&gov, || unreachable!()).unwrap(); // touch a: b is now LRU
+        c.ensure(&gov, || 3).unwrap(); // must evict b, not a
+        assert!(a.resident());
+        assert!(!b.resident());
+        assert!(c.resident());
+        assert_eq!(gov.resident_bytes(), 20);
+        assert_eq!(gov.counters().evictions, 1);
+        assert_eq!(b.evictions(), 1);
+        // faulting b back evicts the new LRU (a) and counts a rebuild
+        assert_eq!(*b.ensure(&gov, || 2).unwrap(), 2);
+        assert!(!a.resident());
+        assert_eq!(b.rebuilds(), 1);
+        let r = gov.report();
+        assert_eq!(r.counters.rebuilds, 1);
+        assert_eq!(r.counters.rebuild_bytes, 10);
+        assert!(r.resident_bytes <= 20);
+    }
+
+    #[test]
+    fn admission_of_an_oversized_slot_is_budget_exceeded() {
+        let gov = MemoryGovernor::new(MemoryBudget::bytes(20));
+        let big = slot(&gov, 0, 0, 21);
+        let err = big.ensure(&gov, || 0).unwrap_err();
+        assert!(
+            matches!(err, Error::BudgetExceeded { needed: 21, budget: 20 }),
+            "got {err}"
+        );
+        assert!(!big.resident());
+        assert_eq!(gov.resident_bytes(), 0);
+        // the governor still serves slots that fit
+        let ok = slot(&gov, 0, 1, 20);
+        assert_eq!(*ok.ensure(&gov, || 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn explicit_evict_reports_what_it_dropped() {
+        let gov = MemoryGovernor::new(MemoryBudget::unbounded());
+        let a = slot(&gov, 3, 1, 10);
+        assert!(!gov.evict(a.key()), "nothing resident yet");
+        a.ensure(&gov, || 1).unwrap();
+        assert!(gov.evict(a.key()));
+        assert!(!gov.evict(a.key()), "already evicted");
+        assert!(!a.resident());
+        assert_eq!(gov.resident_bytes(), 0);
+        assert!(!gov.evict(key(99, 0)), "unknown key");
+        let snap = a.residency();
+        assert_eq!(snap.mode, 1);
+        assert!(!snap.resident);
+        assert_eq!(snap.evictions, 1);
+    }
+
+    #[test]
+    fn a_panicking_build_rolls_back_its_reservation() {
+        let gov = MemoryGovernor::new(MemoryBudget::bytes(10));
+        let s = slot(&gov, 0, 0, 10);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = s.ensure(&gov, || panic!("build died"));
+        }));
+        assert!(caught.is_err());
+        assert_eq!(gov.resident_bytes(), 0, "reservation leaked past the panic");
+        assert!(!s.resident());
+        // bookkeeping not corrupted: the next successful build is still
+        // the INITIAL build (not a rebuild), and admission still works
+        assert_eq!(*s.ensure(&gov, || 5).unwrap(), 5);
+        assert_eq!(s.rebuilds(), 0);
+        assert_eq!(gov.counters().rebuilds, 0);
+        assert_eq!(gov.resident_bytes(), 10);
+    }
+
+    #[test]
+    fn dead_slots_are_pruned_without_counting_evictions() {
+        let gov = MemoryGovernor::new(MemoryBudget::bytes(10));
+        {
+            let a = slot(&gov, 0, 0, 10);
+            a.ensure(&gov, || 1).unwrap();
+            assert_eq!(gov.resident_bytes(), 10);
+        } // a drops with its bytes still charged
+        assert_eq!(gov.resident_bytes(), 0);
+        assert_eq!(gov.counters().evictions, 0);
+        // and the freed room admits a new slot
+        let b = slot(&gov, 1, 0, 10);
+        b.ensure(&gov, || 2).unwrap();
+        assert_eq!(gov.report().resident_slots, 1);
+    }
+
+    #[test]
+    fn tenant_ids_are_distinct() {
+        let gov = MemoryGovernor::new(MemoryBudget::unbounded());
+        let a = gov.register_tenant();
+        let b = gov.register_tenant();
+        assert_ne!(a, b);
+        assert_ne!(a.raw(), b.raw());
+    }
+
+    #[test]
+    fn budget_constructors() {
+        assert_eq!(MemoryBudget::unbounded().limit(), None);
+        assert_eq!(MemoryBudget::bytes(42).limit(), Some(42));
+    }
+}

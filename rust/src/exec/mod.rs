@@ -26,6 +26,11 @@
 //!   partition)` items flattened into one longest-first queue and drained
 //!   by a single pool dispatch with per-tenant accumulators, so small
 //!   tenants backfill simulated SMs that would otherwise idle.
+//! * [`memgr`] — the session memory governor: per-mode layout copies
+//!   priced with the paper's packed-bits model, admitted against a byte
+//!   budget (`SPMTTKRP_BUDGET_BYTES`), LRU-evicted under pressure, and
+//!   rebuilt deterministically on demand (invariant M1: replay after
+//!   evict+rebuild is bitwise-identical to an always-resident run).
 //!
 //! Executors differ only in layout, balance and synchronisation — the
 //! DESIGN.md "same substrate" claim is structural: `coordinator::Engine`,
@@ -34,15 +39,28 @@
 
 pub mod accum;
 pub mod batch;
+pub mod memgr;
 pub mod plan;
 pub mod pool;
 pub mod workspace;
 
 pub use accum::{GlobalStage, ModeAccumulator, RowSink};
 pub use batch::{cost_ordered_queue, lpt_makespan, BatchItem, BatchRun, BatchScheduler, TenantRun};
+pub use memgr::{
+    MemoryBudget, MemoryGovernor, ResidencyReport, Slot, SlotKey, SlotResidency, TenantId,
+};
 pub use plan::{equal_bounds, ModePlan, UpdatePolicy};
 pub use pool::{PartitionRun, SmPool};
 pub use workspace::WorkspaceArena;
+
+/// Poison-tolerant lock: a mutex poisoned by a panicking job must not
+/// turn every later pool/governor call into a second panic — the
+/// documented contract is survive-and-propagate (the original panic is
+/// re-raised at the dispatching caller; guarded state is either rebuilt
+/// per call or append-only counters, so recovery is sound).
+pub(crate) fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// Default worker count for a new pool: `SPMTTKRP_THREADS` if set (> 0),
 /// else this machine's available parallelism. Read per call — cheap, and

@@ -33,9 +33,10 @@ pub enum UpdatePolicy {
 
 /// The precomputed plan for executing one output mode: partition bounds,
 /// update policy, input-mode list, and traffic constants. Segment-run
-/// boundaries live in the format's `ModeCopy::segments` (built once
-/// alongside the partitioning); the plan is the executable view over them,
-/// keyed by `mode`. The update primitive itself is
+/// boundaries live in the format's evictable `ModeLayout::segments`
+/// (materialized with the layout, rebuilt bitwise-identically with it
+/// after an eviction — `format::mode_specific`); the plan is the
+/// always-resident executable view over them, keyed by `mode`. The update primitive itself is
 /// [`super::accum::RowSink::push`], fed through a per-call
 /// [`super::accum::ModeAccumulator`] built over this plan.
 pub struct ModePlan {

@@ -9,12 +9,13 @@
 //! modes).
 
 use std::any::Any;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::api::Result;
 use crate::exec::batch::BatchScheduler;
+use crate::exec::lock_unpoisoned;
 use crate::metrics::TrafficCounters;
 use crate::util::stats::Imbalance;
 
@@ -109,17 +110,22 @@ impl SmPool {
             std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
         };
         let sh = &*self.shared;
-        let mut st = sh.state.lock().unwrap();
+        // All pool-state locking is poison-tolerant: the survive-and-
+        // propagate contract (panics re-raised here, pool reusable after)
+        // must hold even if a panic ever unwinds while the state mutex is
+        // held — a poisoned mutex turning every later call into a second
+        // panic would silently break it.
+        let mut st = lock_unpoisoned(&sh.state);
         // Another dispatcher may be mid-call: wait for the slot.
         while st.active > 0 || st.job.is_some() {
-            st = sh.done.wait(st).unwrap();
+            st = sh.done.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         st.job = Some(job);
         st.epoch += 1;
         st.active = self.workers;
         sh.work_ready.notify_all();
         while st.active > 0 {
-            st = sh.done.wait(st).unwrap();
+            st = sh.done.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         st.job = None;
         let panic = st.panic.take();
@@ -140,14 +146,33 @@ impl SmPool {
     /// This is exactly a single-tenant batch with uniform cost estimates:
     /// the queue degenerates to partitions in ascending index order, the
     /// drain this method always had.
+    ///
+    /// A zero-partition dispatch is a typed no-op — empty counters, no
+    /// costs, zero wall — and the pool stays reusable; it neither panics
+    /// nor wakes the workers.
     pub fn run_partitions(
         &self,
         kappa: usize,
         body: &(dyn Fn(usize, usize, &mut TrafficCounters) -> Result<()> + Sync),
     ) -> Result<PartitionRun> {
+        if kappa == 0 {
+            return Ok(PartitionRun {
+                traffic: TrafficCounters::default(),
+                part_costs: Vec::new(),
+                wall: Duration::ZERO,
+            });
+        }
         let sched = BatchScheduler::new(&[vec![0u64; kappa]]);
         let run = sched.run(self, &|w, _tenant, z, tr| body(w, z, tr))?;
-        let tenant = run.tenants.into_iter().next().expect("single-tenant batch");
+        // One tenant in, one tenant out: with kappa > 0 (guarded above)
+        // the scheduler always yields exactly one TenantRun. Fail loudly
+        // if that invariant ever breaks — fabricating kappa zero-cost
+        // partitions here would silently corrupt every report.
+        let tenant = run
+            .tenants
+            .into_iter()
+            .next()
+            .expect("BatchScheduler::new with one non-empty tenant yields one TenantRun");
         Ok(PartitionRun {
             traffic: tenant.traffic,
             part_costs: tenant.part_costs,
@@ -159,7 +184,7 @@ impl SmPool {
 impl Drop for SmPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_unpoisoned(&self.shared.state);
             st.shutdown = true;
             self.shared.work_ready.notify_all();
         }
@@ -173,7 +198,7 @@ fn worker_loop(shared: &PoolShared, me: usize) {
     let mut last_epoch = 0u64;
     loop {
         let job = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_unpoisoned(&shared.state);
             loop {
                 if st.shutdown {
                     return;
@@ -182,12 +207,12 @@ fn worker_loop(shared: &PoolShared, me: usize) {
                     last_epoch = st.epoch;
                     break st.job.expect("job present while epoch advances");
                 }
-                st = shared.work_ready.wait(st).unwrap();
+                st = shared.work_ready.wait(st).unwrap_or_else(PoisonError::into_inner);
             }
         };
         let outcome =
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job(me)));
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&shared.state);
         if let Err(p) = outcome {
             if st.panic.is_none() {
                 st.panic = Some(p);
@@ -282,6 +307,51 @@ mod tests {
             .unwrap();
         assert_eq!(run.traffic.tensor_bytes_read, 20);
         assert_eq!(run.part_costs.len(), 2);
+    }
+
+    #[test]
+    fn zero_partition_dispatch_is_a_typed_noop() {
+        let pool = SmPool::new(2);
+        let hit = AtomicUsize::new(0);
+        let run = pool
+            .run_partitions(0, &|_w, _z, _tr| {
+                hit.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(hit.load(Ordering::Relaxed), 0, "no partition, no body call");
+        assert!(run.part_costs.is_empty());
+        assert_eq!(run.traffic, TrafficCounters::default());
+        assert_eq!(run.wall, Duration::ZERO);
+        // the report path tolerates the empty run too
+        let rep = run.into_report(0, Imbalance::of(&[]));
+        assert_eq!(rep.sim, Duration::ZERO);
+        // and the pool is immediately reusable for real dispatches
+        let ok = pool.run_partitions(3, &|_w, _z, _tr| Ok(())).unwrap();
+        assert_eq!(ok.part_costs.len(), 3);
+    }
+
+    #[test]
+    fn body_panic_via_run_partitions_propagates_and_pool_survives() {
+        let pool = SmPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = pool.run_partitions(5, &|_w, z, _tr| {
+                if z == 3 {
+                    panic!("partition 3 died");
+                }
+                Ok(())
+            });
+        }));
+        assert!(caught.is_err(), "the panic must reach the caller");
+        // documented contract: the pool survives and the next clean
+        // dispatch runs normally (poison-tolerant locking throughout)
+        let ok = pool.run_partitions(4, &|_w, _z, tr| {
+            tr.local_updates += 1;
+            Ok(())
+        });
+        let ok = ok.unwrap();
+        assert_eq!(ok.part_costs.len(), 4);
+        assert_eq!(ok.traffic.local_updates, 4);
     }
 
     #[test]

@@ -12,6 +12,26 @@ use crate::tensor::synth::DatasetProfile;
 /// Byte budget of the reference GPU (RTX 3090, Table II).
 pub const RTX3090_BYTES: u64 = 24 * 1024 * 1024 * 1024;
 
+/// Packed bits per nonzero under the paper's model (§III-C):
+/// `|x|_bits = sum_w ceil(log2(I_w)) + beta_float`, with f32 values
+/// (`beta_float = 32`, like the baselines).
+pub fn bits_per_nnz(dims: &[u32]) -> u32 {
+    dims.iter()
+        .map(|&d| 32 - (d.max(2) - 1).leading_zeros())
+        .sum::<u32>()
+        + 32
+}
+
+/// Bytes of **one** mode-specific copy of a `dims`/`nnz` tensor under the
+/// packed-bits model — the unit the memory governor (`exec::memgr`)
+/// prices, admits against the session byte budget, and evicts. The full
+/// format holds `N` of these; rounding up per copy, this can exceed
+/// [`MemoryReport::copies_bytes`] (which packs all copies' bits before
+/// rounding) by at most `N - 1` bytes.
+pub fn packed_copy_bytes(dims: &[u32], nnz: u64) -> u64 {
+    (nnz * bits_per_nnz(dims) as u64).div_ceil(8)
+}
+
 #[derive(Clone, Debug)]
 pub struct MemoryReport {
     pub name: String,
@@ -30,11 +50,7 @@ impl MemoryReport {
     /// Paper model for arbitrary dims/nnz (use `profile.paper_nnz` for the
     /// Fig. 5 reproduction, `tensor.nnz()` for this repo's runs).
     pub fn model(name: &str, dims: &[u32], nnz: u64, rank: usize) -> MemoryReport {
-        let bits_per_nnz: u32 = dims
-            .iter()
-            .map(|&d| 32 - (d.max(2) - 1).leading_zeros())
-            .sum::<u32>()
-            + 32; // beta_float = 32 (f32 values, like the baselines)
+        let bits_per_nnz = bits_per_nnz(dims);
         let n = dims.len();
         let copies_bits = n as u64 * nnz * bits_per_nnz as u64;
         let factors_bytes: u64 = dims.iter().map(|&d| d as u64 * rank as u64 * 4).sum();
@@ -83,6 +99,19 @@ mod tests {
         assert_eq!(m.copies_bytes, 93);
         assert_eq!(m.factors_bytes, 96);
         assert_eq!(m.total_bytes(), 189);
+    }
+
+    #[test]
+    fn packed_copy_bytes_prices_one_copy() {
+        // dims [4, 8]: 37 bits/nnz; one copy of 10 nnz = 370 bits = 47 B.
+        assert_eq!(bits_per_nnz(&[4, 8]), 37);
+        assert_eq!(packed_copy_bytes(&[4, 8], 10), 47);
+        assert_eq!(packed_copy_bytes(&[4, 8], 0), 0);
+        // per-copy rounding exceeds the packed total by < n_modes bytes
+        let m = MemoryReport::model("toy", &[4, 8], 10, 2);
+        let per_copy_total = 2 * packed_copy_bytes(&[4, 8], 10);
+        assert!(per_copy_total >= m.copies_bytes);
+        assert!(per_copy_total - m.copies_bytes < 2);
     }
 
     #[test]

@@ -6,7 +6,8 @@
 //!   substrate).
 //! * [`blco`] — blocked linearized COO (the BLCO baseline's substrate).
 //! * [`hicoo`] — block-compressed COO (the ParTI-GPU baseline's substrate).
-//! * [`memory`] — byte accounting for Fig. 5.
+//! * [`memory`] — byte accounting for Fig. 5 and the packed-bits per-copy
+//!   price the memory governor (`exec::memgr`) admits layouts at.
 
 pub mod blco;
 pub mod csf;
@@ -14,4 +15,4 @@ pub mod hicoo;
 pub mod memory;
 pub mod mode_specific;
 
-pub use mode_specific::{ModeCopy, ModeSpecificFormat};
+pub use mode_specific::{ModeCopy, ModeLayout, ModeSpecificFormat};

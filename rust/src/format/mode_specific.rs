@@ -1,4 +1,5 @@
-//! The paper's mode-specific tensor format (§III-C).
+//! The paper's mode-specific tensor format (§III-C), with governed
+//! residency.
 //!
 //! One COO copy per mode. Copy `d` is ordered partition-major (per the
 //! mode-`d` load-balancing result) and by output index within each
@@ -7,7 +8,22 @@
 //! execution engine (and the L1 segmented kernel) fully reduce an output
 //! row on-chip and write it to "global memory" exactly once — the paper's
 //! "eliminates communication of intermediate values" property.
+//!
+//! Residency split: a [`ModeCopy`] retains the *plan-grade* state — the
+//! [`ModePartitioning`] (permutation, bounds, scheme) and the original
+//! COO — permanently, while the bulky materialization (the permuted
+//! tensor copy + segment tables, [`ModeLayout`]) lives in an evictable
+//! `exec::memgr` slot priced by the paper's packed-bits model. Eviction
+//! drops only the layout; [`ModeCopy::layout`] rebuilds it on demand as a
+//! pure function of the retained state, so a replay after evict+rebuild
+//! is bitwise-identical to an always-resident run (DESIGN.md §6,
+//! invariant M1).
 
+use std::sync::Arc;
+
+use crate::api::Result;
+use crate::exec::memgr::{MemoryBudget, MemoryGovernor, Slot, SlotKey, SlotResidency, TenantId};
+use crate::format::memory::packed_copy_bytes;
 use crate::hypergraph::Hypergraph;
 use crate::partition::{
     partition_mode, LoadBalance, ModePartitioning, SchemeUsed, VertexAssign,
@@ -23,28 +39,27 @@ pub struct Segment {
     pub end: u32, // exclusive
 }
 
-/// The tensor copy specialised for one output mode.
+/// The evictable materialization of one mode copy: the permuted tensor
+/// and its segment tables. Built from `(original COO, partitioning)` by a
+/// pure function, so rebuilding after an eviction reproduces it bit for
+/// bit.
 #[derive(Clone, Debug)]
-pub struct ModeCopy {
-    pub partitioning: ModePartitioning,
+pub struct ModeLayout {
     /// The permuted tensor (same dims/vals, partition-major nonzero order).
     pub tensor: SparseTensorCOO,
     /// `segments[z]` = runs of partition `z`, in order.
     pub segments: Vec<Vec<Segment>>,
 }
 
-impl ModeCopy {
-    pub fn build(
-        original: &SparseTensorCOO,
-        hg: &Hypergraph,
-        mode: usize,
-        kappa: usize,
-        lb: LoadBalance,
-        assign: VertexAssign,
-    ) -> ModeCopy {
-        let partitioning = partition_mode(original, hg, mode, kappa, lb, assign);
+impl ModeLayout {
+    /// Materialize the copy: permute by the partitioning's `perm` and scan
+    /// each partition's contiguous output-index runs. Deterministic in its
+    /// inputs — the construction path and the post-eviction rebuild path
+    /// are this one function (invariant M1).
+    pub fn build(original: &SparseTensorCOO, partitioning: &ModePartitioning) -> ModeLayout {
         let tensor = original.permuted(&partitioning.perm);
-        let col = &tensor.inds[mode];
+        let col = &tensor.inds[partitioning.mode];
+        let kappa = partitioning.kappa;
         let mut segments = Vec::with_capacity(kappa);
         for z in 0..kappa {
             let (lo, hi) = (partitioning.bounds[z], partitioning.bounds[z + 1]);
@@ -64,11 +79,68 @@ impl ModeCopy {
             }
             segments.push(runs);
         }
-        ModeCopy {
+        ModeLayout { tensor, segments }
+    }
+
+    /// Total segments (= output-row writes the engine will perform).
+    pub fn n_segments(&self) -> usize {
+        self.segments.iter().map(|s| s.len()).sum()
+    }
+}
+
+/// The tensor copy specialised for one output mode: retained partitioning
+/// plus the governed, evictable [`ModeLayout`].
+pub struct ModeCopy {
+    pub partitioning: ModePartitioning,
+    /// Segment count, cached at first build (stable metadata — a pure
+    /// function of the partitioning, so it survives eviction).
+    n_segments: usize,
+    /// The rebuild source. On the reference GPU this is the host-side
+    /// COO; it is not charged against the device byte budget.
+    original: Arc<SparseTensorCOO>,
+    governor: Arc<MemoryGovernor>,
+    slot: Arc<Slot<ModeLayout>>,
+}
+
+impl ModeCopy {
+    /// Partition the mode, register its layout slot with `governor` under
+    /// `tenant`, and materialize it once (admission: the copy's packed-
+    /// bits price must fit the budget, evicting LRU residents if needed —
+    /// else [`crate::api::Error::BudgetExceeded`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        original: &Arc<SparseTensorCOO>,
+        hg: &Hypergraph,
+        mode: usize,
+        kappa: usize,
+        lb: LoadBalance,
+        assign: VertexAssign,
+        governor: &Arc<MemoryGovernor>,
+        tenant: TenantId,
+    ) -> Result<ModeCopy> {
+        let partitioning = partition_mode(original, hg, mode, kappa, lb, assign);
+        let price = packed_copy_bytes(&original.dims, original.nnz() as u64);
+        let slot = Slot::new(SlotKey { tenant, mode }, price);
+        governor.register(&slot);
+        let mut copy = ModeCopy {
             partitioning,
-            tensor,
-            segments,
-        }
+            n_segments: 0,
+            original: Arc::clone(original),
+            governor: Arc::clone(governor),
+            slot,
+        };
+        copy.n_segments = copy.layout()?.n_segments();
+        Ok(copy)
+    }
+
+    /// The resident layout, faulting it back in (deterministic rebuild
+    /// from the retained COO + partitioning) if it was evicted. The
+    /// returned `Arc` keeps the layout alive for the caller even if the
+    /// governor evicts the slot mid-call.
+    pub fn layout(&self) -> Result<Arc<ModeLayout>> {
+        self.slot.ensure(&self.governor, || {
+            ModeLayout::build(&self.original, &self.partitioning)
+        })
     }
 
     pub fn mode(&self) -> usize {
@@ -82,57 +154,129 @@ impl ModeCopy {
     }
 
     /// Total segments (= output-row writes the engine will perform).
+    /// Cached at construction; valid whether or not the layout is
+    /// currently resident.
     pub fn n_segments(&self) -> usize {
-        self.segments.iter().map(|s| s.len()).sum()
+        self.n_segments
+    }
+
+    /// Is the layout currently materialized?
+    pub fn resident(&self) -> bool {
+        self.slot.resident()
+    }
+
+    /// Packed-bits price the budget charges while resident.
+    pub fn price_bytes(&self) -> u64 {
+        self.slot.price()
+    }
+
+    /// Drop the layout (the partitioning and plans stay). Returns whether
+    /// anything resident was dropped; the next [`ModeCopy::layout`] call
+    /// rebuilds bitwise-identically.
+    pub fn evict(&self) -> bool {
+        self.governor.evict(self.slot.key())
+    }
+
+    /// Residency snapshot of this copy's slot.
+    pub fn residency(&self) -> SlotResidency {
+        self.slot.residency()
     }
 }
 
-/// All `N` mode copies of a tensor — the complete mode-specific format.
-#[derive(Clone, Debug)]
+/// All `N` mode copies of a tensor — the complete mode-specific format,
+/// under one governor tenant.
 pub struct ModeSpecificFormat {
     pub copies: Vec<ModeCopy>,
     pub kappa: usize,
     pub lb: LoadBalance,
+    original: Arc<SparseTensorCOO>,
+    governor: Arc<MemoryGovernor>,
+    tenant: TenantId,
 }
 
 impl ModeSpecificFormat {
+    /// Ungoverned convenience (tests, single-engine tools): a fresh
+    /// unbounded governor, everything stays resident.
     pub fn build(
         tensor: &SparseTensorCOO,
         kappa: usize,
         lb: LoadBalance,
         assign: VertexAssign,
     ) -> ModeSpecificFormat {
-        let hg = Hypergraph::of(tensor);
+        let governor = MemoryGovernor::new(MemoryBudget::unbounded());
+        Self::build_governed(Arc::new(tensor.clone()), kappa, lb, assign, governor)
+            .expect("unbounded admission cannot fail")
+    }
+
+    /// Build all `N` copies under `governor`'s budget, as one tenant.
+    /// Admission is per copy: each copy's packed-bits price must fit the
+    /// budget alone (evicting LRU residents — possibly this tensor's own
+    /// earlier modes — to make room), else
+    /// [`crate::api::Error::BudgetExceeded`].
+    pub fn build_governed(
+        tensor: Arc<SparseTensorCOO>,
+        kappa: usize,
+        lb: LoadBalance,
+        assign: VertexAssign,
+        governor: Arc<MemoryGovernor>,
+    ) -> Result<ModeSpecificFormat> {
+        let tenant = governor.register_tenant();
+        let hg = Hypergraph::of(&tensor);
         let copies = (0..tensor.n_modes())
-            .map(|d| ModeCopy::build(tensor, &hg, d, kappa, lb, assign))
-            .collect();
-        ModeSpecificFormat {
+            .map(|d| ModeCopy::build(&tensor, &hg, d, kappa, lb, assign, &governor, tenant))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModeSpecificFormat {
             copies,
             kappa,
             lb,
-        }
+            original: tensor,
+            governor,
+            tenant,
+        })
     }
 
     pub fn n_modes(&self) -> usize {
         self.copies.len()
     }
 
-    /// Actual bytes of all copies as stored by this implementation
-    /// (u32 per coordinate + f32 value, × N copies).
+    /// The retained original COO all layouts rebuild from.
+    pub fn original(&self) -> &Arc<SparseTensorCOO> {
+        &self.original
+    }
+
+    pub fn governor(&self) -> &Arc<MemoryGovernor> {
+        &self.governor
+    }
+
+    pub fn tenant(&self) -> TenantId {
+        self.tenant
+    }
+
+    /// Actual bytes of all copies as stored by this implementation when
+    /// fully resident (u32 per coordinate + f32 value, × N copies).
     pub fn stored_bytes(&self) -> u64 {
-        self.copies
-            .iter()
-            .map(|c| {
-                let n = c.tensor.n_modes() as u64;
-                c.tensor.nnz() as u64 * (n * 4 + 4)
-            })
-            .sum()
+        let n = self.original.n_modes() as u64;
+        self.copies.len() as u64 * self.original.nnz() as u64 * (n * 4 + 4)
+    }
+
+    /// As-stored bytes of the copies currently resident.
+    pub fn resident_stored_bytes(&self) -> u64 {
+        let n = self.original.n_modes() as u64;
+        let per_copy = self.original.nnz() as u64 * (n * 4 + 4);
+        self.copies.iter().filter(|c| c.resident()).count() as u64 * per_copy
+    }
+
+    /// Per-mode residency snapshots (resident?, price, rebuilds,
+    /// evictions).
+    pub fn residency(&self) -> Vec<SlotResidency> {
+        self.copies.iter().map(ModeCopy::residency).collect()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::Error;
     use crate::tensor::synth::DatasetProfile;
 
     fn fmt(scale: f64) -> (SparseTensorCOO, ModeSpecificFormat) {
@@ -147,8 +291,9 @@ mod tests {
         assert_eq!(f.n_modes(), t.n_modes());
         for (d, c) in f.copies.iter().enumerate() {
             assert_eq!(c.mode(), d);
-            assert_eq!(c.tensor.nnz(), t.nnz());
-            assert_eq!(c.tensor.dims, t.dims);
+            let l = c.layout().unwrap();
+            assert_eq!(l.tensor.nnz(), t.nnz());
+            assert_eq!(l.tensor.dims, t.dims);
         }
     }
 
@@ -156,10 +301,11 @@ mod tests {
     fn segments_tile_each_partition() {
         let (_, f) = fmt(0.005);
         for c in &f.copies {
+            let l = c.layout().unwrap();
             for z in 0..f.kappa {
                 let (lo, hi) = (c.partitioning.bounds[z], c.partitioning.bounds[z + 1]);
                 let mut cursor = lo as u32;
-                for s in &c.segments[z] {
+                for s in &l.segments[z] {
                     assert_eq!(s.start, cursor, "gap in partition {z}");
                     assert!(s.end > s.start);
                     cursor = s.end;
@@ -173,8 +319,9 @@ mod tests {
     fn segments_have_uniform_out_index() {
         let (_, f) = fmt(0.005);
         for c in &f.copies {
-            let col = &c.tensor.inds[c.mode()];
-            for runs in &c.segments {
+            let l = c.layout().unwrap();
+            let col = &l.tensor.inds[c.mode()];
+            for runs in &l.segments {
                 for s in runs {
                     for t in s.start..s.end {
                         assert_eq!(col[t as usize], s.out_index);
@@ -188,7 +335,8 @@ mod tests {
     fn segment_out_indices_unique_per_partition() {
         let (_, f) = fmt(0.005);
         for c in &f.copies {
-            for runs in &c.segments {
+            let l = c.layout().unwrap();
+            for runs in &l.segments {
                 for w in runs.windows(2) {
                     assert!(w[0].out_index < w[1].out_index);
                 }
@@ -210,5 +358,67 @@ mod tests {
         let (t, f) = fmt(0.005);
         // 4 modes: each copy stores 4 u32 coords + 1 f32 = 20 B per nnz.
         assert_eq!(f.stored_bytes(), (t.nnz() * 20 * 4) as u64);
+        assert_eq!(f.resident_stored_bytes(), f.stored_bytes());
+        f.copies[0].evict();
+        assert_eq!(f.resident_stored_bytes(), (t.nnz() * 20 * 3) as u64);
+    }
+
+    #[test]
+    fn evicted_layout_rebuilds_bitwise_identical() {
+        let (_, f) = fmt(0.002);
+        for c in &f.copies {
+            let before = c.layout().unwrap();
+            let segs_before = before.segments.clone();
+            let inds_before = before.tensor.inds.clone();
+            let bits_before: Vec<u32> =
+                before.tensor.vals.iter().map(|v| v.to_bits()).collect();
+            let n_segments = c.n_segments();
+            assert!(c.resident());
+            assert!(c.evict(), "resident copy must report eviction");
+            assert!(!c.resident());
+            assert!(!c.evict(), "second evict is a no-op");
+            // plan-grade state survives; the rebuild is bit-for-bit
+            let after = c.layout().unwrap();
+            assert!(c.resident());
+            assert_eq!(after.segments, segs_before);
+            assert_eq!(after.tensor.inds, inds_before);
+            let bits_after: Vec<u32> =
+                after.tensor.vals.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(bits_after, bits_before);
+            assert_eq!(c.n_segments(), n_segments, "cached count survives eviction");
+            assert_eq!(c.residency().rebuilds, 1);
+            assert_eq!(c.residency().evictions, 1);
+        }
+        let gov = f.governor();
+        assert_eq!(gov.counters().rebuilds, f.n_modes() as u64);
+    }
+
+    #[test]
+    fn build_governed_under_an_impossible_budget_is_budget_exceeded() {
+        let t = DatasetProfile::uber().scaled(0.002).generate(5);
+        let price = packed_copy_bytes(&t.dims, t.nnz() as u64);
+        let gov = MemoryGovernor::new(MemoryBudget::bytes(price - 1));
+        let err = ModeSpecificFormat::build_governed(
+            Arc::new(t.clone()),
+            8,
+            LoadBalance::Adaptive,
+            VertexAssign::Cyclic,
+            gov,
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::BudgetExceeded { .. }), "got {err}");
+        // a budget holding exactly one copy admits the tensor: earlier
+        // modes are evicted to make room for later ones
+        let gov = MemoryGovernor::new(MemoryBudget::bytes(price));
+        let f = ModeSpecificFormat::build_governed(
+            Arc::new(t),
+            8,
+            LoadBalance::Adaptive,
+            VertexAssign::Cyclic,
+            gov,
+        )
+        .unwrap();
+        assert_eq!(f.copies.iter().filter(|c| c.resident()).count(), 1);
+        assert!(f.governor().resident_bytes() <= price);
     }
 }

@@ -77,9 +77,9 @@ pub mod prelude {
     pub use crate::baselines::MttkrpExecutor;
     pub use crate::coordinator::{Engine, EngineConfig, UpdatePolicy};
     pub use crate::cpd::{als, CpdConfig, CpdResult};
-    pub use crate::exec::SmPool;
+    pub use crate::exec::{MemoryBudget, MemoryGovernor, ResidencyReport, SmPool};
     pub use crate::format::{memory::MemoryReport, ModeSpecificFormat};
-    pub use crate::metrics::{ExecReport, ModeExecReport, TrafficCounters};
+    pub use crate::metrics::{ExecReport, ModeExecReport, ResidencyCounters, TrafficCounters};
     pub use crate::partition::{LoadBalance, ModePartitioning, VertexAssign};
     pub use crate::runtime::{Backend, NativeBackend, PjrtBackend};
     pub use crate::tensor::{synth, FactorSet, SparseTensorCOO};

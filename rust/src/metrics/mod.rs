@@ -84,6 +84,31 @@ impl TrafficCounters {
     }
 }
 
+/// Layout-residency events under the session memory governor
+/// (`exec::memgr`): how often per-mode layout copies were evicted under
+/// budget pressure and re-materialized on demand. Rebuild traffic is
+/// deliberately **not** folded into [`TrafficCounters`] — invariant M1
+/// (DESIGN.md §6) compares replay traffic bitwise against an always-
+/// resident run, so residency costs are reported on this side channel.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResidencyCounters {
+    /// Resident layout copies dropped (LRU under pressure, or explicit).
+    pub evictions: u64,
+    /// Layout copies re-materialized from the retained COO after an
+    /// eviction (the initial build at `prepare` is not counted).
+    pub rebuilds: u64,
+    /// Packed-bits-model bytes re-materialized by those rebuilds.
+    pub rebuild_bytes: u64,
+}
+
+impl ResidencyCounters {
+    pub fn add(&mut self, o: &ResidencyCounters) {
+        self.evictions += o.evictions;
+        self.rebuilds += o.rebuilds;
+        self.rebuild_bytes += o.rebuild_bytes;
+    }
+}
+
 /// Result of executing spMTTKRP along one mode.
 #[derive(Clone, Debug)]
 pub struct ModeExecReport {
@@ -158,6 +183,20 @@ mod tests {
         ];
         assert_eq!(makespan(&costs), Duration::from_micros(9));
         assert_eq!(makespan(&[]), Duration::ZERO);
+    }
+
+    #[test]
+    fn residency_counters_add() {
+        let mut a = ResidencyCounters {
+            evictions: 1,
+            rebuilds: 2,
+            rebuild_bytes: 30,
+        };
+        let b = a;
+        a.add(&b);
+        assert_eq!(a.evictions, 2);
+        assert_eq!(a.rebuilds, 4);
+        assert_eq!(a.rebuild_bytes, 60);
     }
 
     #[test]

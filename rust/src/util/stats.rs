@@ -52,7 +52,16 @@ pub struct Imbalance {
 
 impl Imbalance {
     pub fn of(loads: &[u64]) -> Imbalance {
-        assert!(!loads.is_empty());
+        // An empty load set (e.g. a zero-partition no-op dispatch) is
+        // perfectly balanced by convention — never a panic.
+        if loads.is_empty() {
+            return Imbalance {
+                max: 0,
+                min: 0,
+                mean: 0.0,
+                factor: 1.0,
+            };
+        }
         let max = *loads.iter().max().unwrap();
         let min = *loads.iter().min().unwrap();
         let mean = loads.iter().sum::<u64>() as f64 / loads.len() as f64;
@@ -86,6 +95,14 @@ mod tests {
         assert_eq!(s.p95, 95.0);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn imbalance_of_empty_is_balanced_not_a_panic() {
+        let im = Imbalance::of(&[]);
+        assert_eq!(im.max, 0);
+        assert_eq!(im.min, 0);
+        assert_eq!(im.factor, 1.0);
     }
 
     #[test]

@@ -19,6 +19,8 @@
 
 use spmttkrp::api::{Error, ExecutorBuilder, ExecutorKind, Session};
 use spmttkrp::cpd::CpdConfig;
+use spmttkrp::exec::MemoryBudget;
+use spmttkrp::format::memory::packed_copy_bytes;
 use spmttkrp::tensor::{FactorSet, SparseTensorCOO};
 use spmttkrp::util::rng::Rng;
 
@@ -302,6 +304,119 @@ fn adversarial_wrong_mode_count_factors_are_typed_for_every_kind() {
         let good = FactorSet::random(&t.dims, 4, 9);
         assert_pool_usable(&session, h, &good);
     }
+}
+
+#[test]
+fn adversarial_budget_too_small_for_one_tenant() {
+    // One tenant fits the session budget, the other's single largest
+    // copy cannot: the second prepare is a typed BudgetExceeded, the
+    // first tenant keeps serving batches, and the pool stays reusable.
+    let mut rng = Rng::new(0xad_0007);
+    let big = loop {
+        let t = random_tensor(&mut rng);
+        if t.nnz() >= 100 {
+            break t;
+        }
+    };
+    let small = SparseTensorCOO::new(
+        vec![6, 5, 4],
+        vec![vec![0, 1, 2, 5], vec![1, 2, 3, 4], vec![2, 3, 0, 1]],
+        vec![1.0, 2.0, 3.0, 4.0],
+    )
+    .unwrap();
+    let price_big = packed_copy_bytes(&big.dims, big.nnz() as u64);
+    let price_small = packed_copy_bytes(&small.dims, small.nnz() as u64);
+    assert!(price_small * small.n_modes() as u64 < price_big, "fixture sizes inverted");
+
+    let mut session = Session::with_budget(MemoryBudget::bytes(price_big - 1));
+    let b = ExecutorBuilder::new().rank(4).sm_count(2);
+    let hs = session.prepare(&small, &b).unwrap();
+    let err = session.prepare(&big, &b).unwrap_err();
+    assert!(matches!(err, Error::BudgetExceeded { .. }), "got {err}");
+    assert_eq!(session.n_prepared(), 1);
+
+    let fs = FactorSet::random(&small.dims, 4, 21);
+    assert_pool_usable(&session, hs, &fs);
+    let batch = session
+        .mttkrp_batch(&[(hs, 0, &fs), (hs, 1, &fs)])
+        .expect("admitted tenant must keep serving batches");
+    assert_eq!(batch.outputs.len(), 2);
+    let cfg = CpdConfig { rank: 4, max_iters: 1, ..Default::default() };
+    assert!(session.decompose_batch(&[(hs, &cfg)]).is_ok());
+}
+
+#[test]
+fn adversarial_eviction_mid_decompose_batch_is_bitwise_identical() {
+    // M1 under fire: a second thread hammers evictions on every mode of
+    // every tenant WHILE a lock-step batched decomposition runs. The
+    // in-flight dispatches pin the layouts they replay and refault the
+    // rest, so the results must still be bit-for-bit those of an
+    // undisturbed control session.
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let mut rng = Rng::new(0xad_0008);
+    let tensors: Vec<SparseTensorCOO> = (0..2).map(|_| random_tensor(&mut rng)).collect();
+    let builder = ExecutorBuilder::new().rank(4).sm_count(7);
+    let mut subject = Session::with_budget(MemoryBudget::unbounded());
+    let mut control = Session::with_budget(MemoryBudget::unbounded());
+    let hs: Vec<_> = tensors.iter().map(|t| subject.prepare(t, &builder).unwrap()).collect();
+    let hc: Vec<_> = tensors.iter().map(|t| control.prepare(t, &builder).unwrap()).collect();
+    let cfgs: Vec<CpdConfig> = (0..tensors.len())
+        .map(|i| CpdConfig {
+            rank: 4,
+            max_iters: 3,
+            tol: 0.0,
+            damp: 1e-4,
+            seed: 100 + i as u64,
+        })
+        .collect();
+
+    // Deterministic guarantee first: every layout starts evicted, so the
+    // run's first begin_mode per mode MUST rebuild (counters below).
+    for (h, t) in hs.iter().zip(&tensors) {
+        for d in 0..t.n_modes() {
+            assert!(subject.evict(*h, d).unwrap());
+        }
+    }
+    // Then opportunistic mid-flight chaos from a second thread.
+    let stop = AtomicBool::new(false);
+    let reqs_s: Vec<_> = hs.iter().copied().zip(cfgs.iter()).collect();
+    let got = std::thread::scope(|scope| {
+        let evictor = scope.spawn(|| {
+            while !stop.load(Ordering::Relaxed) {
+                for (h, t) in hs.iter().zip(&tensors) {
+                    for d in 0..t.n_modes() {
+                        let _ = subject.evict(*h, d).unwrap();
+                    }
+                }
+                std::thread::yield_now();
+            }
+        });
+        let got = subject.decompose_batch(&reqs_s).unwrap();
+        stop.store(true, Ordering::Relaxed);
+        evictor.join().expect("evictor thread panicked");
+        got
+    });
+
+    let reqs_c: Vec<_> = hc.iter().copied().zip(cfgs.iter()).collect();
+    let want = control.decompose_batch(&reqs_c).unwrap();
+    for (ti, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g.fits, w.fits, "tenant {ti}: fit trajectories");
+        assert_eq!(g.weights, w.weights, "tenant {ti}: weights");
+        assert_eq!(g.iterations, w.iterations, "tenant {ti}: iterations");
+        for (m, (gf, wf)) in g.factors.factors.iter().zip(&w.factors.factors).enumerate() {
+            assert_bits_eq(&gf.data, &wf.data, &format!("tenant {ti} mode {m}"));
+        }
+        for (it, (gr, wr)) in g.reports.iter().zip(&w.reports).enumerate() {
+            assert_eq!(
+                gr.total_traffic(),
+                wr.total_traffic(),
+                "tenant {ti} iter {it}: traffic must ignore mid-flight evictions"
+            );
+        }
+    }
+    let r = subject.residency_report();
+    assert!(r.counters.rebuilds > 0, "evictions mid-run must have forced rebuilds");
 }
 
 #[test]

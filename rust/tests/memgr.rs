@@ -1,0 +1,358 @@
+//! The property-test harness pinning governed layout residency
+//! (DESIGN.md §6, invariant M1) and the pool panic-path hardening:
+//!
+//!   * **M1** — after ANY schedule of evictions and rebuilds interleaved
+//!     with `mttkrp` / `mttkrp_batch` / `decompose` across multiple
+//!     tenants, replayed outputs and per-tenant `TrafficCounters` are
+//!     **bitwise-identical** to an always-resident session; rebuild
+//!     traffic is reported only on the `ResidencyReport` side channel.
+//!   * The configured byte budget is never exceeded between calls, and
+//!     real pressure actually evicts and rebuilds.
+//!   * Admission misuse is typed: a tensor whose largest copy cannot fit
+//!     the budget is `Error::BudgetExceeded` at `prepare`, and the
+//!     session keeps serving tenants that do fit.
+//!   * Panic paths fixed alongside the governor: a zero-partition
+//!     dispatch is a typed no-op, `lpt_makespan` on a zero-SM device is
+//!     `InvalidConfig`, and a worker panic propagates while the pool
+//!     survives for the next clean dispatch.
+//!
+//! Generators are seeded through `util::rng`; every assertion message
+//! carries the case seed for replay.
+
+use std::time::Duration;
+
+use spmttkrp::api::{Error, ExecutorBuilder, Session};
+use spmttkrp::cpd::CpdConfig;
+use spmttkrp::exec::{lpt_makespan, MemoryBudget, SmPool};
+use spmttkrp::format::memory::packed_copy_bytes;
+use spmttkrp::metrics::TrafficCounters;
+use spmttkrp::tensor::{FactorSet, SparseTensorCOO};
+use spmttkrp::util::rng::Rng;
+
+/// Random small tensor: 2–4 modes, dims 1..24, nnz 1..300 — small enough
+/// that κ = 7 regularly forces Scheme 2, and cheap enough that every op
+/// can be replayed against a control session.
+fn random_tensor(rng: &mut Rng) -> SparseTensorCOO {
+    let n = 2 + rng.next_below(3) as usize;
+    let dims: Vec<u32> = (0..n).map(|_| 1 + rng.next_below(24) as u32).collect();
+    let nnz = 1 + rng.next_below(300) as usize;
+    let mut inds: Vec<Vec<u32>> = vec![Vec::with_capacity(nnz); n];
+    let mut vals = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        for (w, col) in inds.iter_mut().enumerate() {
+            let i = if rng.next_f64() < 0.5 {
+                rng.next_below(dims[w] as u64)
+            } else {
+                rng.next_power_law(dims[w] as u64, 2.0)
+            };
+            col.push(i as u32);
+        }
+        vals.push(rng.next_normal() as f32);
+    }
+    SparseTensorCOO::new(dims, inds, vals)
+        .unwrap()
+        .collapse_duplicates()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what} [{i}]: governed {x} vs resident {y}");
+    }
+}
+
+struct Tenant {
+    handle_subject: spmttkrp::TensorHandle,
+    handle_control: spmttkrp::TensorHandle,
+    n_modes: usize,
+    factors: FactorSet,
+}
+
+/// M1: randomized evict schedules interleaved with every replay entry
+/// point, checked bitwise against a never-evicted control session.
+#[test]
+fn prop_evict_rebuild_replay_is_bitwise_identical() {
+    let mut rng = Rng::new(0x3e41_0001);
+    for case in 0..10u64 {
+        let seed = 0x3e41_0001u64 + case;
+        let n_tenants = 1 + rng.next_below(3) as usize;
+        // subject: unbounded budget, but layouts are evicted at random
+        // between (and rebuilt by the governor during) operations; the
+        // control is explicitly unbounded so a stray SPMTTKRP_BUDGET_BYTES
+        // in the environment cannot make it churn
+        let mut subject = Session::with_budget(MemoryBudget::unbounded());
+        let mut control = Session::with_budget(MemoryBudget::unbounded());
+        let mut tenants = Vec::with_capacity(n_tenants);
+        for ti in 0..n_tenants {
+            let t = random_tensor(&mut rng);
+            let kappa = [1usize, 2, 7][rng.next_below(3) as usize];
+            let b = ExecutorBuilder::new().rank(4).sm_count(kappa);
+            let hs = subject
+                .prepare(&t, &b)
+                .unwrap_or_else(|e| panic!("case {seed} tenant {ti}: prepare failed: {e}"));
+            let hc = control.prepare(&t, &b).unwrap();
+            let factors = FactorSet::random(&t.dims, 4, seed ^ ((ti as u64) << 8));
+            tenants.push(Tenant {
+                handle_subject: hs,
+                handle_control: hc,
+                n_modes: t.n_modes(),
+                factors,
+            });
+        }
+
+        for op in 0..8u64 {
+            // random eviction schedule before every operation
+            for tn in &tenants {
+                for d in 0..tn.n_modes {
+                    if rng.next_f64() < 0.4 {
+                        let _ = subject.evict(tn.handle_subject, d).unwrap();
+                    }
+                }
+            }
+            match rng.next_below(3) {
+                0 => {
+                    // single-tenant sequential replay
+                    let ti = rng.next_below(n_tenants as u64) as usize;
+                    let tn = &tenants[ti];
+                    let d = rng.next_below(tn.n_modes as u64) as usize;
+                    let (got, got_rep) =
+                        subject.mttkrp(tn.handle_subject, &tn.factors, d).unwrap();
+                    let (want, want_rep) =
+                        control.mttkrp(tn.handle_control, &tn.factors, d).unwrap();
+                    assert_bits_eq(
+                        &got,
+                        &want,
+                        &format!("case {seed} op {op}: mttkrp tenant {ti} mode {d}"),
+                    );
+                    assert_eq!(
+                        got_rep.traffic, want_rep.traffic,
+                        "case {seed} op {op}: counters tenant {ti} mode {d}"
+                    );
+                }
+                1 => {
+                    // cross-tenant batched replay, one random mode each
+                    let reqs_s: Vec<_> = tenants
+                        .iter()
+                        .map(|tn| {
+                            let d = rng.next_below(tn.n_modes as u64) as usize;
+                            (tn.handle_subject, d, &tn.factors)
+                        })
+                        .collect();
+                    let batch = subject.mttkrp_batch(&reqs_s).unwrap();
+                    for (r, (tn, &(_, d, _))) in
+                        tenants.iter().zip(&reqs_s).enumerate()
+                    {
+                        let (want, want_rep) =
+                            control.mttkrp(tn.handle_control, &tn.factors, d).unwrap();
+                        assert_bits_eq(
+                            &batch.outputs[r],
+                            &want,
+                            &format!("case {seed} op {op}: batch req {r} mode {d}"),
+                        );
+                        assert_eq!(
+                            batch.reports[r].traffic, want_rep.traffic,
+                            "case {seed} op {op}: batch counters req {r} mode {d}"
+                        );
+                    }
+                }
+                _ => {
+                    // a full decomposition replayed through the governor
+                    let ti = rng.next_below(n_tenants as u64) as usize;
+                    let tn = &tenants[ti];
+                    let cfg = CpdConfig {
+                        rank: 4,
+                        max_iters: 2,
+                        tol: 0.0,
+                        damp: 1e-4,
+                        seed: seed ^ 0xd
+                    };
+                    let got = subject.decompose(tn.handle_subject, &cfg).unwrap();
+                    let want = control.decompose(tn.handle_control, &cfg).unwrap();
+                    assert_eq!(got.fits, want.fits, "case {seed} op {op}: fits tenant {ti}");
+                    assert_eq!(got.weights, want.weights, "case {seed} op {op}: weights");
+                    for (m, (gf, wf)) in got
+                        .factors
+                        .factors
+                        .iter()
+                        .zip(&want.factors.factors)
+                        .enumerate()
+                    {
+                        assert_bits_eq(
+                            &gf.data,
+                            &wf.data,
+                            &format!("case {seed} op {op}: tenant {ti} factor {m}"),
+                        );
+                    }
+                    for (it, (gr, wr)) in
+                        got.reports.iter().zip(&want.reports).enumerate()
+                    {
+                        assert_eq!(
+                            gr.total_traffic(),
+                            wr.total_traffic(),
+                            "case {seed} op {op}: tenant {ti} iter {it} traffic"
+                        );
+                    }
+                }
+            }
+        }
+        // the control never evicted or rebuilt; the subject's residency
+        // events all went to the side channel, never into replay counters
+        let rc = control.residency_report();
+        assert_eq!(rc.counters.evictions, 0, "case {seed}: control evicted");
+        assert_eq!(rc.counters.rebuilds, 0, "case {seed}: control rebuilt");
+    }
+}
+
+/// The budget is a hard ceiling between calls, and real pressure really
+/// evicts and rebuilds (the counters move).
+#[test]
+fn prop_budget_never_exceeded_between_calls() {
+    let mut rng = Rng::new(0x3e41_b001);
+    for case in 0..6u64 {
+        let seed = 0x3e41_b001u64 + case;
+        let ta = random_tensor(&mut rng);
+        let tb = random_tensor(&mut rng);
+        let price_a = packed_copy_bytes(&ta.dims, ta.nnz() as u64);
+        let price_b = packed_copy_bytes(&tb.dims, tb.nnz() as u64);
+        // room for one tensor's full copy set plus one more copy — the
+        // second tenant must fight the first for residency
+        let budget = price_a * ta.n_modes() as u64 + price_b;
+        let mut s = Session::with_budget(MemoryBudget::bytes(budget));
+        let b = ExecutorBuilder::new().rank(4).sm_count(4);
+        let ha = s.prepare(&ta, &b).unwrap();
+        let hb = s.prepare(&tb, &b).unwrap();
+        assert!(
+            s.residency_report().resident_bytes <= budget,
+            "case {seed}: budget exceeded after prepare"
+        );
+        let fa = FactorSet::random(&ta.dims, 4, seed);
+        let fb = FactorSet::random(&tb.dims, 4, seed ^ 1);
+        for round in 0..4 {
+            for d in 0..ta.n_modes() {
+                s.mttkrp(ha, &fa, d).unwrap();
+                let r = s.residency_report();
+                assert!(
+                    r.resident_bytes <= budget,
+                    "case {seed} round {round}: {} > {budget} after tenant A mode {d}",
+                    r.resident_bytes
+                );
+            }
+            for d in 0..tb.n_modes() {
+                s.mttkrp(hb, &fb, d).unwrap();
+                let r = s.residency_report();
+                assert!(
+                    r.resident_bytes <= budget,
+                    "case {seed} round {round}: {} > {budget} after tenant B mode {d}",
+                    r.resident_bytes
+                );
+            }
+        }
+        let r = s.residency_report();
+        assert!(r.peak_resident_bytes <= budget, "case {seed}: peak over budget");
+        assert!(
+            r.counters.evictions >= 1 && r.counters.rebuilds >= 1,
+            "case {seed}: pressure produced no residency churn \
+             (evictions {}, rebuilds {})",
+            r.counters.evictions,
+            r.counters.rebuilds
+        );
+        assert!(r.counters.rebuild_bytes > 0, "case {seed}: rebuilds priced at 0 bytes");
+    }
+}
+
+/// Admission: a tensor whose single largest copy cannot fit is rejected
+/// at `prepare` with `BudgetExceeded`; smaller tenants still serve.
+#[test]
+fn budget_too_small_for_one_tenant_is_typed_at_prepare() {
+    let mut rng = Rng::new(0x3e41_ad01);
+    let big = loop {
+        let t = random_tensor(&mut rng);
+        if t.nnz() >= 50 {
+            break t;
+        }
+    };
+    let price_big = packed_copy_bytes(&big.dims, big.nnz() as u64);
+    let small = SparseTensorCOO::new(
+        vec![4, 4, 4],
+        vec![vec![0, 1, 2, 3], vec![1, 2, 3, 0], vec![2, 3, 0, 1]],
+        vec![1.0, 2.0, 3.0, 4.0],
+    )
+    .unwrap();
+    let price_small = packed_copy_bytes(&small.dims, small.nnz() as u64);
+    assert!(price_small < price_big, "fixture sizes inverted");
+    let mut s = Session::with_budget(MemoryBudget::bytes(price_big - 1));
+    let b = ExecutorBuilder::new().rank(4).sm_count(2);
+    // the small tenant is admitted...
+    let hs = s.prepare(&small, &b).unwrap();
+    // ...the big one is typed away without disturbing it
+    let err = s.prepare(&big, &b).unwrap_err();
+    assert!(matches!(err, Error::BudgetExceeded { .. }), "got {err}");
+    assert_eq!(s.n_prepared(), 1);
+    let fs = FactorSet::random(&small.dims, 4, 3);
+    assert!(s.mttkrp(hs, &fs, 0).is_ok(), "session unusable after rejection");
+    let batch = s.mttkrp_batch(&[(hs, 0, &fs)]).unwrap();
+    assert_eq!(batch.outputs.len(), 1);
+}
+
+/// Rebuild traffic lands on the residency report, never in the replay's
+/// `TrafficCounters` (the M1 separation).
+#[test]
+fn rebuild_traffic_is_reported_separately() {
+    let mut rng = Rng::new(0x3e41_5e9a);
+    let t = random_tensor(&mut rng);
+    let mut s = Session::with_budget(MemoryBudget::unbounded());
+    let h = s.prepare(&t, &ExecutorBuilder::new().rank(4).sm_count(3)).unwrap();
+    let fs = FactorSet::random(&t.dims, 4, 9);
+    let (_, rep_resident) = s.mttkrp(h, &fs, 0).unwrap();
+    assert!(s.evict(h, 0).unwrap());
+    let (_, rep_rebuilt) = s.mttkrp(h, &fs, 0).unwrap();
+    assert_eq!(
+        rep_resident.traffic, rep_rebuilt.traffic,
+        "rebuild cost leaked into replay counters"
+    );
+    let snap = s.residency(h).unwrap();
+    assert_eq!(snap[0].rebuilds, 1);
+    assert_eq!(snap[0].evictions, 1);
+    assert!(snap[0].resident);
+    let r = s.residency_report();
+    assert_eq!(r.counters.rebuilds, 1);
+    assert_eq!(r.counters.rebuild_bytes, snap[0].price_bytes);
+}
+
+// ------------------------------------------------- panic-path hardening
+
+#[test]
+fn zero_partition_dispatch_is_a_typed_noop_and_pool_survives() {
+    let pool = SmPool::new(2);
+    let run = pool.run_partitions(0, &|_w, _z, _tr| Ok(())).unwrap();
+    assert!(run.part_costs.is_empty());
+    assert_eq!(run.traffic, TrafficCounters::default());
+    let ok = pool.run_partitions(2, &|_w, _z, _tr| Ok(())).unwrap();
+    assert_eq!(ok.part_costs.len(), 2);
+}
+
+#[test]
+fn lpt_makespan_zero_sm_device_is_invalid_config() {
+    assert_eq!(lpt_makespan(&[], 0).unwrap(), Duration::ZERO);
+    let err = lpt_makespan(&[Duration::from_micros(3)], 0).unwrap_err();
+    assert!(matches!(err, Error::InvalidConfig(_)), "got {err}");
+}
+
+#[test]
+fn worker_panic_propagates_and_next_dispatch_is_clean() {
+    let pool = SmPool::new(2);
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _ = pool.run_partitions(4, &|_w, z, _tr| {
+            if z == 1 {
+                panic!("partition 1 died");
+            }
+            Ok(())
+        });
+    }));
+    assert!(caught.is_err(), "panic must reach the dispatching caller");
+    let ok = pool.run_partitions(3, &|_w, _z, tr| {
+        tr.local_updates += 1;
+        Ok(())
+    });
+    assert_eq!(ok.unwrap().traffic.local_updates, 3);
+}
