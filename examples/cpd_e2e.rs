@@ -51,7 +51,7 @@ fn main() -> spmttkrp::Result<()> {
         _ => BackendKind::Pjrt,
     });
     let t0 = std::time::Instant::now();
-    let mut session = Session::new();
+    let mut session = Session::builder().build()?;
     let h = session.prepare(&tensor, &builder)?;
     let engine = session.engine(h)?;
     println!(

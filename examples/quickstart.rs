@@ -15,7 +15,7 @@ fn main() -> spmttkrp::Result<()> {
     // 2. Prepare it once: mode-specific format + adaptive load balancing
     //    over 82 simulated SMs (the paper's RTX 3090 κ), registered in a
     //    session that replays the layout for every later call.
-    let mut session = Session::new();
+    let mut session = Session::builder().build()?;
     let h = session.prepare(&tensor, &ExecutorBuilder::new().rank(16))?;
     let engine = session.engine(h)?;
     for (d, copy) in engine.format.copies.iter().enumerate() {

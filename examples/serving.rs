@@ -1,0 +1,132 @@
+//! Async serving quick start: a prepared `Session` turned into a
+//! `Service`, concurrent clients, dynamic batching, graceful shutdown.
+//!
+//!     cargo run --release --example serving
+//!     SPMTTKRP_SERVE_SCALE=0.05 SPMTTKRP_SERVE_CLIENTS=8 cargo run ...
+//!
+//! Three tenants are prepared once (layout + partitioning built here,
+//! replayed forever), then the session moves behind a dispatcher thread:
+//! clients submit typed `MttkrpRequest`/`DecomposeRequest`s and block on
+//! tickets while the dispatcher coalesces the shared queue into batched
+//! pool dispatches. Served results are bitwise-identical to direct
+//! session calls (invariant V1) — this driver demonstrates the shape and
+//! prints the serving report.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use spmttkrp::prelude::*;
+
+fn env_f64(key: &str, default: f64) -> f64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> spmttkrp::Result<()> {
+    let rank = 16;
+    let scale = env_f64("SPMTTKRP_SERVE_SCALE", 0.01);
+    let clients = env_usize("SPMTTKRP_SERVE_CLIENTS", 4);
+
+    // 1. Configure the session once: pool, budget, and the serving knobs
+    //    `into_service` will dispatch under.
+    let mut session = Session::builder()
+        .max_batch(32)
+        .max_wait(Duration::from_millis(2))
+        .queue_bound(1024)
+        .build()?;
+
+    // 2. Prepare the tenants (the expensive step, paid once per tensor).
+    let profiles = [
+        synth::DatasetProfile::uber(),
+        synth::DatasetProfile::nips(),
+        synth::DatasetProfile::chicago(),
+    ];
+    let mut handles = Vec::new();
+    let mut factor_sets = Vec::new();
+    for (i, p) in profiles.iter().enumerate() {
+        let tensor = Arc::new(p.clone().scaled(scale).generate(0x5e12 + i as u64));
+        let factors = Arc::new(FactorSet::random(&tensor.dims, rank, 0xfee + i as u64));
+        let h = session.prepare_shared(
+            Arc::clone(&tensor),
+            &ExecutorBuilder::new().rank(rank).sm_count(82),
+        )?;
+        println!(
+            "tenant {i}: dims {:?}, {} nnz, handle prepared",
+            tensor.dims,
+            tensor.nnz()
+        );
+        handles.push(h);
+        factor_sets.push(factors);
+    }
+
+    // 3. Go async: the session moves behind a dispatcher thread.
+    let service = Arc::new(session.into_service()?);
+
+    // 4. Concurrent clients burst typed requests and block on tickets.
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let service = Arc::clone(&service);
+            let handles = &handles;
+            let factor_sets = &factor_sets;
+            scope.spawn(move || {
+                let mut tickets = Vec::new();
+                for (h, fs) in handles.iter().zip(factor_sets) {
+                    for d in 0..fs.n_modes() {
+                        let req = MttkrpRequest::new(*h, d, Arc::clone(fs));
+                        tickets.push(service.submit_mttkrp(req).expect("submit"));
+                    }
+                }
+                // one client also runs a full decomposition through the
+                // same queue
+                let cpd = (c == 0).then(|| {
+                    service
+                        .submit_decompose(DecomposeRequest::new(
+                            handles[0],
+                            CpdConfig { rank, max_iters: 3, ..Default::default() },
+                        ))
+                        .expect("submit decompose")
+                });
+                for t in tickets {
+                    let (out, rep) = t.wait().expect("served mttkrp");
+                    assert!(!out.is_empty());
+                    let _ = rep;
+                }
+                if let Some(t) = cpd {
+                    let r = t.wait().expect("served decompose");
+                    println!(
+                        "client 0: served CPD fit {:.4} after {} iters",
+                        r.final_fit(),
+                        r.iterations
+                    );
+                }
+            });
+        }
+    });
+
+    // 5. Graceful shutdown: drain, join, report.
+    let report = service.shutdown();
+    let c = report.counters;
+    println!(
+        "\nserved {} requests in {} dispatches (occupancy {:.2}), {} rejected",
+        c.completed + c.failed,
+        c.dispatches,
+        report.mean_batch_occupancy,
+        c.rejected
+    );
+    println!(
+        "request latency: p50 {:?}  p95 {:?}  p99 {:?}  max {:?}",
+        report.request_latency.p50,
+        report.request_latency.p95,
+        report.request_latency.p99,
+        report.request_latency.max
+    );
+    println!(
+        "queue wait:      p50 {:?}  p95 {:?}  (max queue depth {})",
+        report.queue_latency.p50, report.queue_latency.p95, c.max_queue_depth
+    );
+    assert_eq!(c.completed, c.submitted, "every admitted request completed");
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! Bench: async served spMTTKRP throughput — dynamic batching under
+//! concurrent clients.
+//!
+//!     cargo bench --bench service_throughput
+//!     SPMTTKRP_BENCH_SCALE=0.02 SPMTTKRP_BENCH_CLIENTS=8 cargo bench ...
+//!
+//! M client threads fire bursts of `MttkrpRequest`s at one `Service` and
+//! block on their tickets; the dispatcher coalesces the shared queue into
+//! batched dispatches (`max_batch`/`max_wait` policy). The printed
+//! `service:` line is machine-readable for CI: per-request latency
+//! percentiles (enqueue → complete), mean batch occupancy (requests per
+//! coalesced dispatch — > 1 means dynamic batching actually batched),
+//! and rejects. See DESIGN.md §4 row SVC-T.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use spmttkrp::api::{MttkrpRequest, Service, ServicePolicy};
+use spmttkrp::bench_support::{batch_workload, bench_scale, print_table};
+use spmttkrp::tensor::FactorSet;
+
+fn clients() -> usize {
+    std::env::var("SPMTTKRP_BENCH_CLIENTS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n: &usize| n > 0)
+        .unwrap_or(4)
+}
+
+fn main() {
+    let rank = 16;
+    let kappa = 82;
+    let n_tenants = 4;
+    let sweeps_per_client = 2;
+    let scale = bench_scale();
+    let clients = clients();
+    println!(
+        "service throughput bench: rank {rank}, κ {kappa}, {n_tenants} tenants, \
+         {clients} clients x {sweeps_per_client} sweeps, scale {scale}"
+    );
+
+    let w = batch_workload(n_tenants, rank, kappa, scale);
+    let handles = w.handles;
+    let factor_sets: Vec<Arc<FactorSet>> = w.factor_sets.into_iter().map(Arc::new).collect();
+    let service = Arc::new(
+        Service::spawn(
+            Arc::new(w.session),
+            ServicePolicy {
+                max_batch: 64,
+                max_wait: Duration::from_millis(2),
+                queue_bound: 4096,
+            },
+        )
+        .expect("spawn service"),
+    );
+
+    // Every client bursts its full request set, then waits all tickets —
+    // the submit-all-then-wait shape that gives the dispatcher something
+    // to coalesce (and what a real fan-in frontend looks like).
+    std::thread::scope(|scope| {
+        for _ in 0..clients {
+            let service = Arc::clone(&service);
+            let handles = &handles;
+            let factor_sets = &factor_sets;
+            scope.spawn(move || {
+                let mut tickets = Vec::new();
+                for _ in 0..sweeps_per_client {
+                    for (h, fs) in handles.iter().zip(factor_sets) {
+                        for d in 0..fs.n_modes() {
+                            let req = MttkrpRequest::new(*h, d, Arc::clone(fs));
+                            tickets.push(service.submit_mttkrp(req).expect("submit"));
+                        }
+                    }
+                }
+                for t in tickets {
+                    t.wait().expect("served mttkrp");
+                }
+            });
+        }
+    });
+
+    let report = service.shutdown();
+    let c = report.counters;
+    assert_eq!(c.completed, c.submitted, "every submitted request must complete");
+    assert_eq!(c.failed, 0, "no typed failures expected in this workload");
+    assert!(
+        report.mean_batch_occupancy > 1.0,
+        "dynamic batching must coalesce under {clients} concurrent clients \
+         (occupancy {:.2})",
+        report.mean_batch_occupancy
+    );
+
+    let us = |d: Duration| (d.as_secs_f64() * 1e6).round();
+    print_table(
+        "Served spMTTKRP — per-request latency (enqueue → complete), µs",
+        &["requests", "dispatches", "occupancy", "p50", "p95", "p99", "max"],
+        &[vec![
+            c.submitted.to_string(),
+            c.dispatches.to_string(),
+            format!("{:.2}", report.mean_batch_occupancy),
+            format!("{}", us(report.request_latency.p50)),
+            format!("{}", us(report.request_latency.p95)),
+            format!("{}", us(report.request_latency.p99)),
+            format!("{}", us(report.request_latency.max)),
+        ]],
+    );
+    // machine-readable for CI grep
+    println!(
+        "service: clients={clients} requests={} p50_us={} p95_us={} p99_us={} \
+         queue_p50_us={} occupancy={:.2} rejects={}",
+        c.submitted,
+        us(report.request_latency.p50),
+        us(report.request_latency.p95),
+        us(report.request_latency.p99),
+        us(report.queue_latency.p50),
+        report.mean_batch_occupancy,
+        c.rejected,
+    );
+}

@@ -24,9 +24,11 @@
 //! any one request [`ShapeMismatch`](super::Error::ShapeMismatch) — and
 //! the pool stays reusable after every rejection.
 
+use std::borrow::Borrow;
 use std::time::Duration;
 
 use super::error::{bail_with, ensure_or};
+use super::request::{DecomposeRequest, MttkrpRequest};
 use super::session::{Session, TensorHandle};
 use super::Result;
 use crate::baselines::MttkrpExecutor;
@@ -84,15 +86,30 @@ impl Session {
         &self,
         reqs: &[(TensorHandle, usize, &FactorSet)],
     ) -> Result<MttkrpBatch> {
+        let typed: Vec<MttkrpRequest<&FactorSet>> = reqs
+            .iter()
+            .map(|&(h, mode, factors)| MttkrpRequest::new(h, mode, factors))
+            .collect();
+        self.run_mttkrp_batch(&typed)
+    }
+
+    /// The request-typed core behind [`Session::mttkrp_batch`] — also the
+    /// dispatch the [`super::Service`] queue drains into. Generic over how
+    /// each request holds its factors (`&FactorSet` sync, `Arc<FactorSet>`
+    /// across the service queue) so neither path clones factor data.
+    pub fn run_mttkrp_batch<F: Borrow<FactorSet>>(
+        &self,
+        reqs: &[MttkrpRequest<F>],
+    ) -> Result<MttkrpBatch> {
         ensure_or!(!reqs.is_empty(), InvalidConfig, "mttkrp_batch: empty batch");
         for i in 0..reqs.len() {
             for j in 0..i {
-                if reqs[i].0 == reqs[j].0 && reqs[i].1 == reqs[j].1 {
+                if reqs[i].handle == reqs[j].handle && reqs[i].mode == reqs[j].mode {
                     bail_with!(
                         InvalidConfig,
                         "mttkrp_batch: requests {j} and {i} both name mode {} of the same \
                          handle — a duplicate computes the same output twice",
-                        reqs[i].1
+                        reqs[i].mode
                     );
                 }
             }
@@ -101,7 +118,7 @@ impl Session {
         // bad handle/mode/rank anywhere rejects the whole batch untouched.
         let execs: Vec<&dyn MttkrpExecutor> = reqs
             .iter()
-            .map(|&(h, _, _)| self.executor(h))
+            .map(|r| self.executor(r.handle))
             .collect::<Result<_>>()?;
         let mut outs: Vec<Vec<f32>> = vec![Vec::new(); reqs.len()];
         let mut accs = Vec::with_capacity(reqs.len());
@@ -109,19 +126,19 @@ impl Session {
         // tenant's mode copy is resident BEFORE the cross-tenant queue is
         // built and dispatched, so batching replays exactly what the
         // sequential path replays (B1 over governed residency, M1).
-        for ((out, &(_, mode, factors)), ex) in outs.iter_mut().zip(reqs).zip(&execs) {
-            accs.push(ex.begin_mode(factors, mode, out)?);
+        for ((out, req), ex) in outs.iter_mut().zip(reqs).zip(&execs) {
+            accs.push(ex.begin_mode(req.factors.borrow(), req.mode, out)?);
         }
         let loads: Vec<Vec<u64>> = reqs
             .iter()
             .zip(&execs)
-            .map(|(&(_, mode, _), ex)| ex.partition_loads(mode))
+            .map(|(req, ex)| ex.partition_loads(req.mode))
             .collect();
 
         let sched = BatchScheduler::new(&loads);
         let run = sched.run(self.pool(), &|w, tenant, z, tr| {
-            let (_, mode, factors) = reqs[tenant];
-            execs[tenant].replay_partition(w, mode, z, factors, &accs[tenant], tr)
+            let req = &reqs[tenant];
+            execs[tenant].replay_partition(w, req.mode, z, req.factors.borrow(), &accs[tenant], tr)
         })?;
         for acc in accs {
             acc.merge();
@@ -132,7 +149,7 @@ impl Session {
             .iter()
             .zip(reqs)
             .zip(&loads)
-            .map(|((tr, &(_, mode, _)), ls)| tr.to_report(mode, run.wall, Imbalance::of(ls)))
+            .map(|((tr, req), ls)| tr.to_report(req.mode, run.wall, Imbalance::of(ls)))
             .collect();
         let kappa = loads.iter().map(|l| l.len()).max().unwrap_or(1);
         let dispatch = BatchDispatchReport {
@@ -164,10 +181,21 @@ impl Session {
         &self,
         reqs: &[(TensorHandle, &CpdConfig)],
     ) -> Result<Vec<CpdResult>> {
+        let typed: Vec<DecomposeRequest> = reqs
+            .iter()
+            .map(|&(h, cfg)| DecomposeRequest::new(h, cfg.clone()))
+            .collect();
+        self.run_decompose_batch(&typed)
+    }
+
+    /// The request-typed core behind [`Session::decompose_batch`] — also
+    /// what the [`super::Service`] dispatcher coalesces queued decompose
+    /// requests into.
+    pub fn run_decompose_batch(&self, reqs: &[DecomposeRequest]) -> Result<Vec<CpdResult>> {
         ensure_or!(!reqs.is_empty(), InvalidConfig, "decompose_batch: empty batch");
         for i in 0..reqs.len() {
             for j in 0..i {
-                if reqs[i].0 == reqs[j].0 {
+                if reqs[i].handle == reqs[j].handle {
                     bail_with!(
                         InvalidConfig,
                         "decompose_batch: requests {j} and {i} name the same handle — \
@@ -180,10 +208,10 @@ impl Session {
         // UnknownHandle for foreign handles, InvalidConfig for baseline
         // handles or rank mismatches, InvalidData for a zero tensor.
         let mut states: Vec<AlsState<'_>> = Vec::with_capacity(reqs.len());
-        for &(h, cfg) in reqs {
-            let engine = self.engine(h)?;
-            let tensor = self.tensor(h)?;
-            states.push(AlsState::new(engine, tensor, cfg)?);
+        for req in reqs {
+            let engine = self.engine(req.handle)?;
+            let tensor = self.tensor(req.handle)?;
+            states.push(AlsState::new(engine, tensor, &req.config)?);
         }
         let max_modes = states.iter().map(|s| s.n_modes()).max().unwrap_or(0);
 

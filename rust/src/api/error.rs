@@ -53,6 +53,20 @@ pub enum Error {
         /// The configured budget.
         budget: u64,
     },
+    /// A [`crate::api::Service`] refused a submission because its bounded
+    /// queue is full (`ServicePolicy::queue_bound`) — back-pressure, not
+    /// failure: retry after in-flight requests drain.
+    Overloaded {
+        /// Requests queued at rejection time.
+        queued: usize,
+        /// The configured queue bound.
+        bound: usize,
+    },
+    /// The [`crate::api::Service`] this request was submitted to (or
+    /// waited on) has stopped — a graceful shutdown already ran, or the
+    /// dispatcher thread died. The underlying `Session` is still usable;
+    /// a ticket never hangs on a stopped service.
+    ServiceStopped(String),
 }
 
 impl Error {
@@ -83,6 +97,12 @@ impl fmt::Display for Error {
                 "memory budget exceeded: {needed} B would need to be resident, \
                  budget is {budget} B (SPMTTKRP_BUDGET_BYTES)"
             ),
+            Error::Overloaded { queued, bound } => write!(
+                f,
+                "service overloaded: {queued} requests queued, bound is {bound} \
+                 (ServicePolicy::queue_bound) — retry after the queue drains"
+            ),
+            Error::ServiceStopped(m) => write!(f, "service stopped: {m}"),
         }
     }
 }
@@ -146,6 +166,25 @@ mod tests {
         let s = e.to_string();
         assert!(s.contains("100 B"), "{s}");
         assert!(s.contains("64 B"), "{s}");
+    }
+
+    #[test]
+    fn overloaded_names_queue_and_bound() {
+        let e = Error::Overloaded {
+            queued: 128,
+            bound: 128,
+        };
+        let s = e.to_string();
+        assert!(s.contains("128 requests queued"), "{s}");
+        assert!(s.contains("bound is 128"), "{s}");
+    }
+
+    #[test]
+    fn service_stopped_carries_the_reason() {
+        let e = Error::ServiceStopped("dispatcher joined".into());
+        let s = e.to_string();
+        assert!(s.starts_with("service stopped:"), "{s}");
+        assert!(s.contains("dispatcher joined"), "{s}");
     }
 
     #[test]

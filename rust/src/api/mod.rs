@@ -1,5 +1,5 @@
 //! The typed public front-end: one way in for every executor, every
-//! backend, and multi-tensor serving.
+//! backend, and multi-tensor serving — sync, batched, or async.
 //!
 //! * [`Error`] / [`Result`] — the library-wide error surface. No public
 //!   `spmttkrp` signature exposes `anyhow`; misuse returns a typed
@@ -8,17 +8,27 @@
 //!   paper's engine and all three baselines ([`ExecutorKind`]), on either
 //!   backend ([`BackendKind`]), with an owned or shared
 //!   [`crate::exec::SmPool`]. Subsumes the former constructor zoo.
-//! * [`Session`] — a multi-tenant registry: `prepare()` many tensors once,
-//!   then replay `mttkrp`/`mttkrp_into`/`decompose` through
-//!   [`TensorHandle`]s on one persistent pool. Handles never rebuild
-//!   plans.
+//! * [`SessionBuilder`] / [`Session`] — a multi-tenant registry:
+//!   configure pool, byte budget and serving policy once, `prepare()`
+//!   many tensors once, then replay `mttkrp`/`mttkrp_into`/`decompose`
+//!   through [`TensorHandle`]s on one persistent pool. Handles never
+//!   rebuild plans.
+//! * [`MttkrpRequest`] / [`DecomposeRequest`] — the typed request values
+//!   every entry point bottoms out in, so handle/mode/rank validation and
+//!   typed errors are identical on the sync, batched and served paths.
 //! * [`Session::mttkrp_batch`] / [`Session::decompose_batch`] — batched
 //!   multi-tenant serving: many tenants' partitions packed into single
 //!   pool dispatches (longest-first across tensors), bitwise-identical to
 //!   sequential replay per tenant.
+//! * [`Service`] — the async serving front-end ([`Session::into_service`]):
+//!   a bounded submission queue and a dispatcher thread that coalesces
+//!   queued requests into batched dispatches under a [`ServicePolicy`],
+//!   with admission control against the session's memory governor.
+//!   Clients hold [`Ticket`]s; served results are bitwise-identical to
+//!   direct calls (invariant V1).
 //! * Governed residency — a session carries one memory governor
 //!   (`exec::memgr`): per-mode layout copies are admitted against a byte
-//!   budget (`SPMTTKRP_BUDGET_BYTES`, [`Session::with_budget`]), evicted
+//!   budget (`SPMTTKRP_BUDGET_BYTES`, [`SessionBuilder::budget`]), evicted
 //!   LRU under pressure ([`Session::evict`] forces it), and rebuilt
 //!   bitwise-identically on demand; admission failures are
 //!   [`Error::BudgetExceeded`].
@@ -29,9 +39,13 @@
 pub mod batch;
 pub mod builder;
 pub mod error;
+pub mod request;
+pub mod service;
 pub mod session;
 
 pub use batch::{BatchDispatchReport, MttkrpBatch};
 pub use builder::{BackendKind, ExecutorBuilder, ExecutorKind};
 pub use error::{Error, Result};
-pub use session::{Session, TensorHandle};
+pub use request::{DecomposeRequest, MttkrpRequest};
+pub use service::{Service, ServicePolicy, Ticket};
+pub use session::{Session, SessionBuilder, TensorHandle};

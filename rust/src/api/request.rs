@@ -1,0 +1,73 @@
+//! Typed request values — the one validated request shape shared by the
+//! sync [`Session`](super::Session) entry points and the async
+//! [`Service`](super::Service) queue.
+//!
+//! Every way of asking for work — `session.mttkrp(...)`,
+//! `session.mttkrp_batch(...)`, `service.submit_mttkrp(...)` — bottoms
+//! out in the same two structs, so handle/mode/rank checks happen in one
+//! place (`Session::validate_mttkrp` / `Session::validate_decompose`,
+//! both delegating to the executor-layer `validate_mode_request`) and the
+//! typed errors are identical on every path.
+//!
+//! [`MttkrpRequest`] is generic over how the factor matrices are held:
+//! the sync path borrows (`MttkrpRequest<&FactorSet>` — no copy on the
+//! hot replay loop), while a queued request must own its inputs across
+//! the channel, so the default parameter is `Arc<FactorSet>` (cheap to
+//! clone per request, never a deep copy).
+
+use std::borrow::Borrow;
+use std::sync::Arc;
+
+use super::session::TensorHandle;
+use crate::cpd::CpdConfig;
+use crate::tensor::FactorSet;
+
+/// One spMTTKRP request: replay `handle`'s prepared layout along `mode`
+/// with `factors`. `F` is how the factors are held — `&FactorSet` on the
+/// sync path, `Arc<FactorSet>` (the default) across the service queue.
+#[derive(Clone, Debug)]
+pub struct MttkrpRequest<F = Arc<FactorSet>> {
+    pub handle: TensorHandle,
+    pub mode: usize,
+    pub factors: F,
+}
+
+impl<F: Borrow<FactorSet>> MttkrpRequest<F> {
+    pub fn new(handle: TensorHandle, mode: usize, factors: F) -> MttkrpRequest<F> {
+        MttkrpRequest {
+            handle,
+            mode,
+            factors,
+        }
+    }
+
+    /// The factor matrices, whatever `F` holds them as.
+    pub fn factors(&self) -> &FactorSet {
+        self.factors.borrow()
+    }
+
+    /// A borrowed view of this request — what the batch dispatcher hands
+    /// to the generic `run_mttkrp*` cores without cloning factor data.
+    pub fn as_view(&self) -> MttkrpRequest<&FactorSet> {
+        MttkrpRequest {
+            handle: self.handle,
+            mode: self.mode,
+            factors: self.factors.borrow(),
+        }
+    }
+}
+
+/// One CPD-ALS request: decompose `handle`'s tensor through its prepared
+/// engine under `config`. The config is owned — it is a handful of
+/// scalars, and a queued request must not borrow from the submitter.
+#[derive(Clone, Debug)]
+pub struct DecomposeRequest {
+    pub handle: TensorHandle,
+    pub config: CpdConfig,
+}
+
+impl DecomposeRequest {
+    pub fn new(handle: TensorHandle, config: CpdConfig) -> DecomposeRequest {
+        DecomposeRequest { handle, config }
+    }
+}

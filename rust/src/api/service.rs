@@ -1,0 +1,674 @@
+//! Async serving front-end: a submission queue, a dispatcher thread, and
+//! dynamic batching over the [`Session`] batch cores.
+//!
+//! The paper's running system is an *offline* kernel study; this module
+//! is the serving shape those kernels want in production. The expensive
+//! work (layout + partitioning) happened once at `prepare()`; each
+//! request is a cheap replay — exactly the profile an inference server
+//! batches dynamically. Clients [`Service::submit_mttkrp`] /
+//! [`Service::submit_decompose`] typed requests and get a [`Ticket`]
+//! back; a single dispatcher thread drains the queue in cycles, coalescing
+//! up to [`ServicePolicy::max_batch`] requests (waiting at most
+//! [`ServicePolicy::max_wait`] for stragglers) into **one**
+//! `BatchScheduler` dispatch per round via
+//! [`Session::run_mttkrp_batch`] / [`Session::run_decompose_batch`].
+//!
+//! Correctness is inherited, not re-proven: batched dispatch is
+//! bitwise-identical to sequential replay (invariant B1), so served
+//! results equal direct [`Session`] calls no matter how requests
+//! interleave — invariant V1, pinned by `tests/service_api.rs`.
+//!
+//! Overload policy is *reject, don't thrash*:
+//!
+//! * the queue is bounded ([`ServicePolicy::queue_bound`]); admission
+//!   past the bound fails fast with [`Error::Overloaded`] instead of
+//!   growing an unbounded backlog;
+//! * dispatch rounds are capped by the session governor's byte budget
+//!   ([`crate::exec::plan_rounds`]): a cycle whose distinct layouts
+//!   exceed the budget is split into budget-fitting rounds, so dynamic
+//!   batching never *induces* evict/rebuild thrash that sequential
+//!   replay would not have had. An oversized single request still
+//!   dispatches alone and surfaces the governor's own typed
+//!   [`Error::BudgetExceeded`].
+//!
+//! Failure is typed, never a hang: a graceful [`Service::shutdown`]
+//! drains every queued request before the thread exits; submissions
+//! after shutdown and tickets orphaned by a dispatcher panic both
+//! resolve to [`Error::ServiceStopped`] (the reply channel's drop
+//! semantics guarantee a waiting ticket wakes), and the underlying
+//! session stays fully usable either way.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::error::ensure_or;
+use super::request::{DecomposeRequest, MttkrpRequest};
+use super::session::{Session, TensorHandle};
+use super::{Error, Result};
+use crate::cpd::CpdResult;
+use crate::exec::{lock_unpoisoned, plan_rounds};
+use crate::metrics::{LatencyStats, ModeExecReport, ServiceCounters, ServiceReport};
+use crate::tensor::FactorSet;
+
+/// What one MTTKRP ticket resolves to: the `(I_mode, R)` output and the
+/// same [`ModeExecReport`] a direct call returns.
+pub type MttkrpReply = (Vec<f32>, ModeExecReport);
+
+/// Dispatcher knobs, configured on [`super::SessionBuilder`]
+/// (`max_batch` / `max_wait` / `queue_bound`) and applied by
+/// [`Session::into_service`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServicePolicy {
+    /// Most requests one dispatch cycle may coalesce. Must be > 0.
+    pub max_batch: usize,
+    /// How long the dispatcher keeps waiting for stragglers after the
+    /// first request of a cycle arrives. `0` degenerates to one-request
+    /// cycles under light load (still batches a backlog).
+    pub max_wait: Duration,
+    /// Bound on admitted-but-undispatched requests; submissions beyond
+    /// it are rejected with [`Error::Overloaded`].
+    pub queue_bound: usize,
+}
+
+impl Default for ServicePolicy {
+    fn default() -> ServicePolicy {
+        ServicePolicy {
+            max_batch: 64,
+            max_wait: Duration::from_micros(500),
+            queue_bound: 1024,
+        }
+    }
+}
+
+/// A claim on one submitted request's result. Dropping the ticket
+/// abandons the result (the service still executes and counts it).
+pub struct Ticket<T> {
+    rx: Receiver<Result<T>>,
+}
+
+impl<T> Ticket<T> {
+    /// Block until the request completes. Never hangs on a dead service:
+    /// if the dispatcher dropped the reply channel (shutdown drained past
+    /// it, or the thread panicked), this resolves to
+    /// [`Error::ServiceStopped`].
+    pub fn wait(self) -> Result<T> {
+        self.rx.recv().unwrap_or_else(|_| {
+            Err(Error::ServiceStopped(
+                "request abandoned: the dispatcher dropped its reply channel before \
+                 completing it (service shut down or dispatcher panicked)"
+                    .into(),
+            ))
+        })
+    }
+
+    /// Non-blocking poll: `None` while the request is still in flight.
+    pub fn try_wait(&self) -> Option<Result<T>> {
+        match self.rx.try_recv() {
+            Ok(res) => Some(res),
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => Some(Err(Error::ServiceStopped(
+                "request abandoned: the dispatcher dropped its reply channel before \
+                 completing it (service shut down or dispatcher panicked)"
+                    .into(),
+            ))),
+        }
+    }
+}
+
+/// One queued unit of work. Every variant carries its enqueue instant
+/// (for the queue/total latency split) and its reply channel.
+enum Job {
+    Mttkrp {
+        req: MttkrpRequest,
+        enqueued: Instant,
+        reply: Sender<Result<MttkrpReply>>,
+    },
+    Decompose {
+        req: DecomposeRequest,
+        enqueued: Instant,
+        reply: Sender<Result<CpdResult>>,
+    },
+    /// Test-only: makes the dispatcher panic mid-cycle, to pin the
+    /// "panic surfaces as typed `ServiceStopped`, never a hang" contract.
+    #[cfg(test)]
+    Panic,
+}
+
+#[derive(Default)]
+struct Stats {
+    counters: ServiceCounters,
+    /// enqueue → cycle pickup, one sample per dispatched request.
+    queue_samples: Vec<Duration>,
+    /// enqueue → result delivery, one sample per completed/failed request.
+    total_samples: Vec<Duration>,
+}
+
+/// State shared between the handle and the dispatcher thread.
+struct Shared {
+    policy: ServicePolicy,
+    /// Admitted-but-undispatched requests. Incremented at admission,
+    /// decremented when the dispatcher takes a cycle — the admission gate
+    /// compares against [`ServicePolicy::queue_bound`] without locking.
+    queue_depth: AtomicUsize,
+    stats: Mutex<Stats>,
+}
+
+/// The async serving front-end over one prepared [`Session`]. Spawn via
+/// [`Session::into_service`] (policy from the builder) or
+/// [`Service::spawn`] (explicit policy); reclaim the session with
+/// [`Service::into_session`].
+///
+/// The handle is `Sync`: clients on many threads submit through one
+/// `&Service`.
+pub struct Service {
+    session: Arc<Session>,
+    shared: Arc<Shared>,
+    /// The submission side of the queue. `None` after shutdown — dropping
+    /// the sender is what lets the dispatcher drain and exit.
+    tx: Mutex<Option<Sender<Job>>>,
+    dispatcher: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Service {
+    /// Start a dispatcher thread serving `session` under `policy`.
+    /// Prepare every tensor *before* spawning: the service serves
+    /// existing handles ([`Session::prepare`] needs `&mut`, the service
+    /// shares the session immutably).
+    pub fn spawn(session: Arc<Session>, policy: ServicePolicy) -> Result<Service> {
+        ensure_or!(
+            policy.max_batch > 0,
+            InvalidConfig,
+            "ServicePolicy: max_batch must be > 0 (a dispatcher that may take \
+             nothing per cycle can never serve)"
+        );
+        let shared = Arc::new(Shared {
+            policy: policy.clone(),
+            queue_depth: AtomicUsize::new(0),
+            stats: Mutex::new(Stats::default()),
+        });
+        let (tx, rx) = channel::<Job>();
+        let handle = std::thread::Builder::new()
+            .name("spmttkrp-dispatcher".into())
+            .spawn({
+                let session = Arc::clone(&session);
+                let shared = Arc::clone(&shared);
+                move || dispatcher_loop(&session, &shared, &rx)
+            })
+            .map_err(|e| Error::io("spawn service dispatcher thread", e))?;
+        Ok(Service {
+            session,
+            shared,
+            tx: Mutex::new(Some(tx)),
+            dispatcher: Mutex::new(Some(handle)),
+        })
+    }
+
+    /// The served session (read-only: inspect residency, run direct calls
+    /// — direct calls interleave safely with served ones, the pool
+    /// serializes execution).
+    pub fn session(&self) -> &Arc<Session> {
+        &self.session
+    }
+
+    /// The policy this service dispatches under.
+    pub fn policy(&self) -> &ServicePolicy {
+        &self.shared.policy
+    }
+
+    /// Shut down and hand the session back (drains in-flight requests
+    /// first). The returned `Arc` is sole owner once the dispatcher has
+    /// exited, so `Arc::try_unwrap` recovers the `Session` for further
+    /// `prepare()` calls.
+    pub fn into_session(self) -> Arc<Session> {
+        self.stop();
+        Arc::clone(&self.session)
+    }
+
+    /// Submit one MTTKRP request; the factors travel as an
+    /// `Arc<FactorSet>` (clone the `Arc`, never the data, to submit the
+    /// same factors many times). Fails fast with [`Error::Overloaded`]
+    /// past the queue bound and [`Error::ServiceStopped`] after shutdown;
+    /// request-shape problems (bad mode, foreign handle, wrong rank) are
+    /// delivered through the ticket as the same typed errors a direct
+    /// call returns.
+    pub fn submit_mttkrp(&self, req: MttkrpRequest) -> Result<Ticket<MttkrpReply>> {
+        let depth = self.admit()?;
+        let (reply, rx) = channel();
+        self.enqueue(
+            Job::Mttkrp {
+                req,
+                enqueued: Instant::now(),
+                reply,
+            },
+            depth,
+        )?;
+        Ok(Ticket { rx })
+    }
+
+    /// As [`Service::submit_mttkrp`], for a full CPD-ALS decomposition.
+    pub fn submit_decompose(&self, req: DecomposeRequest) -> Result<Ticket<CpdResult>> {
+        let depth = self.admit()?;
+        let (reply, rx) = channel();
+        self.enqueue(
+            Job::Decompose {
+                req,
+                enqueued: Instant::now(),
+                reply,
+            },
+            depth,
+        )?;
+        Ok(Ticket { rx })
+    }
+
+    /// Admission gate: reserve a queue slot or reject with
+    /// [`Error::Overloaded`]. Returns the depth *including* this request.
+    fn admit(&self) -> Result<usize> {
+        let bound = self.shared.policy.queue_bound;
+        match self
+            .shared
+            .queue_depth
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |d| {
+                if d < bound {
+                    Some(d + 1)
+                } else {
+                    None
+                }
+            }) {
+            Ok(prev) => Ok(prev + 1),
+            Err(full) => {
+                lock_unpoisoned(&self.shared.stats).counters.rejected += 1;
+                Err(Error::Overloaded {
+                    queued: full,
+                    bound,
+                })
+            }
+        }
+    }
+
+    /// Hand an admitted job to the dispatcher, rolling the admission back
+    /// if the service has stopped.
+    fn enqueue(&self, job: Job, depth: usize) -> Result<()> {
+        let sent = match &*lock_unpoisoned(&self.tx) {
+            Some(tx) => tx.send(job).is_ok(),
+            None => false,
+        };
+        let mut stats = lock_unpoisoned(&self.shared.stats);
+        if !sent {
+            // shutdown ran, or the dispatcher died and dropped `rx`
+            self.shared.queue_depth.fetch_sub(1, Ordering::SeqCst);
+            stats.counters.rejected += 1;
+            return Err(Error::ServiceStopped(
+                "submission refused: the service has shut down (or its dispatcher \
+                 died); the underlying Session is still usable directly"
+                    .into(),
+            ));
+        }
+        stats.counters.submitted += 1;
+        stats.counters.max_queue_depth = stats.counters.max_queue_depth.max(depth as u64);
+        Ok(())
+    }
+
+    /// Test-only: queue a job that panics the dispatcher, through the
+    /// same admission gate real requests take (so depth accounting stays
+    /// consistent).
+    #[cfg(test)]
+    fn inject_panic(&self) -> Result<()> {
+        let depth = self.admit()?;
+        self.enqueue(Job::Panic, depth)
+    }
+
+    /// Snapshot counters and latency distributions. Cheap enough to poll.
+    pub fn report(&self) -> ServiceReport {
+        let stats = lock_unpoisoned(&self.shared.stats);
+        ServiceReport {
+            counters: stats.counters,
+            queue_latency: LatencyStats::of(&stats.queue_samples),
+            request_latency: LatencyStats::of(&stats.total_samples),
+            queue_depth: self.shared.queue_depth.load(Ordering::SeqCst),
+            mean_batch_occupancy: stats.counters.mean_batch_occupancy(),
+        }
+    }
+
+    /// Graceful shutdown: stop admitting, let the dispatcher drain every
+    /// already-queued request (each ticket resolves normally), join the
+    /// thread, and return the final report. Idempotent; also runs on
+    /// `Drop`.
+    pub fn shutdown(&self) -> ServiceReport {
+        self.stop();
+        self.report()
+    }
+
+    fn stop(&self) {
+        // Dropping the sender is the whole protocol: `recv` on the
+        // dispatcher side keeps yielding the buffered (queued) jobs and
+        // only then reports disconnection — shutdown-drain for free.
+        *lock_unpoisoned(&self.tx) = None;
+        if let Some(handle) = lock_unpoisoned(&self.dispatcher).take() {
+            if handle.join().is_err() {
+                lock_unpoisoned(&self.shared.stats).counters.dispatcher_panics += 1;
+            }
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// The dispatcher: block for the first request of a cycle, keep taking
+/// stragglers until `max_batch` or `max_wait`, then run the cycle as
+/// budget-capped batched dispatches.
+fn dispatcher_loop(session: &Session, shared: &Shared, rx: &Receiver<Job>) {
+    let policy = &shared.policy;
+    loop {
+        let first = match rx.recv() {
+            Ok(job) => job,
+            // all senders gone and the queue fully drained: shutdown
+            Err(_) => return,
+        };
+        let deadline = Instant::now() + policy.max_wait;
+        let mut cycle = vec![first];
+        while cycle.len() < policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(job) => cycle.push(job),
+                Err(RecvTimeoutError::Timeout) => break,
+                // sender just dropped: run what we hold; the outer recv
+                // keeps draining whatever is still buffered
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        shared.queue_depth.fetch_sub(cycle.len(), Ordering::SeqCst);
+        run_cycle(session, shared, cycle);
+    }
+}
+
+struct PendingMttkrp {
+    req: MttkrpRequest,
+    enqueued: Instant,
+    reply: Sender<Result<MttkrpReply>>,
+}
+
+struct PendingDecompose {
+    req: DecomposeRequest,
+    enqueued: Instant,
+    reply: Sender<Result<CpdResult>>,
+}
+
+/// Deliver one result: count it, sample its total latency, send. A
+/// dropped ticket makes `send` fail — the request still counts (the work
+/// ran), the result is simply abandoned.
+fn deliver<T>(shared: &Shared, reply: &Sender<Result<T>>, enqueued: Instant, res: Result<T>) {
+    {
+        let mut stats = lock_unpoisoned(&shared.stats);
+        match &res {
+            Ok(_) => stats.counters.completed += 1,
+            Err(_) => stats.counters.failed += 1,
+        }
+        stats.total_samples.push(enqueued.elapsed());
+    }
+    let _ = reply.send(res);
+}
+
+fn count_dispatch(shared: &Shared, n_requests: usize) {
+    let mut stats = lock_unpoisoned(&shared.stats);
+    stats.counters.dispatches += 1;
+    stats.counters.dispatched_requests += n_requests as u64;
+}
+
+/// One dispatch cycle: validate, split into budget-capped rounds of
+/// distinct `(handle, mode)` keys, and run each round as one batched
+/// dispatch. A round that fails as a unit falls back to per-request
+/// sequential runs — B1 makes the results identical, so a poisoned
+/// neighbor can never change what a healthy request returns.
+fn run_cycle(session: &Session, shared: &Shared, cycle: Vec<Job>) {
+    let mut mttkrps: Vec<PendingMttkrp> = Vec::new();
+    let mut decomposes: Vec<PendingDecompose> = Vec::new();
+    for job in cycle {
+        match job {
+            Job::Mttkrp {
+                req,
+                enqueued,
+                reply,
+            } => mttkrps.push(PendingMttkrp {
+                req,
+                enqueued,
+                reply,
+            }),
+            Job::Decompose {
+                req,
+                enqueued,
+                reply,
+            } => decomposes.push(PendingDecompose {
+                req,
+                enqueued,
+                reply,
+            }),
+            #[cfg(test)]
+            Job::Panic => panic!("injected dispatcher panic (test hook)"),
+        }
+    }
+    {
+        // queue-latency samples: every request of the cycle was just
+        // picked up
+        let mut stats = lock_unpoisoned(&shared.stats);
+        for p in &mttkrps {
+            stats.queue_samples.push(p.enqueued.elapsed());
+        }
+        for p in &decomposes {
+            stats.queue_samples.push(p.enqueued.elapsed());
+        }
+    }
+
+    let budget = session.governor().budget().limit();
+
+    // ---- MTTKRP: validate, then coalesce distinct (handle, mode) keys
+    let mut valid: Vec<PendingMttkrp> = Vec::with_capacity(mttkrps.len());
+    for p in mttkrps {
+        match session.validate_mttkrp(&p.req) {
+            Ok(()) => valid.push(p),
+            Err(e) => deliver(shared, &p.reply, p.enqueued, Err(e)),
+        }
+    }
+    let keyed: Vec<((TensorHandle, usize), u64)> = valid
+        .iter()
+        .map(|p| {
+            (
+                (p.req.handle, p.req.mode),
+                mode_price(session, p.req.handle, p.req.mode),
+            )
+        })
+        .collect();
+    for round in plan_rounds(&keyed, budget) {
+        let views: Vec<MttkrpRequest<&FactorSet>> =
+            round.iter().map(|&i| valid[i].req.as_view()).collect();
+        match session.run_mttkrp_batch(&views) {
+            Ok(batch) => {
+                count_dispatch(shared, round.len());
+                let mut outputs = batch.outputs.into_iter();
+                let mut reports = batch.reports.into_iter();
+                for &i in &round {
+                    let p = &valid[i];
+                    let res = Ok((outputs.next().unwrap(), reports.next().unwrap()));
+                    deliver(shared, &p.reply, p.enqueued, res);
+                }
+            }
+            Err(_) => {
+                // a whole-round failure (e.g. budget admission inside
+                // dispatch): re-run each request alone so per-request
+                // errors stay typed and healthy requests still succeed
+                for &i in &round {
+                    let p = &valid[i];
+                    count_dispatch(shared, 1);
+                    deliver(shared, &p.reply, p.enqueued, session.run_mttkrp(&p.req));
+                }
+            }
+        }
+    }
+
+    // ---- decompose: one key per handle (lock-step ALS shares the
+    // engine), priced at the handle's full per-mode layout footprint
+    let mut valid_d: Vec<PendingDecompose> = Vec::with_capacity(decomposes.len());
+    for p in decomposes {
+        match session.validate_decompose(&p.req) {
+            Ok(()) => valid_d.push(p),
+            Err(e) => deliver(shared, &p.reply, p.enqueued, Err(e)),
+        }
+    }
+    let keyed: Vec<(TensorHandle, u64)> = valid_d
+        .iter()
+        .map(|p| (p.req.handle, handle_price(session, p.req.handle)))
+        .collect();
+    for round in plan_rounds(&keyed, budget) {
+        let reqs: Vec<DecomposeRequest> =
+            round.iter().map(|&i| valid_d[i].req.clone()).collect();
+        match session.run_decompose_batch(&reqs) {
+            Ok(results) => {
+                count_dispatch(shared, round.len());
+                let mut results = results.into_iter();
+                for &i in &round {
+                    let p = &valid_d[i];
+                    deliver(shared, &p.reply, p.enqueued, Ok(results.next().unwrap()));
+                }
+            }
+            Err(_) => {
+                for &i in &round {
+                    let p = &valid_d[i];
+                    count_dispatch(shared, 1);
+                    deliver(shared, &p.reply, p.enqueued, session.run_decompose(&p.req));
+                }
+            }
+        }
+    }
+}
+
+/// Byte price of one `(handle, mode)` layout copy — what a dispatch of
+/// this request requires resident. 0 for baseline handles (their formats
+/// are not governed) and unknown modes (validation already rejected
+/// those).
+fn mode_price(session: &Session, h: TensorHandle, mode: usize) -> u64 {
+    session
+        .residency(h)
+        .ok()
+        .and_then(|slots| slots.get(mode).map(|s| s.price_bytes))
+        .unwrap_or(0)
+}
+
+/// Byte price of a full ALS sweep over `h`: every mode's layout copy.
+fn handle_price(session: &Session, h: TensorHandle) -> u64 {
+    session
+        .residency(h)
+        .ok()
+        .map(|slots| slots.iter().map(|s| s.price_bytes).sum())
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{ExecutorBuilder, SessionBuilder};
+    use crate::exec::memgr::MemoryBudget;
+    use crate::tensor::synth::DatasetProfile;
+    use crate::tensor::SparseTensorCOO;
+
+    fn served_session() -> (Arc<Session>, crate::api::TensorHandle, SparseTensorCOO) {
+        let mut s = SessionBuilder::new()
+            .budget(MemoryBudget::unbounded())
+            .build()
+            .unwrap();
+        let t = DatasetProfile::uber().scaled(0.0005).generate(21);
+        let h = s
+            .prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4))
+            .unwrap();
+        (Arc::new(s), h, t)
+    }
+
+    #[test]
+    fn spawn_rejects_a_zero_max_batch() {
+        let (s, _, _) = served_session();
+        let err = Service::spawn(
+            s,
+            ServicePolicy {
+                max_batch: 0,
+                ..Default::default()
+            },
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "got {err}");
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_service_stopped_and_session_survives() {
+        let (s, h, t) = served_session();
+        let svc = Service::spawn(Arc::clone(&s), ServicePolicy::default()).unwrap();
+        let fs = Arc::new(FactorSet::random(&t.dims, 8, 3));
+        let rep = svc.shutdown();
+        assert_eq!(rep.counters.dispatcher_panics, 0);
+        let err = svc
+            .submit_mttkrp(MttkrpRequest::new(h, 0, Arc::clone(&fs)))
+            .unwrap_err();
+        assert!(matches!(err, Error::ServiceStopped(_)), "got {err}");
+        assert_eq!(svc.report().counters.rejected, 1);
+        // the session behind the stopped service still serves directly
+        assert!(s.mttkrp(h, &fs, 0).is_ok());
+        // shutdown is idempotent
+        let _ = svc.shutdown();
+    }
+
+    #[test]
+    fn dispatcher_panic_is_typed_never_a_hang() {
+        let (s, h, t) = served_session();
+        let svc = Service::spawn(Arc::clone(&s), ServicePolicy::default()).unwrap();
+        let fs = Arc::new(FactorSet::random(&t.dims, 8, 4));
+        svc.inject_panic().unwrap();
+        // a request submitted after the panic job either fails at the
+        // (now receiver-less) queue or resolves through its dropped reply
+        // channel — both typed ServiceStopped, never a hang
+        match svc.submit_mttkrp(MttkrpRequest::new(h, 0, Arc::clone(&fs))) {
+            Ok(ticket) => {
+                let err = ticket.wait().unwrap_err();
+                assert!(matches!(err, Error::ServiceStopped(_)), "got {err}");
+            }
+            Err(err) => {
+                assert!(matches!(err, Error::ServiceStopped(_)), "got {err}");
+            }
+        }
+        let rep = svc.shutdown();
+        assert_eq!(rep.counters.dispatcher_panics, 1);
+        // the session survives the dispatcher's death
+        assert!(s.mttkrp(h, &fs, 0).is_ok());
+    }
+
+    #[test]
+    fn zero_queue_bound_rejects_every_submission() {
+        let (s, h, t) = served_session();
+        let svc = Service::spawn(
+            s,
+            ServicePolicy {
+                queue_bound: 0,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let fs = Arc::new(FactorSet::random(&t.dims, 8, 5));
+        let err = svc
+            .submit_mttkrp(MttkrpRequest::new(h, 0, fs))
+            .unwrap_err();
+        assert!(
+            matches!(err, Error::Overloaded { queued: 0, bound: 0 }),
+            "got {err}"
+        );
+        let rep = svc.shutdown();
+        assert_eq!(rep.counters.rejected, 1);
+        assert_eq!(rep.counters.submitted, 0);
+        assert_eq!(rep.queue_depth, 0);
+    }
+}

@@ -1,5 +1,6 @@
 //! `Session` — a multi-tenant registry of prepared executors over one
-//! persistent [`SmPool`].
+//! persistent [`SmPool`] — and [`SessionBuilder`], the one way to
+//! configure it.
 //!
 //! The paper's core economics: layout + partitioning are built **once per
 //! tensor** and replayed every call. A session makes that shape first-
@@ -10,17 +11,28 @@
 //! exactly once per tensor for the session's lifetime (DESIGN.md §6,
 //! invariant S1).
 //!
+//! Every entry point is re-expressed over the typed request structs
+//! ([`MttkrpRequest`] / [`DecomposeRequest`](super::DecomposeRequest)):
+//! the convenience signatures build a borrowed request and call the
+//! `run_*` core, which is the same code path the async
+//! [`Service`](super::Service) queue drains — one validated request
+//! shape, one place for handle/mode/rank checks, identical typed errors
+//! sync or served (invariant V1 extends B1 over this sharing).
+//!
 //! Mode calls take `&self`, so a session can serve concurrent callers
 //! (e.g. behind an `Arc`); the pool serializes execution internally while
 //! every prepared layout stays resident.
 
+use std::borrow::Borrow;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use super::builder::{ExecutorBuilder, ExecutorKind};
 use super::error::{bail_with, ensure_or};
+use super::request::{DecomposeRequest, MttkrpRequest};
+use super::service::{Service, ServicePolicy};
 use super::{Error, Result};
-use crate::baselines::MttkrpExecutor;
+use crate::baselines::{validate_mode_request, MttkrpExecutor};
 use crate::coordinator::Engine;
 use crate::cpd::{als, CpdConfig, CpdResult};
 use crate::exec::memgr::{MemoryBudget, MemoryGovernor, ResidencyReport, SlotResidency};
@@ -67,13 +79,127 @@ impl Prepared {
     }
 }
 
+/// Fluent construction of a [`Session`]: pool, byte budget (or a shared
+/// governor carrying one), and the serving-policy knobs a later
+/// [`Session::into_service`] uses. Subsumes the former constructor zoo
+/// (`new` / `on_pool` / `with_budget` / `on_pool_with_budget`, all now
+/// deprecated thin wrappers).
+///
+/// ```no_run
+/// use std::sync::Arc;
+/// use spmttkrp::prelude::*;
+///
+/// # fn main() -> spmttkrp::Result<()> {
+/// let session = SessionBuilder::new()
+///     .pool(Arc::new(SmPool::new(8)))
+///     .budget(MemoryBudget::bytes(400_000))
+///     .max_batch(32)
+///     .build()?;
+/// # let _ = session;
+/// # Ok(())
+/// # }
+/// ```
+#[derive(Default)]
+pub struct SessionBuilder {
+    pool: Option<Arc<SmPool>>,
+    budget: Option<MemoryBudget>,
+    governor: Option<Arc<MemoryGovernor>>,
+    policy: ServicePolicy,
+}
+
+impl SessionBuilder {
+    pub fn new() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Run on an existing pool (shareable with executors built elsewhere
+    /// via [`ExecutorBuilder::pool`]). Default: a fresh pool with the
+    /// default worker count (`SPMTTKRP_THREADS`, else available
+    /// parallelism).
+    pub fn pool(mut self, pool: Arc<SmPool>) -> SessionBuilder {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// Layout byte budget: prepared engines' per-mode layout copies are
+    /// admitted against it (priced by the paper's packed-bits model),
+    /// LRU-evicted under pressure, and rebuilt bitwise-identically on
+    /// demand. Default: the environment budget (`SPMTTKRP_BUDGET_BYTES`,
+    /// else unbounded). Exclusive with [`SessionBuilder::governor`].
+    pub fn budget(mut self, budget: MemoryBudget) -> SessionBuilder {
+        self.budget = Some(budget);
+        self
+    }
+
+    /// Adopt an existing memory governor (and the budget it carries) —
+    /// e.g. to meter several sessions against one byte pool. Exclusive
+    /// with [`SessionBuilder::budget`]: a governor already owns one.
+    pub fn governor(mut self, governor: Arc<MemoryGovernor>) -> SessionBuilder {
+        self.governor = Some(governor);
+        self
+    }
+
+    /// Full serving policy in one value (see the individual knobs).
+    pub fn service_policy(mut self, policy: ServicePolicy) -> SessionBuilder {
+        self.policy = policy;
+        self
+    }
+
+    /// Most requests one service dispatch cycle may coalesce
+    /// ([`ServicePolicy::max_batch`], default 64).
+    pub fn max_batch(mut self, max_batch: usize) -> SessionBuilder {
+        self.policy.max_batch = max_batch;
+        self
+    }
+
+    /// How long the dispatcher waits to fill a cycle once a request is
+    /// queued ([`ServicePolicy::max_wait`], default 500 µs).
+    pub fn max_wait(mut self, max_wait: std::time::Duration) -> SessionBuilder {
+        self.policy.max_wait = max_wait;
+        self
+    }
+
+    /// Bound on queued-but-undispatched requests; submissions beyond it
+    /// are rejected with [`Error::Overloaded`]
+    /// ([`ServicePolicy::queue_bound`], default 1024).
+    pub fn queue_bound(mut self, queue_bound: usize) -> SessionBuilder {
+        self.policy.queue_bound = queue_bound;
+        self
+    }
+
+    /// Validate and build. Conflicting knobs (both a budget and a
+    /// governor, a zero `max_batch`) are [`Error::InvalidConfig`] here,
+    /// before anything runs.
+    pub fn build(self) -> Result<Session> {
+        ensure_or!(
+            self.budget.is_none() || self.governor.is_none(),
+            InvalidConfig,
+            "SessionBuilder: budget and governor are exclusive — a shared governor \
+             already carries its own budget"
+        );
+        ensure_or!(
+            self.policy.max_batch > 0,
+            InvalidConfig,
+            "SessionBuilder: max_batch must be > 0 (a dispatcher that may take \
+             nothing per cycle can never serve)"
+        );
+        let pool = self
+            .pool
+            .unwrap_or_else(|| Arc::new(SmPool::with_default_threads()));
+        let governor = self.governor.unwrap_or_else(|| {
+            MemoryGovernor::new(self.budget.unwrap_or_else(MemoryBudget::from_env))
+        });
+        Ok(Session::assemble(pool, governor, self.policy))
+    }
+}
+
 /// The multi-tenant front door: many prepared tensors, one pool.
 ///
 /// ```no_run
 /// use spmttkrp::prelude::*;
 ///
 /// # fn main() -> spmttkrp::Result<()> {
-/// let mut session = Session::new();
+/// let mut session = SessionBuilder::new().build()?;
 /// let a = synth::DatasetProfile::uber().scaled(0.01).generate(1);
 /// let b = synth::DatasetProfile::nips().scaled(0.01).generate(2);
 /// let ha = session.prepare(&a, &ExecutorBuilder::new().rank(16).sm_count(8))?;
@@ -95,48 +221,77 @@ pub struct Session {
     /// against: one byte budget for the whole session (DESIGN.md §2 —
     /// the session-level analogue of the paper's 24 GB device memory).
     governor: Arc<MemoryGovernor>,
+    /// Serving knobs a later [`Session::into_service`] spawns with.
+    policy: ServicePolicy,
     entries: Vec<Entry>,
 }
 
 impl Default for Session {
     fn default() -> Self {
-        Session::new()
+        Session::assemble(
+            Arc::new(SmPool::with_default_threads()),
+            MemoryGovernor::new(MemoryBudget::from_env()),
+            ServicePolicy::default(),
+        )
     }
 }
 
 impl Session {
+    /// The single internal construction path every builder knob and
+    /// deprecated wrapper funnels into.
+    fn assemble(
+        pool: Arc<SmPool>,
+        governor: Arc<MemoryGovernor>,
+        policy: ServicePolicy,
+    ) -> Session {
+        Session {
+            id: NEXT_SESSION_ID.fetch_add(1, Ordering::Relaxed),
+            pool,
+            governor,
+            policy,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Start configuring a session: `Session::builder().pool(...).build()`.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
     /// Session on a fresh pool with the default worker count
     /// (`SPMTTKRP_THREADS`, else available parallelism) and the
     /// environment byte budget (`SPMTTKRP_BUDGET_BYTES`, else unbounded).
+    #[deprecated(note = "use SessionBuilder::new().build() (or Session::default())")]
     pub fn new() -> Session {
-        Session::on_pool(Arc::new(SmPool::with_default_threads()))
+        Session::default()
     }
 
     /// Session on an existing pool (shareable with executors built
     /// elsewhere via [`ExecutorBuilder::pool`]), with the environment
     /// byte budget.
+    #[deprecated(note = "use SessionBuilder::new().pool(...).build()")]
     pub fn on_pool(pool: Arc<SmPool>) -> Session {
-        Session::on_pool_with_budget(pool, MemoryBudget::from_env())
+        Session::assemble(
+            pool,
+            MemoryGovernor::new(MemoryBudget::from_env()),
+            ServicePolicy::default(),
+        )
     }
 
-    /// Session with an explicit layout byte budget: prepared engines'
-    /// per-mode layout copies are admitted against it (priced by the
-    /// paper's packed-bits model), LRU-evicted under pressure, and
-    /// rebuilt bitwise-identically on demand. A tensor whose single
-    /// largest copy cannot fit is rejected at `prepare` with
-    /// [`Error::BudgetExceeded`].
+    /// Session with an explicit layout byte budget.
+    #[deprecated(note = "use SessionBuilder::new().budget(...).build()")]
     pub fn with_budget(budget: MemoryBudget) -> Session {
-        Session::on_pool_with_budget(Arc::new(SmPool::with_default_threads()), budget)
+        Session::assemble(
+            Arc::new(SmPool::with_default_threads()),
+            MemoryGovernor::new(budget),
+            ServicePolicy::default(),
+        )
     }
 
     /// Existing pool + explicit budget.
+    #[deprecated(note = "use SessionBuilder::new().pool(...).budget(...).build()")]
     pub fn on_pool_with_budget(pool: Arc<SmPool>, budget: MemoryBudget) -> Session {
-        Session {
-            id: NEXT_SESSION_ID.fetch_add(1, Ordering::Relaxed),
-            pool,
-            governor: MemoryGovernor::new(budget),
-            entries: Vec::new(),
-        }
+        Session::assemble(pool, MemoryGovernor::new(budget), ServicePolicy::default())
     }
 
     /// The persistent pool every prepared executor runs on.
@@ -149,9 +304,26 @@ impl Session {
         &self.governor
     }
 
+    /// The serving policy [`Session::into_service`] spawns with
+    /// (configured via the builder's `max_batch`/`max_wait`/`queue_bound`
+    /// knobs).
+    pub fn service_policy(&self) -> &ServicePolicy {
+        &self.policy
+    }
+
     /// Number of prepared tensors.
     pub fn n_prepared(&self) -> usize {
         self.entries.len()
+    }
+
+    /// Turn this session into an async serving front-end: a dispatcher
+    /// thread coalescing queued requests into batched dispatches under
+    /// the builder-configured [`ServicePolicy`]. Prepare every tensor
+    /// first — the service serves existing handles; the session comes
+    /// back out via [`Service::into_session`] after shutdown.
+    pub fn into_service(self) -> Result<Service> {
+        let policy = self.policy.clone();
+        Service::spawn(Arc::new(self), policy)
     }
 
     /// Build `builder`'s executor over `tensor` on the session pool and
@@ -167,7 +339,7 @@ impl Session {
     /// [`Error::InvalidData`]: there is nothing to partition, and
     /// registering κ empty plans would silently serve all-zero outputs
     /// forever. Under a configured budget
-    /// ([`Session::with_budget`] / `SPMTTKRP_BUDGET_BYTES`), a tensor
+    /// ([`SessionBuilder::budget`] / `SPMTTKRP_BUDGET_BYTES`), a tensor
     /// whose single largest mode copy cannot fit even after evicting
     /// every other resident copy is rejected with
     /// [`Error::BudgetExceeded`].
@@ -247,6 +419,67 @@ impl Session {
         Ok(self.entry(h)?.tensor.as_ref())
     }
 
+    // ----------------------------------------------- request-typed core
+
+    /// The one handle/mode/rank validation every MTTKRP entry point —
+    /// sync, batched or served — shares: handle resolution here, then the
+    /// same `validate_mode_request` the executors run in `begin_mode`.
+    /// `Ok(())` means a dispatch of this request cannot fail on request
+    /// *shape* (it may still hit budget admission or numeric errors).
+    pub fn validate_mttkrp<F: Borrow<FactorSet>>(&self, req: &MttkrpRequest<F>) -> Result<()> {
+        let ex = self.executor(req.handle)?;
+        validate_mode_request(ex.name(), ex.n_modes(), ex.rank(), req.factors.borrow(), req.mode)
+    }
+
+    /// As [`Session::validate_mttkrp`], for a decompose request: the
+    /// handle must be an engine ([`super::ExecutorKind::Ours`]) whose
+    /// prepared rank matches the config's.
+    pub fn validate_decompose(&self, req: &DecomposeRequest) -> Result<()> {
+        let engine = self.engine(req.handle)?;
+        ensure_or!(
+            engine.config.rank == req.config.rank,
+            InvalidConfig,
+            "engine rank {} != CPD rank {}",
+            engine.config.rank,
+            req.config.rank
+        );
+        Ok(())
+    }
+
+    /// Execute one typed MTTKRP request — the core the convenience
+    /// signatures and the service dispatcher both call.
+    pub fn run_mttkrp<F: Borrow<FactorSet>>(
+        &self,
+        req: &MttkrpRequest<F>,
+    ) -> Result<(Vec<f32>, ModeExecReport)> {
+        self.executor(req.handle)?.execute_mode(req.factors.borrow(), req.mode)
+    }
+
+    /// As [`Session::run_mttkrp`], reusing a caller-owned output buffer.
+    pub fn run_mttkrp_into<F: Borrow<FactorSet>>(
+        &self,
+        req: &MttkrpRequest<F>,
+        out: &mut Vec<f32>,
+    ) -> Result<ModeExecReport> {
+        self.executor(req.handle)?.execute_mode_into(req.factors.borrow(), req.mode, out)
+    }
+
+    /// Execute one typed decompose request — the core behind
+    /// [`Session::decompose`] and the served path.
+    pub fn run_decompose(&self, req: &DecomposeRequest) -> Result<CpdResult> {
+        let entry = self.entry(req.handle)?;
+        match &entry.prepared {
+            Prepared::Engine(e) => als(e, &entry.tensor, &req.config),
+            Prepared::Baseline(b) => bail_with!(
+                InvalidConfig,
+                "decompose requires ExecutorKind::Ours; handle was prepared as '{}'",
+                b.name()
+            ),
+        }
+    }
+
+    // ------------------------------------------ convenience signatures
+
     /// spMTTKRP along `mode`, replaying `h`'s prepared layout.
     pub fn mttkrp(
         &self,
@@ -254,7 +487,7 @@ impl Session {
         factors: &FactorSet,
         mode: usize,
     ) -> Result<(Vec<f32>, ModeExecReport)> {
-        self.executor(h)?.execute_mode(factors, mode)
+        self.run_mttkrp(&MttkrpRequest::new(h, mode, factors))
     }
 
     /// As [`Session::mttkrp`], reusing a caller-owned output buffer — the
@@ -266,31 +499,30 @@ impl Session {
         mode: usize,
         out: &mut Vec<f32>,
     ) -> Result<ModeExecReport> {
-        self.executor(h)?.execute_mode_into(factors, mode, out)
+        self.run_mttkrp_into(&MttkrpRequest::new(h, mode, factors), out)
     }
 
-    /// Full sweep over `h`'s modes (Alg. 1 barrier semantics).
+    /// Full sweep over `h`'s modes (Alg. 1 barrier semantics): one typed
+    /// request per mode through the shared core.
     pub fn mttkrp_all_modes(
         &self,
         h: TensorHandle,
         factors: &FactorSet,
     ) -> Result<(Vec<Vec<f32>>, ExecReport)> {
-        self.executor(h)?.execute_all_modes(factors)
+        let n_modes = self.executor(h)?.n_modes();
+        let mut outs = vec![Vec::new(); n_modes];
+        let mut modes = Vec::with_capacity(n_modes);
+        for (d, out) in outs.iter_mut().enumerate() {
+            modes.push(self.run_mttkrp_into(&MttkrpRequest::new(h, d, factors), out)?);
+        }
+        Ok((outs, ExecReport { modes }))
     }
 
     /// CPD-ALS on `h`'s tensor through its prepared engine. `h` must have
     /// been prepared with [`super::ExecutorKind::Ours`] (the baselines do
     /// not provide the dense ALS pieces).
     pub fn decompose(&self, h: TensorHandle, cfg: &CpdConfig) -> Result<CpdResult> {
-        let entry = self.entry(h)?;
-        match &entry.prepared {
-            Prepared::Engine(e) => als(e, &entry.tensor, cfg),
-            Prepared::Baseline(b) => bail_with!(
-                InvalidConfig,
-                "decompose requires ExecutorKind::Ours; handle was prepared as '{}'",
-                b.name()
-            ),
-        }
+        self.run_decompose(&DecomposeRequest::new(h, cfg.clone()))
     }
 
     // ------------------------------------------------- layout residency
@@ -336,10 +568,18 @@ mod tests {
         DatasetProfile::uber().scaled(0.0005).generate(seed)
     }
 
+    fn session() -> Session {
+        SessionBuilder::new().build().unwrap()
+    }
+
+    fn session_with_budget(budget: MemoryBudget) -> Session {
+        SessionBuilder::new().budget(budget).build().unwrap()
+    }
+
     #[test]
     fn foreign_handles_are_a_typed_error() {
-        let mut a = Session::new();
-        let mut b = Session::new();
+        let mut a = session();
+        let mut b = session();
         let t = tiny(1);
         let ha = a.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4)).unwrap();
         let h2 = a.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4)).unwrap();
@@ -360,7 +600,7 @@ mod tests {
 
     #[test]
     fn prepare_shared_takes_ownership_without_cloning() {
-        let mut s = Session::new();
+        let mut s = session();
         let t = Arc::new(tiny(7));
         let h = s
             .prepare_shared(Arc::clone(&t), &ExecutorBuilder::new().rank(8).sm_count(4))
@@ -373,7 +613,7 @@ mod tests {
 
     #[test]
     fn decompose_on_a_baseline_handle_is_rejected() {
-        let mut s = Session::new();
+        let mut s = session();
         let t = tiny(2);
         let h = s
             .prepare(&t, &ExecutorBuilder::new().kind(ExecutorKind::Parti).rank(8).sm_count(4))
@@ -388,7 +628,7 @@ mod tests {
 
     #[test]
     fn prepare_on_a_zero_nonzero_tensor_is_invalid_data() {
-        let mut s = Session::new();
+        let mut s = session();
         let empty = SparseTensorCOO::new(
             vec![8, 8, 8],
             vec![Vec::new(), Vec::new(), Vec::new()],
@@ -411,7 +651,7 @@ mod tests {
 
     #[test]
     fn prepare_rejects_a_foreign_pool() {
-        let mut s = Session::new();
+        let mut s = session();
         let t = tiny(3);
         let foreign = Arc::new(SmPool::new(1));
         let err = s
@@ -422,7 +662,7 @@ mod tests {
 
     #[test]
     fn all_prepared_executors_share_the_session_pool() {
-        let mut s = Session::new();
+        let mut s = session();
         let t = tiny(4);
         let h = s.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4)).unwrap();
         assert!(Arc::ptr_eq(s.engine(h).unwrap().pool(), s.pool()));
@@ -431,7 +671,7 @@ mod tests {
 
     #[test]
     fn prepare_rejects_a_foreign_governor() {
-        let mut s = Session::new();
+        let mut s = session();
         let t = tiny(5);
         let foreign = crate::exec::memgr::MemoryGovernor::new(
             crate::exec::memgr::MemoryBudget::unbounded(),
@@ -452,7 +692,7 @@ mod tests {
     fn all_engine_tenants_share_the_session_governor() {
         // explicit unbounded budget: immune to SPMTTKRP_BUDGET_BYTES in
         // the test environment
-        let mut s = Session::with_budget(crate::exec::memgr::MemoryBudget::unbounded());
+        let mut s = session_with_budget(MemoryBudget::unbounded());
         let t = tiny(6);
         let h = s.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4)).unwrap();
         assert!(Arc::ptr_eq(s.engine(h).unwrap().governor(), s.governor()));
@@ -464,7 +704,7 @@ mod tests {
 
     #[test]
     fn evict_and_replay_is_bitwise_identical() {
-        let mut s = Session::with_budget(crate::exec::memgr::MemoryBudget::unbounded());
+        let mut s = session_with_budget(MemoryBudget::unbounded());
         let t = tiny(7);
         let h = s.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4)).unwrap();
         let fs = FactorSet::random(&t.dims, 8, 11);
@@ -494,17 +734,73 @@ mod tests {
         use crate::format::memory::packed_copy_bytes;
         let t = tiny(8);
         let price = packed_copy_bytes(&t.dims, t.nnz() as u64);
-        let mut s = Session::with_budget(crate::exec::memgr::MemoryBudget::bytes(price - 1));
+        let mut s = session_with_budget(MemoryBudget::bytes(price - 1));
         let err = s
             .prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4))
             .unwrap_err();
         assert!(matches!(err, Error::BudgetExceeded { .. }), "got {err}");
         assert_eq!(s.n_prepared(), 0);
         // a budget of exactly one copy admits, evicting earlier modes
-        let mut s = Session::with_budget(crate::exec::memgr::MemoryBudget::bytes(price));
+        let mut s = session_with_budget(MemoryBudget::bytes(price));
         let h = s.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4)).unwrap();
         let fs = FactorSet::random(&t.dims, 8, 13);
         assert!(s.mttkrp(h, &fs, 0).is_ok());
         assert!(s.residency_report().resident_bytes <= price);
+    }
+
+    #[test]
+    fn builder_rejects_conflicting_and_degenerate_knobs() {
+        let gov = MemoryGovernor::new(MemoryBudget::unbounded());
+        let err = SessionBuilder::new()
+            .budget(MemoryBudget::bytes(100))
+            .governor(gov)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "got {err}");
+        let err = SessionBuilder::new().max_batch(0).build().unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "got {err}");
+    }
+
+    #[test]
+    fn builder_adopts_pool_governor_and_policy() {
+        let pool = Arc::new(SmPool::new(3));
+        let gov = MemoryGovernor::new(MemoryBudget::bytes(1 << 20));
+        let s = SessionBuilder::new()
+            .pool(Arc::clone(&pool))
+            .governor(Arc::clone(&gov))
+            .max_batch(7)
+            .max_wait(std::time::Duration::from_millis(9))
+            .queue_bound(11)
+            .build()
+            .unwrap();
+        assert!(Arc::ptr_eq(s.pool(), &pool));
+        assert!(Arc::ptr_eq(s.governor(), &gov));
+        assert_eq!(s.governor().budget().limit(), Some(1 << 20));
+        assert_eq!(s.service_policy().max_batch, 7);
+        assert_eq!(s.service_policy().max_wait, std::time::Duration::from_millis(9));
+        assert_eq!(s.service_policy().queue_bound, 11);
+    }
+
+    #[test]
+    fn validate_request_matches_execute_errors() {
+        let mut s = session();
+        let t = tiny(10);
+        let h = s.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4)).unwrap();
+        let fs = FactorSet::random(&t.dims, 8, 1);
+        // good request: validation and execution agree
+        assert!(s.validate_mttkrp(&MttkrpRequest::new(h, 0, &fs)).is_ok());
+        // bad mode: same typed error from validate and from run
+        let bad = MttkrpRequest::new(h, 99, &fs);
+        assert!(matches!(s.validate_mttkrp(&bad), Err(Error::ShapeMismatch(_))));
+        assert!(matches!(s.run_mttkrp(&bad), Err(Error::ShapeMismatch(_))));
+        // wrong rank
+        let wrong = FactorSet::random(&t.dims, 4, 1);
+        let bad = MttkrpRequest::new(h, 0, &wrong);
+        assert!(matches!(s.validate_mttkrp(&bad), Err(Error::ShapeMismatch(_))));
+        // decompose validation: rank mismatch is InvalidConfig, like run
+        let bad_cfg = CpdConfig { rank: 4, ..Default::default() };
+        let req = DecomposeRequest::new(h, bad_cfg);
+        assert!(matches!(s.validate_decompose(&req), Err(Error::InvalidConfig(_))));
+        assert!(matches!(s.run_decompose(&req), Err(Error::InvalidConfig(_))));
     }
 }

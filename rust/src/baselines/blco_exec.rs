@@ -108,6 +108,10 @@ impl MttkrpExecutor for BlcoExecutor {
         self.blco.dims.len()
     }
 
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
     fn pool(&self) -> &Arc<SmPool> {
         &self.pool
     }

@@ -172,6 +172,10 @@ impl MttkrpExecutor for MmCsfExecutor {
         self.trees.len()
     }
 
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
     fn pool(&self) -> &Arc<SmPool> {
         &self.pool
     }

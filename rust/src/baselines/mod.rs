@@ -89,11 +89,18 @@ pub(crate) fn validate_mode_request(
 /// Because phase 2 is schedule-independent and phase 3 is ordered, replay
 /// is bitwise deterministic at any worker count, batched or not (DESIGN.md
 /// §6, invariant B1). `Sync` is a supertrait: partitions of one executor
-/// are replayed concurrently by pool workers.
-pub trait MttkrpExecutor: Sync {
+/// are replayed concurrently by pool workers. `Send` too: a prepared
+/// executor (inside a `Session`) can move behind an `Arc` to a serving
+/// dispatcher thread (`api::Service`).
+pub trait MttkrpExecutor: Send + Sync {
     fn name(&self) -> &'static str;
 
     fn n_modes(&self) -> usize;
+
+    /// Factor rank the layout was prepared for. Exposing it here lets the
+    /// session layer run [`validate_mode_request`] *before* a request is
+    /// queued or batched, with the same typed errors `begin_mode` raises.
+    fn rank(&self) -> usize;
 
     /// The persistent pool this executor replays on.
     fn pool(&self) -> &Arc<SmPool>;

@@ -98,6 +98,10 @@ impl MttkrpExecutor for PartiExecutor {
         self.hicoo.dims.len()
     }
 
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
     fn pool(&self) -> &Arc<SmPool> {
         &self.pool
     }

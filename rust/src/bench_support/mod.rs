@@ -199,7 +199,7 @@ pub fn batch_workload(n_tenants: usize, rank: usize, kappa: usize, scale: f64) -
         DatasetProfile::nips(),
         DatasetProfile::chicago(),
     ];
-    let mut session = Session::new();
+    let mut session = Session::builder().build().unwrap();
     let mut handles = Vec::with_capacity(n_tenants);
     let mut factor_sets = Vec::with_capacity(n_tenants);
     for i in 0..n_tenants {

@@ -642,6 +642,10 @@ impl MttkrpExecutor for Engine {
         Engine::n_modes(self)
     }
 
+    fn rank(&self) -> usize {
+        self.config.rank
+    }
+
     fn pool(&self) -> &Arc<SmPool> {
         Engine::pool(self)
     }

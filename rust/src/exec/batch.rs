@@ -62,6 +62,65 @@ pub fn cost_ordered_queue(loads: &[Vec<u64>]) -> Vec<BatchItem> {
     items
 }
 
+/// Plan dispatch rounds for a queue of keyed, priced requests — the
+/// service dispatcher's coalescing rule (`api::Service`), factored here so
+/// the dispatch-from-queue policy lives next to the scheduler it feeds.
+///
+/// Input is one `(key, price)` pair per queued request, in submission
+/// order; output is a partition of the request indices into rounds, each
+/// of which becomes ONE [`BatchScheduler`] dispatch. Within a round:
+///
+/// * no key repeats — two requests for the same `(tenant, mode)` are
+///   different computations and must not share a dispatch (the batch
+///   entry points reject duplicates);
+/// * under a byte `budget`, the sum of the round's prices stays within
+///   the limit, so one dispatch never demands more co-resident layout
+///   bytes than the governor can admit — requests that do not fit spill
+///   to a later round (bounded backpressure instead of an intra-dispatch
+///   eviction storm).
+///
+/// A request whose price alone exceeds the budget still gets a singleton
+/// round: admission is the governor's call, and its typed
+/// `BudgetExceeded` must reach that request's caller, not be swallowed by
+/// the planner. Every round is non-empty and every index appears exactly
+/// once, so the planner can never livelock the queue.
+pub fn plan_rounds<K: Eq + std::hash::Hash + Copy>(
+    requests: &[(K, u64)],
+    budget: Option<u64>,
+) -> Vec<Vec<usize>> {
+    let mut rounds: Vec<Vec<usize>> = Vec::new();
+    let mut assigned = vec![false; requests.len()];
+    let mut remaining = requests.len();
+    while remaining > 0 {
+        let mut used = std::collections::HashSet::new();
+        let mut price_sum: u64 = 0;
+        let mut round = Vec::new();
+        for (i, &(key, price)) in requests.iter().enumerate() {
+            if assigned[i] || used.contains(&key) {
+                continue;
+            }
+            let fits = match budget {
+                // saturating: an absurd price must spill, not overflow
+                Some(b) => price_sum.saturating_add(price) <= b,
+                None => true,
+            };
+            // the round's first request is always admitted: progress is
+            // guaranteed, and an over-budget singleton surfaces the typed
+            // admission error downstream
+            if !fits && !round.is_empty() {
+                continue;
+            }
+            used.insert(key);
+            price_sum = price_sum.saturating_add(price);
+            round.push(i);
+            assigned[i] = true;
+            remaining -= 1;
+        }
+        rounds.push(round);
+    }
+    rounds
+}
+
 /// Greedy list-schedule makespan: assign `costs` (already ordered — the
 /// batch queue is longest-first, i.e. LPT) to the least-loaded of `kappa`
 /// simulated SMs. This is the modeled κ-SM time of a packed batch, the
@@ -342,6 +401,65 @@ mod tests {
         let run = sched.run(&pool, &|_w, _t, _z, _tr| Ok(())).unwrap();
         assert!(run.tenants.is_empty());
         assert!(run.item_costs.is_empty());
+    }
+
+    #[test]
+    fn plan_rounds_distinct_keys_coalesce_into_one_round() {
+        let reqs = [((0usize, 0usize), 10u64), ((1, 0), 10), ((2, 1), 10)];
+        assert_eq!(plan_rounds(&reqs, None), vec![vec![0, 1, 2]]);
+        // a budget wide enough for everything changes nothing
+        assert_eq!(plan_rounds(&reqs, Some(30)), vec![vec![0, 1, 2]]);
+    }
+
+    #[test]
+    fn plan_rounds_splits_duplicate_keys_preserving_order() {
+        // same (tenant, mode) twice: two computations, two rounds
+        let reqs = [((7usize, 1usize), 5u64), ((7, 1), 5), ((3, 0), 5), ((7, 1), 5)];
+        assert_eq!(plan_rounds(&reqs, None), vec![vec![0, 2], vec![1], vec![3]]);
+    }
+
+    #[test]
+    fn plan_rounds_budget_spills_to_later_rounds() {
+        let reqs = [((0usize, 0usize), 60u64), ((1, 0), 60), ((2, 0), 30), ((3, 0), 30)];
+        // 100-byte budget: 60+30 fits, the second 60 and second 30 spill
+        assert_eq!(plan_rounds(&reqs, Some(100)), vec![vec![0, 2], vec![1, 3]]);
+    }
+
+    #[test]
+    fn plan_rounds_oversized_singleton_still_dispatches() {
+        // a request pricier than the whole budget gets its own round —
+        // the governor, not the planner, owns the typed rejection
+        let reqs = [((0usize, 0usize), 500u64), ((1, 0), 10)];
+        assert_eq!(plan_rounds(&reqs, Some(100)), vec![vec![0], vec![1]]);
+        // ...also when it is not first in the queue
+        let reqs = [((1usize, 0usize), 10u64), ((0, 0), 500), ((2, 0), 10)];
+        assert_eq!(plan_rounds(&reqs, Some(100)), vec![vec![0, 2], vec![1]]);
+    }
+
+    #[test]
+    fn plan_rounds_covers_every_request_exactly_once() {
+        let reqs: Vec<((usize, usize), u64)> =
+            (0..17).map(|i| ((i % 5, i % 3), (i as u64 % 4) * 25)).collect();
+        for budget in [None, Some(0), Some(40), Some(u64::MAX)] {
+            let rounds = plan_rounds(&reqs, budget);
+            let mut seen = vec![false; reqs.len()];
+            for round in &rounds {
+                assert!(!round.is_empty(), "empty round under {budget:?}");
+                let mut keys = std::collections::HashSet::new();
+                for &i in round {
+                    assert!(!seen[i], "index {i} twice under {budget:?}");
+                    seen[i] = true;
+                    assert!(keys.insert(reqs[i].0), "duplicate key in a round");
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "dropped request under {budget:?}");
+        }
+    }
+
+    #[test]
+    fn plan_rounds_empty_queue_is_no_rounds() {
+        let rounds = plan_rounds::<usize>(&[], Some(100));
+        assert!(rounds.is_empty());
     }
 
     #[test]

@@ -307,6 +307,30 @@ impl MemoryGovernor {
         self.budget
     }
 
+    /// Admission query: could `bytes` of layout ever be co-resident under
+    /// this budget? `false` means a fault for that many bytes is
+    /// guaranteed to be a typed [`Error::BudgetExceeded`], no matter what
+    /// gets evicted first. The serving dispatcher asks this *before*
+    /// packing requests into one dispatch, so a coalesced batch never
+    /// demands more bytes than the budget can hold at once
+    /// (`exec::batch::plan_rounds`).
+    pub fn admits(&self, bytes: u64) -> bool {
+        match self.budget.limit {
+            None => true,
+            Some(limit) => bytes <= limit,
+        }
+    }
+
+    /// Free headroom under the budget right now: `limit − resident`
+    /// bytes, or `None` when unbounded. Advisory — concurrent faults move
+    /// it — but a useful load signal for admission control.
+    pub fn headroom(&self) -> Option<u64> {
+        let limit = self.budget.limit?;
+        let mut g = lock_unpoisoned(&self.inner);
+        prune_dead(&mut g);
+        Some(limit.saturating_sub(g.used))
+    }
+
     /// A fresh tenant id for one prepared tensor's slot set.
     pub fn register_tenant(&self) -> TenantId {
         let mut g = lock_unpoisoned(&self.inner);
@@ -576,6 +600,26 @@ mod tests {
         // the governor still serves slots that fit
         let ok = slot(&gov, 0, 1, 20);
         assert_eq!(*ok.ensure(&gov, || 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn admission_query_tracks_budget_and_headroom() {
+        let unbounded = MemoryGovernor::new(MemoryBudget::unbounded());
+        assert!(unbounded.admits(u64::MAX));
+        assert_eq!(unbounded.headroom(), None);
+
+        let gov = MemoryGovernor::new(MemoryBudget::bytes(30));
+        assert!(gov.admits(30));
+        assert!(!gov.admits(31), "a price over the whole budget can never fit");
+        assert_eq!(gov.headroom(), Some(30));
+        let a = slot(&gov, 0, 0, 10);
+        a.ensure(&gov, || 1).unwrap();
+        assert_eq!(gov.headroom(), Some(20));
+        // admits() is about possibility, not current headroom: 25 B fits
+        // after eviction even though only 20 B are free right now
+        assert!(gov.admits(25));
+        gov.evict(a.key());
+        assert_eq!(gov.headroom(), Some(30));
     }
 
     #[test]

@@ -45,7 +45,9 @@ pub mod pool;
 pub mod workspace;
 
 pub use accum::{GlobalStage, ModeAccumulator, RowSink};
-pub use batch::{cost_ordered_queue, lpt_makespan, BatchItem, BatchRun, BatchScheduler, TenantRun};
+pub use batch::{
+    cost_ordered_queue, lpt_makespan, plan_rounds, BatchItem, BatchRun, BatchScheduler, TenantRun,
+};
 pub use memgr::{
     MemoryBudget, MemoryGovernor, ResidencyReport, Slot, SlotKey, SlotResidency, TenantId,
 };

@@ -17,9 +17,12 @@
 //!
 //! The public way in is the typed [`api`] layer: [`ExecutorBuilder`]
 //! constructs any executor (validated up front, typed [`Error`]s, never a
-//! panic), and [`Session`] holds many prepared tensors on one persistent
-//! SM pool, replaying their layouts across calls — the paper's
-//! build-once/replay-forever economics as an API shape.
+//! panic), and [`SessionBuilder`] configures a [`Session`] holding many
+//! prepared tensors on one persistent SM pool, replaying their layouts
+//! across calls — the paper's build-once/replay-forever economics as an
+//! API shape. [`Session::into_service`] turns a prepared session into an
+//! async serving front-end ([`Service`]) with a bounded submission queue
+//! and dynamic batching.
 //!
 //! ## Quick start
 //!
@@ -28,7 +31,7 @@
 //!
 //! # fn main() -> spmttkrp::Result<()> {
 //! let tensor = synth::DatasetProfile::uber().scaled(0.05).generate(42);
-//! let mut session = Session::new();
+//! let mut session = Session::builder().build()?;
 //! let h = session.prepare(&tensor, &ExecutorBuilder::new().rank(16).sm_count(8))?;
 //! let factors = FactorSet::random(&tensor.dims, 16, 7);
 //! for mode in 0..tensor.n_modes() {
@@ -60,8 +63,9 @@ pub mod tensor;
 pub mod util;
 
 pub use api::{
-    BackendKind, BatchDispatchReport, Error, ExecutorBuilder, ExecutorKind, MttkrpBatch, Result,
-    Session, TensorHandle,
+    BackendKind, BatchDispatchReport, DecomposeRequest, Error, ExecutorBuilder, ExecutorKind,
+    MttkrpBatch, MttkrpRequest, Result, Service, ServicePolicy, Session, SessionBuilder,
+    TensorHandle, Ticket,
 };
 
 /// Most-used types, re-exported for `use spmttkrp::prelude::*`.
@@ -71,15 +75,19 @@ pub use api::{
 /// executor trait, the engine and CPD types, and the tensor substrate.
 pub mod prelude {
     pub use crate::api::{
-        BackendKind, BatchDispatchReport, Error, ExecutorBuilder, ExecutorKind, MttkrpBatch,
-        Result, Session, TensorHandle,
+        BackendKind, BatchDispatchReport, DecomposeRequest, Error, ExecutorBuilder, ExecutorKind,
+        MttkrpBatch, MttkrpRequest, Result, Service, ServicePolicy, Session, SessionBuilder,
+        TensorHandle, Ticket,
     };
     pub use crate::baselines::MttkrpExecutor;
     pub use crate::coordinator::{Engine, EngineConfig, UpdatePolicy};
     pub use crate::cpd::{als, CpdConfig, CpdResult};
     pub use crate::exec::{MemoryBudget, MemoryGovernor, ResidencyReport, SmPool};
     pub use crate::format::{memory::MemoryReport, ModeSpecificFormat};
-    pub use crate::metrics::{ExecReport, ModeExecReport, ResidencyCounters, TrafficCounters};
+    pub use crate::metrics::{
+        ExecReport, LatencyStats, ModeExecReport, ResidencyCounters, ServiceCounters,
+        ServiceReport, TrafficCounters,
+    };
     pub use crate::partition::{LoadBalance, ModePartitioning, VertexAssign};
     pub use crate::runtime::{Backend, NativeBackend, PjrtBackend};
     pub use crate::tensor::{synth, FactorSet, SparseTensorCOO};

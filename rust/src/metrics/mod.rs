@@ -153,6 +153,97 @@ impl ExecReport {
     }
 }
 
+/// Lifetime counters of one serving front-end (`api::Service`): what was
+/// submitted, what the dispatcher coalesced, what was refused at the door.
+/// Latency distributions live in [`ServiceReport`]; these are the plain
+/// event counts.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServiceCounters {
+    /// Requests admitted into the queue.
+    pub submitted: u64,
+    /// Requests whose ticket was resolved with an `Ok` result.
+    pub completed: u64,
+    /// Requests whose ticket was resolved with a typed error (bad mode,
+    /// foreign handle, budget admission, ...). Delivered, not dropped.
+    pub failed: u64,
+    /// Submissions refused at the door: queue bound exceeded
+    /// (`Error::Overloaded`) or service already stopped
+    /// (`Error::ServiceStopped`). No ticket was issued.
+    pub rejected: u64,
+    /// Coalesced dispatch groups the dispatcher issued (each is one
+    /// `BatchScheduler` round, or one fallback single-request run).
+    pub dispatches: u64,
+    /// Requests those dispatch groups served; `/ dispatches` is the mean
+    /// batch occupancy — > 1 means dynamic batching is coalescing.
+    pub dispatched_requests: u64,
+    /// High-water mark of the submission queue.
+    pub max_queue_depth: u64,
+    /// Dispatcher threads that died by panic (0 or 1; the service turns
+    /// into a typed-`ServiceStopped` front after).
+    pub dispatcher_panics: u64,
+}
+
+impl ServiceCounters {
+    /// Mean requests per coalesced dispatch group (0.0 before the first
+    /// dispatch).
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.dispatches == 0 {
+            0.0
+        } else {
+            self.dispatched_requests as f64 / self.dispatches as f64
+        }
+    }
+}
+
+/// Nearest-rank latency percentiles over a set of per-request samples.
+/// An empty sample set is all-zero, never a panic — a service that served
+/// nothing still reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LatencyStats {
+    pub n: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub max: Duration,
+}
+
+impl LatencyStats {
+    pub fn of(samples: &[Duration]) -> LatencyStats {
+        if samples.is_empty() {
+            return LatencyStats::default();
+        }
+        let n = samples.len();
+        let mut sorted: Vec<Duration> = samples.to_vec();
+        sorted.sort_unstable();
+        let pct = |q: f64| sorted[(((n as f64) * q).ceil() as usize).clamp(1, n) - 1];
+        let total: Duration = sorted.iter().sum();
+        LatencyStats {
+            n,
+            mean: total / n as u32,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Snapshot of one `api::Service`'s behavior: event counts plus the two
+/// latency distributions the serving story is judged on.
+#[derive(Clone, Debug)]
+pub struct ServiceReport {
+    pub counters: ServiceCounters,
+    /// enqueue → dispatch: time spent waiting in the submission queue.
+    pub queue_latency: LatencyStats,
+    /// enqueue → complete: full request latency as the client saw it.
+    pub request_latency: LatencyStats,
+    /// Requests queued (admitted, not yet picked up) at snapshot time.
+    pub queue_depth: usize,
+    /// [`ServiceCounters::mean_batch_occupancy`], precomputed.
+    pub mean_batch_occupancy: f64,
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,6 +288,46 @@ mod tests {
         assert_eq!(a.evictions, 2);
         assert_eq!(a.rebuilds, 4);
         assert_eq!(a.rebuild_bytes, 60);
+    }
+
+    #[test]
+    fn latency_stats_of_empty_is_zero_not_a_panic() {
+        let s = LatencyStats::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.p50, Duration::ZERO);
+        assert_eq!(s.p99, Duration::ZERO);
+    }
+
+    #[test]
+    fn latency_stats_nearest_rank_percentiles() {
+        let xs: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        let s = LatencyStats::of(&xs);
+        assert_eq!(s.n, 100);
+        assert_eq!(s.p50, Duration::from_micros(50));
+        assert_eq!(s.p95, Duration::from_micros(95));
+        assert_eq!(s.p99, Duration::from_micros(99));
+        assert_eq!(s.max, Duration::from_micros(100));
+        // order-independent: percentiles sort internally
+        let mut rev = xs.clone();
+        rev.reverse();
+        assert_eq!(LatencyStats::of(&rev), s);
+    }
+
+    #[test]
+    fn latency_stats_single_sample() {
+        let s = LatencyStats::of(&[Duration::from_millis(3)]);
+        assert_eq!(s.p50, Duration::from_millis(3));
+        assert_eq!(s.p99, Duration::from_millis(3));
+        assert_eq!(s.mean, Duration::from_millis(3));
+    }
+
+    #[test]
+    fn service_counters_occupancy() {
+        let mut c = ServiceCounters::default();
+        assert_eq!(c.mean_batch_occupancy(), 0.0);
+        c.dispatches = 4;
+        c.dispatched_requests = 10;
+        assert!((c.mean_batch_occupancy() - 2.5).abs() < 1e-12);
     }
 
     #[test]

@@ -73,7 +73,7 @@ fn prop_mttkrp_batch_bitwise_equals_sequential() {
     for case in 0..32u64 {
         let seed = 0xba7c_4001u64 + case;
         let n_tenants = 1 + rng.next_below(6) as usize;
-        let mut session = Session::new();
+        let mut session = Session::builder().build().unwrap();
         let mut tenants: Vec<Tenant> = Vec::with_capacity(n_tenants);
         for ti in 0..n_tenants {
             let t = random_tensor(&mut rng);
@@ -145,7 +145,7 @@ fn prop_decompose_batch_matches_sequential() {
     for case in 0..8u64 {
         let seed = 0xba7c_de00u64 + case;
         let n_tenants = 1 + rng.next_below(3) as usize;
-        let mut session = Session::new();
+        let mut session = Session::builder().build().unwrap();
         let mut handles = Vec::new();
         let mut cfgs = Vec::new();
         for ti in 0..n_tenants {
@@ -200,7 +200,7 @@ fn assert_pool_usable(session: &Session, h: spmttkrp::TensorHandle, fs: &FactorS
 
 #[test]
 fn adversarial_empty_batch_is_invalid_config() {
-    let mut session = Session::new();
+    let mut session = Session::builder().build().unwrap();
     let mut rng = Rng::new(0xad_0001);
     let t = random_tensor(&mut rng);
     let h = session.prepare(&t, &ExecutorBuilder::new().rank(4).sm_count(2)).unwrap();
@@ -214,7 +214,7 @@ fn adversarial_empty_batch_is_invalid_config() {
 
 #[test]
 fn adversarial_duplicate_handles_are_invalid_config() {
-    let mut session = Session::new();
+    let mut session = Session::builder().build().unwrap();
     let mut rng = Rng::new(0xad_0002);
     let t = random_tensor(&mut rng);
     let h = session.prepare(&t, &ExecutorBuilder::new().rank(4).sm_count(2)).unwrap();
@@ -237,8 +237,8 @@ fn adversarial_duplicate_handles_are_invalid_config() {
 
 #[test]
 fn adversarial_foreign_handle_is_unknown_handle() {
-    let mut session = Session::new();
-    let mut other = Session::new();
+    let mut session = Session::builder().build().unwrap();
+    let mut other = Session::builder().build().unwrap();
     let mut rng = Rng::new(0xad_0003);
     let t = random_tensor(&mut rng);
     let h = session.prepare(&t, &ExecutorBuilder::new().rank(4).sm_count(2)).unwrap();
@@ -258,7 +258,7 @@ fn adversarial_foreign_handle_is_unknown_handle() {
 
 #[test]
 fn adversarial_bad_mode_or_rank_on_one_tenant_is_shape_mismatch() {
-    let mut session = Session::new();
+    let mut session = Session::builder().build().unwrap();
     let mut rng = Rng::new(0xad_0004);
     let ta = random_tensor(&mut rng);
     let tb = random_tensor(&mut rng);
@@ -284,7 +284,7 @@ fn adversarial_wrong_mode_count_factors_are_typed_for_every_kind() {
     // regression: a factor set with the right rank but too few modes must
     // be a typed ShapeMismatch for ALL executor kinds — the baselines used
     // to index factors[w] out of bounds inside a pool worker (a panic)
-    let mut session = Session::new();
+    let mut session = Session::builder().build().unwrap();
     let mut rng = Rng::new(0xad_0006);
     let t = loop {
         let t = random_tensor(&mut rng);
@@ -328,7 +328,10 @@ fn adversarial_budget_too_small_for_one_tenant() {
     let price_small = packed_copy_bytes(&small.dims, small.nnz() as u64);
     assert!(price_small * small.n_modes() as u64 < price_big, "fixture sizes inverted");
 
-    let mut session = Session::with_budget(MemoryBudget::bytes(price_big - 1));
+    let mut session = Session::builder()
+        .budget(MemoryBudget::bytes(price_big - 1))
+        .build()
+        .unwrap();
     let b = ExecutorBuilder::new().rank(4).sm_count(2);
     let hs = session.prepare(&small, &b).unwrap();
     let err = session.prepare(&big, &b).unwrap_err();
@@ -357,8 +360,8 @@ fn adversarial_eviction_mid_decompose_batch_is_bitwise_identical() {
     let mut rng = Rng::new(0xad_0008);
     let tensors: Vec<SparseTensorCOO> = (0..2).map(|_| random_tensor(&mut rng)).collect();
     let builder = ExecutorBuilder::new().rank(4).sm_count(7);
-    let mut subject = Session::with_budget(MemoryBudget::unbounded());
-    let mut control = Session::with_budget(MemoryBudget::unbounded());
+    let mut subject = Session::builder().budget(MemoryBudget::unbounded()).build().unwrap();
+    let mut control = Session::builder().budget(MemoryBudget::unbounded()).build().unwrap();
     let hs: Vec<_> = tensors.iter().map(|t| subject.prepare(t, &builder).unwrap()).collect();
     let hc: Vec<_> = tensors.iter().map(|t| control.prepare(t, &builder).unwrap()).collect();
     let cfgs: Vec<CpdConfig> = (0..tensors.len())
@@ -421,7 +424,7 @@ fn adversarial_eviction_mid_decompose_batch_is_bitwise_identical() {
 
 #[test]
 fn adversarial_baseline_handle_in_decompose_batch_is_invalid_config() {
-    let mut session = Session::new();
+    let mut session = Session::builder().build().unwrap();
     let mut rng = Rng::new(0xad_0005);
     let t = random_tensor(&mut rng);
     let ours = session.prepare(&t, &ExecutorBuilder::new().rank(4).sm_count(2)).unwrap();

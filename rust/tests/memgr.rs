@@ -80,8 +80,8 @@ fn prop_evict_rebuild_replay_is_bitwise_identical() {
         // between (and rebuilt by the governor during) operations; the
         // control is explicitly unbounded so a stray SPMTTKRP_BUDGET_BYTES
         // in the environment cannot make it churn
-        let mut subject = Session::with_budget(MemoryBudget::unbounded());
-        let mut control = Session::with_budget(MemoryBudget::unbounded());
+        let mut subject = Session::builder().budget(MemoryBudget::unbounded()).build().unwrap();
+        let mut control = Session::builder().budget(MemoryBudget::unbounded()).build().unwrap();
         let mut tenants = Vec::with_capacity(n_tenants);
         for ti in 0..n_tenants {
             let t = random_tensor(&mut rng);
@@ -217,7 +217,7 @@ fn prop_budget_never_exceeded_between_calls() {
         // room for one tensor's full copy set plus one more copy — the
         // second tenant must fight the first for residency
         let budget = price_a * ta.n_modes() as u64 + price_b;
-        let mut s = Session::with_budget(MemoryBudget::bytes(budget));
+        let mut s = Session::builder().budget(MemoryBudget::bytes(budget)).build().unwrap();
         let b = ExecutorBuilder::new().rank(4).sm_count(4);
         let ha = s.prepare(&ta, &b).unwrap();
         let hb = s.prepare(&tb, &b).unwrap();
@@ -280,7 +280,7 @@ fn budget_too_small_for_one_tenant_is_typed_at_prepare() {
     .unwrap();
     let price_small = packed_copy_bytes(&small.dims, small.nnz() as u64);
     assert!(price_small < price_big, "fixture sizes inverted");
-    let mut s = Session::with_budget(MemoryBudget::bytes(price_big - 1));
+    let mut s = Session::builder().budget(MemoryBudget::bytes(price_big - 1)).build().unwrap();
     let b = ExecutorBuilder::new().rank(4).sm_count(2);
     // the small tenant is admitted...
     let hs = s.prepare(&small, &b).unwrap();
@@ -300,7 +300,7 @@ fn budget_too_small_for_one_tenant_is_typed_at_prepare() {
 fn rebuild_traffic_is_reported_separately() {
     let mut rng = Rng::new(0x3e41_5e9a);
     let t = random_tensor(&mut rng);
-    let mut s = Session::with_budget(MemoryBudget::unbounded());
+    let mut s = Session::builder().budget(MemoryBudget::unbounded()).build().unwrap();
     let h = s.prepare(&t, &ExecutorBuilder::new().rank(4).sm_count(3)).unwrap();
     let fs = FactorSet::random(&t.dims, 4, 9);
     let (_, rep_resident) = s.mttkrp(h, &fs, 0).unwrap();

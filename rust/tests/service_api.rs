@@ -1,0 +1,411 @@
+//! Integration tests for the async serving front-end
+//! (`api::{Service, ServicePolicy, Ticket}` over `SessionBuilder`):
+//!
+//!   * **V1** — N client threads submitting mixed `MttkrpRequest` /
+//!     `DecomposeRequest`s through one `Service` receive factors and
+//!     `TrafficCounters` bitwise-identical to sequential direct calls on
+//!     the same session, however the dispatcher coalesced them;
+//!   * duplicate `(handle, mode)` submissions both complete correctly
+//!     (the dispatcher splits them into separate rounds — `mttkrp_batch`
+//!     itself rejects duplicates);
+//!   * under a byte budget, dispatch rounds stay within it (no
+//!     batching-induced thrash) and every request still succeeds;
+//!   * overload is a typed `Error::Overloaded` rejection, not a stall;
+//!   * graceful shutdown drains every queued request — zero hung tickets
+//!     — and later submissions are typed `Error::ServiceStopped`;
+//!   * the deprecated constructor quartet builds sessions equivalent to
+//!     the `SessionBuilder` replacements, bitwise;
+//!   * one malformed request fails alone with the same typed error a
+//!     direct call returns, while its cycle neighbors succeed.
+
+use std::sync::Arc;
+
+use spmttkrp::api::{
+    DecomposeRequest, Error, ExecutorBuilder, MttkrpRequest, ServicePolicy, Session,
+    SessionBuilder, TensorHandle,
+};
+use spmttkrp::cpd::CpdConfig;
+use spmttkrp::exec::{MemoryBudget, SmPool};
+use spmttkrp::format::memory::packed_copy_bytes;
+use spmttkrp::metrics::ModeExecReport;
+use spmttkrp::tensor::synth::DatasetProfile;
+use spmttkrp::tensor::{FactorSet, SparseTensorCOO};
+
+fn three_tensors() -> Vec<SparseTensorCOO> {
+    vec![
+        DatasetProfile::uber().scaled(0.001).generate(61),
+        DatasetProfile::nips().scaled(0.001).generate(62),
+        DatasetProfile::chicago().scaled(0.001).generate(63),
+    ]
+}
+
+fn builder(rank: usize) -> ExecutorBuilder {
+    ExecutorBuilder::new().sm_count(6).rank(rank)
+}
+
+fn assert_bitwise(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (j, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what} [{j}]: served {a} vs direct {b}");
+    }
+}
+
+/// V1: whatever the interleaving and coalescing, served results are the
+/// sequential results, bit for bit.
+#[test]
+fn served_results_match_sequential_bitwise_under_concurrency() {
+    let rank = 8;
+    let tensors = three_tensors();
+    // explicit unbounded budget: immune to SPMTTKRP_BUDGET_BYTES
+    let mut session = SessionBuilder::new()
+        .budget(MemoryBudget::unbounded())
+        .max_batch(8)
+        .max_wait(std::time::Duration::from_millis(2))
+        .build()
+        .unwrap();
+    let handles: Vec<TensorHandle> = tensors
+        .iter()
+        .map(|t| session.prepare(t, &builder(rank)).unwrap())
+        .collect();
+    let factor_sets: Vec<Arc<FactorSet>> = tensors
+        .iter()
+        .enumerate()
+        .map(|(i, t)| Arc::new(FactorSet::random(&t.dims, rank, 0x7a ^ i as u64)))
+        .collect();
+    let cfg = CpdConfig {
+        rank,
+        max_iters: 3,
+        tol: 0.0,
+        damp: 1e-4,
+        seed: 17,
+    };
+
+    // Sequential ground truth FIRST, on the very session the service will
+    // serve (same prepared layouts, same pool).
+    let expected: Vec<Vec<(Vec<f32>, ModeExecReport)>> = handles
+        .iter()
+        .zip(&tensors)
+        .zip(&factor_sets)
+        .map(|((&h, t), fs)| {
+            (0..t.n_modes()).map(|d| session.mttkrp(h, fs, d).unwrap()).collect()
+        })
+        .collect();
+    let expected_cpd = session.decompose(handles[0], &cfg).unwrap();
+
+    let service = Arc::new(session.into_service().unwrap());
+    // 4 client threads × (every tenant × every mode), plus one decompose
+    // on thread 0 — heavier interleaving than any single dispatch cycle.
+    std::thread::scope(|scope| {
+        for client in 0..4usize {
+            let service = Arc::clone(&service);
+            let handles = &handles;
+            let tensors = &tensors;
+            let factor_sets = &factor_sets;
+            let expected = &expected;
+            let expected_cpd = &expected_cpd;
+            let cfg = &cfg;
+            scope.spawn(move || {
+                let cpd_ticket = (client == 0).then(|| {
+                    service
+                        .submit_decompose(DecomposeRequest::new(handles[0], cfg.clone()))
+                        .unwrap()
+                });
+                let mut tickets = Vec::new();
+                for (i, &h) in handles.iter().enumerate() {
+                    for d in 0..tensors[i].n_modes() {
+                        let req = MttkrpRequest::new(h, d, Arc::clone(&factor_sets[i]));
+                        tickets.push((i, d, service.submit_mttkrp(req).unwrap()));
+                    }
+                }
+                for (i, d, ticket) in tickets {
+                    let (out, rep) = ticket.wait().unwrap();
+                    let (want, want_rep) = &expected[i][d];
+                    assert_bitwise(&out, want, &format!("client {client} tensor {i} mode {d}"));
+                    assert_eq!(
+                        rep.traffic, want_rep.traffic,
+                        "client {client} tensor {i} mode {d}: traffic counters"
+                    );
+                }
+                if let Some(t) = cpd_ticket {
+                    let got = t.wait().unwrap();
+                    assert_eq!(got.fits, expected_cpd.fits, "served fit curve diverged");
+                    for (g, w) in got.factors.factors.iter().zip(&expected_cpd.factors.factors) {
+                        for (a, b) in g.data.iter().zip(&w.data) {
+                            assert_eq!(a.to_bits(), b.to_bits(), "served factors diverged");
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let report = service.shutdown();
+    let c = report.counters;
+    let per_client: u64 = tensors.iter().map(|t| t.n_modes() as u64).sum();
+    assert_eq!(c.submitted, 4 * per_client + 1, "every tenant x mode x client + 1 cpd");
+    assert_eq!(c.completed, c.submitted, "every ticket resolved Ok");
+    assert_eq!(c.failed, 0);
+    assert_eq!(c.dispatched_requests, c.submitted);
+    assert_eq!(report.queue_depth, 0);
+    assert_eq!(c.dispatcher_panics, 0);
+}
+
+/// The same `(handle, mode)` submitted twice in one burst is two distinct
+/// computations: the dispatcher must split them across rounds (the batch
+/// core rejects duplicates) and both must come back correct.
+#[test]
+fn duplicate_requests_in_one_burst_both_complete() {
+    let rank = 8;
+    let t = DatasetProfile::uber().scaled(0.001).generate(71);
+    let mut session = SessionBuilder::new()
+        .budget(MemoryBudget::unbounded())
+        .max_wait(std::time::Duration::from_millis(10))
+        .build()
+        .unwrap();
+    let h = session.prepare(&t, &builder(rank)).unwrap();
+    let fs = Arc::new(FactorSet::random(&t.dims, rank, 3));
+    let (want, _) = session.mttkrp(h, &fs, 0).unwrap();
+
+    let service = session.into_service().unwrap();
+    let tickets: Vec<_> = (0..6)
+        .map(|_| service.submit_mttkrp(MttkrpRequest::new(h, 0, Arc::clone(&fs))).unwrap())
+        .collect();
+    for (k, ticket) in tickets.into_iter().enumerate() {
+        let (out, _) = ticket.wait().unwrap();
+        assert_bitwise(&out, &want, &format!("duplicate {k}"));
+    }
+    let rep = service.shutdown();
+    assert_eq!(rep.counters.completed, 6);
+    // duplicates force at least one extra round beyond a single coalesced
+    // dispatch
+    assert!(rep.counters.dispatches >= 2, "got {} dispatches", rep.counters.dispatches);
+}
+
+/// Dynamic batching under a byte budget: a cycle whose tenants' layouts
+/// together exceed the budget is split into budget-fitting rounds — every
+/// request still succeeds, and the budget is never overshot by batching.
+#[test]
+fn budgeted_service_splits_rounds_instead_of_thrashing() {
+    let rank = 8;
+    let ta = DatasetProfile::uber().scaled(0.001).generate(72);
+    let tb = DatasetProfile::nips().scaled(0.001).generate(73);
+    let price_a = packed_copy_bytes(&ta.dims, ta.nnz() as u64);
+    let price_b = packed_copy_bytes(&tb.dims, tb.nnz() as u64);
+    // room for the bigger tenant's copy alone, never both at once
+    let budget = price_a.max(price_b);
+    let mut session = SessionBuilder::new()
+        .budget(MemoryBudget::bytes(budget))
+        .max_wait(std::time::Duration::from_millis(10))
+        .build()
+        .unwrap();
+    let ha = session.prepare(&ta, &builder(rank)).unwrap();
+    let hb = session.prepare(&tb, &builder(rank)).unwrap();
+    let fa = Arc::new(FactorSet::random(&ta.dims, rank, 4));
+    let fb = Arc::new(FactorSet::random(&tb.dims, rank, 5));
+    let (want_a, _) = session.mttkrp(ha, &fa, 0).unwrap();
+    let (want_b, _) = session.mttkrp(hb, &fb, 0).unwrap();
+
+    let service = session.into_service().unwrap();
+    let tickets: Vec<_> = (0..3)
+        .flat_map(|_| {
+            vec![
+                service.submit_mttkrp(MttkrpRequest::new(ha, 0, Arc::clone(&fa))).unwrap(),
+                service.submit_mttkrp(MttkrpRequest::new(hb, 0, Arc::clone(&fb))).unwrap(),
+            ]
+        })
+        .collect();
+    for (k, ticket) in tickets.into_iter().enumerate() {
+        let (out, _) = ticket.wait().unwrap();
+        let want = if k % 2 == 0 { &want_a } else { &want_b };
+        assert_bitwise(&out, want, &format!("budgeted request {k}"));
+    }
+    let session = service.into_session();
+    assert!(
+        session.residency_report().resident_bytes <= budget,
+        "dispatch rounds overshot the byte budget"
+    );
+}
+
+/// Past the queue bound, submission fails fast and typed — backpressure,
+/// not a stall; the queue keeps serving what it admitted.
+#[test]
+fn overload_is_a_typed_rejection() {
+    let rank = 8;
+    let t = DatasetProfile::uber().scaled(0.002).generate(74);
+    let mut session = SessionBuilder::new()
+        .budget(MemoryBudget::unbounded())
+        .queue_bound(1)
+        .max_wait(std::time::Duration::ZERO)
+        .build()
+        .unwrap();
+    let h = session.prepare(&t, &builder(rank)).unwrap();
+    let fs = Arc::new(FactorSet::random(&t.dims, rank, 6));
+
+    let service = session.into_service().unwrap();
+    // occupy the dispatcher with a long decompose so fillers stay queued
+    let slow = service
+        .submit_decompose(DecomposeRequest::new(
+            h,
+            CpdConfig {
+                rank,
+                max_iters: 200,
+                tol: 0.0,
+                damp: 1e-4,
+                seed: 8,
+            },
+        ))
+        .unwrap();
+    // wait until the dispatcher has taken it (depth back to 0)
+    while service.report().queue_depth > 0 {
+        std::thread::yield_now();
+    }
+    // bound 1: one filler is admitted, the next is a typed rejection
+    let filler = service.submit_mttkrp(MttkrpRequest::new(h, 0, Arc::clone(&fs))).unwrap();
+    let err = service
+        .submit_mttkrp(MttkrpRequest::new(h, 1, Arc::clone(&fs)))
+        .unwrap_err();
+    assert!(
+        matches!(err, Error::Overloaded { queued: 1, bound: 1 }),
+        "got {err}"
+    );
+    // the admitted work still completes
+    assert!(slow.wait().is_ok());
+    assert!(filler.wait().is_ok());
+    let rep = service.shutdown();
+    assert_eq!(rep.counters.rejected, 1);
+    assert_eq!(rep.counters.completed, 2);
+}
+
+/// Graceful shutdown: everything admitted before `shutdown()` completes
+/// normally — zero hung tickets — and the door is typed-closed after.
+#[test]
+fn shutdown_drains_queued_requests_then_rejects() {
+    let rank = 8;
+    let t = DatasetProfile::uber().scaled(0.001).generate(75);
+    let mut session = SessionBuilder::new()
+        .budget(MemoryBudget::unbounded())
+        .max_wait(std::time::Duration::from_millis(10))
+        .build()
+        .unwrap();
+    let h = session.prepare(&t, &builder(rank)).unwrap();
+    let fs = Arc::new(FactorSet::random(&t.dims, rank, 7));
+    let expected: Vec<Vec<f32>> = (0..t.n_modes())
+        .map(|d| session.mttkrp(h, &fs, d).unwrap().0)
+        .collect();
+
+    let service = session.into_service().unwrap();
+    let tickets: Vec<_> = (0..12)
+        .map(|k| {
+            let d = k % t.n_modes();
+            (d, service.submit_mttkrp(MttkrpRequest::new(h, d, Arc::clone(&fs))).unwrap())
+        })
+        .collect();
+    // shutdown with (most of) the burst still queued: drain, don't drop
+    let report = service.shutdown();
+    assert_eq!(report.counters.completed, 12, "all queued requests served");
+    assert_eq!(report.queue_depth, 0);
+    for (d, ticket) in tickets {
+        let (out, _) = ticket.wait().unwrap();
+        assert_bitwise(&out, &expected[d], &format!("drained request mode {d}"));
+    }
+    // a 12-request burst against a 10 ms coalescing window must have
+    // batched: the serving win the bench asserts too
+    assert!(
+        report.mean_batch_occupancy > 1.0,
+        "expected coalescing, got occupancy {}",
+        report.mean_batch_occupancy
+    );
+    let err = service
+        .submit_mttkrp(MttkrpRequest::new(h, 0, Arc::clone(&fs)))
+        .unwrap_err();
+    assert!(matches!(err, Error::ServiceStopped(_)), "got {err}");
+}
+
+/// The deprecated constructor quartet must keep building sessions
+/// equivalent to their `SessionBuilder` replacements: same defaults, same
+/// bitwise results on the same work.
+#[test]
+#[allow(deprecated)]
+fn deprecated_constructors_match_builder_sessions_bitwise() {
+    let rank = 8;
+    let t = DatasetProfile::uber().scaled(0.001).generate(76);
+    let fs = FactorSet::random(&t.dims, rank, 9);
+    let run = |mut s: Session| -> Vec<f32> {
+        let h = s.prepare(&t, &builder(rank).threads(1)).unwrap();
+        s.mttkrp(h, &fs, 0).unwrap().0
+    };
+    let want = run(SessionBuilder::new().build().unwrap());
+
+    let pairs: Vec<(Session, &str)> = vec![
+        (Session::new(), "Session::new"),
+        (Session::on_pool(Arc::new(SmPool::new(2))), "Session::on_pool"),
+        (
+            Session::with_budget(MemoryBudget::unbounded()),
+            "Session::with_budget",
+        ),
+        (
+            Session::on_pool_with_budget(Arc::new(SmPool::new(2)), MemoryBudget::unbounded()),
+            "Session::on_pool_with_budget",
+        ),
+    ];
+    for (s, what) in pairs {
+        assert_eq!(
+            s.service_policy(),
+            &ServicePolicy::default(),
+            "{what}: default service policy"
+        );
+        assert_bitwise(&run(s), &want, what);
+    }
+    // and the builder reproduces the explicit-pool/budget combination too
+    let via_builder = SessionBuilder::new()
+        .pool(Arc::new(SmPool::new(2)))
+        .budget(MemoryBudget::unbounded())
+        .build()
+        .unwrap();
+    assert_bitwise(&run(via_builder), &want, "builder pool+budget");
+}
+
+/// One malformed request must fail alone — same typed error as a direct
+/// call — while cycle neighbors complete normally.
+#[test]
+fn bad_requests_fail_alone_with_direct_call_errors() {
+    let rank = 8;
+    let t = DatasetProfile::uber().scaled(0.001).generate(77);
+    let mut session = SessionBuilder::new()
+        .budget(MemoryBudget::unbounded())
+        .max_wait(std::time::Duration::from_millis(10))
+        .build()
+        .unwrap();
+    let h = session.prepare(&t, &builder(rank)).unwrap();
+    let mut other = SessionBuilder::new().build().unwrap();
+    let foreign = other.prepare(&t, &builder(rank)).unwrap();
+    let fs = Arc::new(FactorSet::random(&t.dims, rank, 10));
+    let wrong_rank = Arc::new(FactorSet::random(&t.dims, rank / 2, 10));
+    let (want, _) = session.mttkrp(h, &fs, 0).unwrap();
+
+    let service = session.into_service().unwrap();
+    let good = service.submit_mttkrp(MttkrpRequest::new(h, 0, Arc::clone(&fs))).unwrap();
+    let bad_mode = service.submit_mttkrp(MttkrpRequest::new(h, 99, Arc::clone(&fs))).unwrap();
+    let bad_rank = service.submit_mttkrp(MttkrpRequest::new(h, 0, wrong_rank)).unwrap();
+    let bad_handle = service
+        .submit_mttkrp(MttkrpRequest::new(foreign, 0, Arc::clone(&fs)))
+        .unwrap();
+    let bad_cpd = service
+        .submit_decompose(DecomposeRequest::new(
+            h,
+            CpdConfig { rank: rank / 2, ..Default::default() },
+        ))
+        .unwrap();
+
+    assert!(matches!(bad_mode.wait(), Err(Error::ShapeMismatch(_))));
+    assert!(matches!(bad_rank.wait(), Err(Error::ShapeMismatch(_))));
+    assert!(matches!(bad_handle.wait(), Err(Error::UnknownHandle(_))));
+    assert!(matches!(bad_cpd.wait(), Err(Error::InvalidConfig(_))));
+    let (out, _) = good.wait().unwrap();
+    assert_bitwise(&out, &want, "healthy neighbor of malformed requests");
+
+    let rep = service.shutdown();
+    assert_eq!(rep.counters.completed, 1);
+    assert_eq!(rep.counters.failed, 4);
+    assert_eq!(rep.counters.dispatcher_panics, 0);
+}

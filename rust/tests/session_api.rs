@@ -98,7 +98,7 @@ fn session_replay_matches_fresh_engines_bitwise() {
     let rank = 8;
     let tensors = three_tensors();
     let pool = Arc::new(SmPool::new(1));
-    let mut session = Session::on_pool(Arc::clone(&pool));
+    let mut session = Session::builder().pool(Arc::clone(&pool)).build().unwrap();
     let handles: Vec<_> = tensors
         .iter()
         .map(|t| session.prepare(t, &det_builder(rank)).unwrap())
@@ -179,7 +179,7 @@ fn session_replay_matches_fresh_engines_bitwise() {
 fn session_mixes_engine_and_baseline_tenants() {
     let rank = 8;
     let t = DatasetProfile::uber().scaled(0.001).generate(31);
-    let mut session = Session::new();
+    let mut session = Session::builder().build().unwrap();
     let ours = session.prepare(&t, &ExecutorBuilder::new().sm_count(6).rank(rank)).unwrap();
     let parti = session
         .prepare(
