@@ -12,6 +12,7 @@
 //! isolates the scheduling win — idle-SM backfill — from machine noise.
 //! See DESIGN.md §4 row B-T.
 
+use spmttkrp::bench_support::report::{BenchCase, BenchReport};
 use spmttkrp::bench_support::{
     batch_workload, bench_reps, bench_scale, print_table, time_sim_batch,
 };
@@ -25,11 +26,22 @@ fn main() {
     println!("batch throughput bench: rank {rank}, κ {kappa}, reps {reps}, scale {scale}");
     let mut rows = Vec::new();
     let mut wins = Vec::new();
+    let mut report = BenchReport::new("batch_throughput");
     for n_tenants in [1usize, 2, 4, 8] {
         let w = batch_workload(n_tenants, rank, kappa, scale);
         let reqs = w.all_mode_requests();
         let (packed, sequential) = time_sim_batch(reps, &w.session, &reqs);
         let win = sequential.median / packed.median.max(1e-9);
+        report.push(
+            BenchCase::from_summary(format!("tenants{n_tenants}/packed"), &packed)
+                .sim(packed.median)
+                .extra("requests", reqs.len() as f64)
+                .extra("win", win),
+        );
+        report.push(
+            BenchCase::from_summary(format!("tenants{n_tenants}/sequential"), &sequential)
+                .sim(sequential.median),
+        );
         if n_tenants > 1 {
             wins.push(win);
         }
@@ -51,4 +63,6 @@ fn main() {
          (longest-first cross-tenant backfill)",
         geomean(&wins)
     );
+    let path = report.write().expect("write BENCH_batch_throughput.json");
+    println!("bench json: {}", path.display());
 }

@@ -11,8 +11,11 @@
 //! reproduction target — see DESIGN.md §4 row F-3).
 
 use spmttkrp::baselines::MttkrpExecutor;
+use spmttkrp::bench_support::report::{BenchCase, BenchReport};
 use spmttkrp::bench_support::{all_executors, bench_reps, print_table, time_sim, Workload};
 use spmttkrp::util::{geomean, human_bytes};
+
+const EXEC_NAMES: [&str; 4] = ["ours", "blco", "mm-csf", "parti"];
 
 fn main() {
     let rank = 32;
@@ -25,17 +28,24 @@ fn main() {
     let mut rows = Vec::new();
     let mut speedups: Vec<Vec<f64>> = vec![Vec::new(); 3];
     let mut traffic_ratio = Vec::new();
+    let mut report = BenchReport::new("fig3_total_time");
     for w in &workloads {
         let execs = all_executors(&w.tensor, rank);
         let mut medians = Vec::new();
         let mut stddevs = Vec::new();
         let mut traffic = Vec::new();
-        for ex in &execs {
+        for (i, ex) in execs.iter().enumerate() {
             let s = time_sim(reps, ex.as_ref(), &w.factors);
+            let (_, rep) = ex.execute_all_modes(&w.factors).unwrap();
+            let t = rep.total_traffic();
+            report.push(
+                BenchCase::from_summary(format!("{}/{}", w.profile.name, EXEC_NAMES[i]), &s)
+                    .sim(s.median)
+                    .traffic(t),
+            );
             medians.push(s.median);
             stddevs.push(s.stddev);
-            let (_, rep) = ex.execute_all_modes(&w.factors).unwrap();
-            traffic.push(rep.total_traffic());
+            traffic.push(t);
         }
         for b in 0..3 {
             speedups[b].push(medians[b + 1] / medians[0]);
@@ -75,4 +85,6 @@ fn main() {
         "modeled traffic: ParTI moves {:.2}x the bytes we do (geomean)",
         geomean(&traffic_ratio)
     );
+    let path = report.write().expect("write BENCH_fig3_total_time.json");
+    println!("bench json: {}", path.display());
 }

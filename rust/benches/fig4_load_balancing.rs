@@ -8,6 +8,7 @@
 use std::sync::Arc;
 
 use spmttkrp::baselines::MttkrpExecutor;
+use spmttkrp::bench_support::report::{BenchCase, BenchReport};
 use spmttkrp::bench_support::{
     bench_reps, paper_engine_on_pool, print_table, time_sim, Workload,
 };
@@ -27,20 +28,27 @@ fn main() {
     );
     let mut rows = Vec::new();
     let (mut sp1, mut sp2) = (Vec::new(), Vec::new());
+    let mut report = BenchReport::new("fig4_load_balancing");
     for w in &workloads {
         let mut medians = Vec::new();
         let mut atomics = Vec::new();
         let mut idle = Vec::new();
-        for lb in [
-            LoadBalance::Adaptive,
-            LoadBalance::ForceScheme1,
-            LoadBalance::ForceScheme2,
+        for (lb, variant) in [
+            (LoadBalance::Adaptive, "adaptive"),
+            (LoadBalance::ForceScheme1, "s1-only"),
+            (LoadBalance::ForceScheme2, "s2-only"),
         ] {
             let engine = paper_engine_on_pool(&w.tensor, rank, lb, Arc::clone(&pool));
             let s = time_sim(reps, &engine, &w.factors);
             medians.push(s.median);
             let (_, rep) = engine.execute_all_modes(&w.factors).unwrap();
-            atomics.push(rep.total_traffic().global_atomics);
+            let t = rep.total_traffic();
+            report.push(
+                BenchCase::from_summary(format!("{}/{}", w.profile.name, variant), &s)
+                    .sim(s.median)
+                    .traffic(t),
+            );
+            atomics.push(t.global_atomics);
             idle.push(
                 engine
                     .format
@@ -80,4 +88,6 @@ fn main() {
         geomean(&sp1),
         geomean(&sp2)
     );
+    let path = report.write().expect("write BENCH_fig4_load_balancing.json");
+    println!("bench json: {}", path.display());
 }

@@ -16,6 +16,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use spmttkrp::api::{MttkrpRequest, Service, ServicePolicy};
+use spmttkrp::bench_support::report::{BenchCase, BenchReport};
 use spmttkrp::bench_support::{batch_workload, bench_scale, print_table};
 use spmttkrp::tensor::FactorSet;
 
@@ -116,4 +117,23 @@ fn main() {
         report.mean_batch_occupancy,
         c.rejected,
     );
+    let ns = |d: Duration| d.as_secs_f64() * 1e9;
+    let mut json = BenchReport::new("service_throughput");
+    json.push(
+        BenchCase::new(
+            "service",
+            ns(report.request_latency.p50),
+            ns(report.request_latency.p95),
+        )
+        .extra("p99_ns", ns(report.request_latency.p99))
+        .extra("max_ns", ns(report.request_latency.max))
+        .extra("queue_p50_ns", ns(report.queue_latency.p50))
+        .extra("occupancy", report.mean_batch_occupancy)
+        .extra("clients", clients as f64)
+        .extra("requests", c.submitted as f64)
+        .extra("dispatches", c.dispatches as f64)
+        .extra("rejects", c.rejected as f64),
+    );
+    let path = json.write().expect("write BENCH_service_throughput.json");
+    println!("bench json: {}", path.display());
 }

@@ -20,7 +20,7 @@ use std::sync::Arc;
 
 use super::MttkrpExecutor;
 use crate::api::Result;
-use crate::exec::{ModeAccumulator, ModePlan, SmPool, UpdatePolicy, WorkspaceArena};
+use crate::exec::{lanes, ModeAccumulator, ModePlan, SmPool, StagePool, UpdatePolicy, WorkspaceArena};
 use crate::format::blco::BlcoTensor;
 use crate::metrics::TrafficCounters;
 use crate::tensor::{FactorSet, SparseTensorCOO};
@@ -43,6 +43,8 @@ pub struct BlcoExecutor {
     /// `flat` (identical per mode — the single-copy property).
     plans: Vec<ModePlan>,
     arena: WorkspaceArena<MergeScratch>,
+    /// Recycled Global_Update stage buffers (every BLCO mode is Global).
+    stage_pool: Arc<StagePool>,
 }
 
 impl BlcoExecutor {
@@ -90,6 +92,7 @@ impl BlcoExecutor {
             pool,
             plans,
             arena,
+            stage_pool: Arc::new(StagePool::new()),
         }
     }
 
@@ -133,7 +136,7 @@ impl MttkrpExecutor for BlcoExecutor {
         out: &'o mut Vec<f32>,
     ) -> Result<ModeAccumulator<'o>> {
         super::validate_mode_request(self.name(), self.n_modes(), self.rank, factors, mode)?;
-        Ok(ModeAccumulator::new(out, &self.plans[mode]))
+        Ok(ModeAccumulator::pooled(out, &self.plans[mode], &self.stage_pool))
     }
 
     fn replay_partition(
@@ -160,17 +163,13 @@ impl MttkrpExecutor for BlcoExecutor {
                 for &w in &plan.input_modes {
                     let row = factors[w].row(self.blco.coord(b, e, w) as usize);
                     tr.factor_bytes_read += (rank * 4) as u64;
-                    for r in 0..rank {
-                        ws.contrib[r] *= row[r];
-                    }
+                    lanes::mul_assign(&mut ws.contrib, row);
                 }
                 // warp-level conflict merge: coalesce consecutive
                 // same-row updates
                 match run_idx {
                     Some(ri) if ri == idx => {
-                        for r in 0..rank {
-                            ws.run[r] += ws.contrib[r];
-                        }
+                        lanes::add_assign(&mut ws.run, &ws.contrib);
                     }
                     Some(ri) => {
                         sink.push(ri, &ws.run, tr);

@@ -22,7 +22,7 @@ use std::sync::Arc;
 
 use super::MttkrpExecutor;
 use crate::api::Result;
-use crate::exec::{ModeAccumulator, ModePlan, SmPool, UpdatePolicy, WorkspaceArena};
+use crate::exec::{lanes, ModeAccumulator, ModePlan, SmPool, UpdatePolicy, WorkspaceArena};
 use crate::format::csf::CsfTree;
 use crate::metrics::TrafficCounters;
 use crate::tensor::{FactorSet, SparseTensorCOO};
@@ -139,9 +139,7 @@ fn walk(
         // collapse there is exactly one value; sum anyway.
         let v: f32 = tree.vals[lo..hi].iter().sum();
         tr.tensor_bytes_read += ((hi - lo) * 4 + 4) as u64;
-        for r in 0..rank {
-            acc[r] += v * row[r];
-        }
+        lanes::add_scaled(acc, v, row);
         return;
     }
     let (child_lo, child_hi) = (lvl.ptr[node] as usize, lvl.ptr[node + 1] as usize);
@@ -156,9 +154,7 @@ fn walk(
     } else {
         let row = factors[tree.order[l]].row(lvl.idx[node] as usize);
         tr.factor_bytes_read += (rank * 4) as u64; // once per fiber
-        for r in 0..rank {
-            acc[r] += sub[r] * row[r];
-        }
+        lanes::add_mul(acc, &sub, row);
     }
     scratch[l] = sub;
 }

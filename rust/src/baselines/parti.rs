@@ -17,7 +17,7 @@ use std::sync::Arc;
 
 use super::MttkrpExecutor;
 use crate::api::Result;
-use crate::exec::{ModeAccumulator, ModePlan, SmPool, UpdatePolicy, WorkspaceArena};
+use crate::exec::{lanes, ModeAccumulator, ModePlan, SmPool, StagePool, UpdatePolicy, WorkspaceArena};
 use crate::format::hicoo::HicooTensor;
 use crate::metrics::TrafficCounters;
 use crate::tensor::{FactorSet, SparseTensorCOO};
@@ -33,6 +33,8 @@ pub struct PartiExecutor {
     plans: Vec<ModePlan>,
     /// Per-worker rank-vector contribution scratch.
     arena: WorkspaceArena<Vec<f32>>,
+    /// Recycled Global_Update stage buffers (every ParTI mode is Global).
+    stage_pool: Arc<StagePool>,
 }
 
 impl PartiExecutor {
@@ -74,6 +76,7 @@ impl PartiExecutor {
             pool,
             plans,
             arena,
+            stage_pool: Arc::new(StagePool::new()),
         }
     }
 
@@ -123,7 +126,7 @@ impl MttkrpExecutor for PartiExecutor {
         out: &'o mut Vec<f32>,
     ) -> Result<ModeAccumulator<'o>> {
         super::validate_mode_request(self.name(), self.n_modes(), self.rank, factors, mode)?;
-        Ok(ModeAccumulator::new(out, &self.plans[mode]))
+        Ok(ModeAccumulator::pooled(out, &self.plans[mode], &self.stage_pool))
     }
 
     fn replay_partition(
@@ -148,9 +151,7 @@ impl MttkrpExecutor for PartiExecutor {
                     contrib.fill(blk.vals[e]);
                     for &w in &plan.input_modes {
                         let row = factors[w].row(blk.coord(e, w) as usize);
-                        for r in 0..rank {
-                            contrib[r] *= row[r];
-                        }
+                        lanes::mul_assign(contrib, row);
                         tr.factor_bytes_read += (rank * 4) as u64;
                     }
                     let idx = blk.coord(e, mode) as usize;

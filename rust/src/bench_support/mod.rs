@@ -3,7 +3,11 @@
 //!
 //! (criterion is not in the vendored crate set; this provides the subset
 //! we need: warmup, repeated timed runs, summary stats, and aligned table
-//! output.)
+//! output.) [`report`] adds the machine-readable side: every bench also
+//! writes a `BENCH_<bench>.json` perf-trajectory file that CI uploads and
+//! diffs against the committed baseline.
+
+pub mod report;
 
 use std::sync::Arc;
 use std::time::Instant;

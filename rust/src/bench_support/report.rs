@@ -1,0 +1,295 @@
+//! Machine-readable bench reports: `BENCH_<bench>.json`.
+//!
+//! Every figure-reproduction bench (`rust/benches/`) builds a
+//! [`BenchReport`] next to its human-readable table and calls
+//! [`BenchReport::write`] at exit. CI uploads the files as artifacts and
+//! diffs them against the committed baseline (`rust/benches/baseline/`,
+//! `scripts/bench_diff.py`), so the perf trajectory of every PR is
+//! persisted and comparable — not just eyeballed from job logs.
+//!
+//! ## Schema (version 1)
+//!
+//! ```json
+//! {
+//!   "schema": 1,
+//!   "bench": "fig3_total_time",
+//!   "git_rev": "abc1234",
+//!   "scale": 0.02,
+//!   "reps": 2,
+//!   "cases": [
+//!     {
+//!       "case": "uber/ours",
+//!       "median_ns": 123456.0,
+//!       "p95_ns": 130000.0,
+//!       "sim_ns": 98000.0,              // optional: modeled κ-SM time
+//!       "traffic": { "tensor_bytes_read": 0, ... },  // optional
+//!       "extra": { "occupancy": 0.91 }  // optional free-form scalars
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! `median_ns`/`p95_ns` are wallclock nanoseconds from the harness
+//! [`Summary`](crate::util::stats::Summary) unless the bench's primary
+//! metric *is* the modeled time (then both views are present: wallclock
+//! in `median_ns`, modeled in `sim_ns`). Case names are
+//! `workload/variant` slugs, stable across runs so the diff script can
+//! match them. Output directory: `$SPMTTKRP_BENCH_JSON_DIR`, default the
+//! current working directory (the workspace root under `cargo bench`).
+
+use std::path::PathBuf;
+
+use crate::metrics::TrafficCounters;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Bump when a field is renamed/removed or its meaning changes. Adding
+/// optional fields is backward compatible and does NOT bump this.
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+const NS_PER_SEC: f64 = 1e9;
+
+/// One named measurement in a bench report.
+pub struct BenchCase {
+    pub case: String,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub sim_ns: Option<f64>,
+    pub traffic: Option<TrafficCounters>,
+    /// Free-form scalar metrics (occupancy, request counts, ...). A Vec,
+    /// not a map: insertion order is the author's presentation order.
+    pub extra: Vec<(String, f64)>,
+}
+
+impl BenchCase {
+    pub fn new(case: impl Into<String>, median_ns: f64, p95_ns: f64) -> BenchCase {
+        BenchCase {
+            case: case.into(),
+            median_ns,
+            p95_ns,
+            sim_ns: None,
+            traffic: None,
+            extra: Vec::new(),
+        }
+    }
+
+    /// From a harness [`Summary`] in **seconds** (the `time`/`time_sim`
+    /// return convention).
+    pub fn from_summary(case: impl Into<String>, s: &Summary) -> BenchCase {
+        BenchCase::new(case, s.median * NS_PER_SEC, s.p95 * NS_PER_SEC)
+    }
+
+    /// Attach the modeled κ-SM time (seconds, as summaries carry it).
+    pub fn sim(mut self, sim_secs: f64) -> BenchCase {
+        self.sim_ns = Some(sim_secs * NS_PER_SEC);
+        self
+    }
+
+    pub fn traffic(mut self, t: TrafficCounters) -> BenchCase {
+        self.traffic = Some(t);
+        self
+    }
+
+    pub fn extra(mut self, key: impl Into<String>, value: f64) -> BenchCase {
+        self.extra.push((key.into(), value));
+        self
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs: Vec<(String, Json)> = vec![
+            ("case".into(), Json::from(self.case.as_str())),
+            ("median_ns".into(), Json::Num(self.median_ns)),
+            ("p95_ns".into(), Json::Num(self.p95_ns)),
+        ];
+        if let Some(sim) = self.sim_ns {
+            pairs.push(("sim_ns".into(), Json::Num(sim)));
+        }
+        if let Some(t) = self.traffic {
+            pairs.push((
+                "traffic".into(),
+                Json::obj([
+                    ("tensor_bytes_read", Json::from(t.tensor_bytes_read)),
+                    ("factor_bytes_read", Json::from(t.factor_bytes_read)),
+                    ("output_bytes_written", Json::from(t.output_bytes_written)),
+                    ("intermediate_bytes", Json::from(t.intermediate_bytes)),
+                    ("global_atomics", Json::from(t.global_atomics)),
+                    ("local_updates", Json::from(t.local_updates)),
+                ]),
+            ));
+        }
+        if !self.extra.is_empty() {
+            pairs.push((
+                "extra".into(),
+                Json::obj(self.extra.iter().map(|(k, v)| (k.clone(), Json::Num(*v)))),
+            ));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// A full bench run: metadata + cases, written as `BENCH_<bench>.json`.
+pub struct BenchReport {
+    pub bench: String,
+    pub scale: f64,
+    pub reps: usize,
+    pub cases: Vec<BenchCase>,
+}
+
+impl BenchReport {
+    /// Metadata is captured from the same env knobs the benches read
+    /// ([`bench_scale`](super::bench_scale), [`bench_reps`](super::bench_reps)),
+    /// so the JSON records the configuration that actually ran.
+    pub fn new(bench: impl Into<String>) -> BenchReport {
+        BenchReport {
+            bench: bench.into(),
+            scale: super::bench_scale(),
+            reps: super::bench_reps(),
+            cases: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, case: BenchCase) {
+        self.cases.push(case);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("schema".to_string(), Json::from(BENCH_SCHEMA_VERSION)),
+            ("bench".to_string(), Json::from(self.bench.as_str())),
+            ("git_rev".to_string(), Json::from(git_rev())),
+            ("scale".to_string(), Json::Num(self.scale)),
+            ("reps".to_string(), Json::from(self.reps)),
+            (
+                "cases".to_string(),
+                Json::Arr(self.cases.iter().map(|c| c.to_json()).collect()),
+            ),
+        ])
+    }
+
+    /// Write `BENCH_<bench>.json` into `$SPMTTKRP_BENCH_JSON_DIR` (default
+    /// `.`), then parse the written text back as a self-check so a writer
+    /// regression fails the bench run, not the downstream diff. Returns
+    /// the path written.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var("SPMTTKRP_BENCH_JSON_DIR").unwrap_or_else(|_| ".".to_string());
+        let path = PathBuf::from(dir).join(format!("BENCH_{}.json", self.bench));
+        let json = self.to_json();
+        json.write_to(&path)?;
+        let text = std::fs::read_to_string(&path)?;
+        let back = Json::parse(&text).map_err(|e| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("self-check: written report does not parse: {e}"),
+            )
+        })?;
+        if back != json {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "self-check: written report parses to a different value",
+            ));
+        }
+        Ok(path)
+    }
+}
+
+/// Best-effort revision stamp: `$GITHUB_SHA` (CI) truncated short, else
+/// `git rev-parse --short HEAD`, else `"unknown"`. Never fails a bench.
+pub fn git_rev() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        let sha = sha.trim().to_string();
+        if !sha.is_empty() {
+            return sha.chars().take(10).collect();
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_report() -> BenchReport {
+        let mut r = BenchReport {
+            bench: "unit".to_string(),
+            scale: 0.02,
+            reps: 2,
+            cases: Vec::new(),
+        };
+        r.push(BenchCase::new("w/a", 1000.0, 1500.0));
+        r.push(
+            BenchCase::new("w/b", 2000.0, 2500.0)
+                .sim(3e-6)
+                .traffic(TrafficCounters {
+                    tensor_bytes_read: 10,
+                    factor_bytes_read: 20,
+                    output_bytes_written: 30,
+                    intermediate_bytes: 0,
+                    global_atomics: 4,
+                    local_updates: 5,
+                })
+                .extra("occupancy", 0.5),
+        );
+        r
+    }
+
+    #[test]
+    fn report_json_has_schema_and_cases() {
+        let j = sample_report().to_json();
+        assert_eq!(j.get("schema").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("unit"));
+        let cases = j.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 2);
+        assert_eq!(cases[0].get("case").unwrap().as_str(), Some("w/a"));
+        assert!(cases[0].get("sim_ns").is_none());
+        let c1 = &cases[1];
+        assert_eq!(c1.get("sim_ns").unwrap().as_f64(), Some(3000.0));
+        assert_eq!(
+            c1.get("traffic")
+                .unwrap()
+                .get("global_atomics")
+                .unwrap()
+                .as_usize(),
+            Some(4)
+        );
+        assert_eq!(
+            c1.get("extra").unwrap().get("occupancy").unwrap().as_f64(),
+            Some(0.5)
+        );
+    }
+
+    #[test]
+    fn write_emits_named_file_that_parses() {
+        let dir = std::env::temp_dir().join(format!("spmttkrp-bench-{}", std::process::id()));
+        // write() honors the env var; set it only for this test's scope.
+        // Tests in this binary run multi-threaded, so take a unique dir
+        // and restore nothing (other tests don't read this var).
+        std::env::set_var("SPMTTKRP_BENCH_JSON_DIR", &dir);
+        let path = sample_report().write().unwrap();
+        std::env::remove_var("SPMTTKRP_BENCH_JSON_DIR");
+        assert!(path.ends_with("BENCH_unit.json"));
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_usize(), Some(1));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn from_summary_converts_seconds_to_ns() {
+        let s = crate::util::stats::Summary::of(&[1e-3, 2e-3, 3e-3]);
+        let c = BenchCase::from_summary("x", &s);
+        assert!((c.median_ns - 2e6).abs() < 1.0);
+        assert!(c.p95_ns >= c.median_ns);
+    }
+
+    #[test]
+    fn git_rev_is_nonempty() {
+        assert!(!git_rev().is_empty());
+    }
+}

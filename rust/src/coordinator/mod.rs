@@ -42,7 +42,9 @@ use crate::api::error::ensure_or;
 use crate::api::Result;
 use crate::baselines::MttkrpExecutor;
 use crate::exec::memgr::{MemoryBudget, MemoryGovernor, SlotResidency};
-use crate::exec::{ModeAccumulator, ModePlan, RowSink, SmPool, WorkspaceArena};
+use crate::exec::{
+    lanes, ModeAccumulator, ModePlan, RowSink, SmPool, StagePool, WorkspaceArena,
+};
 use crate::format::mode_specific::{ModeLayout, ModeSpecificFormat};
 use crate::metrics::{ExecReport, ModeExecReport, TrafficCounters};
 use crate::partition::{LoadBalance, VertexAssign};
@@ -100,8 +102,11 @@ struct EngineWorkspace {
     vals: Vec<f32>,
     /// Block segment-start marks, `len == P`.
     seg: Vec<f32>,
-    /// Gathered input-mode factor rows, `N - 1` buffers of `(P, R)`.
-    rows: Vec<Vec<f32>>,
+    /// Gathered input-mode factor rows, `(N - 1, P, R)` flattened into one
+    /// contiguous buffer — the backend receives the whole gather as a
+    /// single slice, so no per-block `Vec<&[f32]>` of sub-buffer refs is
+    /// ever built on the replay path.
+    rows: Vec<f32>,
     /// Block output `(P, R)`; the fused path reuses its first `2R` slots
     /// as accumulator + contribution registers.
     lout: Vec<f32>,
@@ -112,9 +117,7 @@ impl EngineWorkspace {
         EngineWorkspace {
             vals: vec![0.0f32; p],
             seg: vec![0.0f32; p],
-            rows: (0..n_modes.saturating_sub(1))
-                .map(|_| vec![0.0f32; p * rank])
-                .collect(),
+            rows: vec![0.0f32; n_modes.saturating_sub(1) * p * rank],
             lout: vec![0.0f32; p * rank],
         }
     }
@@ -130,6 +133,10 @@ pub struct Engine {
     /// One precomputed plan per mode, reused across calls and iterations.
     plans: Vec<ModePlan>,
     arena: WorkspaceArena<EngineWorkspace>,
+    /// Checkout/return pool for `Global_Update` stage buffers — steady-state
+    /// Scheme-2 replays reuse grown stages instead of reallocating κ of
+    /// them per mode call.
+    stage_pool: Arc<StagePool>,
 }
 
 impl Engine {
@@ -214,6 +221,7 @@ impl Engine {
             pool,
             plans,
             arena,
+            stage_pool: Arc::new(StagePool::new()),
         })
     }
 
@@ -392,10 +400,12 @@ impl Engine {
             }
             ws.vals[take..].fill(0.0);
             ws.seg[take..].fill(0.0);
+            let n_in = plan.input_modes.len();
+            let pr = p * rank;
             for (slot, &w) in plan.input_modes.iter().enumerate() {
                 let fac = &factors[w];
                 let col = &tensor.inds[w];
-                let buf = &mut ws.rows[slot];
+                let buf = &mut ws.rows[slot * pr..(slot + 1) * pr];
                 for i in 0..take {
                     let r = fac.row(col[t + i] as usize);
                     buf[i * rank..(i + 1) * rank].copy_from_slice(r);
@@ -403,8 +413,7 @@ impl Engine {
                 // padding rows: stale finite values are harmless (vals = 0)
             }
             traffic.tensor_bytes_read += take as u64 * plan.elem_bytes;
-            traffic.factor_bytes_read +=
-                (take * plan.input_modes.len() * rank * 4) as u64;
+            traffic.factor_bytes_read += (take * n_in * rank * 4) as u64;
             // ---- compute (the R×P thread block)
             // The segmented reduction only applies under Local_Update:
             // Scheme 1 owns its output rows, so the block can fully reduce
@@ -412,16 +421,15 @@ impl Engine {
             // accumulation). Under Scheme 2 the paper's Alg. 2 (lines
             // 21-22) performs a Global_Update per nonzero — merging there
             // would under-model its atomic traffic.
-            let row_refs: Vec<&[f32]> =
-                ws.rows.iter().map(|r| r.as_slice()).collect();
             let use_seg = self.config.use_seg_kernel
                 && matches!(plan.policy, UpdatePolicy::Local);
             if use_seg {
                 self.backend.mttkrp_block_seg(
                     rank,
+                    n_in,
                     &ws.vals,
                     &ws.seg,
-                    &row_refs,
+                    &ws.rows,
                     &mut ws.lout,
                 )?;
                 // one update per block-local segment run
@@ -439,8 +447,9 @@ impl Engine {
             } else {
                 self.backend.mttkrp_block(
                     rank,
+                    n_in,
                     &ws.vals,
-                    &row_refs,
+                    &ws.rows,
                     &mut ws.lout,
                 )?;
                 // one update per nonzero. Under Local policy with the seg
@@ -492,9 +501,7 @@ impl Engine {
                 acc.fill(0.0);
                 for t in seg.start as usize..seg.end as usize {
                     contribution(tensor, &plan.input_modes, factors, t, contrib);
-                    for r in 0..rank {
-                        acc[r] += contrib[r];
-                    }
+                    lanes::add_assign(acc, contrib);
                 }
                 sink.push(seg.out_index as usize, acc, traffic);
             }
@@ -518,34 +525,71 @@ impl Engine {
     // ------------------------------------------------- dense ALS helpers
 
     /// Gram matrix `Y^T Y` (R×R, f32) streamed through the backend's
-    /// `gram_r{R}` block kernel.
+    /// `gram_r{R}` block kernel. Convenience wrapper over
+    /// [`Engine::gram_with`] that allocates its own scratch + output.
     pub fn gram(&self, factor: &Factor) -> Result<Vec<f32>> {
+        let mut ws = DenseScratch::new();
+        let mut out = Vec::new();
+        self.gram_with(factor, &mut ws, &mut out)?;
+        Ok(out)
+    }
+
+    /// As [`Engine::gram`], but every buffer (f64 accumulator, staging
+    /// block, per-block result, and the output itself) is caller-owned —
+    /// the ALS loop passes the same [`DenseScratch`] each iteration and
+    /// allocates nothing here in steady state.
+    pub fn gram_with(
+        &self,
+        factor: &Factor,
+        ws: &mut DenseScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         let rank = factor.rank;
         let p = self.backend.block_p();
-        let mut acc = vec![0.0f64; rank * rank];
-        let mut blk = vec![0.0f32; p * rank];
-        let mut g = vec![0.0f32; rank * rank];
+        ws.acc.clear();
+        ws.acc.resize(rank * rank, 0.0);
+        ws.blk_a.clear();
+        ws.blk_a.resize(p * rank, 0.0);
+        ws.g.clear();
+        ws.g.resize(rank * rank, 0.0);
         let mut row = 0;
         while row < factor.rows {
             let take = (factor.rows - row).min(p);
-            blk[..take * rank]
+            ws.blk_a[..take * rank]
                 .copy_from_slice(&factor.data[row * rank..(row + take) * rank]);
-            blk[take * rank..].fill(0.0); // zero rows contribute nothing
-            self.backend.gram_block(rank, &blk, &mut g)?;
-            for (a, &x) in acc.iter_mut().zip(&g) {
-                *a += x as f64;
-            }
+            ws.blk_a[take * rank..].fill(0.0); // zero rows contribute nothing
+            self.backend.gram_block(rank, &ws.blk_a, &mut ws.g)?;
+            lanes::add_scaled_f64(&mut ws.acc, 1.0, &ws.g);
             row += take;
         }
-        Ok(acc.into_iter().map(|x| x as f32).collect())
+        out.clear();
+        out.extend(ws.acc.iter().map(|&x| x as f32));
+        Ok(())
     }
 
     /// `V = hadamard(grams) + damp I` via the backend. `grams` borrows the
     /// caller's `(R, R)` matrices — no clones on the ALS hot path.
+    /// Convenience wrapper over [`Engine::hadamard_with`].
     pub fn hadamard(&self, grams: &[&[f32]], damp: f32) -> Result<Vec<f32>> {
+        let mut ws = DenseScratch::new();
+        let mut out = Vec::new();
+        self.hadamard_with(grams, damp, &mut ws, &mut out)?;
+        Ok(out)
+    }
+
+    /// As [`Engine::hadamard`], with the `stacked` staging buffer and the
+    /// output caller-owned (no per-iteration allocation in ALS).
+    pub fn hadamard_with(
+        &self,
+        grams: &[&[f32]],
+        damp: f32,
+        ws: &mut DenseScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         let rank = self.config.rank;
         let n = grams.len();
-        let mut stacked = Vec::with_capacity(n * rank * rank);
+        ws.stacked.clear();
+        ws.stacked.reserve(n * rank * rank);
         for g in grams {
             ensure_or!(
                 g.len() == rank * rank,
@@ -554,16 +598,33 @@ impl Engine {
                 g.len(),
                 rank * rank
             );
-            stacked.extend_from_slice(g);
+            ws.stacked.extend_from_slice(g);
         }
-        let mut out = vec![0.0f32; rank * rank];
+        out.clear();
+        out.resize(rank * rank, 0.0);
         self.backend
-            .hadamard_grams(rank, n, &stacked, damp, &mut out)?;
-        Ok(out)
+            .hadamard_grams(rank, n, &ws.stacked, damp, out)
     }
 
     /// ALS update: `Y = M @ inv(V)` streamed block-wise; `m` is `(rows, R)`.
+    /// Convenience wrapper over [`Engine::solve_with`].
     pub fn solve(&self, v: &[f32], m: &[f32], rows: usize) -> Result<Vec<f32>> {
+        let mut ws = DenseScratch::new();
+        let mut out = Vec::new();
+        self.solve_with(v, m, rows, &mut ws, &mut out)?;
+        Ok(out)
+    }
+
+    /// As [`Engine::solve`], with block staging buffers and the output
+    /// caller-owned.
+    pub fn solve_with(
+        &self,
+        v: &[f32],
+        m: &[f32],
+        rows: usize,
+        ws: &mut DenseScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
         let rank = self.config.rank;
         ensure_or!(
             m.len() == rows * rank,
@@ -573,24 +634,34 @@ impl Engine {
             rows * rank
         );
         let p = self.backend.block_p();
-        let mut out = vec![0.0f32; rows * rank];
-        let mut blk_in = vec![0.0f32; p * rank];
-        let mut blk_out = vec![0.0f32; p * rank];
+        out.clear();
+        out.resize(rows * rank, 0.0);
+        ws.blk_a.clear();
+        ws.blk_a.resize(p * rank, 0.0);
+        ws.blk_b.clear();
+        ws.blk_b.resize(p * rank, 0.0);
         let mut row = 0;
         while row < rows {
             let take = (rows - row).min(p);
-            blk_in[..take * rank].copy_from_slice(&m[row * rank..(row + take) * rank]);
-            blk_in[take * rank..].fill(0.0);
-            self.backend.solve_block(rank, v, &blk_in, &mut blk_out)?;
+            ws.blk_a[..take * rank].copy_from_slice(&m[row * rank..(row + take) * rank]);
+            ws.blk_a[take * rank..].fill(0.0);
+            self.backend.solve_block(rank, v, &ws.blk_a, &mut ws.blk_b)?;
             out[row * rank..(row + take) * rank]
-                .copy_from_slice(&blk_out[..take * rank]);
+                .copy_from_slice(&ws.blk_b[..take * rank]);
             row += take;
         }
-        Ok(out)
+        Ok(())
     }
 
     /// `sum(a * b)` over equal-length `(rows, R)` buffers, streamed.
+    /// Convenience wrapper over [`Engine::inner_with`].
     pub fn inner(&self, a: &[f32], b: &[f32]) -> Result<f64> {
+        let mut ws = DenseScratch::new();
+        self.inner_with(a, b, &mut ws)
+    }
+
+    /// As [`Engine::inner`], with the two staging blocks caller-owned.
+    pub fn inner_with(&self, a: &[f32], b: &[f32], ws: &mut DenseScratch) -> Result<f64> {
         ensure_or!(
             a.len() == b.len(),
             ShapeMismatch,
@@ -602,31 +673,74 @@ impl Engine {
         let p = self.backend.block_p();
         let chunk = p * rank;
         let mut acc = 0.0f64;
-        let mut pa = vec![0.0f32; chunk];
-        let mut pb = vec![0.0f32; chunk];
+        ws.blk_a.clear();
+        ws.blk_a.resize(chunk, 0.0);
+        ws.blk_b.clear();
+        ws.blk_b.resize(chunk, 0.0);
         let mut off = 0;
         while off < a.len() {
             let take = (a.len() - off).min(chunk);
-            pa[..take].copy_from_slice(&a[off..off + take]);
-            pa[take..].fill(0.0);
-            pb[..take].copy_from_slice(&b[off..off + take]);
-            pb[take..].fill(0.0);
-            acc += self.backend.inner_block(rank, &pa, &pb)? as f64;
+            ws.blk_a[..take].copy_from_slice(&a[off..off + take]);
+            ws.blk_a[take..].fill(0.0);
+            ws.blk_b[..take].copy_from_slice(&b[off..off + take]);
+            ws.blk_b[take..].fill(0.0);
+            acc += self.backend.inner_block(rank, &ws.blk_a, &ws.blk_b)? as f64;
             off += take;
         }
         Ok(acc)
     }
 
     /// `sum(hadamard(grams) * w w^T)` via the backend; `grams` borrows the
-    /// caller's `(R, R)` matrices.
+    /// caller's `(R, R)` matrices. Convenience wrapper over
+    /// [`Engine::weighted_gram_with`].
     pub fn weighted_gram(&self, grams: &[&[f32]], weights: &[f32]) -> Result<f64> {
+        let mut ws = DenseScratch::new();
+        self.weighted_gram_with(grams, weights, &mut ws)
+    }
+
+    /// As [`Engine::weighted_gram`], with the `stacked` staging buffer
+    /// caller-owned.
+    pub fn weighted_gram_with(
+        &self,
+        grams: &[&[f32]],
+        weights: &[f32],
+        ws: &mut DenseScratch,
+    ) -> Result<f64> {
         let rank = self.config.rank;
         let n = grams.len();
-        let mut stacked = Vec::with_capacity(n * rank * rank);
+        ws.stacked.clear();
+        ws.stacked.reserve(n * rank * rank);
         for g in grams {
-            stacked.extend_from_slice(g);
+            ws.stacked.extend_from_slice(g);
         }
-        Ok(self.backend.weighted_gram(rank, n, &stacked, weights)? as f64)
+        Ok(self.backend.weighted_gram(rank, n, &ws.stacked, weights)? as f64)
+    }
+}
+
+/// Caller-owned scratch for the dense ALS helpers (`gram`, `hadamard`,
+/// `solve`, `inner`, `weighted_gram`): the f64 Gram accumulator, `(P, R)`
+/// staging blocks, per-block results, and the stacked-gram buffer. The ALS
+/// driver ([`crate::cpd::AlsState`]) owns one and threads it through every
+/// `_with` call, so a steady-state CPD iteration performs no dense-helper
+/// allocation; buffers are sized on first use and only regrow if shapes
+/// grow.
+#[derive(Default)]
+pub struct DenseScratch {
+    /// f64 Gram accumulator, `(R, R)`.
+    acc: Vec<f64>,
+    /// Primary `(P, R)` staging block (gram/solve input, inner lhs).
+    blk_a: Vec<f32>,
+    /// Secondary `(P, R)` block (solve output, inner rhs).
+    blk_b: Vec<f32>,
+    /// Per-block `(R, R)` Gram result.
+    g: Vec<f32>,
+    /// Stacked `(n, R, R)` gram input for hadamard/weighted_gram.
+    stacked: Vec<f32>,
+}
+
+impl DenseScratch {
+    pub fn new() -> DenseScratch {
+        DenseScratch::default()
     }
 }
 
@@ -678,7 +792,12 @@ impl MttkrpExecutor for Engine {
         // LRU touch per call; a concurrent eviction cannot make replays
         // rebuild partition by partition under the pool — B1/M1).
         let layout = self.layout(mode)?;
-        Ok(ModeAccumulator::with_pin(out, &self.plans[mode], layout))
+        Ok(ModeAccumulator::pooled_with_pin(
+            out,
+            &self.plans[mode],
+            &self.stage_pool,
+            layout,
+        ))
     }
 
     fn replay_partition(
@@ -711,7 +830,9 @@ impl MttkrpExecutor for Engine {
 
 /// One nonzero's rank-vector contribution: `contrib = val * ⊙ input rows`
 /// (the paper's elementwise computation, specialised for the common 3-/4-
-/// mode cases).
+/// mode cases). Routed through the [`lanes`] kernels: each product is
+/// lane-independent, so the chunked versions are bitwise-identical to the
+/// scalar loops they replaced.
 #[inline]
 fn contribution(
     tensor: &SparseTensorCOO,
@@ -725,25 +846,19 @@ fn contribution(
         [a, b] => {
             let ra = factors[a].row(tensor.inds[a][t] as usize);
             let rb = factors[b].row(tensor.inds[b][t] as usize);
-            for (r, c) in contrib.iter_mut().enumerate() {
-                *c = v * ra[r] * rb[r];
-            }
+            lanes::scaled_prod2(contrib, v, ra, rb);
         }
         [a, b, c] => {
             let ra = factors[a].row(tensor.inds[a][t] as usize);
             let rb = factors[b].row(tensor.inds[b][t] as usize);
             let rc = factors[c].row(tensor.inds[c][t] as usize);
-            for (r, x) in contrib.iter_mut().enumerate() {
-                *x = v * ra[r] * rb[r] * rc[r];
-            }
+            lanes::scaled_prod3(contrib, v, ra, rb, rc);
         }
         _ => {
             contrib.fill(v);
             for &w in input_modes {
                 let row = factors[w].row(tensor.inds[w][t] as usize);
-                for (r, x) in contrib.iter_mut().enumerate() {
-                    *x *= row[r];
-                }
+                lanes::mul_assign(contrib, row);
             }
         }
     }

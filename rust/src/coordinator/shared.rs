@@ -53,10 +53,10 @@ impl<'a> SharedRows<'a> {
     pub unsafe fn add_row_exclusive(&self, idx: usize, row: &[f32]) {
         debug_assert!(idx < self.n_rows());
         debug_assert_eq!(row.len(), self.rank);
-        let dst = self.ptr.add(idx * self.rank);
-        for (k, &v) in row.iter().enumerate() {
-            *dst.add(k) += v;
-        }
+        // SAFETY: exclusivity is the caller's documented obligation, so
+        // materializing the row as a slice aliases nothing live.
+        let dst = std::slice::from_raw_parts_mut(self.ptr.add(idx * self.rank), self.rank);
+        crate::exec::lanes::add_assign(dst, row);
     }
 }
 

@@ -12,7 +12,7 @@
 
 use crate::api::error::ensure_or;
 use crate::api::Result;
-use crate::coordinator::Engine;
+use crate::coordinator::{DenseScratch, Engine};
 use crate::metrics::{ExecReport, ModeExecReport};
 use crate::tensor::{FactorSet, SparseTensorCOO};
 
@@ -85,6 +85,16 @@ pub(crate) struct AlsState<'a> {
     /// every iteration (the engine's pool + plans are likewise persistent
     /// — the whole ALS run executes on one set of workers).
     mttkrp_out: Vec<Vec<f32>>,
+    /// Dense-helper scratch (stacked grams, staging blocks, f64 Gram
+    /// accumulator) threaded through every `_with` engine call — a
+    /// steady-state sweep performs no dense-side allocation.
+    scratch: DenseScratch,
+    /// `V` from `hadamard_with`, reused across mode steps.
+    v_buf: Vec<f32>,
+    /// Solve output; swapped with the factor's data each update.
+    y_buf: Vec<f32>,
+    /// `Y_last * lambda` staging for the fit inner product.
+    y_weighted: Vec<f32>,
     norm_x_sq: f64,
     iters_run: usize,
     done: bool,
@@ -108,11 +118,13 @@ impl<'a> AlsState<'a> {
         let factors = FactorSet::random(&tensor.dims, rank, cfg.seed);
         let norm_x_sq = tensor.norm_sq();
         ensure_or!(norm_x_sq > 0.0, InvalidData, "zero tensor");
-        let grams: Vec<Vec<f32>> = factors
-            .factors
-            .iter()
-            .map(|f| engine.gram(f))
-            .collect::<Result<_>>()?;
+        let mut scratch = DenseScratch::new();
+        let mut grams: Vec<Vec<f32>> = Vec::with_capacity(n);
+        for f in &factors.factors {
+            let mut g = Vec::new();
+            engine.gram_with(f, &mut scratch, &mut g)?;
+            grams.push(g);
+        }
         Ok(AlsState {
             engine,
             tensor,
@@ -124,6 +136,10 @@ impl<'a> AlsState<'a> {
             reports: Vec::new(),
             sweep: Vec::with_capacity(n),
             mttkrp_out: vec![Vec::new(); n],
+            scratch,
+            v_buf: Vec::new(),
+            y_buf: Vec::new(),
+            y_weighted: Vec::new(),
             norm_x_sq,
             iters_run: 0,
             done: cfg.max_iters == 0,
@@ -166,15 +182,26 @@ impl<'a> AlsState<'a> {
             .filter(|&w| w != d)
             .map(|w| self.grams[w].as_slice())
             .collect();
-        let v = self.engine.hadamard(&others, self.cfg.damp)?;
+        self.engine
+            .hadamard_with(&others, self.cfg.damp, &mut self.scratch, &mut self.v_buf)?;
+        drop(others);
         let rows = self.tensor.dims[d] as usize;
-        let y = self.engine.solve(&v, &self.mttkrp_out[d], rows)?;
-        self.factors[d].data = y;
+        self.engine.solve_with(
+            &self.v_buf,
+            &self.mttkrp_out[d],
+            rows,
+            &mut self.scratch,
+            &mut self.y_buf,
+        )?;
+        // swap, don't copy: y_buf inherits the old factor storage and is
+        // resized by the next solve_with
+        std::mem::swap(&mut self.factors[d].data, &mut self.y_buf);
         let lam = self.factors[d].normalize_columns();
         if d == n - 1 {
             self.weights = lam;
         }
-        self.grams[d] = self.engine.gram(&self.factors[d])?;
+        let (factor, gram) = (&self.factors[d], &mut self.grams[d]);
+        self.engine.gram_with(factor, &mut self.scratch, gram)?;
         Ok(())
     }
 
@@ -190,17 +217,23 @@ impl<'a> AlsState<'a> {
         // Matrix-free fit from the mode-(n-1) MTTKRP result.
         let w32: Vec<f32> = self.weights.iter().map(|&w| w as f32).collect();
         let gram_refs: Vec<&[f32]> = self.grams.iter().map(|g| g.as_slice()).collect();
-        let norm_model_sq = self.engine.weighted_gram(&gram_refs, &w32)?;
+        let norm_model_sq =
+            self.engine
+                .weighted_gram_with(&gram_refs, &w32, &mut self.scratch)?;
+        drop(gram_refs);
         // <X, Xhat> = sum(M_last ⊙ (Y_last * lambda))
         let y_last = &self.factors[n - 1];
-        let mut y_weighted = vec![0.0f32; y_last.data.len()];
+        self.y_weighted.clear();
+        self.y_weighted.resize(y_last.data.len(), 0.0);
         for i in 0..y_last.rows {
             for r in 0..rank {
-                y_weighted[i * rank + r] =
+                self.y_weighted[i * rank + r] =
                     (y_last.data[i * rank + r] as f64 * self.weights[r]) as f32;
             }
         }
-        let inner = self.engine.inner(&self.mttkrp_out[n - 1], &y_weighted)?;
+        let inner =
+            self.engine
+                .inner_with(&self.mttkrp_out[n - 1], &self.y_weighted, &mut self.scratch)?;
         let resid_sq = (self.norm_x_sq + norm_model_sq - 2.0 * inner).max(0.0);
         let fit = 1.0 - resid_sq.sqrt() / self.norm_x_sq.sqrt();
         let prev = self.fits.last().copied();

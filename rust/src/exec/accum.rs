@@ -28,7 +28,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::coordinator::shared::SharedRows;
-use crate::exec::{ModePlan, UpdatePolicy};
+use crate::exec::{lanes, lock_unpoisoned, ModePlan, UpdatePolicy};
 use crate::metrics::TrafficCounters;
 
 /// One partition's staged `Global_Update` rows: one entry per **distinct**
@@ -65,12 +65,19 @@ impl GlobalStage {
         self.idxs.len()
     }
 
+    /// Reset for reuse at a (possibly different) rank, keeping the grown
+    /// `idxs`/`rows`/`lookup` capacity — the whole point of [`StagePool`].
+    fn clear_for(&mut self, rank: usize) {
+        self.rank = rank;
+        self.idxs.clear();
+        self.rows.clear();
+        self.lookup.clear();
+    }
+
     #[inline]
     fn accumulate(&mut self, entry: usize, row: &[f32]) {
         let off = entry * self.rank;
-        for (a, &v) in self.rows[off..off + self.rank].iter_mut().zip(row) {
-            *a += v;
-        }
+        lanes::add_assign(&mut self.rows[off..off + self.rank], row);
     }
 
     #[inline]
@@ -86,6 +93,75 @@ impl GlobalStage {
             self.idxs.push(idx);
             self.rows.extend_from_slice(row);
         }
+    }
+}
+
+/// Checkout/return pool of [`GlobalStage`] buffers — the amortisation the
+/// per-call staging scheme was designed to admit.
+///
+/// Mode calls take `&self` and may run concurrently from several session
+/// threads, so stages cannot live in the executor directly. Instead each
+/// executor owns an `Arc<StagePool>`: `begin_mode` *checks out* κ stages
+/// (reusing grown `idxs`/`rows`/`lookup` capacity from earlier calls,
+/// allocating fresh ones only when the free list runs dry), and
+/// [`ModeAccumulator::merge`] *returns* them cleared. Concurrent calls
+/// simply check out disjoint stage sets, so `&self` concurrency and the
+/// partition-ordered merge determinism (B1) are untouched — only the
+/// steady-state allocation disappears. This matters most for ParTI/BLCO,
+/// which mark every mode Global and previously re-grew κ stages per
+/// replay call.
+pub struct StagePool {
+    free: Mutex<Vec<GlobalStage>>,
+}
+
+/// Retention cap: `put_back` drops stages beyond this count instead of
+/// hoarding them, bounding the pool at (max concurrent mode calls) × κ
+/// buffers even under pathological burst concurrency.
+const MAX_POOLED_STAGES: usize = 4096;
+
+impl StagePool {
+    pub fn new() -> StagePool {
+        StagePool {
+            free: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Stages currently parked on the free list (diagnostics/tests).
+    pub fn pooled(&self) -> usize {
+        lock_unpoisoned(&self.free).len()
+    }
+
+    /// Check out `kappa` cleared stages for a mode call at `rank`.
+    fn checkout(&self, kappa: usize, rank: usize) -> Vec<Mutex<GlobalStage>> {
+        let mut free = lock_unpoisoned(&self.free);
+        (0..kappa)
+            .map(|_| {
+                let mut st = free.pop().unwrap_or_else(|| GlobalStage::new(rank));
+                st.clear_for(rank);
+                Mutex::new(st)
+            })
+            .collect()
+    }
+
+    /// Return a call's stages, cleared, for the next checkout.
+    fn put_back(&self, stages: Vec<Mutex<GlobalStage>>) {
+        let mut free = lock_unpoisoned(&self.free);
+        for stage in stages {
+            if free.len() >= MAX_POOLED_STAGES {
+                break;
+            }
+            let mut st = stage
+                .into_inner()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            st.clear_for(st.rank);
+            free.push(st);
+        }
+    }
+}
+
+impl Default for StagePool {
+    fn default() -> StagePool {
+        StagePool::new()
     }
 }
 
@@ -135,6 +211,8 @@ pub struct ModeAccumulator<'a> {
     rank: usize,
     /// One stage per partition under Global policy; empty under Local.
     stages: Vec<Mutex<GlobalStage>>,
+    /// Pool the stages were checked out of, if any — `merge` returns them.
+    stage_pool: Option<Arc<StagePool>>,
     /// Opaque call-lifetime pin for phase-2 resources that must survive
     /// concurrent eviction: the engine pins the `ModeLayout` its
     /// `begin_mode` faulted in, so every `replay_partition` of the call
@@ -145,39 +223,53 @@ pub struct ModeAccumulator<'a> {
 }
 
 impl<'a> ModeAccumulator<'a> {
-    /// Size + zero `out` for `plan` and wrap it. Under Global policy one
-    /// empty stage per partition is allocated here.
-    ///
-    /// Stages are deliberately per-*call*, not cached in the executor like
-    /// [`super::WorkspaceArena`] scratch: mode calls take `&self` and a
-    /// session may serve the same prepared mode from several threads at
-    /// once, so call-owned staging is what keeps concurrent replays
-    /// independent. The cost is bounded — a stage holds one entry per
-    /// *distinct* output row its partition touches (≤ `I_d`). For the
-    /// engine that is tiny (Global only arises under Scheme 2, `I_d < κ`);
-    /// ParTI/BLCO mark every mode Global, so their replays do pay per-call
-    /// stage growth plus a hash lookup per non-consecutive push — the
-    /// deterministic-replay price those baselines' nondeterministic
-    /// `atomicAdd` originals never paid. (A checkout/return pool of stage
-    /// buffers could amortise the allocation without giving up `&self`
-    /// concurrency, if baseline replay throughput ever matters.)
-    pub fn new(out: &'a mut Vec<f32>, plan: &ModePlan) -> ModeAccumulator<'a> {
+    fn build(
+        out: &'a mut Vec<f32>,
+        plan: &ModePlan,
+        pool: Option<Arc<StagePool>>,
+        pin: Option<Arc<dyn Any + Send + Sync>>,
+    ) -> ModeAccumulator<'a> {
         out.clear();
         out.resize(plan.out_len(), 0.0);
         let shared = SharedRows::new(out.as_mut_slice(), plan.rank);
         let stages = match plan.policy {
             UpdatePolicy::Local => Vec::new(),
-            UpdatePolicy::Global => (0..plan.kappa)
-                .map(|_| Mutex::new(GlobalStage::new(plan.rank)))
-                .collect(),
+            UpdatePolicy::Global => match &pool {
+                Some(p) => p.checkout(plan.kappa, plan.rank),
+                None => (0..plan.kappa)
+                    .map(|_| Mutex::new(GlobalStage::new(plan.rank)))
+                    .collect(),
+            },
         };
         ModeAccumulator {
             shared,
             policy: plan.policy,
             rank: plan.rank,
             stages,
-            pin: None,
+            // Local-policy calls never checked anything out, so drop the
+            // pool handle rather than have `merge` return zero stages.
+            stage_pool: match plan.policy {
+                UpdatePolicy::Global => pool,
+                UpdatePolicy::Local => None,
+            },
+            pin,
         }
+    }
+
+    /// Size + zero `out` for `plan` and wrap it. Under Global policy one
+    /// empty stage per partition is allocated here.
+    ///
+    /// Stages are per-*call*, never cached in the executor like
+    /// [`super::WorkspaceArena`] scratch: mode calls take `&self` and a
+    /// session may serve the same prepared mode from several threads at
+    /// once, so call-owned staging is what keeps concurrent replays
+    /// independent. The cost is bounded — a stage holds one entry per
+    /// *distinct* output row its partition touches (≤ `I_d`). Steady-state
+    /// executors avoid even that allocation by checking stages out of a
+    /// [`StagePool`] via [`ModeAccumulator::pooled`]; this constructor
+    /// allocates fresh stages and is the fallback for one-shot callers.
+    pub fn new(out: &'a mut Vec<f32>, plan: &ModePlan) -> ModeAccumulator<'a> {
+        ModeAccumulator::build(out, plan, None, None)
     }
 
     /// As [`ModeAccumulator::new`], pinning a call-lifetime resource
@@ -188,9 +280,28 @@ impl<'a> ModeAccumulator<'a> {
         plan: &ModePlan,
         pin: Arc<dyn Any + Send + Sync>,
     ) -> ModeAccumulator<'a> {
-        let mut acc = ModeAccumulator::new(out, plan);
-        acc.pin = Some(pin);
-        acc
+        ModeAccumulator::build(out, plan, None, Some(pin))
+    }
+
+    /// As [`ModeAccumulator::new`], but under Global policy the κ stages
+    /// are checked out of `pool` (retaining grown capacity from earlier
+    /// calls) and returned, cleared, by [`ModeAccumulator::merge`].
+    pub fn pooled(
+        out: &'a mut Vec<f32>,
+        plan: &ModePlan,
+        pool: &Arc<StagePool>,
+    ) -> ModeAccumulator<'a> {
+        ModeAccumulator::build(out, plan, Some(Arc::clone(pool)), None)
+    }
+
+    /// [`ModeAccumulator::pooled`] + [`ModeAccumulator::with_pin`].
+    pub fn pooled_with_pin(
+        out: &'a mut Vec<f32>,
+        plan: &ModePlan,
+        pool: &Arc<StagePool>,
+        pin: Arc<dyn Any + Send + Sync>,
+    ) -> ModeAccumulator<'a> {
+        ModeAccumulator::build(out, plan, Some(Arc::clone(pool)), Some(pin))
     }
 
     /// The pinned resource, downcast to its concrete type (`None` when
@@ -227,16 +338,20 @@ impl<'a> ModeAccumulator<'a> {
             shared,
             rank,
             stages,
+            stage_pool,
             ..
         } = self;
-        for stage in stages {
-            let st = stage.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
+        for stage in &stages {
+            let st = lock_unpoisoned(stage);
             for (i, &idx) in st.idxs.iter().enumerate() {
                 let row = &st.rows[i * rank..(i + 1) * rank];
                 // SAFETY: the parallel section is over; this is the only
                 // thread touching the buffer.
                 unsafe { shared.add_row_exclusive(idx as usize, row) };
             }
+        }
+        if let Some(pool) = stage_pool {
+            pool.put_back(stages);
         }
     }
 }
@@ -324,6 +439,38 @@ mod tests {
         let mut buf2 = Vec::new();
         let bare = ModeAccumulator::new(&mut buf2, &p);
         assert!(bare.pinned::<u64>().is_none(), "nothing pinned");
+    }
+
+    #[test]
+    fn stage_pool_checkout_return_round_trip() {
+        let pool = Arc::new(StagePool::new());
+        let p = plan(UpdatePolicy::Global);
+        let mut tr = TrafficCounters::default();
+        assert_eq!(pool.pooled(), 0);
+        let mut buf = Vec::new();
+        let acc = ModeAccumulator::pooled(&mut buf, &p, &pool);
+        acc.sink(0).push(1, &[1.0, 2.0], &mut tr);
+        acc.merge();
+        assert_eq!(&buf[2..4], &[1.0, 2.0]);
+        assert_eq!(pool.pooled(), 2, "merge returned both κ stages");
+
+        // The next call drains the free list and must not see stale rows.
+        let mut buf2 = Vec::new();
+        let acc = ModeAccumulator::pooled(&mut buf2, &p, &pool);
+        assert_eq!(pool.pooled(), 0, "checkout reused the returned stages");
+        acc.sink(1).push(0, &[7.0, 7.0], &mut tr);
+        acc.merge();
+        assert_eq!(&buf2[0..2], &[7.0, 7.0]);
+        assert_eq!(&buf2[2..4], &[0.0, 0.0], "recycled stage carried no state");
+        assert_eq!(pool.pooled(), 2);
+
+        // Local-policy calls check nothing out and return nothing.
+        let lp = plan(UpdatePolicy::Local);
+        let mut buf3 = Vec::new();
+        let acc = ModeAccumulator::pooled(&mut buf3, &lp, &pool);
+        acc.sink(0).push(0, &[1.0, 1.0], &mut tr);
+        acc.merge();
+        assert_eq!(pool.pooled(), 2, "Local policy leaves the pool untouched");
     }
 
     #[test]

@@ -1,0 +1,457 @@
+//! Fixed-width lane kernels for the f32 hot paths.
+//!
+//! Every inner loop on the replay path — `contribution()`, the fused
+//! segment reduce, `GlobalStage::{push, accumulate}`, the partition-ordered
+//! merge, the baselines' per-nonzero loops, and the dense ALS helpers —
+//! routes through this module instead of writing its own `for r in 0..rank`
+//! loop. The kernels process [`LANES`]-wide `chunks_exact` blocks with a
+//! scalar tail (and a manual 4×-unroll for the f64 accumulations where
+//! 8-wide f32 chunking doesn't apply), which the compiler can keep in
+//! registers / auto-vectorize without changing results.
+//!
+//! # Bitwise safety
+//!
+//! The repo's invariants (S1/S2, B1/B2, M1, V1, P5–P8) all pin *bitwise*
+//! f32 equality across replays, so vectorization must not re-associate
+//! floating-point math. Two cases:
+//!
+//! - **Elementwise kernels** (`add_assign`, `mul_assign`, `scaled_prod*`,
+//!   `add_scaled`, `add_mul`, `scale`): each output lane depends on exactly
+//!   one input lane per operand, so chunking/unrolling cannot change any
+//!   result bit — the per-element expression is identical to the scalar
+//!   loop's. These are trivially bitwise-safe.
+//! - **Reductions** (`weighted_dot_f64`): splitting a sum across lanes *does*
+//!   re-associate. We therefore fix the merge order permanently: four f64
+//!   partial accumulators `p[0..4]`, element `i` folded into `p[i % 4]`,
+//!   merged as `(p0 + p1) + (p2 + p3)`. The scalar reference implements the
+//!   *same* order, so scalar ≡ vectorized stays bitwise and the order is
+//!   part of the kernel contract (see DESIGN.md §2/§6).
+//!
+//! # Escape hatch
+//!
+//! `SPMTTKRP_SCALAR_KERNELS=1` forces every dispatcher here onto the scalar
+//! reference implementations in [`scalar`]. The equivalence property suite
+//! (`tests/vector_kernels.rs`) flips the switch in-process via
+//! [`set_scalar_kernels`] and asserts full-executor bitwise identity.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+/// f32 lane width: 8 lanes × 4 bytes = one 256-bit vector register.
+pub const LANES: usize = 8;
+
+/// f64 unroll width for mixed f32→f64 accumulation (4 × 8 bytes = 256 bit).
+pub const LANES_F64: usize = 4;
+
+fn scalar_flag() -> &'static AtomicBool {
+    static FLAG: OnceLock<AtomicBool> = OnceLock::new();
+    FLAG.get_or_init(|| {
+        let on = std::env::var("SPMTTKRP_SCALAR_KERNELS")
+            .map(|v| v == "1")
+            .unwrap_or(false);
+        AtomicBool::new(on)
+    })
+}
+
+/// True when the scalar reference kernels are forced (env or test override).
+#[inline]
+pub fn scalar_kernels() -> bool {
+    scalar_flag().load(Ordering::Relaxed)
+}
+
+/// Force (or release) the scalar reference kernels at runtime. Used by the
+/// vectorized-≡-scalar equivalence tests, which must flip modes within one
+/// process; `SPMTTKRP_SCALAR_KERNELS=1` seeds the initial value.
+pub fn set_scalar_kernels(on: bool) {
+    scalar_flag().store(on, Ordering::Relaxed);
+}
+
+/// `acc[i] += x[i]` — fused reduce, `GlobalStage::accumulate`, merge adds.
+#[inline]
+pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    if scalar_kernels() {
+        return scalar::add_assign(acc, x);
+    }
+    let mut ca = acc.chunks_exact_mut(LANES);
+    let mut cx = x.chunks_exact(LANES);
+    for (a, b) in (&mut ca).zip(&mut cx) {
+        for k in 0..LANES {
+            a[k] += b[k];
+        }
+    }
+    for (a, b) in ca.into_remainder().iter_mut().zip(cx.remainder()) {
+        *a += *b;
+    }
+}
+
+/// `acc[i] *= x[i]` — Khatri-Rao Hadamard products (contribution fallback,
+/// ParTI replay, `hadamard_grams`).
+#[inline]
+pub fn mul_assign(acc: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    if scalar_kernels() {
+        return scalar::mul_assign(acc, x);
+    }
+    let mut ca = acc.chunks_exact_mut(LANES);
+    let mut cx = x.chunks_exact(LANES);
+    for (a, b) in (&mut ca).zip(&mut cx) {
+        for k in 0..LANES {
+            a[k] *= b[k];
+        }
+    }
+    for (a, b) in ca.into_remainder().iter_mut().zip(cx.remainder()) {
+        *a *= *b;
+    }
+}
+
+/// `out[i] = v * a[i]` — 1-input-mode (matrix) MTTKRP contribution.
+#[inline]
+pub fn scale(out: &mut [f32], v: f32, a: &[f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    if scalar_kernels() {
+        return scalar::scale(out, v, a);
+    }
+    let mut co = out.chunks_exact_mut(LANES);
+    let mut ca = a.chunks_exact(LANES);
+    for (o, x) in (&mut co).zip(&mut ca) {
+        for k in 0..LANES {
+            o[k] = v * x[k];
+        }
+    }
+    for (o, x) in co.into_remainder().iter_mut().zip(ca.remainder()) {
+        *o = v * *x;
+    }
+}
+
+/// `out[i] = v * a[i] * b[i]` — 3-mode tensor contribution (the paper's
+/// main case), left-associated exactly like the scalar loop.
+#[inline]
+pub fn scaled_prod2(out: &mut [f32], v: f32, a: &[f32], b: &[f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    if scalar_kernels() {
+        return scalar::scaled_prod2(out, v, a, b);
+    }
+    let mut co = out.chunks_exact_mut(LANES);
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for ((o, x), y) in (&mut co).zip(&mut ca).zip(&mut cb) {
+        for k in 0..LANES {
+            o[k] = v * x[k] * y[k];
+        }
+    }
+    for ((o, x), y) in co
+        .into_remainder()
+        .iter_mut()
+        .zip(ca.remainder())
+        .zip(cb.remainder())
+    {
+        *o = v * *x * *y;
+    }
+}
+
+/// `out[i] = v * a[i] * b[i] * c[i]` — 4-mode tensor contribution.
+#[inline]
+pub fn scaled_prod3(out: &mut [f32], v: f32, a: &[f32], b: &[f32], c: &[f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    debug_assert_eq!(out.len(), c.len());
+    if scalar_kernels() {
+        return scalar::scaled_prod3(out, v, a, b, c);
+    }
+    let mut co = out.chunks_exact_mut(LANES);
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    let mut cc = c.chunks_exact(LANES);
+    for (((o, x), y), z) in (&mut co).zip(&mut ca).zip(&mut cb).zip(&mut cc) {
+        for k in 0..LANES {
+            o[k] = v * x[k] * y[k] * z[k];
+        }
+    }
+    for (((o, x), y), z) in co
+        .into_remainder()
+        .iter_mut()
+        .zip(ca.remainder())
+        .zip(cb.remainder())
+        .zip(cc.remainder())
+    {
+        *o = v * *x * *y * *z;
+    }
+}
+
+/// `acc[i] += s * x[i]` — MM-CSF leaf accumulation.
+#[inline]
+pub fn add_scaled(acc: &mut [f32], s: f32, x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    if scalar_kernels() {
+        return scalar::add_scaled(acc, s, x);
+    }
+    let mut ca = acc.chunks_exact_mut(LANES);
+    let mut cx = x.chunks_exact(LANES);
+    for (a, b) in (&mut ca).zip(&mut cx) {
+        for k in 0..LANES {
+            a[k] += s * b[k];
+        }
+    }
+    for (a, b) in ca.into_remainder().iter_mut().zip(cx.remainder()) {
+        *a += s * *b;
+    }
+}
+
+/// `acc[i] += x[i] * y[i]` — MM-CSF fiber-level propagation.
+#[inline]
+pub fn add_mul(acc: &mut [f32], x: &[f32], y: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    debug_assert_eq!(acc.len(), y.len());
+    if scalar_kernels() {
+        return scalar::add_mul(acc, x, y);
+    }
+    let mut ca = acc.chunks_exact_mut(LANES);
+    let mut cx = x.chunks_exact(LANES);
+    let mut cy = y.chunks_exact(LANES);
+    for ((a, b), c) in (&mut ca).zip(&mut cx).zip(&mut cy) {
+        for k in 0..LANES {
+            a[k] += b[k] * c[k];
+        }
+    }
+    for ((a, b), c) in ca
+        .into_remainder()
+        .iter_mut()
+        .zip(cx.remainder())
+        .zip(cy.remainder())
+    {
+        *a += *b * *c;
+    }
+}
+
+/// `acc[i] += s * x[i] as f64` — Gram upper-triangle accumulation, 4×
+/// unrolled (the f64 accumulator halves the useful lane count).
+/// Elementwise, so bitwise-equal to the scalar loop by construction.
+#[inline]
+pub fn add_scaled_f64(acc: &mut [f64], s: f64, x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    if scalar_kernels() {
+        return scalar::add_scaled_f64(acc, s, x);
+    }
+    let mut ca = acc.chunks_exact_mut(LANES_F64);
+    let mut cx = x.chunks_exact(LANES_F64);
+    for (a, b) in (&mut ca).zip(&mut cx) {
+        for k in 0..LANES_F64 {
+            a[k] += s * b[k] as f64;
+        }
+    }
+    for (a, b) in ca.into_remainder().iter_mut().zip(cx.remainder()) {
+        *a += s * *b as f64;
+    }
+}
+
+/// `Σ_i h[i] as f64 * w[i] as f64` with the **fixed lane-merge order**:
+/// element `i` folds into partial `p[i % 4]`, merged `(p0 + p1) + (p2 + p3)`.
+/// The scalar reference replicates this order exactly, so flipping
+/// `SPMTTKRP_SCALAR_KERNELS` cannot change a single bit of the result.
+/// Used by `weighted_gram` (CPD norm term).
+#[inline]
+pub fn weighted_dot_f64(h: &[f32], w: &[f32]) -> f64 {
+    debug_assert_eq!(h.len(), w.len());
+    if scalar_kernels() {
+        return scalar::weighted_dot_f64(h, w);
+    }
+    let mut p = [0.0f64; LANES_F64];
+    let mut ch = h.chunks_exact(LANES_F64);
+    let mut cw = w.chunks_exact(LANES_F64);
+    for (a, b) in (&mut ch).zip(&mut cw) {
+        for k in 0..LANES_F64 {
+            p[k] += a[k] as f64 * b[k] as f64;
+        }
+    }
+    let done = h.len() - ch.remainder().len();
+    for (j, (a, b)) in ch.remainder().iter().zip(cw.remainder()).enumerate() {
+        p[(done + j) % LANES_F64] += *a as f64 * *b as f64;
+    }
+    (p[0] + p[1]) + (p[2] + p[3])
+}
+
+/// Scalar reference implementations — one plain loop per kernel, with the
+/// *same* per-element expressions and (for reductions) the same merge
+/// order as the chunked versions. `tests/vector_kernels.rs` pins
+/// `lanes::op ≡ lanes::scalar::op` bitwise on non-lane-multiple lengths.
+pub mod scalar {
+    use super::LANES_F64;
+
+    #[inline]
+    pub fn add_assign(acc: &mut [f32], x: &[f32]) {
+        for (a, b) in acc.iter_mut().zip(x) {
+            *a += *b;
+        }
+    }
+
+    #[inline]
+    pub fn mul_assign(acc: &mut [f32], x: &[f32]) {
+        for (a, b) in acc.iter_mut().zip(x) {
+            *a *= *b;
+        }
+    }
+
+    #[inline]
+    pub fn scale(out: &mut [f32], v: f32, a: &[f32]) {
+        for (o, x) in out.iter_mut().zip(a) {
+            *o = v * *x;
+        }
+    }
+
+    #[inline]
+    pub fn scaled_prod2(out: &mut [f32], v: f32, a: &[f32], b: &[f32]) {
+        for ((o, x), y) in out.iter_mut().zip(a).zip(b) {
+            *o = v * *x * *y;
+        }
+    }
+
+    #[inline]
+    pub fn scaled_prod3(out: &mut [f32], v: f32, a: &[f32], b: &[f32], c: &[f32]) {
+        for (((o, x), y), z) in out.iter_mut().zip(a).zip(b).zip(c) {
+            *o = v * *x * *y * *z;
+        }
+    }
+
+    #[inline]
+    pub fn add_scaled(acc: &mut [f32], s: f32, x: &[f32]) {
+        for (a, b) in acc.iter_mut().zip(x) {
+            *a += s * *b;
+        }
+    }
+
+    #[inline]
+    pub fn add_mul(acc: &mut [f32], x: &[f32], y: &[f32]) {
+        for ((a, b), c) in acc.iter_mut().zip(x).zip(y) {
+            *a += *b * *c;
+        }
+    }
+
+    #[inline]
+    pub fn add_scaled_f64(acc: &mut [f64], s: f64, x: &[f32]) {
+        for (a, b) in acc.iter_mut().zip(x) {
+            *a += s * *b as f64;
+        }
+    }
+
+    /// Same fixed merge order as the chunked version — `p[i % 4]`,
+    /// `(p0 + p1) + (p2 + p3)` — NOT a plain serial sum.
+    #[inline]
+    pub fn weighted_dot_f64(h: &[f32], w: &[f32]) -> f64 {
+        let mut p = [0.0f64; LANES_F64];
+        for (i, (a, b)) in h.iter().zip(w).enumerate() {
+            p[i % LANES_F64] += *a as f64 * *b as f64;
+        }
+        (p[0] + p[1]) + (p[2] + p[3])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn vecs(rng: &mut Rng, n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut mk = |tag: u64| -> Vec<f32> {
+            let mut f = rng.fork(tag);
+            (0..n).map(|_| f.next_f32() * 2.0 - 1.0).collect()
+        };
+        (mk(1), mk(2), mk(3))
+    }
+
+    /// Every kernel, at lengths that exercise full chunks, tails, and the
+    /// empty slice, must match its scalar reference bitwise.
+    #[test]
+    fn chunked_matches_scalar_reference_bitwise() {
+        let mut rng = Rng::new(0x1a_e5);
+        for n in [0usize, 1, 2, 3, 4, 7, 8, 9, 15, 16, 17, 31, 64, 100] {
+            let (a, b, c) = vecs(&mut rng, n);
+            let v = 0.7f32;
+            let s = -1.3f32;
+
+            let mut got = a.clone();
+            let mut want = a.clone();
+            add_assign(&mut got, &b);
+            scalar::add_assign(&mut want, &b);
+            assert_eq!(got, want, "add_assign n={n}");
+
+            let mut got = a.clone();
+            let mut want = a.clone();
+            mul_assign(&mut got, &b);
+            scalar::mul_assign(&mut want, &b);
+            assert_eq!(got, want, "mul_assign n={n}");
+
+            let mut got = vec![0.0; n];
+            let mut want = vec![9.0; n];
+            scale(&mut got, v, &a);
+            scalar::scale(&mut want, v, &a);
+            assert_eq!(got, want, "scale n={n}");
+
+            let mut got = vec![0.0; n];
+            let mut want = vec![9.0; n];
+            scaled_prod2(&mut got, v, &a, &b);
+            scalar::scaled_prod2(&mut want, v, &a, &b);
+            assert_eq!(got, want, "scaled_prod2 n={n}");
+
+            let mut got = vec![0.0; n];
+            let mut want = vec![9.0; n];
+            scaled_prod3(&mut got, v, &a, &b, &c);
+            scalar::scaled_prod3(&mut want, v, &a, &b, &c);
+            assert_eq!(got, want, "scaled_prod3 n={n}");
+
+            let mut got = a.clone();
+            let mut want = a.clone();
+            add_scaled(&mut got, s, &b);
+            scalar::add_scaled(&mut want, s, &b);
+            assert_eq!(got, want, "add_scaled n={n}");
+
+            let mut got = a.clone();
+            let mut want = a.clone();
+            add_mul(&mut got, &b, &c);
+            scalar::add_mul(&mut want, &b, &c);
+            assert_eq!(got, want, "add_mul n={n}");
+
+            let mut got: Vec<f64> = a.iter().map(|&x| x as f64).collect();
+            let mut want = got.clone();
+            add_scaled_f64(&mut got, s as f64, &b);
+            scalar::add_scaled_f64(&mut want, s as f64, &b);
+            assert_eq!(got, want, "add_scaled_f64 n={n}");
+
+            let got = weighted_dot_f64(&a, &b);
+            let want = scalar::weighted_dot_f64(&a, &b);
+            assert_eq!(got.to_bits(), want.to_bits(), "weighted_dot_f64 n={n}");
+        }
+    }
+
+    /// The reduction's merge order is pinned: `(p0 + p1) + (p2 + p3)` over
+    /// `i % 4` partials. Verify against a hand-rolled computation on a
+    /// length that is not a multiple of 4 so the tail mapping is covered.
+    #[test]
+    fn weighted_dot_merge_order_is_pinned() {
+        let h: Vec<f32> = (0..11).map(|i| 1.0 + i as f32 * 1.0e-7).collect();
+        let w: Vec<f32> = (0..11).map(|i| 1.0 - i as f32 * 3.0e-7).collect();
+        let mut p = [0.0f64; 4];
+        for i in 0..11 {
+            p[i % 4] += h[i] as f64 * w[i] as f64;
+        }
+        let want = (p[0] + p[1]) + (p[2] + p[3]);
+        assert_eq!(weighted_dot_f64(&h, &w).to_bits(), want.to_bits());
+        assert_eq!(scalar::weighted_dot_f64(&h, &w).to_bits(), want.to_bits());
+    }
+
+    /// The runtime switch routes to the scalar reference (bitwise-identical
+    /// anyway, but the dispatch itself must work for the equivalence suite).
+    #[test]
+    fn scalar_switch_round_trips() {
+        let before = scalar_kernels();
+        set_scalar_kernels(true);
+        assert!(scalar_kernels());
+        let mut a = vec![1.0f32; 9];
+        add_assign(&mut a, &vec![2.0f32; 9]);
+        assert!(a.iter().all(|&x| x == 3.0));
+        set_scalar_kernels(false);
+        assert!(!scalar_kernels());
+        set_scalar_kernels(before);
+    }
+}

@@ -22,6 +22,11 @@
 //!   count. [`RowSink::push`] is the single update primitive.
 //! * [`WorkspaceArena`] — per-worker scratch slots allocated once per
 //!   executor, so gather/compute buffers are not re-allocated per call.
+//! * [`lanes`] — fixed-width f32 lane kernels (8-wide chunks, pinned
+//!   lane-merge order) that every executor's inner loops route through;
+//!   `SPMTTKRP_SCALAR_KERNELS=1` forces the bitwise-identical scalar
+//!   references. [`StagePool`] recycles `Global_Update` stage buffers
+//!   across mode calls without giving up `&self` concurrency.
 //! * [`BatchScheduler`] — cross-tenant dispatch: N executors' `(tenant,
 //!   partition)` items flattened into one longest-first queue and drained
 //!   by a single pool dispatch with per-tenant accumulators, so small
@@ -39,12 +44,13 @@
 
 pub mod accum;
 pub mod batch;
+pub mod lanes;
 pub mod memgr;
 pub mod plan;
 pub mod pool;
 pub mod workspace;
 
-pub use accum::{GlobalStage, ModeAccumulator, RowSink};
+pub use accum::{GlobalStage, ModeAccumulator, RowSink, StagePool};
 pub use batch::{
     cost_ordered_queue, lpt_makespan, plan_rounds, BatchItem, BatchRun, BatchScheduler, TenantRun,
 };

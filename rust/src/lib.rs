@@ -80,7 +80,7 @@ pub mod prelude {
         TensorHandle, Ticket,
     };
     pub use crate::baselines::MttkrpExecutor;
-    pub use crate::coordinator::{Engine, EngineConfig, UpdatePolicy};
+    pub use crate::coordinator::{DenseScratch, Engine, EngineConfig, UpdatePolicy};
     pub use crate::cpd::{als, CpdConfig, CpdResult};
     pub use crate::exec::{MemoryBudget, MemoryGovernor, ResidencyReport, SmPool};
     pub use crate::format::{memory::MemoryReport, ModeSpecificFormat};

@@ -36,25 +36,31 @@ pub trait Backend: Send + Sync {
     /// Block size `P` the backend was built for.
     fn block_p(&self) -> usize;
 
-    /// `out[t, r] = vals[t] * prod_w rows[w][t, r]` (paper Fig. 1 / Alg. 2
-    /// elementwise computation for a block of `P` nonzeros).
+    /// `out[t, r] = vals[t] * prod_w rows[w, t, r]` (paper Fig. 1 / Alg. 2
+    /// elementwise computation for a block of `P` nonzeros). `rows` is the
+    /// `n_in` gathered input-mode row blocks `(n_in, P, R)` flattened into
+    /// one contiguous slice — the coordinator's per-worker gather buffer is
+    /// passed straight through, with no per-block slice-ref `Vec`.
     fn mttkrp_block(
         &self,
         rank: usize,
+        n_in: usize,
         vals: &[f32],
-        rows: &[&[f32]],
+        rows: &[f32],
         out: &mut [f32],
     ) -> Result<()>;
 
     /// Elementwise block + in-kernel segmented inclusive scan along P
     /// (`seg_starts[t] == 1.0` marks a new output index). At each
-    /// segment's last position `out` holds the fully reduced row.
+    /// segment's last position `out` holds the fully reduced row. `rows`
+    /// is `(n_in, P, R)` flattened, as in [`Backend::mttkrp_block`].
     fn mttkrp_block_seg(
         &self,
         rank: usize,
+        n_in: usize,
         vals: &[f32],
         seg_starts: &[f32],
-        rows: &[&[f32]],
+        rows: &[f32],
         out: &mut [f32],
     ) -> Result<()>;
 

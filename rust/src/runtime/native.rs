@@ -6,6 +6,7 @@
 use super::Backend;
 use crate::api::error::ensure_or;
 use crate::api::Result;
+use crate::exec::lanes;
 
 #[derive(Debug)]
 pub struct NativeBackend {
@@ -97,51 +98,52 @@ impl Backend for NativeBackend {
     fn mttkrp_block(
         &self,
         rank: usize,
+        n_in: usize,
         vals: &[f32],
-        rows: &[&[f32]],
+        rows: &[f32],
         out: &mut [f32],
     ) -> Result<()> {
         let p = vals.len();
+        let pr = p * rank;
         ensure_or!(
-            out.len() == p * rank,
+            out.len() == pr,
             ShapeMismatch,
-            "mttkrp_block: out len {} != P*R = {}",
-            out.len(),
-            p * rank
+            "mttkrp_block: out len {} != P*R = {pr}",
+            out.len()
         );
-        for w in rows {
-            ensure_or!(
-                w.len() == p * rank,
-                ShapeMismatch,
-                "mttkrp_block: row buffer len {} != P*R = {}",
-                w.len(),
-                p * rank
-            );
-        }
+        ensure_or!(
+            rows.len() == n_in * pr,
+            ShapeMismatch,
+            "mttkrp_block: rows len {} != n_in*P*R = {}",
+            rows.len(),
+            n_in * pr
+        );
         for t in 0..p {
             let o = &mut out[t * rank..(t + 1) * rank];
             let v = vals[t];
-            match rows {
-                [a] => {
-                    let ra = &a[t * rank..(t + 1) * rank];
-                    for r in 0..rank {
-                        o[r] = v * ra[r];
-                    }
+            match n_in {
+                1 => lanes::scale(o, v, &rows[t * rank..(t + 1) * rank]),
+                2 => {
+                    let (a, b) = rows.split_at(pr);
+                    lanes::scaled_prod2(
+                        o,
+                        v,
+                        &a[t * rank..(t + 1) * rank],
+                        &b[t * rank..(t + 1) * rank],
+                    );
                 }
-                [a, b] => {
-                    let ra = &a[t * rank..(t + 1) * rank];
-                    let rb = &b[t * rank..(t + 1) * rank];
-                    for r in 0..rank {
-                        o[r] = v * ra[r] * rb[r];
-                    }
-                }
+                3 => lanes::scaled_prod3(
+                    o,
+                    v,
+                    &rows[t * rank..(t + 1) * rank],
+                    &rows[pr + t * rank..pr + (t + 1) * rank],
+                    &rows[2 * pr + t * rank..2 * pr + (t + 1) * rank],
+                ),
                 _ => {
                     o.fill(v);
-                    for w in rows {
-                        let rw = &w[t * rank..(t + 1) * rank];
-                        for r in 0..rank {
-                            o[r] *= rw[r];
-                        }
+                    for w in 0..n_in {
+                        let rw = &rows[w * pr + t * rank..w * pr + (t + 1) * rank];
+                        lanes::mul_assign(o, rw);
                     }
                 }
             }
@@ -152,12 +154,13 @@ impl Backend for NativeBackend {
     fn mttkrp_block_seg(
         &self,
         rank: usize,
+        n_in: usize,
         vals: &[f32],
         seg_starts: &[f32],
-        rows: &[&[f32]],
+        rows: &[f32],
         out: &mut [f32],
     ) -> Result<()> {
-        self.mttkrp_block(rank, vals, rows, out)?;
+        self.mttkrp_block(rank, n_in, vals, rows, out)?;
         let p = vals.len();
         ensure_or!(
             seg_starts.len() == p,
@@ -171,9 +174,7 @@ impl Backend for NativeBackend {
             if seg_starts[t] < 0.5 {
                 let (prev, cur) = out.split_at_mut(t * rank);
                 let prev = &prev[(t - 1) * rank..];
-                for r in 0..rank {
-                    cur[r] += prev[r];
-                }
+                lanes::add_assign(&mut cur[..rank], prev);
             }
         }
         Ok(())
@@ -193,9 +194,13 @@ impl Backend for NativeBackend {
             let row = &y_blk[t * rank..(t + 1) * rank];
             for a in 0..rank {
                 let ra = row[a] as f64;
-                for b in a..rank {
-                    acc[a * rank + b] += ra * row[b] as f64;
-                }
+                // upper triangle only; elementwise, so the 4×-unrolled add
+                // is bitwise-identical to the scalar loop
+                lanes::add_scaled_f64(
+                    &mut acc[a * rank + a..a * rank + rank],
+                    ra,
+                    &row[a..rank],
+                );
             }
         }
         for a in 0..rank {
@@ -228,9 +233,7 @@ impl Backend for NativeBackend {
         out.fill(1.0);
         for w in 0..n {
             let g = &grams[w * rank * rank..(w + 1) * rank * rank];
-            for (o, &x) in out.iter_mut().zip(g) {
-                *o *= x;
-            }
+            lanes::mul_assign(out, g);
         }
         for d in 0..rank {
             out[d * rank + d] += damp;
@@ -277,15 +280,21 @@ impl Backend for NativeBackend {
         grams: &[f32],
         weights: &[f32],
     ) -> Result<f32> {
+        ensure_or!(
+            weights.len() == rank,
+            ShapeMismatch,
+            "weighted_gram: weights len {} != rank {rank}",
+            weights.len()
+        );
         let mut had = vec![0.0f32; rank * rank];
         self.hadamard_grams(rank, n, grams, 0.0, &mut had)?;
+        // Row-major over `a` with the lane-merged weighted dot per row —
+        // the merge order inside each row is pinned by `weighted_dot_f64`
+        // (p[i % 4], (p0+p1)+(p2+p3)); rows accumulate serially.
         let mut acc = 0.0f64;
         for a in 0..rank {
-            for b in 0..rank {
-                acc += had[a * rank + b] as f64
-                    * weights[a] as f64
-                    * weights[b] as f64;
-            }
+            let row = &had[a * rank..(a + 1) * rank];
+            acc += lanes::weighted_dot_f64(row, weights) * weights[a] as f64;
         }
         Ok(acc as f32)
     }
@@ -306,8 +315,10 @@ mod tests {
         let vals = [2.0f32, 1.0, 0.5, -1.0];
         let a = [1.0f32; 8]; // (4,2) of ones
         let b: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let mut rows = a.to_vec(); // (2, 4, 2) flattened
+        rows.extend_from_slice(&b);
         let mut out = vec![0.0f32; 8];
-        be.mttkrp_block(2, &vals, &[&a, &b], &mut out).unwrap();
+        be.mttkrp_block(2, 2, &vals, &rows, &mut out).unwrap();
         for t in 0..4 {
             for r in 0..2 {
                 assert_eq!(out[t * 2 + r], vals[t] * b[t * 2 + r]);
@@ -322,7 +333,7 @@ mod tests {
         let ones = [1.0f32; 4];
         let seg = [1.0f32, 0.0, 1.0, 0.0];
         let mut out = vec![0.0f32; 4];
-        be.mttkrp_block_seg(1, &vals, &seg, &[&ones], &mut out).unwrap();
+        be.mttkrp_block_seg(1, 1, &vals, &seg, &ones, &mut out).unwrap();
         assert_eq!(out, vec![1.0, 3.0, 3.0, 7.0]);
     }
 

@@ -131,33 +131,54 @@ impl Backend for PjrtBackend {
     fn mttkrp_block(
         &self,
         rank: usize,
+        n_in: usize,
         vals: &[f32],
-        rows: &[&[f32]],
+        rows: &[f32],
         out: &mut [f32],
     ) -> Result<()> {
-        let name = self.mttkrp_name(rows.len(), rank, false);
-        let mut inputs: Vec<&[f32]> = Vec::with_capacity(rows.len() + 1);
+        let name = self.mttkrp_name(n_in, rank, false);
+        let pr = vals.len() * rank;
+        ensure_or!(
+            pr > 0 && rows.len() == n_in * pr,
+            ShapeMismatch,
+            "{name}: rows len {} != n_in*P*R = {}",
+            rows.len(),
+            n_in * pr
+        );
+        // The manifest describes one (P, R) literal per input mode; the
+        // coordinator's flat (n_in, P, R) gather splits into exactly those.
+        let mut inputs: Vec<&[f32]> = Vec::with_capacity(n_in + 1);
         inputs.push(vals);
-        inputs.extend_from_slice(rows);
+        inputs.extend(rows.chunks_exact(pr));
         self.dispatch(&name, &inputs, out.len())?;
-        self.native.mttkrp_block(rank, vals, rows, out)
+        self.native.mttkrp_block(rank, n_in, vals, rows, out)
     }
 
     fn mttkrp_block_seg(
         &self,
         rank: usize,
+        n_in: usize,
         vals: &[f32],
         seg_starts: &[f32],
-        rows: &[&[f32]],
+        rows: &[f32],
         out: &mut [f32],
     ) -> Result<()> {
-        let name = self.mttkrp_name(rows.len(), rank, true);
-        let mut inputs: Vec<&[f32]> = Vec::with_capacity(rows.len() + 2);
+        let name = self.mttkrp_name(n_in, rank, true);
+        let pr = vals.len() * rank;
+        ensure_or!(
+            pr > 0 && rows.len() == n_in * pr,
+            ShapeMismatch,
+            "{name}: rows len {} != n_in*P*R = {}",
+            rows.len(),
+            n_in * pr
+        );
+        let mut inputs: Vec<&[f32]> = Vec::with_capacity(n_in + 2);
         inputs.push(vals);
         inputs.push(seg_starts);
-        inputs.extend_from_slice(rows);
+        inputs.extend(rows.chunks_exact(pr));
         self.dispatch(&name, &inputs, out.len())?;
-        self.native.mttkrp_block_seg(rank, vals, seg_starts, rows, out)
+        self.native
+            .mttkrp_block_seg(rank, n_in, vals, seg_starts, rows, out)
     }
 
     fn gram_block(&self, rank: usize, y_blk: &[f32], out: &mut [f32]) -> Result<()> {

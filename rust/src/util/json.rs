@@ -80,6 +80,110 @@ impl Json {
     pub fn as_usize_vec(&self) -> Option<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
+
+    // -------- construction (for emitting bench reports and sidecars)
+
+    /// Build an object from `(key, value)` pairs — the writer-side dual of
+    /// [`Json::get`]. Later duplicate keys win, matching `BTreeMap::insert`.
+    pub fn obj<K: Into<String>, V: Into<Json>>(pairs: impl IntoIterator<Item = (K, V)>) -> Json {
+        Json::Obj(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.into(), v.into()))
+                .collect(),
+        )
+    }
+
+    /// Pretty-printed text: 2-space indent, one key or element per line.
+    /// Parses back to an equal value (`Json::parse(v.to_pretty()) == v`).
+    pub fn to_pretty(&self) -> String {
+        let mut out = String::new();
+        self.pretty_into(&mut out, 0);
+        out.push('\n');
+        out
+    }
+
+    fn pretty_into(&self, out: &mut String, depth: usize) {
+        match self {
+            Json::Arr(a) if !a.is_empty() => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    out.push_str(if i == 0 { "\n" } else { ",\n" });
+                    out.push_str(&"  ".repeat(depth + 1));
+                    v.pretty_into(out, depth + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(depth));
+                out.push(']');
+            }
+            Json::Obj(m) if !m.is_empty() => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    out.push_str(if i == 0 { "\n" } else { ",\n" });
+                    out.push_str(&"  ".repeat(depth + 1));
+                    out.push_str(&format!("{}: ", Json::Str(k.clone())));
+                    v.pretty_into(out, depth + 1);
+                }
+                out.push('\n');
+                out.push_str(&"  ".repeat(depth));
+                out.push('}');
+            }
+            // scalars and empty containers: compact form
+            v => out.push_str(&v.to_string()),
+        }
+    }
+
+    /// Write the pretty form to `path`, creating parent directories.
+    pub fn write_to(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_pretty())
+    }
+}
+
+impl From<bool> for Json {
+    fn from(v: bool) -> Json {
+        Json::Bool(v)
+    }
+}
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Json {
+        Json::Num(v)
+    }
+}
+
+impl From<u64> for Json {
+    fn from(v: u64) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<usize> for Json {
+    fn from(v: usize) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+}
+
+impl From<String> for Json {
+    fn from(v: String) -> Json {
+        Json::Str(v)
+    }
+}
+
+impl From<Vec<Json>> for Json {
+    fn from(v: Vec<Json>) -> Json {
+        Json::Arr(v)
+    }
 }
 
 #[derive(Debug)]
@@ -407,5 +511,43 @@ mod tests {
     fn unicode_string_roundtrip() {
         let v = Json::parse("\"héllo ✓\"").unwrap();
         assert_eq!(v.as_str(), Some("héllo ✓"));
+    }
+
+    #[test]
+    fn obj_builder_and_from_impls() {
+        let v = Json::obj([
+            ("name", Json::from("fig3")),
+            ("reps", Json::from(5u64)),
+            ("ratio", Json::from(0.25f64)),
+            ("ok", Json::from(true)),
+            ("cases", Json::from(vec![Json::from("a"), Json::from("b")])),
+        ]);
+        assert_eq!(v.get("name").unwrap().as_str(), Some("fig3"));
+        assert_eq!(v.get("reps").unwrap().as_usize(), Some(5));
+        assert_eq!(v.get("cases").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn pretty_roundtrips_and_is_indented() {
+        let v = Json::obj([
+            ("b", Json::from(vec![Json::from(1u64), Json::from(2u64)])),
+            ("a", Json::obj([("nested", Json::Null)])),
+            ("empty", Json::Arr(Vec::new())),
+        ]);
+        let text = v.to_pretty();
+        assert!(text.contains("\n  \"a\": {"), "pretty output:\n{text}");
+        assert!(text.contains("\"empty\": []"), "pretty output:\n{text}");
+        assert_eq!(Json::parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn write_to_creates_dirs_and_parses_back() {
+        let dir = std::env::temp_dir().join(format!("spmttkrp-json-{}", std::process::id()));
+        let path = dir.join("sub").join("out.json");
+        let v = Json::obj([("schema", Json::from(1u64))]);
+        v.write_to(&path).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back, v);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -44,13 +44,14 @@ fn mttkrp_block_all_variants_agree() {
     for &rank in &[16usize, 32] {
         for n_in in 2..=4usize {
             let vals = rand_vec(&mut rng, p);
-            let rows: Vec<Vec<f32>> =
-                (0..n_in).map(|_| rand_vec(&mut rng, p * rank)).collect();
-            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let rows = rand_vec(&mut rng, n_in * p * rank);
             let mut got = vec![0.0f32; p * rank];
             let mut want = vec![0.0f32; p * rank];
-            pjrt.mttkrp_block(rank, &vals, &refs, &mut got).unwrap();
-            native.mttkrp_block(rank, &vals, &refs, &mut want).unwrap();
+            pjrt.mttkrp_block(rank, n_in, &vals, &rows, &mut got)
+                .unwrap();
+            native
+                .mttkrp_block(rank, n_in, &vals, &rows, &mut want)
+                .unwrap();
             assert_close(&got, &want, 1e-5, &format!("mttkrp n{n_in} r{rank}"));
         }
     }
@@ -68,15 +69,13 @@ fn mttkrp_seg_all_variants_agree() {
                 .map(|_| if rng.next_f64() < 0.25 { 1.0 } else { 0.0 })
                 .collect();
             seg[0] = 1.0;
-            let rows: Vec<Vec<f32>> =
-                (0..n_in).map(|_| rand_vec(&mut rng, p * rank)).collect();
-            let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+            let rows = rand_vec(&mut rng, n_in * p * rank);
             let mut got = vec![0.0f32; p * rank];
             let mut want = vec![0.0f32; p * rank];
-            pjrt.mttkrp_block_seg(rank, &vals, &seg, &refs, &mut got)
+            pjrt.mttkrp_block_seg(rank, n_in, &vals, &seg, &rows, &mut got)
                 .unwrap();
             native
-                .mttkrp_block_seg(rank, &vals, &seg, &refs, &mut want)
+                .mttkrp_block_seg(rank, n_in, &vals, &seg, &rows, &mut want)
                 .unwrap();
             // segmented sums accumulate: slightly looser tolerance
             assert_close(&got, &want, 1e-4, &format!("seg n{n_in} r{rank}"));
@@ -160,16 +159,15 @@ fn reductions_agree() {
 fn manifest_rejects_bad_shapes() {
     let Some((pjrt, _)) = backends() else { return };
     let p = pjrt.block_p();
-    // wrong vals length
+    // wrong vals length (rows sized for the full block so the flat-shape
+    // precheck passes and the manifest spec check fires)
     let vals = vec![0.0f32; p / 2];
-    let rows = vec![0.0f32; p * 16];
-    let refs: Vec<&[f32]> = vec![&rows, &rows];
+    let rows = vec![0.0f32; 2 * (p / 2) * 16];
     let mut out = vec![0.0f32; p * 16];
-    assert!(pjrt.mttkrp_block(16, &vals, &refs, &mut out).is_err());
+    assert!(pjrt.mttkrp_block(16, 2, &vals, &rows, &mut out).is_err());
     // unknown rank
     let vals = vec![0.0f32; p];
-    let rows9 = vec![0.0f32; p * 9];
-    let refs9: Vec<&[f32]> = vec![&rows9, &rows9];
+    let rows9 = vec![0.0f32; 2 * p * 9];
     let mut out9 = vec![0.0f32; p * 9];
-    assert!(pjrt.mttkrp_block(9, &vals, &refs9, &mut out9).is_err());
+    assert!(pjrt.mttkrp_block(9, 2, &vals, &rows9, &mut out9).is_err());
 }

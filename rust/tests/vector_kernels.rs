@@ -1,0 +1,242 @@
+//! Property suite: the vectorized (lane-chunked) kernels are **bitwise
+//! identical** to the scalar reference implementations, end to end.
+//!
+//! This is what lets the vectorization ride under the existing replay
+//! invariants (S1/S2/B1/M1/V1 in DESIGN.md §6): every lane kernel is
+//! either elementwise (trivially order-preserving) or a reduction with a
+//! pinned merge order that the scalar reference implements identically.
+//! The suite flips `SPMTTKRP_SCALAR_KERNELS` in-process via
+//! `lanes::set_scalar_kernels` and compares full executor outputs by
+//! exact f32 bits — not within a tolerance.
+//!
+//! Coverage: all four executors (ours / BLCO / MM-CSF / ParTI), both
+//! update schemes (ForceScheme1 = Local, ForceScheme2 = Global), fused
+//! and unfused replay, ranks that exercise every lane-tail shape
+//! (R < lane width, R == width, odd tails), and the TrafficCounters
+//! increment identity (vectorization must not change what is *counted*).
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use spmttkrp::baselines::MttkrpExecutor;
+use spmttkrp::exec::lanes;
+use spmttkrp::metrics::ExecReport;
+use spmttkrp::partition::LoadBalance;
+use spmttkrp::prelude::*;
+use spmttkrp::util::rng::Rng;
+
+/// The scalar/vector switch is process-global, so every test that touches
+/// it serializes through this lock (cargo's default test runner is
+/// multi-threaded).
+fn flag_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    let m = LOCK.get_or_init(|| Mutex::new(()));
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// RAII: force scalar kernels on, restore vectorized on drop even if the
+/// comparison panics mid-test.
+struct ScalarGuard;
+
+impl ScalarGuard {
+    fn new() -> ScalarGuard {
+        lanes::set_scalar_kernels(true);
+        ScalarGuard
+    }
+}
+
+impl Drop for ScalarGuard {
+    fn drop(&mut self) {
+        lanes::set_scalar_kernels(false);
+    }
+}
+
+fn small_tensor(seed: u64) -> SparseTensorCOO {
+    synth::DatasetProfile::uber().scaled(0.002).generate(seed)
+}
+
+fn run(
+    ex: &dyn MttkrpExecutor,
+    factors: &FactorSet,
+    scalar: bool,
+) -> (Vec<Vec<f32>>, ExecReport) {
+    if scalar {
+        let _g = ScalarGuard::new();
+        ex.execute_all_modes(factors).expect("scalar run")
+    } else {
+        lanes::set_scalar_kernels(false);
+        ex.execute_all_modes(factors).expect("vector run")
+    }
+}
+
+fn assert_bitwise(a: &[Vec<f32>], b: &[Vec<f32>], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: mode count");
+    for (d, (va, vb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(va.len(), vb.len(), "{what}: mode {d} len");
+        for (i, (&x, &y)) in va.iter().zip(vb).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what}: mode {d} elem {i}: vector {x} vs scalar {y}"
+            );
+        }
+    }
+}
+
+/// V1-style bitwise identity for every executor kind, across ranks that
+/// hit each lane-tail shape: below width (1, 3), exactly width (8),
+/// chunk + odd tail (15), two chunks (16).
+#[test]
+fn all_executors_vector_matches_scalar_bitwise() {
+    let _l = flag_lock();
+    let tensor = small_tensor(0xab);
+    for kind in ExecutorKind::all() {
+        for &rank in &[1usize, 3, 8, 15, 16] {
+            let ex = ExecutorBuilder::new()
+                .kind(kind)
+                .rank(rank)
+                .sm_count(4)
+                .build(&tensor)
+                .expect("build executor");
+            let factors = FactorSet::random(&tensor.dims, rank, 7 ^ rank as u64);
+            let (vec_out, vec_rep) = run(ex.as_ref(), &factors, false);
+            let (sc_out, sc_rep) = run(ex.as_ref(), &factors, true);
+            let what = format!("{kind:?} r{rank}");
+            assert_bitwise(&vec_out, &sc_out, &what);
+            // increment identity: lane routing must not change traffic
+            assert_eq!(
+                vec_rep.total_traffic(),
+                sc_rep.total_traffic(),
+                "{what}: traffic counters diverge"
+            );
+        }
+    }
+}
+
+/// Both update schemes through the engine: ForceScheme1 keeps every mode
+/// on Local_Update (partition-owned rows), ForceScheme2 forces the staged
+/// Global_Update merge — the path where the pinned stage-fold order
+/// matters.
+#[test]
+fn both_schemes_vector_matches_scalar_bitwise() {
+    let _l = flag_lock();
+    let tensor = small_tensor(0xd1);
+    for (lb, name) in [
+        (LoadBalance::ForceScheme1, "scheme1"),
+        (LoadBalance::ForceScheme2, "scheme2"),
+    ] {
+        let engine = ExecutorBuilder::new()
+            .rank(15)
+            .sm_count(4)
+            .load_balance(lb)
+            .build_engine(&tensor)
+            .expect("build engine");
+        let factors = FactorSet::random(&tensor.dims, 15, 0xbeef);
+        let (vec_out, _) = run(&engine, &factors, false);
+        let (sc_out, _) = run(&engine, &factors, true);
+        assert_bitwise(&vec_out, &sc_out, name);
+    }
+}
+
+/// The unfused (contribution-buffer) replay path and the in-kernel
+/// segmented-scan path run different lane kernels than the fused default;
+/// pin them too.
+#[test]
+fn unfused_and_seg_paths_vector_matches_scalar_bitwise() {
+    let _l = flag_lock();
+    let tensor = small_tensor(0xa5);
+    for (fused, seg, name) in [
+        (false, false, "unfused"),
+        (true, true, "fused+seg"),
+    ] {
+        let engine = ExecutorBuilder::new()
+            .rank(8)
+            .sm_count(4)
+            .fused(fused)
+            .seg_kernel(seg)
+            .build_engine(&tensor)
+            .expect("build engine");
+        let factors = FactorSet::random(&tensor.dims, 8, 0x5eed);
+        let (vec_out, _) = run(&engine, &factors, false);
+        let (sc_out, _) = run(&engine, &factors, true);
+        assert_bitwise(&vec_out, &sc_out, name);
+    }
+}
+
+/// Direct lane-kernel identity over awkward lengths (0, 1, tails around
+/// the 8-lane and 4-unroll boundaries), on values with varied exponents
+/// so a reordered reduction would actually change bits.
+#[test]
+fn lane_kernels_match_scalar_reference_bitwise() {
+    let _l = flag_lock();
+    let mut rng = Rng::new(0x1a9e5);
+    for &n in &[0usize, 1, 3, 4, 5, 7, 8, 9, 15, 16, 17, 31, 33, 100] {
+        let a: Vec<f32> = (0..n).map(|_| rng.next_normal() as f32 * 1e3).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.next_normal() as f32 * 1e-3).collect();
+        let c: Vec<f32> = (0..n).map(|_| rng.next_normal() as f32).collect();
+        let v = rng.next_normal() as f32;
+
+        let mut acc_v = c.clone();
+        lanes::add_assign(&mut acc_v, &a);
+        let mut acc_s = c.clone();
+        lanes::scalar::add_assign(&mut acc_s, &a);
+        assert_eq!(acc_v, acc_s, "add_assign n={n}");
+
+        let mut p2_v = vec![0.0f32; n];
+        lanes::scaled_prod2(&mut p2_v, v, &a, &b);
+        let mut p2_s = vec![0.0f32; n];
+        lanes::scalar::scaled_prod2(&mut p2_s, v, &a, &b);
+        assert_eq!(p2_v, p2_s, "scaled_prod2 n={n}");
+
+        let mut p3_v = vec![0.0f32; n];
+        lanes::scaled_prod3(&mut p3_v, v, &a, &b, &c);
+        let mut p3_s = vec![0.0f32; n];
+        lanes::scalar::scaled_prod3(&mut p3_s, v, &a, &b, &c);
+        assert_eq!(p3_v, p3_s, "scaled_prod3 n={n}");
+
+        let mut f_v = vec![0.0f64; n];
+        lanes::add_scaled_f64(&mut f_v, 1.5, &a);
+        let mut f_s = vec![0.0f64; n];
+        lanes::scalar::add_scaled_f64(&mut f_s, 1.5, &a);
+        assert_eq!(f_v, f_s, "add_scaled_f64 n={n}");
+
+        let d_v = lanes::weighted_dot_f64(&a, &b);
+        let d_s = lanes::scalar::weighted_dot_f64(&a, &b);
+        assert_eq!(
+            d_v.to_bits(),
+            d_s.to_bits(),
+            "weighted_dot_f64 n={n}: {d_v} vs {d_s}"
+        );
+    }
+}
+
+/// CPD end-to-end through the DenseScratch `_with` path: same bitwise
+/// story at the algorithm level, where gram/hadamard/solve/fit all run.
+#[test]
+fn cpd_fit_vector_matches_scalar_bitwise() {
+    let _l = flag_lock();
+    let tensor = small_tensor(0xcafe);
+    let cfg = CpdConfig {
+        rank: 8,
+        max_iters: 3,
+        tol: 0.0,
+        seed: 11,
+        ..Default::default()
+    };
+    let build = || {
+        ExecutorBuilder::new()
+            .rank(8)
+            .sm_count(4)
+            .build_engine(&tensor)
+            .expect("engine")
+    };
+    lanes::set_scalar_kernels(false);
+    let vec_res = als(&build(), &tensor, &cfg).expect("vector cpd");
+    let sc_res = {
+        let _g = ScalarGuard::new();
+        als(&build(), &tensor, &cfg).expect("scalar cpd")
+    };
+    assert_eq!(vec_res.iterations, sc_res.iterations);
+    for (a, b) in vec_res.fits.iter().zip(&sc_res.fits) {
+        assert_eq!(a.to_bits(), b.to_bits(), "cpd fit trajectory diverges");
+    }
+}

@@ -1,0 +1,175 @@
+#!/usr/bin/env python3
+"""Diff BENCH_*.json perf-trajectory files against the committed baseline.
+
+Usage:
+    python3 scripts/bench_diff.py --baseline rust/benches/baseline --current .
+
+Reads every BENCH_*.json in --current, validates it against schema
+version 1 (see rust/src/bench_support/report.rs), matches cases by name
+against the same-named file in --baseline, and prints a markdown delta
+table per bench.
+
+Exit policy — the trajectory is *informative*, the schema is *contract*:
+  * exit 1 only when a current file is unparseable or schema-broken
+    (missing required keys, wrong types, unknown schema version) — a
+    writer regression must fail CI;
+  * timing deltas NEVER fail the job (smoke-scale runs on shared CI
+    runners are noisy); deltas beyond --threshold are flagged ⚠ in the
+    table and counted in the summary line;
+  * missing baselines / new benches / new cases are reported as notes.
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+REQUIRED_TOP = {"schema", "bench", "git_rev", "scale", "reps", "cases"}
+REQUIRED_CASE = {"case", "median_ns", "p95_ns"}
+SCHEMA_VERSION = 1
+
+
+def load_report(path):
+    """Parse and schema-validate one report. Returns (report, errors)."""
+    errors = []
+    try:
+        with open(path) as f:
+            rep = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return None, [f"{path}: unparseable: {e}"]
+    if not isinstance(rep, dict):
+        return None, [f"{path}: top level is not an object"]
+    missing = REQUIRED_TOP - rep.keys()
+    if missing:
+        errors.append(f"{path}: missing keys {sorted(missing)}")
+    if rep.get("schema") != SCHEMA_VERSION:
+        errors.append(
+            f"{path}: schema version {rep.get('schema')!r}, expected {SCHEMA_VERSION}"
+        )
+    cases = rep.get("cases")
+    if not isinstance(cases, list):
+        errors.append(f"{path}: 'cases' is not an array")
+        cases = []
+    for i, case in enumerate(cases):
+        if not isinstance(case, dict):
+            errors.append(f"{path}: cases[{i}] is not an object")
+            continue
+        miss = REQUIRED_CASE - case.keys()
+        if miss:
+            errors.append(f"{path}: cases[{i}] missing {sorted(miss)}")
+            continue
+        for key in ("median_ns", "p95_ns"):
+            if not isinstance(case[key], (int, float)):
+                errors.append(f"{path}: cases[{i}].{key} is not a number")
+    return rep, errors
+
+
+def fmt_ns(ns):
+    if ns >= 1e9:
+        return f"{ns / 1e9:.3f}s"
+    if ns >= 1e6:
+        return f"{ns / 1e6:.3f}ms"
+    if ns >= 1e3:
+        return f"{ns / 1e3:.1f}µs"
+    return f"{ns:.0f}ns"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True, help="dir with committed BENCH_*.json")
+    ap.add_argument("--current", required=True, help="dir with freshly emitted BENCH_*.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.25,
+        help="relative median delta beyond which a case is flagged (default 0.25)",
+    )
+    args = ap.parse_args()
+
+    current_files = sorted(glob.glob(os.path.join(args.current, "BENCH_*.json")))
+    if not current_files:
+        print(f"bench-diff: no BENCH_*.json found in {args.current!r} — "
+              "did the benches run?")
+        return 1
+
+    schema_errors = []
+    flagged = 0
+    notes = []
+
+    print("# Bench perf trajectory\n")
+    for cur_path in current_files:
+        name = os.path.basename(cur_path)
+        cur, errs = load_report(cur_path)
+        schema_errors.extend(errs)
+        if cur is None:
+            continue
+
+        base_path = os.path.join(args.baseline, name)
+        base = None
+        if os.path.exists(base_path):
+            # Baseline files are trusted (committed); parse failures there
+            # are schema errors too — the contract covers both sides.
+            base, base_errs = load_report(base_path)
+            schema_errors.extend(base_errs)
+        else:
+            notes.append(f"{name}: no committed baseline (new bench?)")
+
+        base_cases = {c["case"]: c for c in (base or {}).get("cases", [])
+                      if isinstance(c, dict) and "case" in c}
+
+        print(f"## {cur.get('bench', name)}")
+        print(f"rev `{cur.get('git_rev', '?')}` vs baseline "
+              f"`{(base or {}).get('git_rev', '—')}` "
+              f"(scale {cur.get('scale', '?')}, reps {cur.get('reps', '?')})\n")
+        print("| case | median | baseline | Δ | p95 |")
+        print("|---|---:|---:|---:|---:|")
+        seen = set()
+        for case in cur.get("cases", []):
+            if not isinstance(case, dict) or "case" not in case:
+                continue
+            cname = case["case"]
+            seen.add(cname)
+            med = case.get("median_ns", 0.0)
+            p95 = case.get("p95_ns", 0.0)
+            ref = base_cases.get(cname)
+            if ref is None:
+                delta = "new"
+                ref_txt = "—"
+            else:
+                ref_med = ref.get("median_ns", 0.0)
+                ref_txt = fmt_ns(ref_med)
+                if ref_med > 0:
+                    rel = (med - ref_med) / ref_med
+                    mark = ""
+                    if abs(rel) > args.threshold:
+                        mark = " ⚠"
+                        flagged += 1
+                    delta = f"{rel:+.1%}{mark}"
+                else:
+                    delta = "n/a"
+            print(f"| {cname} | {fmt_ns(med)} | {ref_txt} | {delta} | {fmt_ns(p95)} |")
+        for gone in sorted(set(base_cases) - seen):
+            notes.append(f"{name}: baseline case {gone!r} not emitted by current run")
+        print()
+
+    if notes:
+        print("### Notes")
+        for n in notes:
+            print(f"- {n}")
+        print()
+
+    if schema_errors:
+        print("### Schema errors (failing)")
+        for e in schema_errors:
+            print(f"- {e}")
+        print("\nbench-diff: FAIL — schema contract broken", file=sys.stderr)
+        return 1
+
+    print(f"bench-diff: ok — {len(current_files)} report(s), "
+          f"{flagged} case(s) beyond ±{args.threshold:.0%} (warn-only)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
