@@ -1,0 +1,106 @@
+//! Bench: simulated multi-GPU scaling of the batched spMTTKRP dispatch.
+//!
+//!     cargo bench --bench cluster_scaling
+//!     SPMTTKRP_BENCH_SCALE=0.02 SPMTTKRP_BENCH_REPS=3 cargo bench ...
+//!
+//! The same multi-tenant workload is dispatched on a `DeviceCluster` of
+//! 1, 2 and 4 simulated GPUs (`SessionBuilder::devices`). Reported per
+//! device count:
+//!
+//!   * the modeled *cluster makespan* — the slowest device's hierarchical
+//!     LPT makespan (level 1 shards tenants' partitions across devices by
+//!     nnz, level 2 is the per-pool longest-first schedule), which is the
+//!     scaling curve;
+//!   * the modeled inter-device reduction bytes (`ClusterCounters`):
+//!     every non-primary device's staged row-partials fold into device 0,
+//!     so merged bytes *grow* with N while makespan shrinks — the
+//!     communication/parallelism trade the paper's single-GPU design
+//!     sidesteps and a multi-GPU deployment must price;
+//!   * the level-1 shard imbalance (max/mean of device nnz loads).
+//!
+//! Before timing, the outputs at every device count are checked bitwise
+//! against N = 1 — the D1 invariant the property suite
+//! (`tests/cluster_exec.rs`) pins, re-asserted here on the bench
+//! workload itself. See DESIGN.md §6 invariant D1.
+
+use spmttkrp::bench_support::report::{BenchCase, BenchReport};
+use spmttkrp::bench_support::{batch_workload_devices, bench_reps, bench_scale, print_table};
+use spmttkrp::util::human_bytes;
+
+fn main() {
+    let rank = 16;
+    let kappa = 82;
+    let n_tenants = 6;
+    let reps = bench_reps();
+    let scale = bench_scale();
+    println!(
+        "cluster scaling bench: {n_tenants} tenants, rank {rank}, κ {kappa}, \
+         reps {reps}, scale {scale}"
+    );
+
+    // D1 reference: the single-device outputs at this exact workload.
+    let reference = {
+        let w = batch_workload_devices(n_tenants, rank, kappa, scale, 1);
+        let reqs = w.all_mode_requests();
+        w.session.mttkrp_batch(&reqs).expect("reference dispatch").outputs
+    };
+
+    let mut rows = Vec::new();
+    let mut report = BenchReport::new("cluster_scaling");
+    for devices in [1usize, 2, 4] {
+        let w = batch_workload_devices(n_tenants, rank, kappa, scale, devices);
+        let reqs = w.all_mode_requests();
+
+        // bitwise D1 check on the bench workload before anything is timed
+        let check = w.session.mttkrp_batch(&reqs).expect("warmup dispatch");
+        assert_eq!(check.outputs.len(), reference.len());
+        for (r, (got, want)) in check.outputs.iter().zip(&reference).enumerate() {
+            assert_eq!(got.len(), want.len(), "req {r}: output length");
+            for (i, (a, b)) in got.iter().zip(want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "req {r} [{i}]: devices={devices} diverged from devices=1 (D1)"
+                );
+            }
+        }
+
+        // timed reps: modeled cluster makespan (slowest device's LPT
+        // schedule) de-noised with a median across reps
+        let mut makespans = Vec::with_capacity(reps);
+        let mut last = None;
+        for _ in 0..reps {
+            let b = w.session.mttkrp_batch(&reqs).expect("bench dispatch");
+            let c = b.dispatch.cluster.expect("clustered session reports counters");
+            makespans.push(c.cluster_makespan().as_secs_f64());
+            last = Some(c);
+        }
+        let c = last.unwrap();
+        let summary = spmttkrp::util::stats::Summary::of(&makespans);
+
+        report.push(
+            BenchCase::from_summary(format!("devices{devices}"), &summary)
+                .sim(summary.median)
+                .extra("devices", devices as f64)
+                .extra("requests", reqs.len() as f64)
+                .extra("bytes_staged", c.bytes_staged.iter().sum::<u64>() as f64)
+                .extra("bytes_merged", c.bytes_merged as f64)
+                .extra("shard_imbalance", c.imbalance.factor),
+        );
+        rows.push(vec![
+            devices.to_string(),
+            reqs.len().to_string(),
+            format!("{:.3}±{:.3}", summary.median * 1e3, summary.stddev * 1e3),
+            human_bytes(c.bytes_staged.iter().sum::<u64>()),
+            human_bytes(c.bytes_merged),
+            format!("{:.3}", c.imbalance.factor),
+        ]);
+    }
+    print_table(
+        "Cluster scaling — modeled cluster makespan in ms (hierarchical LPT, D1-checked)",
+        &["devices", "requests", "makespan", "staged", "merged", "imbalance"],
+        &rows,
+    );
+    let path = report.write().expect("write BENCH_cluster_scaling.json");
+    println!("bench json: {}", path.display());
+}

@@ -34,7 +34,7 @@ use super::Result;
 use crate::baselines::MttkrpExecutor;
 use crate::cpd::{AlsState, CpdConfig, CpdResult};
 use crate::exec::batch::{lpt_makespan, BatchScheduler};
-use crate::metrics::ModeExecReport;
+use crate::metrics::{ClusterCounters, ModeExecReport};
 use crate::tensor::FactorSet;
 use crate::util::stats::Imbalance;
 
@@ -53,6 +53,12 @@ pub struct BatchDispatchReport {
     pub sim_sequential: Duration,
     /// `(tenant, partition)` items executed.
     pub n_items: usize,
+    /// Modeled inter-device reduction traffic and per-device makespans
+    /// when the session is clustered ([`crate::exec::DeviceCluster`]);
+    /// `None` on an unclustered session. A side channel next to the
+    /// per-tenant `TrafficCounters` — never folded into them, so traffic
+    /// stays bitwise-identical across device counts (invariant D1).
+    pub cluster: Option<ClusterCounters>,
 }
 
 /// Result of [`Session::mttkrp_batch`]: per-request outputs and reports
@@ -136,7 +142,7 @@ impl Session {
             .collect();
 
         let sched = BatchScheduler::new(&loads);
-        let run = sched.run(self.pool(), &|w, tenant, z, tr| {
+        let (run, cluster) = self.dispatch_batch(&sched, &|w, tenant, z, tr| {
             let req = &reqs[tenant];
             execs[tenant].replay_partition(w, req.mode, z, req.factors.borrow(), &accs[tenant], tr)
         })?;
@@ -157,6 +163,7 @@ impl Session {
             sim_packed: lpt_makespan(&run.item_costs, kappa)?,
             sim_sequential: reports.iter().map(|r| r.sim).sum(),
             n_items: run.item_costs.len(),
+            cluster,
         };
         Ok(MttkrpBatch {
             outputs: outs,
@@ -239,7 +246,11 @@ impl Session {
                     continue;
                 }
                 let sched = BatchScheduler::new(&loads);
-                let run = sched.run(self.pool(), &|w, tenant, z, tr| {
+                // cluster counters are per-dispatch; the lock-step driver
+                // has no per-iteration report slot for them, so they are
+                // dropped here — the arithmetic still runs the sharded
+                // path (D1 covers decompose end to end)
+                let (run, _cluster) = self.dispatch_batch(&sched, &|w, tenant, z, tr| {
                     let (engine, factors, acc) = &parts[tenant];
                     engine.replay_partition(w, d, z, factors, acc, tr)
                 })?;

@@ -90,6 +90,7 @@ pub struct ExecutorBuilder {
     pool: Option<Arc<SmPool>>,
     governor: Option<Arc<MemoryGovernor>>,
     artifacts: Option<PathBuf>,
+    devices: Option<usize>,
 }
 
 impl Default for ExecutorBuilder {
@@ -111,6 +112,7 @@ impl ExecutorBuilder {
             pool: None,
             governor: None,
             artifacts: None,
+            devices: None,
         }
     }
 
@@ -197,6 +199,18 @@ impl ExecutorBuilder {
         self
     }
 
+    /// Declare the simulated device count this executor expects to run
+    /// under. The builder itself always constructs a single-pool
+    /// executor (engines execute on the cluster's primary device); this
+    /// knob is a cross-check: `Session::prepare*` rejects a builder
+    /// whose declared device count disagrees with the session's cluster
+    /// (the same foreign-resource discipline as `pool`/`governor`).
+    /// Zero devices is a typed error at `validate`.
+    pub fn devices(mut self, devices: usize) -> Self {
+        self.devices = Some(devices);
+        self
+    }
+
     /// Override the PJRT artifact directory (default:
     /// `$SPMTTKRP_ARTIFACTS`, else `./artifacts`).
     pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
@@ -226,11 +240,21 @@ impl ExecutorBuilder {
         self.kind
     }
 
+    /// The device count this builder declared via [`devices`](Self::devices), if any.
+    pub fn configured_devices(&self) -> Option<usize> {
+        self.devices
+    }
+
     /// Validate the configuration without building anything. `build*` call
     /// this first, so misuse is reported before any layout work runs.
     pub fn validate(&self) -> Result<()> {
         ensure_or!(self.cfg.rank > 0, InvalidConfig, "rank must be > 0");
         ensure_or!(self.cfg.sm_count > 0, InvalidConfig, "sm_count (κ) must be > 0");
+        ensure_or!(
+            self.devices != Some(0),
+            InvalidConfig,
+            "devices must be >= 1 (a 0-device cluster cannot execute)"
+        );
         if self.pool.is_none() {
             ensure_or!(
                 self.cfg.threads > 0,
@@ -418,6 +442,21 @@ mod tests {
         ] {
             assert!(matches!(b.build(&t), Err(Error::InvalidConfig(_))));
         }
+    }
+
+    #[test]
+    fn zero_devices_is_rejected_and_the_knob_round_trips() {
+        assert!(matches!(
+            ExecutorBuilder::new().devices(0).validate(),
+            Err(Error::InvalidConfig(_))
+        ));
+        assert_eq!(ExecutorBuilder::new().configured_devices(), None);
+        assert_eq!(
+            ExecutorBuilder::new().devices(2).configured_devices(),
+            Some(2)
+        );
+        // a positive device count leaves the rest of validation untouched
+        ExecutorBuilder::new().devices(2).validate().unwrap();
     }
 
     #[test]

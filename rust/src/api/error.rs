@@ -67,6 +67,12 @@ pub enum Error {
     /// dispatcher thread died. The underlying `Session` is still usable;
     /// a ticket never hangs on a stopped service.
     ServiceStopped(String),
+    /// A non-blocking poll (`Ticket::try_wait`) found the request still
+    /// in flight. Not a failure: the service is healthy and the result
+    /// will arrive — poll again, or block on `Ticket::wait`. Distinct
+    /// from [`Error::ServiceStopped`], which means no result can ever
+    /// arrive.
+    NotReady,
 }
 
 impl Error {
@@ -103,6 +109,11 @@ impl fmt::Display for Error {
                  (ServicePolicy::queue_bound) — retry after the queue drains"
             ),
             Error::ServiceStopped(m) => write!(f, "service stopped: {m}"),
+            Error::NotReady => write!(
+                f,
+                "not ready: request still in flight — poll try_wait again \
+                 or block on Ticket::wait"
+            ),
         }
     }
 }
@@ -185,6 +196,13 @@ mod tests {
         let s = e.to_string();
         assert!(s.starts_with("service stopped:"), "{s}");
         assert!(s.contains("dispatcher joined"), "{s}");
+    }
+
+    #[test]
+    fn not_ready_is_distinct_from_stopped() {
+        let e = Error::NotReady;
+        assert!(e.to_string().starts_with("not ready:"), "{e}");
+        assert!(!matches!(e, Error::ServiceStopped(_)));
     }
 
     #[test]

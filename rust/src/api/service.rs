@@ -104,16 +104,22 @@ impl<T> Ticket<T> {
         })
     }
 
-    /// Non-blocking poll: `None` while the request is still in flight.
-    pub fn try_wait(&self) -> Option<Result<T>> {
+    /// Non-blocking poll. Three typed outcomes, one per service state:
+    /// the completed result (or its typed execution error) once the
+    /// dispatcher replied, [`Error::NotReady`] while the request is
+    /// still in flight (healthy — poll again or [`wait`](Self::wait)),
+    /// and [`Error::ServiceStopped`] when the reply channel is gone and
+    /// no result can ever arrive. The CLI's `--poll true` mode drives
+    /// this loop.
+    pub fn try_wait(&self) -> Result<T> {
         match self.rx.try_recv() {
-            Ok(res) => Some(res),
-            Err(TryRecvError::Empty) => None,
-            Err(TryRecvError::Disconnected) => Some(Err(Error::ServiceStopped(
+            Ok(res) => res,
+            Err(TryRecvError::Empty) => Err(Error::NotReady),
+            Err(TryRecvError::Disconnected) => Err(Error::ServiceStopped(
                 "request abandoned: the dispatcher dropped its reply channel before \
                  completing it (service shut down or dispatcher panicked)"
                     .into(),
-            ))),
+            )),
         }
     }
 }
@@ -589,6 +595,46 @@ mod tests {
             .prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4))
             .unwrap();
         (Arc::new(s), h, t)
+    }
+
+    #[test]
+    fn try_wait_is_typed_in_all_three_states() {
+        // in flight -> NotReady (healthy; poll again), not a stop
+        let (tx, rx) = channel::<Result<u32>>();
+        let t = Ticket { rx };
+        assert!(matches!(t.try_wait(), Err(Error::NotReady)));
+        assert!(matches!(t.try_wait(), Err(Error::NotReady)), "re-pollable");
+        tx.send(Ok(7)).unwrap();
+        assert_eq!(t.try_wait().unwrap(), 7);
+        // reply channel gone -> ServiceStopped, never NotReady forever
+        let (tx2, rx2) = channel::<Result<u32>>();
+        drop(tx2);
+        let t2 = Ticket { rx: rx2 };
+        assert!(matches!(t2.try_wait(), Err(Error::ServiceStopped(_))));
+    }
+
+    #[test]
+    fn poll_loop_resolves_to_the_blocking_result() {
+        let (s, h, t) = served_session();
+        let fs = Arc::new(crate::tensor::FactorSet::random(&t.dims, 8, 3));
+        let direct = {
+            let session = Arc::clone(&s);
+            session.run_mttkrp(&MttkrpRequest::new(h, 0, Arc::clone(&fs))).unwrap()
+        };
+        let svc = Service::spawn(s, ServicePolicy::default()).unwrap();
+        let ticket = svc
+            .submit_mttkrp(MttkrpRequest::new(h, 0, Arc::clone(&fs)))
+            .unwrap();
+        let (out, rep) = loop {
+            match ticket.try_wait() {
+                Ok(res) => break res,
+                Err(Error::NotReady) => std::thread::yield_now(),
+                Err(e) => panic!("poll loop hit {e}"),
+            }
+        };
+        assert_eq!(out, direct.0, "polled result must be the served result");
+        assert_eq!(rep.traffic, direct.1.traffic);
+        svc.shutdown();
     }
 
     #[test]

@@ -35,9 +35,11 @@ use super::{Error, Result};
 use crate::baselines::{validate_mode_request, MttkrpExecutor};
 use crate::coordinator::Engine;
 use crate::cpd::{als, CpdConfig, CpdResult};
+use crate::exec::batch::{BatchRun, BatchScheduler};
+use crate::exec::cluster::DeviceCluster;
 use crate::exec::memgr::{MemoryBudget, MemoryGovernor, ResidencyReport, SlotResidency};
 use crate::exec::SmPool;
-use crate::metrics::{ExecReport, ModeExecReport};
+use crate::metrics::{ClusterCounters, ExecReport, ModeExecReport, TrafficCounters};
 use crate::tensor::{FactorSet, SparseTensorCOO};
 
 /// Process-wide counter stamping every [`Session`] with a distinct id, so
@@ -105,6 +107,8 @@ pub struct SessionBuilder {
     budget: Option<MemoryBudget>,
     governor: Option<Arc<MemoryGovernor>>,
     policy: ServicePolicy,
+    devices: Option<usize>,
+    device_budget: Option<MemoryBudget>,
 }
 
 impl SessionBuilder {
@@ -136,6 +140,34 @@ impl SessionBuilder {
     /// with [`SessionBuilder::budget`]: a governor already owns one.
     pub fn governor(mut self, governor: Arc<MemoryGovernor>) -> SessionBuilder {
         self.governor = Some(governor);
+        self
+    }
+
+    /// Shard batched dispatches across `n` simulated GPUs
+    /// ([`DeviceCluster`]): the session's pool becomes device 0 (the
+    /// *primary* — single-tenant calls and every engine's workspace are
+    /// untouched), and `n − 1` more pools of the same worker width are
+    /// spawned. Batched calls LPT-shard their cross-tenant queue over
+    /// the devices and fold results in fixed device order, so outputs
+    /// stay bitwise-identical to the single-pool run (DESIGN.md §6,
+    /// invariant D1). Default: `SPMTTKRP_DEVICES` if set, else 1 — and
+    /// with neither this knob nor the variable, no cluster is built at
+    /// all (zero overhead). `devices(0)` is a typed error at `build`.
+    pub fn devices(mut self, devices: usize) -> SessionBuilder {
+        self.devices = Some(devices);
+        self
+    }
+
+    /// Per-device staging budget for the cluster: each device's shard
+    /// must fit `shard nnz × 4 B` (the unit-rank f32 row-partial model)
+    /// under this budget or the whole batched dispatch is rejected with
+    /// [`Error::BudgetExceeded`] *before any partition runs*. Setting
+    /// this implies clustering (a 1-device cluster if neither
+    /// [`SessionBuilder::devices`] nor `SPMTTKRP_DEVICES` says
+    /// otherwise). Default: unbounded. Distinct from
+    /// [`SessionBuilder::budget`], which governs *layout* residency.
+    pub fn device_budget(mut self, budget: MemoryBudget) -> SessionBuilder {
+        self.device_budget = Some(budget);
         self
     }
 
@@ -183,13 +215,32 @@ impl SessionBuilder {
             "SessionBuilder: max_batch must be > 0 (a dispatcher that may take \
              nothing per cycle can never serve)"
         );
+        ensure_or!(
+            self.devices != Some(0),
+            InvalidConfig,
+            "SessionBuilder: devices must be >= 1 (a 0-device cluster cannot execute)"
+        );
         let pool = self
             .pool
             .unwrap_or_else(|| Arc::new(SmPool::with_default_threads()));
         let governor = self.governor.unwrap_or_else(|| {
             MemoryGovernor::new(self.budget.unwrap_or_else(MemoryBudget::from_env))
         });
-        Ok(Session::assemble(pool, governor, self.policy))
+        // Cluster only when asked for — explicitly (either cluster knob)
+        // or via the environment (`SPMTTKRP_DEVICES` > 1). An unclustered
+        // session carries `None` and dispatches exactly as before.
+        let n_devices = self.devices.unwrap_or_else(crate::exec::default_devices);
+        let cluster = if self.devices.is_some() || self.device_budget.is_some() || n_devices > 1
+        {
+            Some(Arc::new(DeviceCluster::with_primary(
+                Arc::clone(&pool),
+                n_devices,
+                self.device_budget.unwrap_or_else(MemoryBudget::unbounded),
+            )?))
+        } else {
+            None
+        };
+        Ok(Session::assemble(pool, governor, self.policy, cluster))
     }
 }
 
@@ -223,6 +274,11 @@ pub struct Session {
     governor: Arc<MemoryGovernor>,
     /// Serving knobs a later [`Session::into_service`] spawns with.
     policy: ServicePolicy,
+    /// The simulated multi-GPU cluster, when this session was built with
+    /// [`SessionBuilder::devices`] / [`SessionBuilder::device_budget`] or
+    /// `SPMTTKRP_DEVICES` > 1. `None` means every dispatch is the plain
+    /// single-pool path — clustering is pay-for-what-you-ask.
+    cluster: Option<Arc<DeviceCluster>>,
     entries: Vec<Entry>,
 }
 
@@ -232,6 +288,7 @@ impl Default for Session {
             Arc::new(SmPool::with_default_threads()),
             MemoryGovernor::new(MemoryBudget::from_env()),
             ServicePolicy::default(),
+            None,
         )
     }
 }
@@ -243,12 +300,14 @@ impl Session {
         pool: Arc<SmPool>,
         governor: Arc<MemoryGovernor>,
         policy: ServicePolicy,
+        cluster: Option<Arc<DeviceCluster>>,
     ) -> Session {
         Session {
             id: NEXT_SESSION_ID.fetch_add(1, Ordering::Relaxed),
             pool,
             governor,
             policy,
+            cluster,
             entries: Vec::new(),
         }
     }
@@ -275,6 +334,7 @@ impl Session {
             pool,
             MemoryGovernor::new(MemoryBudget::from_env()),
             ServicePolicy::default(),
+            None,
         )
     }
 
@@ -285,13 +345,14 @@ impl Session {
             Arc::new(SmPool::with_default_threads()),
             MemoryGovernor::new(budget),
             ServicePolicy::default(),
+            None,
         )
     }
 
     /// Existing pool + explicit budget.
     #[deprecated(note = "use SessionBuilder::new().pool(...).budget(...).build()")]
     pub fn on_pool_with_budget(pool: Arc<SmPool>, budget: MemoryBudget) -> Session {
-        Session::assemble(pool, MemoryGovernor::new(budget), ServicePolicy::default())
+        Session::assemble(pool, MemoryGovernor::new(budget), ServicePolicy::default(), None)
     }
 
     /// The persistent pool every prepared executor runs on.
@@ -302,6 +363,19 @@ impl Session {
     /// The memory governor shared by every prepared engine tenant.
     pub fn governor(&self) -> &Arc<MemoryGovernor> {
         &self.governor
+    }
+
+    /// The simulated multi-GPU cluster, when this session is clustered
+    /// ([`SessionBuilder::devices`] / `SPMTTKRP_DEVICES`). `None` means
+    /// plain single-pool dispatch.
+    pub fn cluster(&self) -> Option<&Arc<DeviceCluster>> {
+        self.cluster.as_ref()
+    }
+
+    /// How many simulated devices this session dispatches over (1 when
+    /// unclustered — the session pool is the whole machine).
+    pub fn n_devices(&self) -> usize {
+        self.cluster.as_ref().map_or(1, |c| c.n_devices())
     }
 
     /// The serving policy [`Session::into_service`] spawns with
@@ -371,6 +445,16 @@ impl Session {
                 InvalidConfig,
                 "builder names a different memory governor; Session::prepare installs the \
                  session's (one byte budget for all tenants)"
+            );
+        }
+        if let Some(n) = builder.configured_devices() {
+            ensure_or!(
+                n == self.n_devices(),
+                InvalidConfig,
+                "builder declares {n} devices but this session dispatches over {} — \
+                 configure the device count on SessionBuilder::devices (the same \
+                 one-cluster-per-session discipline as pool/governor)",
+                self.n_devices()
             );
         }
         let on_pool = builder
@@ -446,27 +530,69 @@ impl Session {
         Ok(())
     }
 
+    /// Route one batched dispatch through the cluster when this session
+    /// is clustered, else through the plain single-pool scheduler — the
+    /// single fork point every batch entry shares. `body` is the same
+    /// per-partition replay closure either way, which is what makes
+    /// invariant D1 structural rather than tested-for.
+    pub(crate) fn dispatch_batch(
+        &self,
+        sched: &BatchScheduler,
+        body: &(dyn Fn(usize, usize, usize, &mut TrafficCounters) -> Result<()> + Sync),
+    ) -> Result<(BatchRun, Option<ClusterCounters>)> {
+        match &self.cluster {
+            Some(c) => {
+                let (run, counters) = c.run_sharded(sched, body)?;
+                Ok((run, Some(counters)))
+            }
+            None => Ok((sched.run(&self.pool, body)?, None)),
+        }
+    }
+
     /// Execute one typed MTTKRP request — the core the convenience
-    /// signatures and the service dispatcher both call.
+    /// signatures and the service dispatcher both call. On a clustered
+    /// session this is a batch of one through the sharded dispatch (so
+    /// even single-tenant calls exercise — and stay bitwise-identical
+    /// across — the device path, invariant D1); unclustered sessions
+    /// call the executor directly.
     pub fn run_mttkrp<F: Borrow<FactorSet>>(
         &self,
         req: &MttkrpRequest<F>,
     ) -> Result<(Vec<f32>, ModeExecReport)> {
+        if self.cluster.is_some() {
+            let one = [MttkrpRequest::new(req.handle, req.mode, req.factors.borrow())];
+            let mut batch = self.run_mttkrp_batch(&one)?;
+            return Ok((batch.outputs.swap_remove(0), batch.reports.swap_remove(0)));
+        }
         self.executor(req.handle)?.execute_mode(req.factors.borrow(), req.mode)
     }
 
-    /// As [`Session::run_mttkrp`], reusing a caller-owned output buffer.
+    /// As [`Session::run_mttkrp`], reusing a caller-owned output buffer
+    /// (on a clustered session the buffer is replaced, not reused — the
+    /// batch path owns its outputs).
     pub fn run_mttkrp_into<F: Borrow<FactorSet>>(
         &self,
         req: &MttkrpRequest<F>,
         out: &mut Vec<f32>,
     ) -> Result<ModeExecReport> {
+        if self.cluster.is_some() {
+            let (v, rep) = self.run_mttkrp(req)?;
+            *out = v;
+            return Ok(rep);
+        }
         self.executor(req.handle)?.execute_mode_into(req.factors.borrow(), req.mode, out)
     }
 
     /// Execute one typed decompose request — the core behind
-    /// [`Session::decompose`] and the served path.
+    /// [`Session::decompose`] and the served path. Clustered sessions
+    /// run a lock-step batch of one, so every per-iteration spMTTKRP
+    /// goes through the sharded dispatch (D1 end to end: the fit
+    /// trajectory matches the unclustered run bit for bit).
     pub fn run_decompose(&self, req: &DecomposeRequest) -> Result<CpdResult> {
+        if self.cluster.is_some() {
+            let mut results = self.run_decompose_batch(std::slice::from_ref(req))?;
+            return Ok(results.swap_remove(0));
+        }
         let entry = self.entry(req.handle)?;
         match &entry.prepared {
             Prepared::Engine(e) => als(e, &entry.tensor, &req.config),
@@ -779,6 +905,74 @@ mod tests {
         assert_eq!(s.service_policy().max_batch, 7);
         assert_eq!(s.service_policy().max_wait, std::time::Duration::from_millis(9));
         assert_eq!(s.service_policy().queue_bound, 11);
+    }
+
+    #[test]
+    fn cluster_knobs_build_a_cluster_and_defaults_do_not() {
+        // default: no cluster, single-device dispatch
+        let s = session();
+        assert!(s.cluster().is_none());
+        assert_eq!(s.n_devices(), 1);
+        // explicit devices: a cluster whose primary IS the session pool
+        let s = SessionBuilder::new().devices(3).build().unwrap();
+        let c = s.cluster().unwrap();
+        assert_eq!(s.n_devices(), 3);
+        assert!(Arc::ptr_eq(c.primary(), s.pool()));
+        // a device budget alone implies a (1-device) cluster
+        let s = SessionBuilder::new()
+            .device_budget(MemoryBudget::bytes(1 << 20))
+            .build()
+            .unwrap();
+        assert_eq!(s.n_devices(), 1);
+        assert_eq!(s.cluster().unwrap().governor(0).budget().limit(), Some(1 << 20));
+        // zero devices is typed at build
+        let err = SessionBuilder::new().devices(0).build().unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "got {err}");
+    }
+
+    #[test]
+    fn prepare_cross_checks_the_builder_device_count() {
+        let mut s = SessionBuilder::new().devices(2).build().unwrap();
+        let t = tiny(12);
+        // a builder declaring the wrong device count is rejected
+        let err = s
+            .prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4).devices(3))
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "got {err}");
+        assert_eq!(s.n_prepared(), 0);
+        // the matching count (and silence) are both fine
+        s.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4).devices(2)).unwrap();
+        s.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4)).unwrap();
+        // an unclustered session dispatches over 1 device
+        let mut s1 = session();
+        let err = s1
+            .prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4).devices(2))
+            .unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "got {err}");
+    }
+
+    #[test]
+    fn clustered_single_calls_route_through_the_sharded_dispatch() {
+        let t = tiny(13);
+        let mut plain = session();
+        let hp = plain.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4)).unwrap();
+        let mut clustered = SessionBuilder::new().devices(2).build().unwrap();
+        let hc = clustered.prepare(&t, &ExecutorBuilder::new().rank(8).sm_count(4)).unwrap();
+        let fs = FactorSet::random(&t.dims, 8, 17);
+        for mode in 0..t.n_modes() {
+            let (want, want_rep) = plain.mttkrp(hp, &fs, mode).unwrap();
+            let (got, got_rep) = clustered.mttkrp(hc, &fs, mode).unwrap();
+            assert_eq!(want.len(), got.len());
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.to_bits(), b.to_bits(), "mode {mode}: D1 violated");
+            }
+            assert_eq!(want_rep.traffic, got_rep.traffic, "mode {mode}: traffic differs");
+        }
+        // decompose end to end: fit trajectory is bitwise-identical too
+        let cfg = CpdConfig { rank: 8, max_iters: 3, ..Default::default() };
+        let want = plain.decompose(hp, &cfg).unwrap();
+        let got = clustered.decompose(hc, &cfg).unwrap();
+        assert_eq!(want.fits, got.fits);
     }
 
     #[test]

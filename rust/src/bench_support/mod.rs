@@ -198,12 +198,41 @@ impl BatchWorkload {
 /// Prepare `n_tenants` tensors (layouts built once each) on one shared
 /// pool, with per-tenant random factor sets.
 pub fn batch_workload(n_tenants: usize, rank: usize, kappa: usize, scale: f64) -> BatchWorkload {
+    batch_workload_on_devices(n_tenants, rank, kappa, scale, None)
+}
+
+/// As [`batch_workload`], but on a session clustered over `devices`
+/// simulated GPUs ([`crate::api::SessionBuilder::devices`]) — the
+/// `benches/cluster_scaling.rs` workload. The tenants, seeds and factor
+/// sets are identical to the unclustered workload at the same arguments,
+/// so outputs can be compared bitwise across device counts (D1).
+pub fn batch_workload_devices(
+    n_tenants: usize,
+    rank: usize,
+    kappa: usize,
+    scale: f64,
+    devices: usize,
+) -> BatchWorkload {
+    batch_workload_on_devices(n_tenants, rank, kappa, scale, Some(devices))
+}
+
+fn batch_workload_on_devices(
+    n_tenants: usize,
+    rank: usize,
+    kappa: usize,
+    scale: f64,
+    devices: Option<usize>,
+) -> BatchWorkload {
     let profiles = [
         DatasetProfile::uber(),
         DatasetProfile::nips(),
         DatasetProfile::chicago(),
     ];
-    let mut session = Session::builder().build().unwrap();
+    let mut builder = Session::builder();
+    if let Some(n) = devices {
+        builder = builder.devices(n);
+    }
+    let mut session = builder.build().unwrap();
     let mut handles = Vec::with_capacity(n_tenants);
     let mut factor_sets = Vec::with_capacity(n_tenants);
     for i in 0..n_tenants {

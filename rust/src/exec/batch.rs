@@ -53,13 +53,21 @@ pub fn cost_ordered_queue(loads: &[Vec<u64>]) -> Vec<BatchItem> {
             })
         })
         .collect();
+    sort_longest_first(&mut items);
+    items
+}
+
+/// The queue's one total order: cost descending, ties `(tenant,
+/// partition)` ascending. Shared by [`cost_ordered_queue`] and
+/// [`BatchScheduler::with_items`] so a re-sorted device shard can never
+/// drift from the global queue's ordering rule.
+fn sort_longest_first(items: &mut [BatchItem]) {
     items.sort_by(|a, b| {
         b.cost
             .cmp(&a.cost)
             .then(a.tenant.cmp(&b.tenant))
             .then(a.partition.cmp(&b.partition))
     });
-    items
 }
 
 /// Plan dispatch rounds for a queue of keyed, priced requests — the
@@ -211,9 +219,37 @@ impl BatchScheduler {
         }
     }
 
+    /// Build a scheduler over an explicit item subset — a device shard
+    /// from the hierarchical LPT (`partition::device::shard_queue`).
+    /// `kappas` still spans ALL tenants of the parent batch (tenant `t`
+    /// has `kappas[t]` partitions), so the per-tenant runs keep full-κ
+    /// `part_costs` vectors and fold cleanly across shards; items are
+    /// re-sorted into the exact total order [`cost_ordered_queue`]
+    /// produces. Items referencing an unknown tenant or an out-of-range
+    /// partition are a typed [`Error::InvalidConfig`], never a panic.
+    pub fn with_items(mut items: Vec<BatchItem>, kappas: Vec<usize>) -> Result<BatchScheduler> {
+        for it in &items {
+            ensure_or!(
+                it.tenant < kappas.len() && it.partition < kappas[it.tenant],
+                InvalidConfig,
+                "batch item (tenant {}, partition {}) out of range for {} tenants",
+                it.tenant,
+                it.partition,
+                kappas.len()
+            );
+        }
+        sort_longest_first(&mut items);
+        Ok(BatchScheduler { items, kappas })
+    }
+
     /// The queue, longest-first.
     pub fn items(&self) -> &[BatchItem] {
         &self.items
+    }
+
+    /// Per-tenant partition counts (κ per tenant).
+    pub fn kappas(&self) -> &[usize] {
+        &self.kappas
     }
 
     pub fn n_tenants(&self) -> usize {
@@ -486,6 +522,63 @@ mod tests {
         assert_eq!(lpt_makespan(&[], 0).unwrap(), Duration::ZERO);
         // items on a zero-SM device cannot be scheduled
         let err = lpt_makespan(&[Duration::from_micros(1)], 0).unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "got {err}");
+    }
+
+    #[test]
+    fn with_items_resorts_into_the_queue_order() {
+        let loads = vec![vec![3, 0, 5], vec![7], vec![2, 2]];
+        let full = cost_ordered_queue(&loads);
+        let kappas: Vec<usize> = loads.iter().map(Vec::len).collect();
+        // feed the items back shuffled: same set => same queue
+        let mut shuffled = full.clone();
+        shuffled.reverse();
+        shuffled.swap(0, 2);
+        let sched = BatchScheduler::with_items(shuffled, kappas.clone()).unwrap();
+        assert_eq!(sched.items(), &full[..]);
+        assert_eq!(sched.kappas(), &kappas[..]);
+        assert_eq!(sched.n_tenants(), 3);
+    }
+
+    #[test]
+    fn with_items_subset_runs_only_its_items() {
+        let loads = vec![vec![4, 1], vec![3]];
+        let full = cost_ordered_queue(&loads);
+        let kappas: Vec<usize> = loads.iter().map(Vec::len).collect();
+        // shard = the two largest items (tenant 0 p0, tenant 1 p0)
+        let sched = BatchScheduler::with_items(full[..2].to_vec(), kappas).unwrap();
+        let pool = SmPool::new(2);
+        let run = sched
+            .run(&pool, &|_w, _t, _z, tr| {
+                tr.local_updates += 1;
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(run.item_costs.len(), 2);
+        // tenant runs still span ALL tenants at full κ, untouched
+        // partitions stay zero-cost
+        assert_eq!(run.tenants.len(), 2);
+        assert_eq!(run.tenants[0].part_costs.len(), 2);
+        assert_eq!(run.tenants[0].traffic.local_updates, 1);
+        assert_eq!(run.tenants[0].part_costs[1], Duration::ZERO);
+        assert_eq!(run.tenants[1].traffic.local_updates, 1);
+    }
+
+    #[test]
+    fn with_items_out_of_range_is_typed() {
+        let bad_tenant = vec![BatchItem {
+            tenant: 2,
+            partition: 0,
+            cost: 1,
+        }];
+        let err = BatchScheduler::with_items(bad_tenant, vec![1, 1]).unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "got {err}");
+        let bad_partition = vec![BatchItem {
+            tenant: 0,
+            partition: 3,
+            cost: 1,
+        }];
+        let err = BatchScheduler::with_items(bad_partition, vec![2]).unwrap_err();
         assert!(matches!(err, Error::InvalidConfig(_)), "got {err}");
     }
 

@@ -1,0 +1,337 @@
+//! `DeviceCluster` — N [`SmPool`]s acting as simulated GPUs, a layer
+//! between the pool and the session (AMPED, arXiv:2507.15121: partition
+//! across GPUs first, then across each GPU's SMs).
+//!
+//! ## Execution model
+//!
+//! A clustered dispatch is the batch layer's dispatch, hierarchically
+//! scheduled: the cross-tenant longest-first queue is LPT-sharded across
+//! devices (`partition::device::shard_queue`, level 1), then each shard
+//! drains through that device's own pool exactly as a single-GPU batch
+//! would (`BatchScheduler`, level 2). Device parallelism is **modeled**,
+//! not raced: the host dispatches shards sequentially in fixed device
+//! order — every tenant's engine workspaces are shared across devices,
+//! so sequential dispatch keeps scratch aliasing structurally impossible
+//! — and the cluster's modeled time is the *max* of the per-device
+//! makespans ([`ClusterCounters::cluster_makespan`]), the same way one
+//! pool's κ simulated SMs are drained by fewer OS threads (DESIGN.md
+//! §2).
+//!
+//! ## Determinism (invariant D1)
+//!
+//! Per-partition arithmetic is schedule-independent (each `(tenant,
+//! partition)` item executes exactly once, against per-partition sinks),
+//! and the caller's `ModeAccumulator`s still merge partials in global
+//! partition order *after* every device has drained — sharding moves
+//! items between pools but never reorders a single f32 addition. Traffic
+//! counters are per-item u64 increments folded by addition, so device
+//! boundaries cannot change them either. Hence D1 (DESIGN.md §6): a
+//! cluster run of any device count is bitwise-identical to the
+//! single-pool run in outputs, fits, factors, and per-tenant
+//! [`TrafficCounters`]. What a cluster *adds* is the side-channel
+//! [`ClusterCounters`] — staged bytes per device, reduction bytes into
+//! the device-0 fold root, per-device makespans, cross-device imbalance.
+//!
+//! ## Per-device memory
+//!
+//! Each device carries its own [`MemoryGovernor`]: before a shard
+//! executes, its modeled staging footprint (shard nnz load × 4 B — the
+//! rank-independent unit-row f32 model, deterministic at layout time) is
+//! admission-checked against that device's budget; a shard that can
+//! never fit is a typed [`Error::BudgetExceeded`] *before* any partition
+//! executes. This mirrors the out-of-memory MTTKRP line (arXiv:
+//! 2201.12523): scale comes from sharding, not from assuming one device
+//! holds everything.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::api::error::ensure_or;
+use crate::api::{Error, Result};
+use crate::exec::batch::{lpt_makespan, BatchRun, BatchScheduler, TenantRun};
+use crate::exec::memgr::{MemoryBudget, MemoryGovernor};
+use crate::exec::pool::SmPool;
+use crate::metrics::{ClusterCounters, TrafficCounters};
+use crate::partition::device::shard_queue;
+
+/// Modeled f32 bytes staged per unit of nnz load — the admission price
+/// of a device shard (unit-rank row-partial model; see module docs).
+pub const STAGED_BYTES_PER_NNZ: u64 = 4;
+
+/// N simulated GPUs: one [`SmPool`] + one [`MemoryGovernor`] per device.
+/// Device 0 is the *primary* — sessions run single-pool paths and build
+/// engines against it, and the cross-device reduction folds into it.
+pub struct DeviceCluster {
+    pools: Vec<Arc<SmPool>>,
+    governors: Vec<Arc<MemoryGovernor>>,
+}
+
+impl DeviceCluster {
+    /// `devices` fresh pools of `threads` workers each, every device
+    /// governed by its own copy of `per_device_budget`. Zero devices is
+    /// a typed error — a cluster with no GPUs cannot execute anything.
+    pub fn new(
+        devices: usize,
+        threads: usize,
+        per_device_budget: MemoryBudget,
+    ) -> Result<DeviceCluster> {
+        ensure_or!(
+            devices > 0,
+            InvalidConfig,
+            "DeviceCluster: devices must be >= 1 (got 0)"
+        );
+        let pools = (0..devices).map(|_| Arc::new(SmPool::new(threads))).collect();
+        let governors = (0..devices)
+            .map(|_| MemoryGovernor::new(per_device_budget))
+            .collect();
+        Ok(DeviceCluster { pools, governors })
+    }
+
+    /// Adopt an existing pool as device 0 and spawn `devices − 1` more
+    /// pools of the same worker width. This is how `SessionBuilder`
+    /// clusters a session: the session's pool *is* the primary device,
+    /// so every non-batched call (and every engine's `WorkspaceArena`
+    /// width) is untouched by clustering.
+    pub fn with_primary(
+        primary: Arc<SmPool>,
+        devices: usize,
+        per_device_budget: MemoryBudget,
+    ) -> Result<DeviceCluster> {
+        ensure_or!(
+            devices > 0,
+            InvalidConfig,
+            "DeviceCluster: devices must be >= 1 (got 0)"
+        );
+        let threads = primary.n_workers();
+        let mut pools = Vec::with_capacity(devices);
+        pools.push(primary);
+        pools.extend((1..devices).map(|_| Arc::new(SmPool::new(threads))));
+        let governors = (0..devices)
+            .map(|_| MemoryGovernor::new(per_device_budget))
+            .collect();
+        Ok(DeviceCluster { pools, governors })
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.pools.len()
+    }
+
+    /// Device 0's pool — the fold root and the session's pool.
+    pub fn primary(&self) -> &Arc<SmPool> {
+        &self.pools[0]
+    }
+
+    pub fn pool(&self, device: usize) -> &Arc<SmPool> {
+        &self.pools[device]
+    }
+
+    pub fn governor(&self, device: usize) -> &Arc<MemoryGovernor> {
+        &self.governors[device]
+    }
+
+    /// Run one batched dispatch hierarchically: shard `sched`'s queue
+    /// across the devices (level-1 LPT), admission-check every shard
+    /// against its device's budget, drain each shard on its device's
+    /// pool in fixed device order, and fold the per-tenant results in
+    /// that same order. `body` is exactly the closure
+    /// [`BatchScheduler::run`] takes — the per-partition replay is the
+    /// single code path both the clustered and single-pool dispatch
+    /// share, which is what makes D1 structural.
+    ///
+    /// The returned [`BatchRun`] is shaped like a single-pool run over
+    /// the full queue (`item_costs` in global queue order, per-tenant
+    /// full-κ `part_costs`, `wall` = summed device walls); the
+    /// [`ClusterCounters`] carry everything device-level.
+    pub fn run_sharded(
+        &self,
+        sched: &BatchScheduler,
+        body: &(dyn Fn(usize, usize, usize, &mut TrafficCounters) -> Result<()> + Sync),
+    ) -> Result<(BatchRun, ClusterCounters)> {
+        let sharding = shard_queue(sched.items(), self.n_devices());
+
+        // Admission first: no partition may execute if any device's
+        // shard can never fit its budget (typed, not partial).
+        for (d, &load) in sharding.loads.iter().enumerate() {
+            let needed = load.saturating_mul(STAGED_BYTES_PER_NNZ);
+            if !self.governors[d].admits(needed) {
+                let budget = self.governors[d].budget().limit().unwrap_or(0);
+                return Err(Error::BudgetExceeded { needed, budget });
+            }
+        }
+
+        // Global queue position of every item, to put measured costs
+        // back in the order a single-pool run would report them.
+        let slot_of: HashMap<(usize, usize), usize> = sched
+            .items()
+            .iter()
+            .enumerate()
+            .map(|(i, it)| ((it.tenant, it.partition), i))
+            .collect();
+
+        let kappas = sched.kappas().to_vec();
+        let kappa_max = kappas.iter().copied().max().unwrap_or(1);
+        let mut tenants: Vec<TenantRun> = kappas
+            .iter()
+            .map(|&k| TenantRun {
+                traffic: TrafficCounters::default(),
+                part_costs: vec![Duration::ZERO; k],
+            })
+            .collect();
+        let mut item_costs = vec![Duration::ZERO; sched.items().len()];
+        let mut wall = Duration::ZERO;
+        let mut bytes_staged = vec![0u64; self.n_devices()];
+        let mut device_makespans = vec![Duration::ZERO; self.n_devices()];
+
+        // Fixed device order: determinism is by construction, and the
+        // sequential host dispatch means shared tenant workspaces are
+        // never touched by two pools at once (see module docs).
+        for (d, shard) in sharding.shards.iter().enumerate() {
+            let dev_sched = BatchScheduler::with_items(shard.clone(), kappas.clone())?;
+            let run = dev_sched.run(&self.pools[d], body)?;
+            for (t, dev_tr) in run.tenants.iter().enumerate() {
+                bytes_staged[d] += dev_tr.traffic.output_bytes_written;
+                tenants[t].traffic.add(&dev_tr.traffic);
+                // disjoint shards: untouched partitions stay ZERO, so
+                // element-wise addition is assignment
+                for (acc, &c) in tenants[t].part_costs.iter_mut().zip(&dev_tr.part_costs) {
+                    *acc += c;
+                }
+            }
+            for (i, it) in dev_sched.items().iter().enumerate() {
+                item_costs[slot_of[&(it.tenant, it.partition)]] = run.item_costs[i];
+            }
+            device_makespans[d] = lpt_makespan(&run.item_costs, kappa_max)?;
+            wall += run.wall;
+        }
+
+        let bytes_merged = bytes_staged[1..].iter().sum();
+        let counters = ClusterCounters {
+            bytes_staged,
+            bytes_merged,
+            device_makespans,
+            imbalance: sharding.imbalance(),
+        };
+        Ok((
+            BatchRun {
+                tenants,
+                wall,
+                item_costs,
+            },
+            counters,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic replay body: per-item counter increments keyed by
+    /// `(tenant, partition)`, so per-tenant traffic is a pure function
+    /// of *which* items ran — any scheduling difference shows up.
+    fn body(_w: usize, t: usize, z: usize, tr: &mut TrafficCounters) -> Result<()> {
+        tr.local_updates += 1;
+        tr.output_bytes_written += (10 * (t + 1) + z) as u64;
+        Ok(())
+    }
+
+    fn loads() -> Vec<Vec<u64>> {
+        vec![vec![9, 4], vec![6, 1], vec![3]]
+    }
+
+    #[test]
+    fn zero_devices_is_typed() {
+        let err = DeviceCluster::new(0, 1, MemoryBudget::unbounded()).unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "got {err}");
+        let pool = Arc::new(SmPool::new(1));
+        let err = DeviceCluster::with_primary(pool, 0, MemoryBudget::unbounded()).unwrap_err();
+        assert!(matches!(err, Error::InvalidConfig(_)), "got {err}");
+    }
+
+    #[test]
+    fn with_primary_adopts_the_pool_as_device_zero() {
+        let pool = Arc::new(SmPool::new(3));
+        let c = DeviceCluster::with_primary(Arc::clone(&pool), 2, MemoryBudget::unbounded())
+            .unwrap();
+        assert_eq!(c.n_devices(), 2);
+        assert!(Arc::ptr_eq(c.primary(), &pool));
+        assert_eq!(c.pool(1).n_workers(), 3);
+    }
+
+    #[test]
+    fn sharded_run_matches_single_pool_run() {
+        let sched = BatchScheduler::new(&loads());
+        let single = sched.run(&SmPool::new(2), &body).unwrap();
+        for devices in [1usize, 2, 3, 4] {
+            let cluster = DeviceCluster::new(devices, 2, MemoryBudget::unbounded()).unwrap();
+            let (run, cc) = cluster.run_sharded(&sched, &body).unwrap();
+            assert_eq!(run.tenants.len(), single.tenants.len());
+            for (a, b) in run.tenants.iter().zip(&single.tenants) {
+                assert_eq!(a.traffic, b.traffic, "devices={devices}");
+                assert_eq!(a.part_costs.len(), b.part_costs.len());
+            }
+            assert_eq!(run.item_costs.len(), single.item_costs.len());
+            assert_eq!(cc.n_devices(), devices);
+            assert_eq!(
+                cc.bytes_staged.iter().sum::<u64>(),
+                single
+                    .tenants
+                    .iter()
+                    .map(|t| t.traffic.output_bytes_written)
+                    .sum::<u64>()
+            );
+            assert_eq!(cc.bytes_merged, cc.bytes_staged[1..].iter().sum::<u64>());
+            if devices >= 2 {
+                assert!(cc.bytes_merged > 0, "devices={devices}: nothing merged");
+            } else {
+                assert_eq!(cc.bytes_merged, 0);
+            }
+            assert!(cc.imbalance.factor >= 1.0);
+        }
+    }
+
+    #[test]
+    fn more_devices_than_items_leaves_idle_devices() {
+        let sched = BatchScheduler::new(&vec![vec![5u64]]);
+        let cluster = DeviceCluster::new(3, 1, MemoryBudget::unbounded()).unwrap();
+        let (run, cc) = cluster.run_sharded(&sched, &body).unwrap();
+        assert_eq!(run.tenants[0].traffic.local_updates, 1);
+        assert_eq!(cc.bytes_staged[1], 0);
+        assert_eq!(cc.bytes_staged[2], 0);
+        assert_eq!(cc.device_makespans[1], Duration::ZERO);
+    }
+
+    #[test]
+    fn shard_over_budget_is_typed_before_any_partition_runs() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let sched = BatchScheduler::new(&loads());
+        // total load 23 over 2 devices => max shard 12 nnz = 48 B needed
+        let cluster = DeviceCluster::new(2, 1, MemoryBudget::bytes(40)).unwrap();
+        let ran = AtomicU64::new(0);
+        let err = cluster
+            .run_sharded(&sched, &|_w, _t, _z, _tr| {
+                ran.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(
+            matches!(err, Error::BudgetExceeded { needed, budget } if needed > budget),
+            "got {err}"
+        );
+        assert_eq!(ran.load(Ordering::Relaxed), 0, "admission must gate first");
+        // a budget that fits every shard admits the same batch
+        let cluster = DeviceCluster::new(2, 1, MemoryBudget::bytes(48)).unwrap();
+        assert!(cluster.run_sharded(&sched, &body).is_ok());
+    }
+
+    #[test]
+    fn makespans_come_from_the_hierarchical_lpt_path() {
+        let sched = BatchScheduler::new(&loads());
+        let cluster = DeviceCluster::new(2, 2, MemoryBudget::unbounded()).unwrap();
+        let (_, cc) = cluster.run_sharded(&sched, &body).unwrap();
+        assert_eq!(cc.device_makespans.len(), 2);
+        let max = cc.device_makespans.iter().copied().max().unwrap();
+        assert_eq!(cc.cluster_makespan(), max);
+    }
+}

@@ -31,6 +31,13 @@
 //!   partition)` items flattened into one longest-first queue and drained
 //!   by a single pool dispatch with per-tenant accumulators, so small
 //!   tenants backfill simulated SMs that would otherwise idle.
+//! * [`DeviceCluster`] — N pools acting as simulated GPUs: the batch
+//!   queue is LPT-sharded across devices (hierarchical LPT — devices
+//!   first, then each device's SMs), shards drain in fixed device order,
+//!   and results fold deterministically into device 0 (invariant D1:
+//!   cluster run ≡ single-pool run, bitwise). Inter-device reduction is
+//!   modeled by `metrics::ClusterCounters`, a side channel next to
+//!   `TrafficCounters`.
 //! * [`memgr`] — the session memory governor: per-mode layout copies
 //!   priced with the paper's packed-bits model, admitted against a byte
 //!   budget (`SPMTTKRP_BUDGET_BYTES`), LRU-evicted under pressure, and
@@ -44,6 +51,7 @@
 
 pub mod accum;
 pub mod batch;
+pub mod cluster;
 pub mod lanes;
 pub mod memgr;
 pub mod plan;
@@ -54,6 +62,7 @@ pub use accum::{GlobalStage, ModeAccumulator, RowSink, StagePool};
 pub use batch::{
     cost_ordered_queue, lpt_makespan, plan_rounds, BatchItem, BatchRun, BatchScheduler, TenantRun,
 };
+pub use cluster::DeviceCluster;
 pub use memgr::{
     MemoryBudget, MemoryGovernor, ResidencyReport, Slot, SlotKey, SlotResidency, TenantId,
 };
@@ -85,10 +94,26 @@ pub fn default_threads() -> usize {
         })
 }
 
+/// Default device count for a new session: `SPMTTKRP_DEVICES` if set
+/// (> 0), else 1 (single simulated GPU — the pre-cluster behavior). Like
+/// `default_threads`, read per call.
+pub fn default_devices() -> usize {
+    std::env::var("SPMTTKRP_DEVICES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n: &usize| n > 0)
+        .unwrap_or(1)
+}
+
 #[cfg(test)]
 mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(super::default_threads() >= 1);
+    }
+
+    #[test]
+    fn default_devices_positive() {
+        assert!(super::default_devices() >= 1);
     }
 }

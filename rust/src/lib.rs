@@ -82,11 +82,11 @@ pub mod prelude {
     pub use crate::baselines::MttkrpExecutor;
     pub use crate::coordinator::{DenseScratch, Engine, EngineConfig, UpdatePolicy};
     pub use crate::cpd::{als, CpdConfig, CpdResult};
-    pub use crate::exec::{MemoryBudget, MemoryGovernor, ResidencyReport, SmPool};
+    pub use crate::exec::{DeviceCluster, MemoryBudget, MemoryGovernor, ResidencyReport, SmPool};
     pub use crate::format::{memory::MemoryReport, ModeSpecificFormat};
     pub use crate::metrics::{
-        ExecReport, LatencyStats, ModeExecReport, ResidencyCounters, ServiceCounters,
-        ServiceReport, TrafficCounters,
+        ClusterCounters, ExecReport, LatencyStats, ModeExecReport, ResidencyCounters,
+        ServiceCounters, ServiceReport, TrafficCounters,
     };
     pub use crate::partition::{LoadBalance, ModePartitioning, VertexAssign};
     pub use crate::runtime::{Backend, NativeBackend, PjrtBackend};

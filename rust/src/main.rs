@@ -16,9 +16,9 @@ use std::process::ExitCode;
 
 use anyhow::{bail, Context, Result};
 
-use spmttkrp::api::{BackendKind, ExecutorBuilder};
+use spmttkrp::api::{BackendKind, DecomposeRequest, ExecutorBuilder, SessionBuilder};
 use spmttkrp::coordinator::Engine;
-use spmttkrp::cpd::{als, CpdConfig};
+use spmttkrp::cpd::{als, CpdConfig, CpdResult};
 use spmttkrp::format::memory::MemoryReport;
 use spmttkrp::partition::LoadBalance;
 use spmttkrp::runtime::PjrtBackend;
@@ -36,10 +36,16 @@ COMMANDS:
   info     --dataset <name> [--scale F] [--kappa N] [--rank N]
   mttkrp   --dataset <name> [--scale F] [--kappa N] [--rank N]
            [--backend native|pjrt] [--lb adaptive|scheme1|scheme2]
-           [--threads N] [--seg true|false]
+           [--threads N] [--seg true|false] [--devices N]
   cpd      --dataset <name> [--scale F] [--rank N] [--iters N]
            [--backend native|pjrt] [--kappa N] [--tol F]
+           [--devices N] [--poll true|false]
   warmup   (compile every artifact on the PJRT client)
+
+--devices N shards batched dispatches across N simulated GPUs (default
+SPMTTKRP_DEVICES, else 1); outputs are bitwise-identical at any N.
+--poll true drives cpd through the async service with the non-blocking
+Ticket::try_wait instead of a blocking wait.
 
 datasets: chicago enron nell-1 nips uber vast
 ";
@@ -104,13 +110,13 @@ fn lb_of(s: &str) -> Result<LoadBalance> {
     })
 }
 
-fn engine_of(args: &Args, tensor: &SparseTensorCOO) -> Result<Engine> {
+fn builder_of(args: &Args) -> Result<ExecutorBuilder> {
     let backend = match args.str_opt("backend").unwrap_or("native") {
         "native" => BackendKind::Native,
         "pjrt" => BackendKind::Pjrt,
         other => bail!("bad --backend '{other}'"),
     };
-    let builder = ExecutorBuilder::new()
+    Ok(ExecutorBuilder::new()
         .sm_count(args.get("kappa", 82)?)
         // --threads overrides SPMTTKRP_THREADS overrides available cores
         .threads(args.get("threads", spmttkrp::exec::default_threads())?)
@@ -118,8 +124,16 @@ fn engine_of(args: &Args, tensor: &SparseTensorCOO) -> Result<Engine> {
         .load_balance(lb_of(args.str_opt("lb").unwrap_or("adaptive"))?)
         .seg_kernel(args.get("seg", true)?)
         .fused(args.get("fused", true)?)
-        .backend(backend);
-    Ok(builder.build_engine(tensor)?)
+        .backend(backend))
+}
+
+fn engine_of(args: &Args, tensor: &SparseTensorCOO) -> Result<Engine> {
+    Ok(builder_of(args)?.build_engine(tensor)?)
+}
+
+/// `--devices` overrides `SPMTTKRP_DEVICES` overrides 1.
+fn devices_of(args: &Args) -> Result<usize> {
+    args.get("devices", spmttkrp::exec::default_devices())
 }
 
 fn cmd_gen(args: &Args) -> Result<()> {
@@ -190,21 +204,29 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn print_mode_line(m: &spmttkrp::metrics::ModeExecReport) {
+    println!(
+        "mode {}: {:>9.3} ms  traffic {}  atomics {}  local {}  imbalance {:.3}",
+        m.mode,
+        m.wall.as_secs_f64() * 1e3,
+        human_bytes(m.traffic.total_bytes()),
+        m.traffic.global_atomics,
+        m.traffic.local_updates,
+        m.imbalance.factor
+    );
+}
+
 fn cmd_mttkrp(args: &Args) -> Result<()> {
     let t = dataset(args)?;
+    let devices = devices_of(args)?;
+    if devices > 1 {
+        return cmd_mttkrp_clustered(args, &t, devices);
+    }
     let engine = engine_of(args, &t)?;
     let factors = FactorSet::random(&t.dims, engine.config.rank, args.get("seed", 42)?);
     let (_, report) = engine.mttkrp_all_modes_with_report(&factors)?;
     for m in &report.modes {
-        println!(
-            "mode {}: {:>9.3} ms  traffic {}  atomics {}  local {}  imbalance {:.3}",
-            m.mode,
-            m.wall.as_secs_f64() * 1e3,
-            human_bytes(m.traffic.total_bytes()),
-            m.traffic.global_atomics,
-            m.traffic.local_updates,
-            m.imbalance.factor
-        );
+        print_mode_line(m);
     }
     let total = report.total_wall();
     println!(
@@ -216,18 +238,62 @@ fn cmd_mttkrp(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// All modes as ONE batched dispatch sharded over the device cluster.
+/// Per-mode outputs and traffic are bitwise-identical to the single-
+/// device run (invariant D1); the extra line reports the modeled
+/// inter-device reduction.
+fn cmd_mttkrp_clustered(args: &Args, t: &SparseTensorCOO, devices: usize) -> Result<()> {
+    let rank: usize = args.get("rank", 32)?;
+    let mut session = SessionBuilder::new().devices(devices).build()?;
+    let h = session.prepare(t, &builder_of(args)?)?;
+    let factors = FactorSet::random(&t.dims, rank, args.get("seed", 42)?);
+    let reqs: Vec<_> = (0..t.n_modes()).map(|d| (h, d, &factors)).collect();
+    let batch = session.mttkrp_batch(&reqs)?;
+    for m in &batch.reports {
+        print_mode_line(m);
+    }
+    println!(
+        "total: {:.3} ms ({} modes, backend {})",
+        batch.dispatch.wall.as_secs_f64() * 1e3,
+        batch.reports.len(),
+        session.engine(h)?.backend().name()
+    );
+    if let Some(c) = &batch.dispatch.cluster {
+        let makespans: Vec<String> = c
+            .device_makespans
+            .iter()
+            .map(|d| format!("{:.3}", d.as_secs_f64() * 1e3))
+            .collect();
+        println!(
+            "cluster: devices={} staged={} merged={} makespans_ms=[{}] imbalance={:.3}",
+            c.n_devices(),
+            human_bytes(c.bytes_staged.iter().sum::<u64>()),
+            human_bytes(c.bytes_merged),
+            makespans.join(", "),
+            c.imbalance.factor
+        );
+    }
+    Ok(())
+}
+
 fn cmd_cpd(args: &Args) -> Result<()> {
     let t = dataset(args)?;
-    let engine = engine_of(args, &t)?;
+    let devices = devices_of(args)?;
+    let poll: bool = args.get("poll", false)?;
     let cfg = CpdConfig {
-        rank: engine.config.rank,
+        rank: args.get("rank", 32)?,
         max_iters: args.get("iters", 10)?,
         tol: args.get("tol", 1e-5)?,
         damp: args.get("damp", 1e-6)?,
         seed: args.get("seed", 42)?,
     };
     let t0 = std::time::Instant::now();
-    let res = als(&engine, &t, &cfg)?;
+    let (res, backend) = if poll || devices > 1 {
+        cpd_via_session(args, &t, &cfg, devices, poll)?
+    } else {
+        let engine = engine_of(args, &t)?;
+        (als(&engine, &t, &cfg)?, engine.backend().name().to_string())
+    };
     let wall = t0.elapsed();
     for (i, f) in res.fits.iter().enumerate() {
         println!("iter {:>3}: fit {f:.6}", i + 1);
@@ -238,9 +304,52 @@ fn cmd_cpd(args: &Args) -> Result<()> {
         res.iterations,
         res.final_fit(),
         wall.as_secs_f64(),
-        engine.backend().name()
+        backend
     );
     Ok(())
+}
+
+/// CPD through the session front-end: clustered when `devices > 1`, and
+/// driven through the async service's non-blocking `Ticket::try_wait`
+/// when `--poll true` (the blocking `run_decompose` core otherwise —
+/// same arithmetic either way).
+fn cpd_via_session(
+    args: &Args,
+    t: &SparseTensorCOO,
+    cfg: &CpdConfig,
+    devices: usize,
+    poll: bool,
+) -> Result<(CpdResult, String)> {
+    let mut builder = SessionBuilder::new();
+    if devices > 1 {
+        builder = builder.devices(devices);
+    }
+    let mut session = builder.build()?;
+    let h = session.prepare(t, &builder_of(args)?)?;
+    let backend = session.engine(h)?.backend().name().to_string();
+    if devices > 1 {
+        println!("cluster: devices={devices} (D1: fits identical to --devices 1)");
+    }
+    if !poll {
+        let res = session.run_decompose(&DecomposeRequest::new(h, cfg.clone()))?;
+        return Ok((res, backend));
+    }
+    let service = session.into_service()?;
+    let ticket = service.submit_decompose(DecomposeRequest::new(h, cfg.clone()))?;
+    let mut polls: u64 = 0;
+    let res = loop {
+        match ticket.try_wait() {
+            Ok(res) => break res,
+            Err(spmttkrp::Error::NotReady) => {
+                polls += 1;
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    };
+    service.shutdown();
+    println!("poll: resolved after {polls} NotReady polls (Ticket::try_wait)");
+    Ok((res, backend))
 }
 
 fn cmd_warmup() -> Result<()> {

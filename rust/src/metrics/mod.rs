@@ -109,6 +109,47 @@ impl ResidencyCounters {
     }
 }
 
+/// Modeled inter-device traffic of one clustered dispatch
+/// (`exec::cluster::DeviceCluster::run_sharded`): what the hierarchical
+/// LPT staged on each simulated GPU and what the fixed-order cross-device
+/// reduction moved. Like rebuild traffic, this is deliberately **not**
+/// folded into [`TrafficCounters`] — invariant D1 (DESIGN.md §6)
+/// compares a clustered run's per-tenant traffic bitwise against the
+/// single-pool run, so the reduction cost is a side channel.
+#[derive(Clone, Debug)]
+pub struct ClusterCounters {
+    /// Per device: output bytes its shard staged (the row-partials that
+    /// exist on that device before the cross-device fold), measured from
+    /// the shard's own `TrafficCounters::output_bytes_written`.
+    pub bytes_staged: Vec<u64>,
+    /// Bytes moved by the cross-device reduction: every non-root device's
+    /// staged bytes travel to device 0 (the fold root), so this is
+    /// `bytes_staged[1..].sum()` — zero on a 1-device cluster.
+    pub bytes_merged: u64,
+    /// Per device: modeled κ-SM makespan of its shard (level-2 LPT over
+    /// that device's measured item costs). The cluster's modeled time is
+    /// their max — devices are concurrent, the host fold is ordered.
+    pub device_makespans: Vec<Duration>,
+    /// Cross-device nnz-load imbalance from the level-1 LPT
+    /// (`partition::device::DeviceSharding::imbalance`).
+    pub imbalance: Imbalance,
+}
+
+impl ClusterCounters {
+    pub fn n_devices(&self) -> usize {
+        self.device_makespans.len()
+    }
+
+    /// Modeled time of the clustered dispatch: the slowest device.
+    pub fn cluster_makespan(&self) -> Duration {
+        self.device_makespans
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or_default()
+    }
+}
+
 /// Result of executing spMTTKRP along one mode.
 #[derive(Clone, Debug)]
 pub struct ModeExecReport {
@@ -288,6 +329,36 @@ mod tests {
         assert_eq!(a.evictions, 2);
         assert_eq!(a.rebuilds, 4);
         assert_eq!(a.rebuild_bytes, 60);
+    }
+
+    #[test]
+    fn cluster_counters_makespan_and_devices() {
+        let c = ClusterCounters {
+            bytes_staged: vec![100, 60, 0],
+            bytes_merged: 60,
+            device_makespans: vec![
+                Duration::from_micros(9),
+                Duration::from_micros(12),
+                Duration::ZERO,
+            ],
+            imbalance: Imbalance::of(&[100, 60, 0]),
+        };
+        assert_eq!(c.n_devices(), 3);
+        assert_eq!(c.cluster_makespan(), Duration::from_micros(12));
+        assert_eq!(c.bytes_merged, c.bytes_staged[1..].iter().sum::<u64>());
+    }
+
+    #[test]
+    fn cluster_counters_single_device_merges_nothing() {
+        let c = ClusterCounters {
+            bytes_staged: vec![100],
+            bytes_merged: 0,
+            device_makespans: vec![Duration::from_micros(4)],
+            imbalance: Imbalance::of(&[100]),
+        };
+        assert_eq!(c.n_devices(), 1);
+        assert_eq!(c.bytes_merged, 0);
+        assert_eq!(c.cluster_makespan(), Duration::from_micros(4));
     }
 
     #[test]

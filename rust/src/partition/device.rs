@@ -1,0 +1,178 @@
+//! Device-level sharding — level 1 of the hierarchical LPT behind the
+//! simulated multi-GPU cluster (`exec::cluster::DeviceCluster`).
+//!
+//! The batch layer already flattens N tenants' per-mode partitions into
+//! ONE longest-first queue (`exec::cost_ordered_queue`: cost descending,
+//! ties broken `(tenant, partition)` ascending — a total order). This
+//! module splits that queue across D simulated devices the same way the
+//! queue itself is later drained across SMs: walk the queue
+//! longest-first and hand each item to the currently least-loaded
+//! device, breaking load ties by the lowest device index — classic LPT
+//! with devices as the machines (AMPED, arXiv:2507.15121, partitions
+//! across GPUs first). Each device then replays its shard through the
+//! existing per-pool drain (`exec::BatchScheduler`), which is level 2.
+//!
+//! Determinism: the input order is a total order and both tie rules are
+//! positional, so identical loads always produce identical shards — the
+//! scheduling half of invariant D1 (DESIGN.md §6). Each shard preserves
+//! the queue's relative order, so a shard is itself a longest-first
+//! queue over its items.
+
+use crate::exec::BatchItem;
+use crate::util::stats::Imbalance;
+
+/// The result of splitting one cost-ordered queue across `D` devices.
+#[derive(Clone, Debug)]
+pub struct DeviceSharding {
+    /// `shards[d]` = device `d`'s `(tenant, partition)` items, a
+    /// subsequence of the input queue (still longest-first).
+    pub shards: Vec<Vec<BatchItem>>,
+    /// `loads[d]` = summed nnz cost of device `d`'s shard.
+    pub loads: Vec<u64>,
+}
+
+impl DeviceSharding {
+    pub fn n_devices(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total items across all shards (== the input queue length).
+    pub fn n_items(&self) -> usize {
+        self.shards.iter().map(Vec::len).sum()
+    }
+
+    /// Cross-device load imbalance (max/mean over per-device nnz loads)
+    /// — the level-1 analogue of `partition::stats`' per-SM imbalance.
+    pub fn imbalance(&self) -> Imbalance {
+        Imbalance::of(&self.loads)
+    }
+}
+
+/// LPT the `queue` across `n_devices` devices. `queue` must already be
+/// cost-ordered (`exec::cost_ordered_queue`); more devices than items is
+/// fine (the surplus shards stay empty).
+///
+/// `n_devices == 0` is a caller bug — the cluster constructor rejects it
+/// with a typed error before any sharding happens, so this asserts.
+pub fn shard_queue(queue: &[BatchItem], n_devices: usize) -> DeviceSharding {
+    assert!(n_devices > 0, "shard_queue: zero devices (caller-validated)");
+    let mut shards: Vec<Vec<BatchItem>> = vec![Vec::new(); n_devices];
+    let mut loads = vec![0u64; n_devices];
+    for &it in queue {
+        // least-loaded device, lowest index on ties — same greedy rule
+        // (and the same linear scan) as the scheme-1 nnz partitioner.
+        let d = (0..n_devices).min_by_key(|&d| loads[d]).unwrap_or(0);
+        shards[d].push(it);
+        loads[d] += it.cost;
+    }
+    DeviceSharding { shards, loads }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn item(tenant: usize, partition: usize, cost: u64) -> BatchItem {
+        BatchItem {
+            tenant,
+            partition,
+            cost,
+        }
+    }
+
+    fn queue() -> Vec<BatchItem> {
+        // already cost-ordered, with a tie (t0/p1 vs t1/p0)
+        vec![
+            item(0, 0, 90),
+            item(1, 1, 50),
+            item(0, 1, 40),
+            item(1, 0, 40),
+            item(2, 0, 10),
+        ]
+    }
+
+    #[test]
+    fn covers_every_item_exactly_once() {
+        let q = queue();
+        let s = shard_queue(&q, 3);
+        assert_eq!(s.n_devices(), 3);
+        assert_eq!(s.n_items(), q.len());
+        let mut seen: Vec<(usize, usize)> = s
+            .shards
+            .iter()
+            .flatten()
+            .map(|it| (it.tenant, it.partition))
+            .collect();
+        seen.sort_unstable();
+        let mut want: Vec<(usize, usize)> =
+            q.iter().map(|it| (it.tenant, it.partition)).collect();
+        want.sort_unstable();
+        assert_eq!(seen, want);
+        assert_eq!(
+            s.loads.iter().sum::<u64>(),
+            q.iter().map(|it| it.cost).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn greedy_least_loaded_lowest_index() {
+        // 90 -> d0 (tie, lowest index); 50 -> d1; 40 -> d1 (50 < 90,
+        // giving [90, 90]); 40 -> d0 (tie, lowest index); 10 -> d1.
+        let s = shard_queue(&queue(), 2);
+        assert_eq!(s.loads, vec![130, 100]);
+        assert_eq!(
+            s.shards[0]
+                .iter()
+                .map(|it| (it.tenant, it.partition))
+                .collect::<Vec<_>>(),
+            vec![(0, 0), (1, 0)]
+        );
+        assert_eq!(
+            s.shards[1]
+                .iter()
+                .map(|it| (it.tenant, it.partition))
+                .collect::<Vec<_>>(),
+            vec![(1, 1), (0, 1), (2, 0)]
+        );
+    }
+
+    #[test]
+    fn single_device_takes_whole_queue_in_order() {
+        let q = queue();
+        let s = shard_queue(&q, 1);
+        assert_eq!(s.shards[0], q);
+        assert_eq!(s.loads, vec![230]);
+        assert!((s.imbalance().factor - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_devices_than_items_leaves_empty_shards() {
+        let q = vec![item(0, 0, 5), item(0, 1, 3)];
+        let s = shard_queue(&q, 4);
+        assert_eq!(s.shards[0].len(), 1);
+        assert_eq!(s.shards[1].len(), 1);
+        assert!(s.shards[2].is_empty() && s.shards[3].is_empty());
+        assert_eq!(s.loads, vec![5, 3, 0, 0]);
+    }
+
+    #[test]
+    fn deterministic_for_identical_input() {
+        let q = queue();
+        let a = shard_queue(&q, 3);
+        let b = shard_queue(&q, 3);
+        assert_eq!(a.loads, b.loads);
+        for d in 0..3 {
+            assert_eq!(a.shards[d], b.shards[d]);
+        }
+    }
+
+    #[test]
+    fn shards_stay_longest_first() {
+        let s = shard_queue(&queue(), 2);
+        for shard in &s.shards {
+            for w in shard.windows(2) {
+                assert!(w[0].cost >= w[1].cost);
+            }
+        }
+    }
+}

@@ -21,6 +21,7 @@
 //! `rust/tests/prop_coordinator.rs` verifies the bound against brute-forced
 //! optima.
 
+pub mod device;
 pub mod stats;
 
 use crate::hypergraph::Hypergraph;

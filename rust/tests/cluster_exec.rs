@@ -1,0 +1,355 @@
+//! The property-test harness pinning the device-cluster layer
+//! (DESIGN.md §6, invariant D1):
+//!
+//!   * a session clustered over N simulated GPUs
+//!     (`SessionBuilder::devices`) is **bitwise-equal** to the plain
+//!     single-pool session — single-call `mttkrp`, batched
+//!     `mttkrp_batch`, and end-to-end `decompose` all produce identical
+//!     output factors, fit trajectories, and per-tenant
+//!     `TrafficCounters` across N ∈ {1, 2, 3}, κ ∈ {1, 4, 7}, random
+//!     tensor shapes, and mixed executor kinds;
+//!   * `ClusterCounters` is a pure side channel: nonzero inter-device
+//!     reduction bytes for N ≥ 2, per-device makespans from the
+//!     hierarchical LPT path, and `bytes_merged = Σ bytes_staged[1..]`
+//!     (device 0 is the fold root) — never folded into the per-tenant
+//!     traffic that D1 pins;
+//!   * adversarial cases (0 devices, more devices than partitions, a
+//!     device staging budget too small for its shard, a builder whose
+//!     declared device count disagrees with the session) fail with the
+//!     right typed `api::Error` before any partition runs, and the
+//!     session stays usable after every rejection.
+//!
+//! Generators are seeded through `util::rng`; every assertion message
+//! carries the case seed for replay.
+
+use spmttkrp::api::{Error, ExecutorBuilder, ExecutorKind, Session, SessionBuilder};
+use spmttkrp::cpd::CpdConfig;
+use spmttkrp::exec::MemoryBudget;
+use spmttkrp::tensor::{FactorSet, SparseTensorCOO};
+use spmttkrp::util::rng::Rng;
+
+/// Random small tensor: 2–4 modes, dims 1..28, nnz 1..400 — small enough
+/// that κ = 7 regularly forces Scheme 2 (Global updates), whose staged
+/// partition-ordered merge is exactly what the cross-device fold extends.
+fn random_tensor(rng: &mut Rng) -> SparseTensorCOO {
+    let n = 2 + rng.next_below(3) as usize;
+    let dims: Vec<u32> = (0..n).map(|_| 1 + rng.next_below(28) as u32).collect();
+    let nnz = 1 + rng.next_below(400) as usize;
+    let mut inds: Vec<Vec<u32>> = vec![Vec::with_capacity(nnz); n];
+    let mut vals = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        for (w, col) in inds.iter_mut().enumerate() {
+            let i = if rng.next_f64() < 0.5 {
+                rng.next_below(dims[w] as u64)
+            } else {
+                rng.next_power_law(dims[w] as u64, 2.0)
+            };
+            col.push(i as u32);
+        }
+        vals.push(rng.next_normal() as f32);
+    }
+    SparseTensorCOO::new(dims, inds, vals)
+        .unwrap()
+        .collapse_duplicates()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what} [{i}]: clustered {x} vs control {y}");
+    }
+}
+
+/// D1, MTTKRP: for every (N devices, κ) cell, randomized multi-tenant
+/// mixed-kind batches on a clustered session are checked bitwise
+/// (outputs + per-tenant counters) against sequential replay on an
+/// unclustered control session — and the single-call `mttkrp` path,
+/// which on a clustered session routes through the sharded dispatch as
+/// a batch of one, is checked the same way.
+#[test]
+fn prop_clustered_mttkrp_bitwise_equals_single_pool() {
+    let mut rng = Rng::new(0xd1_0001);
+    for &devices in &[1usize, 2, 3] {
+        for &kappa in &[1usize, 4, 7] {
+            let seed = 0xd1_0001u64 ^ ((devices as u64) << 16) ^ (kappa as u64);
+            let n_tenants = 1 + rng.next_below(4) as usize;
+            let mut control = Session::builder().build().unwrap();
+            let mut subject = SessionBuilder::new().devices(devices).build().unwrap();
+            let mut tenants = Vec::new();
+            for ti in 0..n_tenants {
+                let t = random_tensor(&mut rng);
+                let rank = [4usize, 8][rng.next_below(2) as usize];
+                let kind = match rng.next_below(6) {
+                    0 => ExecutorKind::Parti,
+                    1 => ExecutorKind::Blco,
+                    2 => ExecutorKind::MmCsf,
+                    _ => ExecutorKind::Ours,
+                };
+                let b = ExecutorBuilder::new().kind(kind).rank(rank).sm_count(kappa);
+                let hc = control
+                    .prepare(&t, &b)
+                    .unwrap_or_else(|e| panic!("case {seed} tenant {ti}: control prepare: {e}"));
+                let hs = subject
+                    .prepare(&t, &b)
+                    .unwrap_or_else(|e| panic!("case {seed} tenant {ti}: subject prepare: {e}"));
+                let factors = FactorSet::random(&t.dims, rank, seed ^ (ti as u64) << 8);
+                tenants.push((t, hc, hs, factors, kind));
+            }
+
+            // batched path: every tenant's full mode sweep in ONE dispatch
+            let reqs: Vec<_> = tenants
+                .iter()
+                .flat_map(|(t, _, hs, fs, _)| (0..t.n_modes()).map(move |d| (*hs, d, fs)))
+                .collect();
+            let batch = subject
+                .mttkrp_batch(&reqs)
+                .unwrap_or_else(|e| panic!("case {seed}: clustered batch failed: {e}"));
+
+            // the cluster side channel has the right shape and fold rule
+            let c = batch
+                .dispatch
+                .cluster
+                .as_ref()
+                .unwrap_or_else(|| panic!("case {seed}: clustered session must report counters"));
+            assert_eq!(c.n_devices(), devices, "case {seed}");
+            assert_eq!(c.bytes_staged.len(), devices, "case {seed}");
+            assert_eq!(c.device_makespans.len(), devices, "case {seed}");
+            assert_eq!(
+                c.bytes_merged,
+                c.bytes_staged[1..].iter().sum::<u64>(),
+                "case {seed}: device 0 is the fold root — it stages, never merges"
+            );
+            if devices == 1 {
+                assert_eq!(c.bytes_merged, 0, "case {seed}: nothing crosses one device");
+            }
+            assert!(
+                c.device_makespans.iter().all(|&d| d <= c.cluster_makespan()),
+                "case {seed}: cluster makespan is the slowest device"
+            );
+
+            // D1 proper: bitwise against the unclustered control
+            let mut r = 0usize;
+            for (t, hc, hs, fs, kind) in &tenants {
+                for mode in 0..t.n_modes() {
+                    let (want, want_rep) = control.mttkrp(*hc, fs, mode).unwrap();
+                    assert_bits_eq(
+                        &batch.outputs[r],
+                        &want,
+                        &format!("case {seed} ({kind:?} mode {mode}, N={devices})"),
+                    );
+                    assert_eq!(
+                        batch.reports[r].traffic, want_rep.traffic,
+                        "case {seed} ({kind:?} mode {mode}, N={devices}): counters"
+                    );
+                    // single-call path on the clustered session too
+                    let (got1, got1_rep) = subject.mttkrp(*hs, fs, mode).unwrap();
+                    assert_bits_eq(
+                        &got1,
+                        &want,
+                        &format!("case {seed} single-call ({kind:?} mode {mode}, N={devices})"),
+                    );
+                    assert_eq!(got1_rep.traffic, want_rep.traffic, "case {seed}: single-call counters");
+                    r += 1;
+                }
+            }
+        }
+    }
+}
+
+/// D1, end-to-end ALS: a clustered `decompose` (every per-iteration
+/// spMTTKRP goes through the sharded dispatch) reproduces the
+/// unclustered control exactly — fits, factor bits, weights, iteration
+/// counts, and per-iteration traffic.
+#[test]
+fn prop_clustered_decompose_matches_single_pool() {
+    let mut rng = Rng::new(0xd1_de00);
+    for &(devices, kappa) in &[(1usize, 4usize), (2, 1), (2, 7), (3, 4)] {
+        let seed = 0xd1_de00u64 ^ ((devices as u64) << 16) ^ (kappa as u64);
+        let n_tenants = 1 + rng.next_below(2) as usize;
+        let mut control = Session::builder().build().unwrap();
+        let mut subject = SessionBuilder::new().devices(devices).build().unwrap();
+        let b = ExecutorBuilder::new().rank(4).sm_count(kappa);
+        let mut cases = Vec::new();
+        for ti in 0..n_tenants {
+            let t = random_tensor(&mut rng);
+            let hc = control.prepare(&t, &b).unwrap();
+            let hs = subject.prepare(&t, &b).unwrap();
+            let cfg = CpdConfig {
+                rank: 4,
+                max_iters: 2 + rng.next_below(2) as usize,
+                tol: 0.0,
+                damp: 1e-4,
+                seed: seed ^ ti as u64,
+            };
+            cases.push((hc, hs, cfg));
+        }
+        // both the single-call path and the lock-step batch path
+        for (ti, (hc, hs, cfg)) in cases.iter().enumerate() {
+            let want = control.decompose(*hc, cfg).unwrap();
+            let got = subject.decompose(*hs, cfg).unwrap();
+            assert_eq!(got.fits, want.fits, "case {seed} tenant {ti} (N={devices}): fits");
+            assert_eq!(got.weights, want.weights, "case {seed} tenant {ti}: weights");
+            assert_eq!(got.iterations, want.iterations, "case {seed} tenant {ti}: iterations");
+            for (m, (gf, wf)) in got.factors.factors.iter().zip(&want.factors.factors).enumerate()
+            {
+                assert_bits_eq(
+                    &gf.data,
+                    &wf.data,
+                    &format!("case {seed} tenant {ti} mode {m} (N={devices})"),
+                );
+            }
+            for (it, (gr, wr)) in got.reports.iter().zip(&want.reports).enumerate() {
+                assert_eq!(
+                    gr.total_traffic(),
+                    wr.total_traffic(),
+                    "case {seed} tenant {ti} iter {it}: traffic"
+                );
+            }
+        }
+        let reqs: Vec<_> = cases.iter().map(|(_, hs, cfg)| (*hs, cfg)).collect();
+        let batch = subject.decompose_batch(&reqs).unwrap();
+        for (ti, ((hc, _, cfg), got)) in cases.iter().zip(&batch).enumerate() {
+            let want = control.decompose(*hc, cfg).unwrap();
+            assert_eq!(got.fits, want.fits, "case {seed} tenant {ti}: batched fits");
+        }
+    }
+}
+
+/// The acceptance check made deterministic: with N = 2 and enough real
+/// work that level-1 LPT gives both devices nonzero-output shards, the
+/// modeled inter-device reduction is strictly positive and the
+/// makespans come from the per-device LPT schedules.
+#[test]
+fn cluster_counters_report_nonzero_reduction_for_two_devices() {
+    let mut rng = Rng::new(0xd1_c0de);
+    let mut session = SessionBuilder::new().devices(2).build().unwrap();
+    let b = ExecutorBuilder::new().rank(8).sm_count(4);
+    let mut reqs_owned = Vec::new();
+    for _ in 0..3 {
+        let t = loop {
+            let t = random_tensor(&mut rng);
+            if t.nnz() >= 100 {
+                break t;
+            }
+        };
+        let fs = FactorSet::random(&t.dims, 8, 77);
+        let h = session.prepare(&t, &b).unwrap();
+        reqs_owned.push((h, fs));
+    }
+    let reqs: Vec<_> = reqs_owned.iter().map(|(h, fs)| (*h, 0usize, fs)).collect();
+    let batch = session.mttkrp_batch(&reqs).unwrap();
+    let c = batch.dispatch.cluster.expect("clustered session reports counters");
+    assert_eq!(c.n_devices(), 2);
+    assert!(
+        c.bytes_staged.iter().all(|&bs| bs > 0),
+        "3 tenants × 4 partitions over 2 devices: every device stages, got {:?}",
+        c.bytes_staged
+    );
+    assert!(
+        c.bytes_merged > 0,
+        "N = 2 must model a nonzero cross-device reduction, got {:?}",
+        c.bytes_staged
+    );
+    assert_eq!(c.device_makespans.len(), 2);
+    assert!(c.cluster_makespan() >= c.device_makespans[0]);
+    assert!(c.cluster_makespan() >= c.device_makespans[1]);
+    assert!(c.imbalance.factor >= 1.0, "imbalance is max/mean of device loads");
+}
+
+// --------------------------------------------------------- adversarial
+
+#[test]
+fn adversarial_zero_devices_is_typed_everywhere() {
+    let err = SessionBuilder::new().devices(0).build().unwrap_err();
+    assert!(matches!(err, Error::InvalidConfig(_)), "session: got {err}");
+    let err = ExecutorBuilder::new().rank(4).sm_count(2).devices(0).validate().unwrap_err();
+    assert!(matches!(err, Error::InvalidConfig(_)), "builder: got {err}");
+    let err = spmttkrp::exec::DeviceCluster::new(0, 1, MemoryBudget::unbounded()).unwrap_err();
+    assert!(matches!(err, Error::InvalidConfig(_)), "cluster: got {err}");
+}
+
+#[test]
+fn adversarial_more_devices_than_partitions_matches_control() {
+    // 8 devices over a κ = 1 tenant: 7 devices idle, results unchanged.
+    let mut rng = Rng::new(0xd1_ad01);
+    let t = random_tensor(&mut rng);
+    let b = ExecutorBuilder::new().rank(4).sm_count(1);
+    let mut control = Session::builder().build().unwrap();
+    let mut subject = SessionBuilder::new().devices(8).build().unwrap();
+    let hc = control.prepare(&t, &b).unwrap();
+    let hs = subject.prepare(&t, &b).unwrap();
+    let fs = FactorSet::random(&t.dims, 4, 31);
+    let batch = subject.mttkrp_batch(&[(hs, 0, &fs)]).unwrap();
+    let (want, want_rep) = control.mttkrp(hc, &fs, 0).unwrap();
+    assert_bits_eq(&batch.outputs[0], &want, "8 devices, 1 partition");
+    assert_eq!(batch.reports[0].traffic, want_rep.traffic);
+    let c = batch.dispatch.cluster.unwrap();
+    assert_eq!(c.n_devices(), 8);
+    // exactly one device staged anything; the other seven sat idle
+    assert_eq!(c.bytes_staged.iter().filter(|&&bs| bs > 0).count(), 1);
+    assert_eq!(c.bytes_merged, c.bytes_staged[1..].iter().sum::<u64>());
+}
+
+#[test]
+fn adversarial_device_budget_too_small_for_its_shard() {
+    // A device staging budget the big tenant's shard cannot fit: the
+    // whole dispatch is a typed BudgetExceeded BEFORE any partition
+    // runs — and the same session still serves dispatches whose shards
+    // DO fit, so admission is per-dispatch, not a poisoned state.
+    let mut rng = Rng::new(0xd1_ad02);
+    let big = loop {
+        let t = random_tensor(&mut rng);
+        if t.nnz() >= 100 {
+            break t;
+        }
+    };
+    let small = SparseTensorCOO::new(
+        vec![6, 5, 4],
+        vec![vec![0, 1, 2, 5], vec![1, 2, 3, 4], vec![2, 3, 0, 1]],
+        vec![1.0, 2.0, 3.0, 4.0],
+    )
+    .unwrap();
+    // 64 B per device: the small tenant's whole-mode shard (4 nnz × 4 B)
+    // fits; any shard of the big tenant (≥ 50 nnz × 4 B) cannot.
+    let mut session = SessionBuilder::new()
+        .devices(2)
+        .device_budget(MemoryBudget::bytes(64))
+        .build()
+        .unwrap();
+    let b = ExecutorBuilder::new().rank(4).sm_count(2);
+    let hb = session.prepare(&big, &b).unwrap();
+    let hs = session.prepare(&small, &b).unwrap();
+    let fb = FactorSet::random(&big.dims, 4, 41);
+    let fs = FactorSet::random(&small.dims, 4, 42);
+
+    let err = session.mttkrp_batch(&[(hb, 0, &fb), (hs, 0, &fs)]).unwrap_err();
+    match err {
+        Error::BudgetExceeded { needed, budget } => {
+            assert_eq!(budget, 64);
+            assert!(needed > 64, "needed {needed} must exceed the 64 B device budget");
+        }
+        other => panic!("expected BudgetExceeded, got {other}"),
+    }
+    // the small tenant's own dispatch still fits and still runs
+    let ok = session.mttkrp_batch(&[(hs, 0, &fs)]).unwrap();
+    assert_eq!(ok.outputs.len(), 1);
+    assert!(session.mttkrp(hs, &fs, 0).is_ok(), "session unusable after rejection");
+}
+
+#[test]
+fn adversarial_builder_device_count_mismatch_is_typed() {
+    let mut rng = Rng::new(0xd1_ad03);
+    let t = random_tensor(&mut rng);
+    let mut session = SessionBuilder::new().devices(2).build().unwrap();
+    let err = session
+        .prepare(&t, &ExecutorBuilder::new().rank(4).sm_count(2).devices(3))
+        .unwrap_err();
+    assert!(matches!(err, Error::InvalidConfig(_)), "got {err}");
+    assert_eq!(session.n_prepared(), 0);
+    // declaring the session's actual count is accepted
+    let h = session
+        .prepare(&t, &ExecutorBuilder::new().rank(4).sm_count(2).devices(2))
+        .unwrap();
+    let fs = FactorSet::random(&t.dims, 4, 51);
+    assert!(session.mttkrp(h, &fs, 0).is_ok());
+}

@@ -10,9 +10,14 @@ against the same-named file in --baseline, and prints a markdown delta
 table per bench.
 
 Exit policy — the trajectory is *informative*, the schema is *contract*:
-  * exit 1 only when a current file is unparseable or schema-broken
-    (missing required keys, wrong types, unknown schema version) — a
-    writer regression must fail CI;
+  * exit 1 when a current file is unparseable or schema-broken (missing
+    required keys, wrong types, unknown schema version) — a writer
+    regression must fail CI;
+  * exit 1 when a bench present in the committed baseline emitted no
+    current report at all — a silently-skipped bench (deleted, renamed,
+    or crashed before writing) would otherwise vanish from the
+    trajectory without anyone noticing; the failure names each missing
+    bench. Intentional removals must delete the baseline file too;
   * timing deltas NEVER fail the job (smoke-scale runs on shared CI
     runners are noisy); deltas beyond --threshold are flagged ⚠ in the
     table and counted in the summary line;
@@ -93,6 +98,13 @@ def main():
               "did the benches run?")
         return 1
 
+    # Every committed baseline bench must have a current counterpart: a
+    # bench that stopped emitting is a hard failure, not a skipped row.
+    current_names = {os.path.basename(f) for f in current_files}
+    baseline_files = sorted(glob.glob(os.path.join(args.baseline, "BENCH_*.json")))
+    missing_benches = [os.path.basename(f) for f in baseline_files
+                       if os.path.basename(f) not in current_names]
+
     schema_errors = []
     flagged = 0
     notes = []
@@ -159,11 +171,27 @@ def main():
             print(f"- {n}")
         print()
 
+    if missing_benches:
+        print("### Missing benches (failing)")
+        for name in missing_benches:
+            print(f"- {name}: committed baseline has no current report — "
+                  "the bench was skipped, renamed, or crashed before writing "
+                  "(delete the baseline file if the removal is intentional)")
+        print()
+
     if schema_errors:
         print("### Schema errors (failing)")
         for e in schema_errors:
             print(f"- {e}")
-        print("\nbench-diff: FAIL — schema contract broken", file=sys.stderr)
+
+    if schema_errors or missing_benches:
+        reasons = []
+        if schema_errors:
+            reasons.append("schema contract broken")
+        if missing_benches:
+            reasons.append("baseline bench(es) missing from current run: "
+                           + ", ".join(missing_benches))
+        print(f"\nbench-diff: FAIL — {'; '.join(reasons)}", file=sys.stderr)
         return 1
 
     print(f"bench-diff: ok — {len(current_files)} report(s), "

@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Fixture tests for scripts/bench_diff.py — run with `python3 scripts/test_bench_diff.py`.
+
+Exercises the exit-policy contract end to end by invoking the script as
+a subprocess over temp-dir fixtures:
+  * matching baseline/current        -> exit 0
+  * new bench without a baseline     -> exit 0 (note, not failure)
+  * baseline bench missing from the
+    current run                      -> exit 1, names the bench
+  * schema-broken current report     -> exit 1
+  * timing regression beyond the
+    threshold                        -> exit 0 (flagged, warn-only)
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "bench_diff.py")
+
+
+def report(bench, cases):
+    return {
+        "schema": 1,
+        "bench": bench,
+        "git_rev": "testrev",
+        "scale": 0.01,
+        "reps": 1,
+        "cases": [
+            {"case": name, "median_ns": med, "p95_ns": med * 1.2}
+            for name, med in cases
+        ],
+    }
+
+
+def write(dirname, name, rep):
+    with open(os.path.join(dirname, name), "w") as f:
+        json.dump(rep, f)
+
+
+def run_diff(baseline, current):
+    proc = subprocess.run(
+        [sys.executable, SCRIPT, "--baseline", baseline, "--current", current],
+        capture_output=True,
+        text=True,
+    )
+    return proc.returncode, proc.stdout + proc.stderr
+
+
+def check(label, cond, out):
+    if not cond:
+        print(f"FAIL: {label}\n--- bench_diff output ---\n{out}")
+        sys.exit(1)
+    print(f"ok: {label}")
+
+
+def main():
+    with tempfile.TemporaryDirectory() as base, tempfile.TemporaryDirectory() as cur:
+        # 1. matching pair passes
+        write(base, "BENCH_alpha.json", report("alpha", [("small", 1e6)]))
+        write(cur, "BENCH_alpha.json", report("alpha", [("small", 1.1e6)]))
+        code, out = run_diff(base, cur)
+        check("matching baseline/current exits 0", code == 0, out)
+
+        # 2. a new bench with no baseline is a note, not a failure
+        write(cur, "BENCH_beta.json", report("beta", [("x", 2e6)]))
+        code, out = run_diff(base, cur)
+        check("new bench without baseline exits 0", code == 0, out)
+        check("new bench is noted", "no committed baseline" in out, out)
+
+        # 3. a regression beyond the threshold is flagged but warn-only
+        write(cur, "BENCH_alpha.json", report("alpha", [("small", 9e6)]))
+        code, out = run_diff(base, cur)
+        check("timing regression exits 0 (warn-only)", code == 0, out)
+        check("regression is flagged", "⚠" in out, out)
+        write(cur, "BENCH_alpha.json", report("alpha", [("small", 1.1e6)]))
+
+        # 4. baseline bench missing from the current run is a hard failure
+        #    that names the bench
+        write(base, "BENCH_gamma.json", report("gamma", [("y", 3e6)]))
+        code, out = run_diff(base, cur)
+        check("missing bench exits 1", code == 1, out)
+        check("missing bench is named", "BENCH_gamma.json" in out, out)
+        check("failure says why", "missing from current run" in out, out)
+        os.remove(os.path.join(base, "BENCH_gamma.json"))
+
+        # 5. schema-broken current report fails
+        broken = report("alpha", [("small", 1e6)])
+        del broken["git_rev"]
+        write(cur, "BENCH_alpha.json", broken)
+        code, out = run_diff(base, cur)
+        check("schema-broken report exits 1", code == 1, out)
+        check("schema failure is reported", "schema contract broken" in out, out)
+
+    print("test_bench_diff: all cases pass")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
