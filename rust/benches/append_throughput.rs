@@ -1,0 +1,191 @@
+//! Bench: append throughput — incremental layout repair vs forced rebuild.
+//!
+//!     cargo bench --bench append_throughput
+//!     SPMTTKRP_BENCH_SCALE=0.02 SPMTTKRP_BENCH_REPS=3 cargo bench ...
+//!
+//! The same seeded append schedule (6 rounds of ~5% of the base nnz,
+//! biased toward coordinates the tensor already has) is applied to two
+//! sessions that differ only in the rebuild-threshold knob:
+//!
+//!   * `repair`  — the session default: modes whose merge preserves the
+//!     partition order are repaired in place (prefix kept verbatim, only
+//!     touched partitions rescanned);
+//!   * `rebuild` — threshold 0, which forces every non-empty append down
+//!     the from-scratch path (the cost an eviction-and-rebuild or a
+//!     re-`prepare` would pay per round).
+//!
+//! Reported per variant: wallclock of the append calls across the whole
+//! schedule (median ± spread over reps), appended-nnz throughput, and the
+//! `RepairReport` totals (modes repaired vs rebuilt, partitions rescanned,
+//! nonzeros moved) — the quantities the threshold trades.
+//!
+//! Before timing, invariant I1 is asserted on the bench workload itself:
+//! both variants' post-schedule MTTKRP outputs are compared bitwise
+//! against a control session prepared from the final tensor from scratch
+//! (the property suite pins this in `tests/incremental.rs`; DESIGN.md §6).
+
+use std::time::Instant;
+
+use spmttkrp::api::{ExecutorBuilder, Session, TensorUpdate};
+use spmttkrp::bench_support::report::{BenchCase, BenchReport};
+use spmttkrp::bench_support::{bench_reps, bench_scale, print_table};
+use spmttkrp::exec::MemoryBudget;
+use spmttkrp::metrics::RepairReport;
+use spmttkrp::tensor::synth::DatasetProfile;
+use spmttkrp::tensor::{FactorSet, SparseTensorCOO};
+use spmttkrp::util::rng::Rng;
+use spmttkrp::util::stats::Summary;
+
+const ROUNDS: usize = 6;
+const ROUND_FRAC: f64 = 0.05;
+
+/// The seeded schedule: per round ~5% of the base nnz, half duplicating
+/// coordinates the tensor already has (stream updates revisit hot
+/// entries), half uniform over the index space. Extents never grow, so
+/// any rebuild the `repair` variant reports is the skew/threshold logic
+/// deciding, not a forced scheme flip.
+fn make_schedule(base: &SparseTensorCOO, seed: u64) -> Vec<TensorUpdate> {
+    let mut rng = Rng::new(seed);
+    let n = base.n_modes();
+    let count = ((base.nnz() as f64 * ROUND_FRAC) as usize).max(1);
+    (0..ROUNDS)
+        .map(|_| {
+            let mut inds: Vec<Vec<u32>> = vec![Vec::with_capacity(count); n];
+            let mut vals = Vec::with_capacity(count);
+            for _ in 0..count {
+                if rng.next_f64() < 0.5 {
+                    let s = rng.next_below(base.nnz() as u64) as usize;
+                    for (w, col) in inds.iter_mut().enumerate() {
+                        col.push(base.inds[w][s]);
+                    }
+                } else {
+                    for (w, col) in inds.iter_mut().enumerate() {
+                        col.push(rng.next_below(base.dims[w] as u64) as u32);
+                    }
+                }
+                vals.push(rng.next_normal() as f32);
+            }
+            TensorUpdate::new(inds, vals)
+        })
+        .collect()
+}
+
+fn session_with(threshold: Option<f64>) -> Session {
+    let mut b = Session::builder().budget(MemoryBudget::unbounded());
+    if let Some(t) = threshold {
+        b = b.rebuild_threshold(t);
+    }
+    b.build().expect("session build")
+}
+
+/// Apply the full schedule on a fresh session; returns the served final
+/// tensor and the summed repair reports.
+fn run_schedule(
+    threshold: Option<f64>,
+    base: &SparseTensorCOO,
+    builder: &ExecutorBuilder,
+    schedule: &[TensorUpdate],
+) -> (Session, spmttkrp::api::TensorHandle, RepairReport) {
+    let mut s = session_with(threshold);
+    let h = s.prepare(base, builder).expect("prepare");
+    let mut total = RepairReport::default();
+    for up in schedule {
+        let r = s.append(h, up).expect("append");
+        total.appended_nnz += r.appended_nnz;
+        total.repaired_modes.extend(&r.repaired_modes);
+        total.rebuilt_modes.extend(&r.rebuilt_modes);
+        total.touched_partitions += r.touched_partitions;
+        total.moved_nnz += r.moved_nnz;
+    }
+    (s, h, total)
+}
+
+fn main() {
+    let rank = 16;
+    let kappa = 82;
+    let reps = bench_reps();
+    let scale = bench_scale();
+    let profile = DatasetProfile::uber().scaled(scale);
+    let base = profile.generate(0xa99e_17d0);
+    let builder = ExecutorBuilder::new().rank(rank).sm_count(kappa);
+    let schedule = make_schedule(&base, 0xa99e_17d1);
+    let appended: usize = schedule.iter().map(|u| u.nnz()).sum();
+    println!(
+        "append throughput bench: uber @ scale {scale} ({} base nnz), {ROUNDS} rounds \
+         of ~{:.0}% each ({appended} appended nnz), rank {rank}, κ {kappa}, reps {reps}",
+        base.nnz(),
+        ROUND_FRAC * 100.0
+    );
+
+    // I1 on the bench workload, before anything is timed: both variants
+    // must serve the final tensor bitwise like a from-scratch preparation.
+    let variants: [(&str, Option<f64>); 2] = [("repair", None), ("rebuild", Some(0.0))];
+    let (subject, h, _) = run_schedule(None, &base, &builder, &schedule);
+    let fin = subject.tensor(h).expect("tensor").clone();
+    let mut control = session_with(None);
+    let hc = control.prepare(&fin, &builder).expect("control prepare");
+    let factors = FactorSet::random(&fin.dims, rank, 0xfac);
+    for (name, threshold) in variants {
+        let (s, hv, _) = run_schedule(threshold, &base, &builder, &schedule);
+        for d in 0..fin.n_modes() {
+            let (got, _) = s.mttkrp(hv, &factors, d).expect("variant mttkrp");
+            let (want, _) = control.mttkrp(hc, &factors, d).expect("control mttkrp");
+            assert_eq!(got.len(), want.len(), "{name} mode {d}: output length");
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{name} mode {d} [{i}]: diverged from rebuilt-from-scratch (I1)"
+                );
+            }
+        }
+    }
+
+    let mut rows = Vec::new();
+    let mut report = BenchReport::new("append_throughput");
+    for (name, threshold) in variants {
+        // one untimed pass for the repair totals (identical every pass:
+        // the schedule and the decision logic are deterministic)
+        let (_, _, totals) = run_schedule(threshold, &base, &builder, &schedule);
+        // timed reps: session setup excluded, append calls measured
+        let mut samples = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let mut s = session_with(threshold);
+            let hv = s.prepare(&base, &builder).expect("prepare");
+            let t0 = Instant::now();
+            for up in &schedule {
+                s.append(hv, up).expect("append");
+            }
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let summary = Summary::of(&samples);
+        let nnz_per_sec = appended as f64 / summary.median.max(1e-12);
+
+        report.push(
+            BenchCase::from_summary(format!("uber/{name}"), &summary)
+                .extra("rounds", ROUNDS as f64)
+                .extra("appended_nnz", appended as f64)
+                .extra("nnz_per_sec", nnz_per_sec)
+                .extra("modes_repaired", totals.repaired_modes.len() as f64)
+                .extra("modes_rebuilt", totals.rebuilt_modes.len() as f64)
+                .extra("touched_partitions", totals.touched_partitions as f64)
+                .extra("moved_nnz", totals.moved_nnz as f64),
+        );
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.3}±{:.3}", summary.median * 1e3, summary.stddev * 1e3),
+            format!("{:.0}", nnz_per_sec),
+            totals.repaired_modes.len().to_string(),
+            totals.rebuilt_modes.len().to_string(),
+            totals.touched_partitions.to_string(),
+            totals.moved_nnz.to_string(),
+        ]);
+    }
+    print_table(
+        "Append throughput — schedule wall in ms (I1-checked against from-scratch prepare)",
+        &["variant", "wall", "nnz/s", "repaired", "rebuilt", "touched", "moved"],
+        &rows,
+    );
+    let path = report.write().expect("write BENCH_append_throughput.json");
+    println!("bench json: {}", path.display());
+}

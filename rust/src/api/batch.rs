@@ -218,7 +218,11 @@ impl Session {
         for req in reqs {
             let engine = self.engine(req.handle)?;
             let tensor = self.tensor(req.handle)?;
-            states.push(AlsState::new(engine, tensor, &req.config)?);
+            // Appended tenants resume from their last decomposition,
+            // exactly like the sequential `run_decompose` path (so batched
+            // online CPD stays bitwise-identical to it — B1 over I1).
+            let warm = self.take_pending_warm(req.handle)?;
+            states.push(AlsState::new_warm(engine, tensor, &req.config, warm.as_ref())?);
         }
         let max_modes = states.iter().map(|s| s.n_modes()).max().unwrap_or(0);
 
@@ -246,11 +250,7 @@ impl Session {
                     continue;
                 }
                 let sched = BatchScheduler::new(&loads);
-                // cluster counters are per-dispatch; the lock-step driver
-                // has no per-iteration report slot for them, so they are
-                // dropped here — the arithmetic still runs the sharded
-                // path (D1 covers decompose end to end)
-                let (run, _cluster) = self.dispatch_batch(&sched, &|w, tenant, z, tr| {
+                let (run, cluster) = self.dispatch_batch(&sched, &|w, tenant, z, tr| {
                     let (engine, factors, acc) = &parts[tenant];
                     engine.replay_partition(w, d, z, factors, acc, tr)
                 })?;
@@ -262,11 +262,27 @@ impl Session {
                         run.tenants[t].to_report(d, run.wall, Imbalance::of(&loads[t]));
                     states[i].apply_mode(d, rep)?;
                 }
+                // On a clustered session every active tenant took part in
+                // this sharded dispatch, so each absorbs its counters;
+                // `end_iteration` surfaces the sweep total on that
+                // iteration's ExecReport (a side channel — D1 still holds
+                // on the per-tenant traffic).
+                if let Some(c) = &cluster {
+                    for &i in &idxs {
+                        states[i].absorb_cluster(c);
+                    }
+                }
             }
             for st in states.iter_mut().filter(|s| !s.is_done()) {
                 st.end_iteration()?;
             }
         }
-        Ok(states.into_iter().map(AlsState::finish).collect())
+        let results: Vec<CpdResult> = states.into_iter().map(AlsState::finish).collect();
+        // Remember each tenant's result for future warm starts, mirroring
+        // the sequential path.
+        for (req, res) in reqs.iter().zip(&results) {
+            self.store_warm_result(req.handle, res)?;
+        }
+        Ok(results)
     }
 }

@@ -46,6 +46,6 @@ pub mod session;
 pub use batch::{BatchDispatchReport, MttkrpBatch};
 pub use builder::{BackendKind, ExecutorBuilder, ExecutorKind};
 pub use error::{Error, Result};
-pub use request::{DecomposeRequest, MttkrpRequest};
+pub use request::{AppendRequest, DecomposeRequest, MttkrpRequest, TensorUpdate};
 pub use service::{Service, ServicePolicy, Ticket};
 pub use session::{Session, SessionBuilder, TensorHandle};

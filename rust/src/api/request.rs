@@ -71,3 +71,57 @@ impl DecomposeRequest {
         DecomposeRequest { handle, config }
     }
 }
+
+/// A batch of new nonzeros to append to a prepared tensor
+/// ([`crate::api::Session::append`]): COO coordinates per mode plus
+/// values, in the same column layout as
+/// [`crate::tensor::SparseTensorCOO::new`], and optionally grown mode
+/// extents. Validation mirrors tensor construction — ragged columns,
+/// out-of-range coordinates or shrinking extents are typed errors at the
+/// session boundary, never a panic.
+#[derive(Clone, Debug)]
+pub struct TensorUpdate {
+    /// Coordinates, one `Vec` per mode, each `len == vals.len()`.
+    pub inds: Vec<Vec<u32>>,
+    pub vals: Vec<f32>,
+    /// New mode extents, `None` to keep the current ones. Extents may only
+    /// grow — every retained nonzero must stay in range.
+    pub dims: Option<Vec<u32>>,
+}
+
+impl TensorUpdate {
+    pub fn new(inds: Vec<Vec<u32>>, vals: Vec<f32>) -> TensorUpdate {
+        TensorUpdate {
+            inds,
+            vals,
+            dims: None,
+        }
+    }
+
+    /// Also grow the mode extents to `dims` (an empty update with grown
+    /// dims is valid — it just enlarges the index space).
+    pub fn with_dims(mut self, dims: Vec<u32>) -> TensorUpdate {
+        self.dims = Some(dims);
+        self
+    }
+
+    /// Number of nonzeros this update appends.
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+}
+
+/// One append request: extend `handle`'s retained tensor with `update`,
+/// repairing its per-mode layouts in place where possible
+/// (invariant I1: the repaired state is bitwise-identical to a rebuild).
+#[derive(Clone, Debug)]
+pub struct AppendRequest {
+    pub handle: TensorHandle,
+    pub update: TensorUpdate,
+}
+
+impl AppendRequest {
+    pub fn new(handle: TensorHandle, update: TensorUpdate) -> AppendRequest {
+        AppendRequest { handle, update }
+    }
+}

@@ -25,22 +25,29 @@
 
 use std::borrow::Borrow;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use super::builder::{ExecutorBuilder, ExecutorKind};
 use super::error::{bail_with, ensure_or};
-use super::request::{DecomposeRequest, MttkrpRequest};
+use super::request::{AppendRequest, DecomposeRequest, MttkrpRequest, TensorUpdate};
 use super::service::{Service, ServicePolicy};
 use super::{Error, Result};
 use crate::baselines::{validate_mode_request, MttkrpExecutor};
 use crate::coordinator::Engine;
-use crate::cpd::{als, CpdConfig, CpdResult};
+use crate::cpd::{als_warm, CpdConfig, CpdResult, WarmStart};
 use crate::exec::batch::{BatchRun, BatchScheduler};
 use crate::exec::cluster::DeviceCluster;
 use crate::exec::memgr::{MemoryBudget, MemoryGovernor, ResidencyReport, SlotResidency};
 use crate::exec::SmPool;
-use crate::metrics::{ClusterCounters, ExecReport, ModeExecReport, TrafficCounters};
+use crate::metrics::{
+    ClusterCounters, ExecReport, ModeExecReport, RepairReport, TrafficCounters,
+};
 use crate::tensor::{FactorSet, SparseTensorCOO};
+
+/// Default [`SessionBuilder::rebuild_threshold`]: appends growing a tensor
+/// by more than this fraction of its nonzeros rebuild the affected mode
+/// layouts from scratch instead of repairing in place.
+pub const DEFAULT_REBUILD_THRESHOLD: f64 = 0.2;
 
 /// Process-wide counter stamping every [`Session`] with a distinct id, so
 /// a [`TensorHandle`] can prove which session issued it.
@@ -63,6 +70,58 @@ pub struct TensorHandle {
 struct Entry {
     tensor: Arc<SparseTensorCOO>,
     prepared: Prepared,
+    /// Online-CPD state: the last decomposition's factors, and whether an
+    /// append has happened since (making them a warm start for the next
+    /// decompose). A `Mutex` because decompose takes `&self`.
+    warm: Mutex<WarmState>,
+}
+
+#[derive(Default)]
+struct WarmState {
+    last: Option<WarmStart>,
+    /// Set by `append`, consumed (once) by the next decompose.
+    pending: bool,
+}
+
+impl Entry {
+    fn warm(&self) -> std::sync::MutexGuard<'_, WarmState> {
+        self.warm.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// The warm start the next decompose should resume from, if an append
+    /// marked one pending. Consuming clears the flag — a second decompose
+    /// without an intervening append runs cold-seeded again (and then
+    /// becomes the new stored model).
+    fn take_pending_warm(&self) -> Option<WarmStart> {
+        let mut g = self.warm();
+        if g.pending {
+            g.pending = false;
+            g.last.clone()
+        } else {
+            None
+        }
+    }
+
+    /// Remember `res` as the model a future append-then-decompose resumes
+    /// from.
+    fn store_warm_result(&self, res: &CpdResult) {
+        let mut g = self.warm();
+        g.last = Some(WarmStart {
+            factors: res.factors.clone(),
+            weights: res.weights.clone(),
+            prior_fit: res.final_fit(),
+        });
+        g.pending = false;
+    }
+
+    /// After an append: if a prior decomposition exists, the next
+    /// decompose warm-starts from it.
+    fn mark_warm_pending(&self) {
+        let mut g = self.warm();
+        if g.last.is_some() {
+            g.pending = true;
+        }
+    }
 }
 
 enum Prepared {
@@ -109,6 +168,7 @@ pub struct SessionBuilder {
     policy: ServicePolicy,
     devices: Option<usize>,
     device_budget: Option<MemoryBudget>,
+    rebuild_threshold: Option<f64>,
 }
 
 impl SessionBuilder {
@@ -171,6 +231,20 @@ impl SessionBuilder {
         self
     }
 
+    /// Append repair/rebuild decision point ([`Session::append`]): an
+    /// update adding more than this fraction of a tensor's current
+    /// nonzeros rebuilds the affected mode layouts from scratch instead
+    /// of merging in place (past that size the merge does rebuild-scale
+    /// work anyway). Must be finite and in `[0, 1]`; `0` forces every
+    /// non-empty append to rebuild, `1` repairs whenever order allows.
+    /// Default [`DEFAULT_REBUILD_THRESHOLD`]. Either way the resulting
+    /// state is bitwise-identical (invariant I1) — this knob only trades
+    /// repair work against merge bookkeeping.
+    pub fn rebuild_threshold(mut self, threshold: f64) -> SessionBuilder {
+        self.rebuild_threshold = Some(threshold);
+        self
+    }
+
     /// Full serving policy in one value (see the individual knobs).
     pub fn service_policy(mut self, policy: ServicePolicy) -> SessionBuilder {
         self.policy = policy;
@@ -220,6 +294,13 @@ impl SessionBuilder {
             InvalidConfig,
             "SessionBuilder: devices must be >= 1 (a 0-device cluster cannot execute)"
         );
+        if let Some(t) = self.rebuild_threshold {
+            ensure_or!(
+                t.is_finite() && (0.0..=1.0).contains(&t),
+                InvalidConfig,
+                "SessionBuilder: rebuild_threshold must be a finite fraction in [0, 1], got {t}"
+            );
+        }
         let pool = self
             .pool
             .unwrap_or_else(|| Arc::new(SmPool::with_default_threads()));
@@ -240,7 +321,11 @@ impl SessionBuilder {
         } else {
             None
         };
-        Ok(Session::assemble(pool, governor, self.policy, cluster))
+        let mut session = Session::assemble(pool, governor, self.policy, cluster);
+        if let Some(t) = self.rebuild_threshold {
+            session.rebuild_threshold = t;
+        }
+        Ok(session)
     }
 }
 
@@ -279,6 +364,9 @@ pub struct Session {
     /// `SPMTTKRP_DEVICES` > 1. `None` means every dispatch is the plain
     /// single-pool path — clustering is pay-for-what-you-ask.
     cluster: Option<Arc<DeviceCluster>>,
+    /// [`SessionBuilder::rebuild_threshold`] — the append repair/rebuild
+    /// decision fraction.
+    rebuild_threshold: f64,
     entries: Vec<Entry>,
 }
 
@@ -308,6 +396,7 @@ impl Session {
             governor,
             policy,
             cluster,
+            rebuild_threshold: DEFAULT_REBUILD_THRESHOLD,
             entries: Vec::new(),
         }
     }
@@ -466,7 +555,11 @@ impl Session {
         } else {
             Prepared::Baseline(on_pool.build_shared(Arc::clone(&tensor))?)
         };
-        self.entries.push(Entry { tensor, prepared });
+        self.entries.push(Entry {
+            tensor,
+            prepared,
+            warm: Mutex::new(WarmState::default()),
+        });
         Ok(TensorHandle {
             session: self.id,
             index: self.entries.len() - 1,
@@ -478,6 +571,12 @@ impl Session {
             return Err(Error::UnknownHandle(h.index));
         }
         self.entries.get(h.index).ok_or(Error::UnknownHandle(h.index))
+    }
+
+    /// The append repair/rebuild decision fraction this session was built
+    /// with ([`SessionBuilder::rebuild_threshold`]).
+    pub fn rebuild_threshold(&self) -> f64 {
+        self.rebuild_threshold
     }
 
     /// The prepared executor behind `h` (trait-object view).
@@ -595,13 +694,51 @@ impl Session {
         }
         let entry = self.entry(req.handle)?;
         match &entry.prepared {
-            Prepared::Engine(e) => als(e, &entry.tensor, &req.config),
+            Prepared::Engine(e) => {
+                // Online CPD: resume from the last decomposition when an
+                // append marked it pending; remember the result either way.
+                let warm = entry.take_pending_warm();
+                let res = als_warm(e, &entry.tensor, &req.config, warm.as_ref())?;
+                entry.store_warm_result(&res);
+                Ok(res)
+            }
             Prepared::Baseline(b) => bail_with!(
                 InvalidConfig,
                 "decompose requires ExecutorKind::Ours; handle was prepared as '{}'",
                 b.name()
             ),
         }
+    }
+
+    /// Inject the model the *next* decompose of `h` should warm-start
+    /// from, as if it were the result of a prior `decompose` followed by
+    /// an append. This is how a rebuilt-from-scratch control session
+    /// mirrors an incrementally-maintained one bit for bit (invariant I1
+    /// extends to CPD trajectories); it is also useful for resuming from
+    /// factors computed elsewhere. Engine handles only.
+    pub fn set_warm_start(&self, h: TensorHandle, warm: WarmStart) -> Result<()> {
+        let entry = self.entry(h)?;
+        ensure_or!(
+            matches!(entry.prepared, Prepared::Engine(_)),
+            InvalidConfig,
+            "warm starts require ExecutorKind::Ours; handle was prepared as '{}'",
+            entry.prepared.executor().name()
+        );
+        let mut g = entry.warm();
+        g.last = Some(warm);
+        g.pending = true;
+        Ok(())
+    }
+
+    /// Batch-driver access to the per-tenant warm state (`decompose_batch`
+    /// resumes appended tenants exactly like the sequential path).
+    pub(crate) fn take_pending_warm(&self, h: TensorHandle) -> Result<Option<WarmStart>> {
+        Ok(self.entry(h)?.take_pending_warm())
+    }
+
+    pub(crate) fn store_warm_result(&self, h: TensorHandle, res: &CpdResult) -> Result<()> {
+        self.entry(h)?.store_warm_result(res);
+        Ok(())
     }
 
     // ------------------------------------------ convenience signatures
@@ -641,7 +778,7 @@ impl Session {
         for (d, out) in outs.iter_mut().enumerate() {
             modes.push(self.run_mttkrp_into(&MttkrpRequest::new(h, d, factors), out)?);
         }
-        Ok((outs, ExecReport { modes }))
+        Ok((outs, ExecReport { modes, cluster: None }))
     }
 
     /// CPD-ALS on `h`'s tensor through its prepared engine. `h` must have
@@ -649,6 +786,125 @@ impl Session {
     /// not provide the dense ALS pieces).
     pub fn decompose(&self, h: TensorHandle, cfg: &CpdConfig) -> Result<CpdResult> {
         self.run_decompose(&DecomposeRequest::new(h, cfg.clone()))
+    }
+
+    // ------------------------------------------------------------ append
+
+    /// Extend `h`'s tensor with `update`'s nonzeros (and optionally grown
+    /// extents), repairing its per-mode layouts in place where the merge
+    /// stays order-preserving and under the session's
+    /// [rebuild threshold](SessionBuilder::rebuild_threshold), rebuilding
+    /// from scratch otherwise. Either way the resulting partitionings,
+    /// layouts and every later replay are bitwise-identical to preparing
+    /// the extended tensor from scratch (DESIGN.md §6, invariant I1). The
+    /// handle stays valid — plans are re-derived, nothing else about the
+    /// tenant changes. A subsequent [`Session::decompose`] warm-starts
+    /// from the tenant's last decomposition (if any) and reports its fit
+    /// drift on the grown tensor.
+    ///
+    /// `h` must have been prepared with [`super::ExecutorKind::Ours`] —
+    /// the baselines' formats have no incremental repair path. Malformed
+    /// updates (wrong mode count, ragged columns, out-of-range
+    /// coordinates, shrinking extents) are typed errors and leave the
+    /// tenant untouched.
+    pub fn append(&mut self, h: TensorHandle, update: &TensorUpdate) -> Result<RepairReport> {
+        self.append_core(h, update)
+    }
+
+    /// Execute one typed append request — [`Session::append`] re-expressed
+    /// over the request struct, mirroring `run_mttkrp`/`run_decompose`.
+    pub fn run_append(&mut self, req: &AppendRequest) -> Result<RepairReport> {
+        self.append_core(req.handle, &req.update)
+    }
+
+    fn append_core(&mut self, h: TensorHandle, up: &TensorUpdate) -> Result<RepairReport> {
+        let threshold = self.rebuild_threshold;
+        let entry = self.entry(h)?;
+        ensure_or!(
+            matches!(entry.prepared, Prepared::Engine(_)),
+            InvalidConfig,
+            "append requires ExecutorKind::Ours; handle was prepared as '{}' (baseline \
+             formats have no incremental repair path)",
+            entry.prepared.executor().name()
+        );
+        let old = entry.tensor.as_ref();
+        let n = old.n_modes();
+        ensure_or!(
+            up.inds.len() == n,
+            ShapeMismatch,
+            "update carries {} coordinate modes, tensor has {n}",
+            up.inds.len()
+        );
+        for (d, col) in up.inds.iter().enumerate() {
+            ensure_or!(
+                col.len() == up.vals.len(),
+                InvalidData,
+                "update mode {d}: {} coords vs {} vals",
+                col.len(),
+                up.vals.len()
+            );
+        }
+        let new_dims = match &up.dims {
+            Some(dims) => {
+                ensure_or!(
+                    dims.len() == n,
+                    ShapeMismatch,
+                    "update declares {} mode extents, tensor has {n}",
+                    dims.len()
+                );
+                for d in 0..n {
+                    ensure_or!(
+                        dims[d] >= old.dims[d],
+                        InvalidData,
+                        "update shrinks mode {d} from {} to {} — extents may only grow \
+                         (retained nonzeros must stay in range)",
+                        old.dims[d],
+                        dims[d]
+                    );
+                }
+                dims.clone()
+            }
+            None => old.dims.clone(),
+        };
+        for (d, col) in up.inds.iter().enumerate() {
+            if let Some(&bad) = col.iter().find(|&&i| i >= new_dims[d]) {
+                bail_with!(
+                    InvalidData,
+                    "update mode {d}: coordinate {bad} out of range (extent {})",
+                    new_dims[d]
+                );
+            }
+        }
+        // Everything validated — build the extended tensor. The appended
+        // nonzeros go strictly after the retained ones, which is what the
+        // incremental merge's position tie-break keys on.
+        let inds: Vec<Vec<u32>> = old
+            .inds
+            .iter()
+            .zip(&up.inds)
+            .map(|(base, extra)| {
+                let mut col = Vec::with_capacity(base.len() + extra.len());
+                col.extend_from_slice(base);
+                col.extend_from_slice(extra);
+                col
+            })
+            .collect();
+        let mut vals = Vec::with_capacity(old.vals.len() + up.vals.len());
+        vals.extend_from_slice(&old.vals);
+        vals.extend_from_slice(&up.vals);
+        let ext = Arc::new(SparseTensorCOO {
+            dims: new_dims,
+            inds,
+            vals,
+        });
+        let entry = &mut self.entries[h.index];
+        let report = match &mut entry.prepared {
+            Prepared::Engine(e) => e.append(Arc::clone(&ext), threshold)?,
+            Prepared::Baseline(_) => unreachable!("rejected above"),
+        };
+        entry.tensor = ext;
+        entry.mark_warm_pending();
+        Ok(report)
     }
 
     // ------------------------------------------------- layout residency

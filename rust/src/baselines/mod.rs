@@ -187,6 +187,6 @@ pub trait MttkrpExecutor: Send + Sync {
         for (d, out) in outs.iter_mut().enumerate() {
             modes.push(self.execute_mode_into(factors, d, out)?);
         }
-        Ok(ExecReport { modes })
+        Ok(ExecReport { modes, cluster: None })
     }
 }

@@ -46,7 +46,7 @@ use crate::exec::{
     lanes, ModeAccumulator, ModePlan, RowSink, SmPool, StagePool, WorkspaceArena,
 };
 use crate::format::mode_specific::{ModeLayout, ModeSpecificFormat};
-use crate::metrics::{ExecReport, ModeExecReport, TrafficCounters};
+use crate::metrics::{ExecReport, ModeExecReport, RepairReport, TrafficCounters};
 use crate::partition::{LoadBalance, VertexAssign};
 use crate::runtime::Backend;
 use crate::tensor::factor::Factor;
@@ -123,6 +123,43 @@ impl EngineWorkspace {
     }
 }
 
+/// Build one [`ModePlan`] per mode copy from the retained partitionings —
+/// never from the evictable layouts — so plans survive eviction for the
+/// engine's lifetime (only the partition-ordered copy + segment tables
+/// drop). Shared by engine construction and [`Engine::append`], which must
+/// rebuild the plans after an incremental repair shifts bounds, policies
+/// or mode extents.
+fn build_plans(
+    format: &ModeSpecificFormat,
+    config: &EngineConfig,
+    dims: &[u32],
+) -> Vec<ModePlan> {
+    let n = dims.len();
+    let elem_bytes = (n * 4 + 4) as u64;
+    format
+        .copies
+        .iter()
+        .enumerate()
+        .map(|(d, copy)| {
+            let policy = if copy.needs_global_update() {
+                UpdatePolicy::Global
+            } else {
+                UpdatePolicy::Local
+            };
+            ModePlan::new(
+                d,
+                config.sm_count,
+                config.rank,
+                dims[d] as usize,
+                policy,
+                copy.partitioning.bounds.clone(),
+                (0..n).filter(|&w| w != d).collect(),
+                elem_bytes,
+            )
+        })
+        .collect()
+}
+
 /// The spMTTKRP execution engine over the mode-specific format.
 pub struct Engine {
     pub format: ModeSpecificFormat,
@@ -183,33 +220,7 @@ impl Engine {
             config.assign,
             governor,
         )?;
-        let elem_bytes = (n * 4 + 4) as u64;
-        // Plans are built from the retained partitionings, never from the
-        // evictable layouts — they survive eviction for the engine's
-        // lifetime (only the partition-ordered copy + segment tables
-        // drop).
-        let plans = format
-            .copies
-            .iter()
-            .enumerate()
-            .map(|(d, copy)| {
-                let policy = if copy.needs_global_update() {
-                    UpdatePolicy::Global
-                } else {
-                    UpdatePolicy::Local
-                };
-                ModePlan::new(
-                    d,
-                    config.sm_count,
-                    config.rank,
-                    dims[d] as usize,
-                    policy,
-                    copy.partitioning.bounds.clone(),
-                    (0..n).filter(|&w| w != d).collect(),
-                    elem_bytes,
-                )
-            })
-            .collect();
+        let plans = build_plans(&format, &config, &dims);
         let p = backend.block_p();
         let rank = config.rank;
         let arena =
@@ -292,6 +303,31 @@ impl Engine {
         self.format.residency()
     }
 
+    // ------------------------------------------------------------ append
+
+    /// Absorb an appended batch of nonzeros. `ext` is the extended tensor
+    /// (the current retained COO plus the new nonzeros, extents possibly
+    /// grown). Each mode copy is repaired in place where the merge stays
+    /// cheap and order-preserving, or rebuilt from scratch otherwise
+    /// (`format::incremental`, invariant I1); the per-mode plans are then
+    /// rebuilt from the new partitionings, since bounds, update policies
+    /// and mode extents may all have shifted. The workspace arena and
+    /// stage pool are untouched — they are sized by block width, rank and
+    /// mode count, none of which an append can change.
+    pub(crate) fn append(
+        &mut self,
+        ext: Arc<SparseTensorCOO>,
+        rebuild_threshold: f64,
+    ) -> Result<RepairReport> {
+        debug_assert_eq!(ext.n_modes(), self.n_modes());
+        let report =
+            self.format
+                .apply_append(ext, self.config.assign, rebuild_threshold)?;
+        let dims = self.format.original().dims.clone();
+        self.plans = build_plans(&self.format, &self.config, &dims);
+        Ok(report)
+    }
+
     /// spMTTKRP along one mode (Alg. 2 over all partitions of the mode's
     /// tensor copy). Returns the `(I_d, R)` output row-major and a report.
     pub fn mttkrp_mode(
@@ -338,7 +374,7 @@ impl Engine {
             outs.push(o);
             modes.push(r);
         }
-        Ok((outs, ExecReport { modes }))
+        Ok((outs, ExecReport { modes, cluster: None }))
     }
 
     // ------------------------------------------------ partition execution

@@ -13,8 +13,24 @@
 use crate::api::error::ensure_or;
 use crate::api::Result;
 use crate::coordinator::{DenseScratch, Engine};
-use crate::metrics::{ExecReport, ModeExecReport};
+use crate::metrics::{ClusterCounters, ExecReport, ModeExecReport};
 use crate::tensor::{FactorSet, SparseTensorCOO};
+
+/// A prior decomposition to resume from after the tensor grew
+/// ([`crate::api::Session::append`]): the converged factors, their column
+/// weights, and the fit they achieved on the *old* tensor. `als_warm`
+/// overlays the carried rows onto the fresh seeded random init (rows for
+/// grown extents keep the seeded values, so a warm run is still fully
+/// deterministic), then measures how far the old model drifted on the new
+/// data before iterating.
+#[derive(Clone, Debug)]
+pub struct WarmStart {
+    pub factors: FactorSet,
+    pub weights: Vec<f64>,
+    /// Final fit the carried factors achieved on the tensor they were
+    /// fitted to.
+    pub prior_fit: f64,
+}
 
 #[derive(Clone, Debug)]
 pub struct CpdConfig {
@@ -50,6 +66,11 @@ pub struct CpdResult {
     pub iterations: usize,
     /// Per-iteration engine reports (one ExecReport per sweep).
     pub reports: Vec<ExecReport>,
+    /// `prior_fit − fit(carried factors on the current tensor)`, evaluated
+    /// before the first sweep when this run was warm-started. Positive
+    /// drift means the appended data degraded the old model. `None` on
+    /// cold runs.
+    pub fit_drift: Option<f64>,
 }
 
 impl CpdResult {
@@ -81,6 +102,13 @@ pub(crate) struct AlsState<'a> {
     reports: Vec<ExecReport>,
     /// Per-mode reports of the sweep in progress.
     sweep: Vec<ModeExecReport>,
+    /// Cluster counters absorbed from batched multi-device dispatches
+    /// during the sweep in progress (`absorb_cluster`); emitted with the
+    /// sweep's [`ExecReport`] at `end_iteration`. Stays `None` on
+    /// single-pool runs.
+    sweep_cluster: Option<ClusterCounters>,
+    /// Set once before the first sweep on warm-started runs.
+    fit_drift: Option<f64>,
     /// Per-mode `(I_d, R)` MTTKRP outputs, allocated once and replayed
     /// every iteration (the engine's pool + plans are likewise persistent
     /// — the whole ALS run executes on one set of workers).
@@ -101,10 +129,18 @@ pub(crate) struct AlsState<'a> {
 }
 
 impl<'a> AlsState<'a> {
-    pub(crate) fn new(
+    /// Fresh iteration state, optionally resuming from a prior
+    /// decomposition: the carried factor rows are overlaid onto the seeded
+    /// random init (so rows for extents that grew since keep deterministic
+    /// seeded values), the carried weights are adopted, and one extra
+    /// last-mode spMTTKRP evaluates the carried model's fit on the current
+    /// tensor (the same matrix-free Kolda identity `end_iteration` uses) —
+    /// `fit_drift = prior_fit − that fit`.
+    pub(crate) fn new_warm(
         engine: &'a Engine,
         tensor: &'a SparseTensorCOO,
         cfg: &CpdConfig,
+        warm: Option<&WarmStart>,
     ) -> Result<AlsState<'a>> {
         ensure_or!(
             engine.config.rank == cfg.rank,
@@ -115,7 +151,41 @@ impl<'a> AlsState<'a> {
         );
         let n = tensor.n_modes();
         let rank = cfg.rank;
-        let factors = FactorSet::random(&tensor.dims, rank, cfg.seed);
+        let mut factors = FactorSet::random(&tensor.dims, rank, cfg.seed);
+        let mut weights = vec![1.0f64; rank];
+        if let Some(w) = warm {
+            ensure_or!(
+                w.factors.n_modes() == n,
+                InvalidConfig,
+                "warm start has {} factor modes, tensor has {n}",
+                w.factors.n_modes()
+            );
+            ensure_or!(
+                w.factors.rank() == rank,
+                InvalidConfig,
+                "warm start rank {} != CPD rank {rank}",
+                w.factors.rank()
+            );
+            ensure_or!(
+                w.weights.len() == rank,
+                InvalidConfig,
+                "warm start carries {} weights for rank {rank}",
+                w.weights.len()
+            );
+            for d in 0..n {
+                let prior = &w.factors[d];
+                ensure_or!(
+                    prior.rows <= tensor.dims[d] as usize,
+                    InvalidConfig,
+                    "warm factor for mode {d} has {} rows, tensor extent is {}",
+                    prior.rows,
+                    tensor.dims[d]
+                );
+                let take = prior.rows * rank;
+                factors[d].data[..take].copy_from_slice(&prior.data[..take]);
+            }
+            weights.copy_from_slice(&w.weights);
+        }
         let norm_x_sq = tensor.norm_sq();
         ensure_or!(norm_x_sq > 0.0, InvalidData, "zero tensor");
         let mut scratch = DenseScratch::new();
@@ -125,21 +195,48 @@ impl<'a> AlsState<'a> {
             engine.gram_with(f, &mut scratch, &mut g)?;
             grams.push(g);
         }
+        let mut mttkrp_out = vec![Vec::new(); n];
+        let mut y_weighted = Vec::new();
+        let mut fit_drift = None;
+        if let Some(w) = warm {
+            // One extra dispatch before any sweep: the carried model's fit
+            // on the current (grown) tensor, via the last mode's MTTKRP.
+            // The output buffer is the one iteration sweeps reuse anyway.
+            engine.mttkrp_mode_into(&factors, n - 1, &mut mttkrp_out[n - 1])?;
+            let w32: Vec<f32> = weights.iter().map(|&x| x as f32).collect();
+            let gram_refs: Vec<&[f32]> = grams.iter().map(|g| g.as_slice()).collect();
+            let norm_model_sq = engine.weighted_gram_with(&gram_refs, &w32, &mut scratch)?;
+            drop(gram_refs);
+            let y_last = &factors[n - 1];
+            y_weighted.resize(y_last.data.len(), 0.0);
+            for i in 0..y_last.rows {
+                for r in 0..rank {
+                    y_weighted[i * rank + r] =
+                        (y_last.data[i * rank + r] as f64 * weights[r]) as f32;
+                }
+            }
+            let inner = engine.inner_with(&mttkrp_out[n - 1], &y_weighted, &mut scratch)?;
+            let resid_sq = (norm_x_sq + norm_model_sq - 2.0 * inner).max(0.0);
+            let warm_fit = 1.0 - resid_sq.sqrt() / norm_x_sq.sqrt();
+            fit_drift = Some(w.prior_fit - warm_fit);
+        }
         Ok(AlsState {
             engine,
             tensor,
             cfg: cfg.clone(),
             factors,
             grams,
-            weights: vec![1.0f64; rank],
+            weights,
             fits: Vec::new(),
             reports: Vec::new(),
             sweep: Vec::with_capacity(n),
-            mttkrp_out: vec![Vec::new(); n],
+            sweep_cluster: None,
+            fit_drift,
+            mttkrp_out,
             scratch,
             v_buf: Vec::new(),
             y_buf: Vec::new(),
-            y_weighted: Vec::new(),
+            y_weighted,
             norm_x_sq,
             iters_run: 0,
             done: cfg.max_iters == 0,
@@ -153,6 +250,16 @@ impl<'a> AlsState<'a> {
     /// Converged or out of iterations — no further sweeps will run.
     pub(crate) fn is_done(&self) -> bool {
         self.done
+    }
+
+    /// Fold one batched multi-device dispatch's cluster counters into the
+    /// sweep in progress. The batch driver calls this once per mode
+    /// position; `end_iteration` emits the sweep total with the
+    /// iteration's [`ExecReport`].
+    pub(crate) fn absorb_cluster(&mut self, c: &ClusterCounters) {
+        self.sweep_cluster
+            .get_or_insert_with(ClusterCounters::default)
+            .absorb(c);
     }
 
     /// Split borrows for one batched MTTKRP of mode `d`: the engine, the
@@ -212,6 +319,7 @@ impl<'a> AlsState<'a> {
         let rank = self.cfg.rank;
         self.reports.push(ExecReport {
             modes: std::mem::take(&mut self.sweep),
+            cluster: self.sweep_cluster.take(),
         });
 
         // Matrix-free fit from the mode-(n-1) MTTKRP result.
@@ -257,6 +365,7 @@ impl<'a> AlsState<'a> {
             weights: self.weights,
             fits: self.fits,
             reports: self.reports,
+            fit_drift: self.fit_drift,
         }
     }
 }
@@ -264,7 +373,20 @@ impl<'a> AlsState<'a> {
 /// Run CPD-ALS on `tensor` using `engine` (which must have been built over
 /// the same tensor with `rank == cfg.rank`).
 pub fn als(engine: &Engine, tensor: &SparseTensorCOO, cfg: &CpdConfig) -> Result<CpdResult> {
-    let mut state = AlsState::new(engine, tensor, cfg)?;
+    als_warm(engine, tensor, cfg, None)
+}
+
+/// As [`als`], optionally warm-started from a prior decomposition (the
+/// online-CPD path behind [`crate::api::Session::append`] →
+/// `Session::decompose`): carried factor rows seed the iteration and the
+/// result reports the carried model's fit drift on the current tensor.
+pub fn als_warm(
+    engine: &Engine,
+    tensor: &SparseTensorCOO,
+    cfg: &CpdConfig,
+    warm: Option<&WarmStart>,
+) -> Result<CpdResult> {
+    let mut state = AlsState::new_warm(engine, tensor, cfg, warm)?;
     while !state.is_done() {
         for d in 0..state.n_modes() {
             state.step_mode(d)?;
@@ -360,6 +482,90 @@ mod tests {
         for w in res.fits.windows(2) {
             assert!(w[1] >= w[0] - 1e-3, "fit decreased: {:?}", res.fits);
         }
+    }
+
+    #[test]
+    fn warm_start_resumes_where_the_cold_run_converged() {
+        let t = low_rank_tensor(&[12, 10, 8], 3, 11);
+        let engine = small_engine(&t, 8);
+        let cfg = CpdConfig {
+            rank: 8,
+            max_iters: 12,
+            tol: 1e-9,
+            damp: 1e-6,
+            seed: 2,
+        };
+        let cold = als(&engine, &t, &cfg).unwrap();
+        assert!(cold.fit_drift.is_none(), "cold runs report no drift");
+        let warm = WarmStart {
+            factors: cold.factors.clone(),
+            weights: cold.weights.clone(),
+            prior_fit: cold.final_fit(),
+        };
+        let res = als_warm(&engine, &t, &cfg, Some(&warm)).unwrap();
+        // Same tensor, same factors: the carried model's measured fit is
+        // the prior fit (identical arithmetic), so drift is ~zero...
+        let drift = res.fit_drift.expect("warm runs report drift");
+        assert!(drift.abs() < 1e-6, "drift {drift}");
+        // ...and the resumed run converges immediately instead of
+        // re-climbing from a random init.
+        assert!(
+            res.iterations <= 3,
+            "resumed run took {} iterations",
+            res.iterations
+        );
+        assert!(res.final_fit() >= cold.final_fit() - 1e-4);
+    }
+
+    #[test]
+    fn warm_start_is_seed_deterministic() {
+        let t = low_rank_tensor(&[9, 8, 7], 2, 3);
+        let engine = small_engine(&t, 8);
+        let cfg = CpdConfig {
+            rank: 8,
+            max_iters: 4,
+            tol: 0.0,
+            damp: 1e-4,
+            seed: 5,
+        };
+        let prior = als(&engine, &t, &cfg).unwrap();
+        let warm = WarmStart {
+            factors: prior.factors.clone(),
+            weights: prior.weights.clone(),
+            prior_fit: prior.final_fit(),
+        };
+        let a = als_warm(&engine, &t, &cfg, Some(&warm)).unwrap();
+        let b = als_warm(&engine, &t, &cfg, Some(&warm)).unwrap();
+        assert_eq!(a.fit_drift, b.fit_drift);
+        for d in 0..3 {
+            let (fa, fb): (Vec<u32>, Vec<u32>) = (
+                a.factors[d].data.iter().map(|v| v.to_bits()).collect(),
+                b.factors[d].data.iter().map(|v| v.to_bits()).collect(),
+            );
+            assert_eq!(fa, fb, "mode {d} factors diverged between warm runs");
+        }
+    }
+
+    #[test]
+    fn warm_start_rejects_rank_mismatch() {
+        let t = low_rank_tensor(&[8, 7, 6], 2, 9);
+        let engine = small_engine(&t, 8);
+        let cfg = CpdConfig {
+            rank: 8,
+            max_iters: 2,
+            tol: 0.0,
+            damp: 1e-4,
+            seed: 1,
+        };
+        let warm = WarmStart {
+            factors: FactorSet::random(&t.dims, 4, 1),
+            weights: vec![1.0; 4],
+            prior_fit: 0.5,
+        };
+        assert!(matches!(
+            als_warm(&engine, &t, &cfg, Some(&warm)),
+            Err(crate::api::Error::InvalidConfig(_))
+        ));
     }
 
     #[test]

@@ -483,6 +483,29 @@ impl MemoryGovernor {
         }
     }
 
+    /// Drop `key` from the registry entirely, reclaiming any bytes still
+    /// charged for a resident layout. Not counted as an eviction —
+    /// nothing was dropped under pressure; the slot is being *replaced*
+    /// (an append re-prices a mode copy under the packed-bits model, so
+    /// the old slot retires and a freshly priced one registers in its
+    /// place). The slot object itself is untouched: in-flight pins keep
+    /// the old layout alive until they drop. Returns whether the key was
+    /// registered.
+    pub fn unregister(&self, key: SlotKey) -> bool {
+        let mut g = lock_unpoisoned(&self.inner);
+        let Some(i) = g.slots.iter().position(|e| e.key == key) else {
+            return false;
+        };
+        if g.slots[i].resident {
+            g.used -= g.slots[i].price;
+        }
+        g.slots.swap_remove(i);
+        drop(g);
+        // freed bytes may unblock a reserver waiting on the condvar
+        self.committed.notify_all();
+        true
+    }
+
     /// Bytes currently charged for resident layouts.
     pub fn resident_bytes(&self) -> u64 {
         let mut g = lock_unpoisoned(&self.inner);
@@ -670,6 +693,25 @@ mod tests {
         // and the freed room admits a new slot
         let b = slot(&gov, 1, 0, 10);
         b.ensure(&gov, || 2).unwrap();
+        assert_eq!(gov.report().resident_slots, 1);
+    }
+
+    #[test]
+    fn unregister_reclaims_bytes_without_counting_an_eviction() {
+        let gov = MemoryGovernor::new(MemoryBudget::bytes(10));
+        let a = slot(&gov, 0, 0, 10);
+        a.ensure(&gov, || 1).unwrap();
+        assert_eq!(gov.resident_bytes(), 10);
+        assert!(gov.unregister(a.key()));
+        assert_eq!(gov.resident_bytes(), 0);
+        assert_eq!(gov.counters().evictions, 0);
+        // the slot object is untouched — a pin taken before unregister
+        // would still read the old layout — but the governor no longer
+        // tracks it, and the freed bytes admit a replacement at once
+        assert!(a.resident());
+        assert!(!gov.unregister(a.key()), "already unregistered");
+        let b = slot(&gov, 0, 0, 10);
+        assert_eq!(*b.ensure(&gov, || 2).unwrap(), 2);
         assert_eq!(gov.report().resident_slots, 1);
     }
 

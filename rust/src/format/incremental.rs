@@ -1,0 +1,535 @@
+//! Incremental layout repair for appended nonzeros (`Session::append`).
+//!
+//! The PR 5 residency split keeps the *plan-grade* state — the original
+//! COO and each mode's [`ModePartitioning`] — permanently in `ModeCopy`,
+//! with only the bulky [`ModeLayout`] evictable. That split is what makes
+//! appends repairable instead of a full re-`prepare()`: because both
+//! partitioning schemes order nonzeros by a **total-order key**
+//! ([`ModePartitioning::order_key`]), an existing permutation is a sorted
+//! list the appended nonzeros can be *merged into*, reproducing the
+//! from-scratch sort bit for bit. The resident layout then repairs by
+//! splicing: every row below the first insertion point is already in
+//! place, and only partitions whose range shifted rescan their segment
+//! tables.
+//!
+//! [`plan_mode_repair`] decides repair-vs-rebuild per mode and falls back
+//! to the pure [`partition_mode`] when the merge could *not* reproduce
+//! the from-scratch result — the adaptive scheme choice flipped on a
+//! grown extent, the recomputed Scheme-1 vertex dealing reassigned any
+//! owner (the append shifted the degree skew), or the append is larger
+//! than the session's rebuild threshold (past which merging costs more
+//! than sorting fresh). Either way the installed partitioning equals what
+//! `partition_mode` on the extended tensor would produce, and since
+//! [`ModeLayout::build`] is a pure function of (COO, partitioning), the
+//! repaired layout equals a rebuild from scratch — invariant **I1**
+//! (DESIGN.md §6), the dynamic-tensor extension of M1, pinned by
+//! `rust/tests/incremental.rs`.
+//!
+//! Precedent: FLYCOO-style dynamic-tensor layouts (arXiv:2405.08470)
+//! absorb updates without wholesale reconstruction; out-of-memory MTTKRP
+//! (arXiv:2201.12523) treats layout construction as a repairable, chunked
+//! operation rather than one-shot preprocessing.
+
+use crate::exec::equal_bounds;
+use crate::hypergraph::Hypergraph;
+use crate::partition::{
+    assign_owners, partition_mode, LoadBalance, ModePartitioning, SchemeUsed, VertexAssign,
+};
+use crate::tensor::SparseTensorCOO;
+
+use super::mode_specific::{scan_runs, ModeLayout};
+
+/// How one mode absorbs an append: merged in place, or rebuilt from
+/// scratch. Both carry the new partitioning to install; the repaired
+/// variant additionally records where the merged permutation first
+/// diverges from the old one (everything below `first_changed` is the old
+/// layout verbatim) plus the repair-cost bookkeeping surfaced through
+/// `metrics::RepairReport`.
+#[derive(Clone, Debug)]
+pub enum ModeRepair {
+    Repaired {
+        partitioning: ModePartitioning,
+        /// First position of the merged permutation holding an appended
+        /// nonzero; `== nnz` when nothing was appended. The layout splice
+        /// copies `[0, first_changed)` straight from the resident layout.
+        first_changed: usize,
+        /// Partitions whose range shifted (their segment tables rescan).
+        touched_partitions: usize,
+        /// Nonzeros inserted or shifted: `nnz - first_changed`.
+        moved_nnz: u64,
+    },
+    Rebuilt { partitioning: ModePartitioning },
+}
+
+impl ModeRepair {
+    pub fn partitioning(&self) -> &ModePartitioning {
+        match self {
+            ModeRepair::Repaired { partitioning, .. } => partitioning,
+            ModeRepair::Rebuilt { partitioning } => partitioning,
+        }
+    }
+}
+
+/// Decide how mode `old.mode` absorbs the append that grew the tensor to
+/// `ext` (the first `old_nnz` nonzeros of `ext` are the pre-append tensor,
+/// unchanged). `hg` is the hypergraph of `ext`. The returned partitioning
+/// is equal to `partition_mode(ext, hg, ..)` in every case — repair is an
+/// *algorithmic* shortcut, never a different answer.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_mode_repair(
+    ext: &SparseTensorCOO,
+    hg: &Hypergraph,
+    old: &ModePartitioning,
+    old_nnz: usize,
+    kappa: usize,
+    lb: LoadBalance,
+    assign: VertexAssign,
+    rebuild_threshold: f64,
+) -> ModeRepair {
+    let mode = old.mode;
+    let nnz = ext.nnz();
+    let appended = nnz - old_nnz;
+    let rebuild = || ModeRepair::Rebuilt {
+        partitioning: partition_mode(ext, hg, mode, kappa, lb, assign),
+    };
+    // The adaptive choice re-evaluates on the new extent: a grown mode
+    // dimension can flip a Scheme-2 mode to Scheme 1.
+    let use_scheme1 = match lb {
+        LoadBalance::Adaptive => ext.dims[mode] as usize >= kappa,
+        LoadBalance::ForceScheme1 => true,
+        LoadBalance::ForceScheme2 => false,
+    };
+    let scheme_now = if use_scheme1 {
+        SchemeUsed::IndexPartitioned
+    } else {
+        SchemeUsed::ElementPartitioned
+    };
+    if scheme_now != old.scheme {
+        return rebuild();
+    }
+    // Past the threshold, merging + rescanning approaches the cost of a
+    // fresh sort — take the simple path.
+    if appended as f64 > rebuild_threshold * nnz as f64 {
+        return rebuild();
+    }
+    // Scheme 1 only: the vertex dealing recomputed on the extended
+    // hypergraph must agree with the installed owners on the old extent.
+    // Any reassignment means the append shifted the degree ordering —
+    // the skew-shift fallback — because a merged permutation keyed by
+    // stale owners could not reproduce the from-scratch sort.
+    let owner = match scheme_now {
+        SchemeUsed::IndexPartitioned => {
+            let owner = assign_owners(hg, mode, ext.dims[mode] as usize, kappa, assign);
+            let installed = old.owner.as_ref().expect("scheme 1 carries owners");
+            if owner[..installed.len()] != installed[..] {
+                return rebuild();
+            }
+            Some(owner)
+        }
+        SchemeUsed::ElementPartitioned => None,
+    };
+
+    // Merge: both lists are sorted by the same total-order key (the old
+    // permutation by construction — old nonzeros keep their columns and
+    // owners — and the appended positions after one small sort), so a
+    // linear merge reproduces exactly what a full sort over all `nnz`
+    // positions would produce.
+    let col = &ext.inds[mode];
+    let mut merged = ModePartitioning {
+        mode,
+        scheme: scheme_now,
+        kappa,
+        perm: Vec::with_capacity(nnz),
+        bounds: Vec::new(),
+        owner,
+    };
+    let mut add: Vec<u32> = (old_nnz as u32..nnz as u32).collect();
+    add.sort_unstable_by_key(|&t| merged.order_key(col, t));
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut first_changed = nnz;
+    while i < old.perm.len() && j < add.len() {
+        // keys are distinct across the two lists (total order, disjoint
+        // positions), so `<=` vs `<` is immaterial
+        if merged.order_key(col, old.perm[i]) <= merged.order_key(col, add[j]) {
+            merged.perm.push(old.perm[i]);
+            i += 1;
+        } else {
+            first_changed = first_changed.min(merged.perm.len());
+            merged.perm.push(add[j]);
+            j += 1;
+        }
+    }
+    merged.perm.extend_from_slice(&old.perm[i..]);
+    if j < add.len() {
+        first_changed = first_changed.min(merged.perm.len());
+        merged.perm.extend_from_slice(&add[j..]);
+    }
+
+    merged.bounds = match scheme_now {
+        SchemeUsed::IndexPartitioned => {
+            // old per-partition counts plus the appended counts — the
+            // same totals a from-scratch owner count would produce
+            let owner = merged.owner.as_ref().unwrap();
+            let mut extra = vec![0usize; kappa];
+            for &t in &add {
+                extra[owner[col[t as usize] as usize] as usize] += 1;
+            }
+            let mut bounds = old.bounds.clone();
+            let mut cum = 0usize;
+            for z in 0..kappa {
+                cum += extra[z];
+                bounds[z + 1] += cum;
+            }
+            bounds
+        }
+        // Scheme 2 redistributes into κ near-equal chunks of the new nnz
+        // regardless of history, exactly like the from-scratch path.
+        SchemeUsed::ElementPartitioned => equal_bounds(nnz, kappa),
+    };
+
+    let moved_nnz = (nnz - first_changed) as u64;
+    let touched_partitions = (0..kappa)
+        .filter(|&z| {
+            // untouched ⇔ same range as before, entirely below the first
+            // insertion point — identical positions holding identical
+            // nonzeros
+            !(merged.bounds[z] == old.bounds[z]
+                && merged.bounds[z + 1] == old.bounds[z + 1]
+                && merged.bounds[z + 1] <= first_changed)
+        })
+        .count();
+    ModeRepair::Repaired {
+        partitioning: merged,
+        first_changed,
+        touched_partitions,
+        moved_nnz,
+    }
+}
+
+/// Repair a resident layout in place of rebuilding it: rows below
+/// `first_changed` copy verbatim from the old layout (the merged
+/// permutation's prefix *is* the old order), the suffix re-gathers from
+/// the extended COO, and only partitions whose range shifted rescan their
+/// segment tables. `old_bounds` is the pre-append partitioning's bounds
+/// (for the untouched-partition test). Bitwise-equal to
+/// `ModeLayout::build(ext, p)` — the property invariant I1 pins — so a
+/// later evict+rebuild through the pure path stays consistent (M1).
+pub fn repair_layout(
+    old: &ModeLayout,
+    old_bounds: &[usize],
+    ext: &SparseTensorCOO,
+    p: &ModePartitioning,
+    first_changed: usize,
+) -> ModeLayout {
+    let nnz = ext.nnz();
+    let mut inds = Vec::with_capacity(ext.n_modes());
+    for w in 0..ext.n_modes() {
+        let mut column = Vec::with_capacity(nnz);
+        column.extend_from_slice(&old.tensor.inds[w][..first_changed]);
+        column.extend(p.perm[first_changed..].iter().map(|&t| ext.inds[w][t as usize]));
+        inds.push(column);
+    }
+    let mut vals = Vec::with_capacity(nnz);
+    vals.extend_from_slice(&old.tensor.vals[..first_changed]);
+    vals.extend(p.perm[first_changed..].iter().map(|&t| ext.vals[t as usize]));
+    let tensor = SparseTensorCOO {
+        dims: ext.dims.clone(),
+        inds,
+        vals,
+    };
+    let col = &tensor.inds[p.mode];
+    let mut segments = Vec::with_capacity(p.kappa);
+    for z in 0..p.kappa {
+        let (lo, hi) = (p.bounds[z], p.bounds[z + 1]);
+        if lo == old_bounds[z] && hi == old_bounds[z + 1] && hi <= first_changed {
+            segments.push(old.segments[z].clone());
+        } else {
+            segments.push(scan_runs(col, lo, hi));
+        }
+    }
+    ModeLayout { tensor, segments }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Extend `base` with `extra` nonzeros (same dims unless grown).
+    fn extend(
+        base: &SparseTensorCOO,
+        dims: Vec<u32>,
+        extra: &[(Vec<u32>, f32)],
+    ) -> SparseTensorCOO {
+        let mut inds = base.inds.clone();
+        let mut vals = base.vals.clone();
+        for (coord, v) in extra {
+            for (w, &i) in coord.iter().enumerate() {
+                inds[w].push(i);
+            }
+            vals.push(*v);
+        }
+        SparseTensorCOO::new(dims, inds, vals).unwrap()
+    }
+
+    fn base_tensor() -> SparseTensorCOO {
+        // mode-0 degrees: index 1 → 3 nonzeros, index 0 → 2, index 2 → 1
+        SparseTensorCOO::new(
+            vec![3, 4],
+            vec![vec![1, 0, 1, 2, 0, 1], vec![0, 1, 2, 3, 0, 1]],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+        )
+        .unwrap()
+    }
+
+    fn assert_partitioning_eq(a: &ModePartitioning, b: &ModePartitioning, what: &str) {
+        assert_eq!(a.scheme, b.scheme, "{what}: scheme");
+        assert_eq!(a.perm, b.perm, "{what}: perm");
+        assert_eq!(a.bounds, b.bounds, "{what}: bounds");
+        assert_eq!(a.owner, b.owner, "{what}: owner");
+    }
+
+    fn assert_layout_eq(a: &ModeLayout, b: &ModeLayout, what: &str) {
+        assert_eq!(a.tensor.dims, b.tensor.dims, "{what}: dims");
+        assert_eq!(a.tensor.inds, b.tensor.inds, "{what}: inds");
+        let ab: Vec<u32> = a.tensor.vals.iter().map(|v| v.to_bits()).collect();
+        let bb: Vec<u32> = b.tensor.vals.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(ab, bb, "{what}: vals");
+        assert_eq!(a.segments, b.segments, "{what}: segments");
+    }
+
+    /// Repair on a skew-preserving Scheme-1 append ≡ from-scratch (I1 at
+    /// the unit level; the property suite covers random schedules).
+    #[test]
+    fn scheme1_repair_matches_rebuild_bitwise() {
+        let base = base_tensor();
+        let old = partition_mode(
+            &base,
+            &Hypergraph::of(&base),
+            0,
+            2,
+            LoadBalance::Adaptive,
+            VertexAssign::Cyclic,
+        );
+        // appending to the already-heaviest vertex preserves the ordering
+        let ext = extend(&base, vec![3, 4], &[(vec![1, 3], 7.0)]);
+        let hg = Hypergraph::of(&ext);
+        let plan = plan_mode_repair(
+            &ext,
+            &hg,
+            &old,
+            base.nnz(),
+            2,
+            LoadBalance::Adaptive,
+            VertexAssign::Cyclic,
+            0.5,
+        );
+        let ModeRepair::Repaired {
+            partitioning,
+            first_changed,
+            touched_partitions,
+            moved_nnz,
+        } = plan
+        else {
+            panic!("skew-preserving append must repair, not rebuild");
+        };
+        let scratch =
+            partition_mode(&ext, &hg, 0, 2, LoadBalance::Adaptive, VertexAssign::Cyclic);
+        assert_partitioning_eq(&partitioning, &scratch, "scheme1 repair");
+        assert!(first_changed < ext.nnz());
+        assert!(touched_partitions >= 1);
+        assert_eq!(moved_nnz as usize, ext.nnz() - first_changed);
+        let old_layout = ModeLayout::build(&base, &old);
+        let repaired =
+            repair_layout(&old_layout, &old.bounds, &ext, &partitioning, first_changed);
+        assert_layout_eq(&repaired, &ModeLayout::build(&ext, &partitioning), "scheme1 layout");
+    }
+
+    /// Scheme 2 always merges (no owners to shift) — including appends
+    /// that grow the mode extent without flipping the adaptive choice.
+    #[test]
+    fn scheme2_repair_matches_rebuild_bitwise() {
+        let base = base_tensor();
+        let kappa = 7; // > dim 3 → Scheme 2 on mode 0
+        let old = partition_mode(
+            &base,
+            &Hypergraph::of(&base),
+            0,
+            kappa,
+            LoadBalance::Adaptive,
+            VertexAssign::Cyclic,
+        );
+        assert_eq!(old.scheme, SchemeUsed::ElementPartitioned);
+        let ext = extend(&base, vec![5, 4], &[(vec![4, 2], -1.0)]);
+        let hg = Hypergraph::of(&ext);
+        let plan = plan_mode_repair(
+            &ext,
+            &hg,
+            &old,
+            base.nnz(),
+            kappa,
+            LoadBalance::Adaptive,
+            VertexAssign::Cyclic,
+            0.5,
+        );
+        let ModeRepair::Repaired {
+            partitioning,
+            first_changed,
+            ..
+        } = plan
+        else {
+            panic!("scheme 2 append under threshold must repair");
+        };
+        let scratch = partition_mode(
+            &ext,
+            &hg,
+            0,
+            kappa,
+            LoadBalance::Adaptive,
+            VertexAssign::Cyclic,
+        );
+        assert_partitioning_eq(&partitioning, &scratch, "scheme2 repair");
+        let old_layout = ModeLayout::build(&base, &old);
+        let repaired =
+            repair_layout(&old_layout, &old.bounds, &ext, &partitioning, first_changed);
+        assert_layout_eq(&repaired, &ModeLayout::build(&ext, &partitioning), "scheme2 layout");
+    }
+
+    /// Growing a Scheme-2 mode past κ flips the adaptive choice → rebuild.
+    #[test]
+    fn scheme_flip_on_grown_extent_rebuilds() {
+        let base = base_tensor();
+        let kappa = 4; // dim 3 < 4 → Scheme 2 initially
+        let old = partition_mode(
+            &base,
+            &Hypergraph::of(&base),
+            0,
+            kappa,
+            LoadBalance::Adaptive,
+            VertexAssign::Cyclic,
+        );
+        assert_eq!(old.scheme, SchemeUsed::ElementPartitioned);
+        let ext = extend(&base, vec![6, 4], &[(vec![5, 0], 1.0)]);
+        let hg = Hypergraph::of(&ext);
+        let plan = plan_mode_repair(
+            &ext,
+            &hg,
+            &old,
+            base.nnz(),
+            kappa,
+            LoadBalance::Adaptive,
+            VertexAssign::Cyclic,
+            0.9,
+        );
+        let ModeRepair::Rebuilt { partitioning } = plan else {
+            panic!("a flipped scheme must rebuild");
+        };
+        assert_eq!(partitioning.scheme, SchemeUsed::IndexPartitioned);
+    }
+
+    /// An append that reorders the degree ranking reassigns owners →
+    /// rebuild (the skew-shift fallback), and the rebuilt partitioning is
+    /// the from-scratch one.
+    #[test]
+    fn skew_shift_rebuilds_to_the_from_scratch_partitioning() {
+        let base = base_tensor();
+        let old = partition_mode(
+            &base,
+            &Hypergraph::of(&base),
+            0,
+            2,
+            LoadBalance::Adaptive,
+            VertexAssign::Cyclic,
+        );
+        // index 2 jumps from degree 1 to 4 — past index 1's 3: new leader
+        let ext = extend(
+            &base,
+            vec![3, 4],
+            &[(vec![2, 0], 1.0), (vec![2, 1], 1.0), (vec![2, 2], 1.0)],
+        );
+        let hg = Hypergraph::of(&ext);
+        let plan = plan_mode_repair(
+            &ext,
+            &hg,
+            &old,
+            base.nnz(),
+            2,
+            LoadBalance::Adaptive,
+            VertexAssign::Cyclic,
+            0.9,
+        );
+        let ModeRepair::Rebuilt { partitioning } = plan else {
+            panic!("an owner reassignment must rebuild");
+        };
+        let scratch =
+            partition_mode(&ext, &hg, 0, 2, LoadBalance::Adaptive, VertexAssign::Cyclic);
+        assert_partitioning_eq(&partitioning, &scratch, "skew-shift rebuild");
+    }
+
+    /// Past the rebuild threshold the merge is skipped outright.
+    #[test]
+    fn oversized_append_rebuilds_by_threshold() {
+        let base = base_tensor();
+        let old = partition_mode(
+            &base,
+            &Hypergraph::of(&base),
+            1,
+            2,
+            LoadBalance::Adaptive,
+            VertexAssign::Cyclic,
+        );
+        let ext = extend(&base, vec![3, 4], &[(vec![1, 3], 7.0), (vec![0, 2], 8.0)]);
+        let plan = plan_mode_repair(
+            &ext,
+            &Hypergraph::of(&ext),
+            &old,
+            base.nnz(),
+            2,
+            LoadBalance::Adaptive,
+            VertexAssign::Cyclic,
+            0.1, // 2 of 8 nonzeros = 25% > 10%
+        );
+        assert!(matches!(plan, ModeRepair::Rebuilt { .. }));
+    }
+
+    /// An empty append (even one that only grows an extent without
+    /// flipping the scheme) is a zero-motion repair.
+    #[test]
+    fn empty_append_is_a_zero_motion_repair() {
+        let base = base_tensor();
+        let old = partition_mode(
+            &base,
+            &Hypergraph::of(&base),
+            0,
+            2,
+            LoadBalance::Adaptive,
+            VertexAssign::Cyclic,
+        );
+        let ext = extend(&base, vec![4, 4], &[]);
+        let hg = Hypergraph::of(&ext);
+        let plan = plan_mode_repair(
+            &ext,
+            &hg,
+            &old,
+            base.nnz(),
+            2,
+            LoadBalance::Adaptive,
+            VertexAssign::Cyclic,
+            0.2,
+        );
+        let ModeRepair::Repaired {
+            partitioning,
+            first_changed,
+            touched_partitions,
+            moved_nnz,
+        } = plan
+        else {
+            panic!("an empty append must repair");
+        };
+        assert_eq!(first_changed, ext.nnz());
+        assert_eq!(touched_partitions, 0);
+        assert_eq!(moved_nnz, 0);
+        let scratch =
+            partition_mode(&ext, &hg, 0, 2, LoadBalance::Adaptive, VertexAssign::Cyclic);
+        assert_partitioning_eq(&partitioning, &scratch, "empty append");
+    }
+}

@@ -8,11 +8,15 @@
 //! * [`hicoo`] — block-compressed COO (the ParTI-GPU baseline's substrate).
 //! * [`memory`] — byte accounting for Fig. 5 and the packed-bits per-copy
 //!   price the memory governor (`exec::memgr`) admits layouts at.
+//! * [`incremental`] — append repair: merge new nonzeros into an existing
+//!   partitioning/layout bitwise-identically to a rebuild (invariant I1).
 
 pub mod blco;
 pub mod csf;
 pub mod hicoo;
+pub mod incremental;
 pub mod memory;
 pub mod mode_specific;
 
+pub use incremental::ModeRepair;
 pub use mode_specific::{ModeCopy, ModeLayout, ModeSpecificFormat};

@@ -25,6 +25,7 @@ use crate::api::Result;
 use crate::exec::memgr::{MemoryBudget, MemoryGovernor, Slot, SlotKey, SlotResidency, TenantId};
 use crate::format::memory::packed_copy_bytes;
 use crate::hypergraph::Hypergraph;
+use crate::metrics::RepairReport;
 use crate::partition::{
     partition_mode, LoadBalance, ModePartitioning, SchemeUsed, VertexAssign,
 };
@@ -62,22 +63,11 @@ impl ModeLayout {
         let kappa = partitioning.kappa;
         let mut segments = Vec::with_capacity(kappa);
         for z in 0..kappa {
-            let (lo, hi) = (partitioning.bounds[z], partitioning.bounds[z + 1]);
-            let mut runs = Vec::new();
-            let mut t = lo;
-            while t < hi {
-                let idx = col[t];
-                let start = t;
-                while t < hi && col[t] == idx {
-                    t += 1;
-                }
-                runs.push(Segment {
-                    out_index: idx,
-                    start: start as u32,
-                    end: t as u32,
-                });
-            }
-            segments.push(runs);
+            segments.push(scan_runs(
+                col,
+                partitioning.bounds[z],
+                partitioning.bounds[z + 1],
+            ));
         }
         ModeLayout { tensor, segments }
     }
@@ -86,6 +76,28 @@ impl ModeLayout {
     pub fn n_segments(&self) -> usize {
         self.segments.iter().map(|s| s.len()).sum()
     }
+}
+
+/// Scan the contiguous output-index runs of `col[lo..hi]` (one
+/// partition's range of a permuted copy). Shared by [`ModeLayout::build`]
+/// and the incremental splice (`format::incremental::repair_layout`), so
+/// a rescanned partition's table is bitwise what the full build produces.
+pub(crate) fn scan_runs(col: &[u32], lo: usize, hi: usize) -> Vec<Segment> {
+    let mut runs = Vec::new();
+    let mut t = lo;
+    while t < hi {
+        let idx = col[t];
+        let start = t;
+        while t < hi && col[t] == idx {
+            t += 1;
+        }
+        runs.push(Segment {
+            out_index: idx,
+            start: start as u32,
+            end: t as u32,
+        });
+    }
+    runs
 }
 
 /// The tensor copy specialised for one output mode: retained partitioning
@@ -175,6 +187,57 @@ impl ModeCopy {
     /// rebuilds bitwise-identically.
     pub fn evict(&self) -> bool {
         self.governor.evict(self.slot.key())
+    }
+
+    /// Absorb an append into this copy: install the planned partitioning
+    /// (`crate::format::incremental::plan_mode_repair` on `ext`), swap the
+    /// retained COO, and re-price the layout under the governor — the old
+    /// slot retires via [`MemoryGovernor::unregister`] (stale pins stay
+    /// valid until they drop, but nothing faults through it again) and a
+    /// freshly priced slot registers under the same key. When the old
+    /// layout was resident and the plan is a repair, the new layout is
+    /// spliced in place; otherwise it materializes through the pure
+    /// [`ModeLayout::build`] path. Either way the result is bitwise what
+    /// a from-scratch build produces (invariant I1), so later
+    /// evict+rebuild cycles stay consistent (M1).
+    pub(crate) fn apply_append(
+        &mut self,
+        ext: &Arc<SparseTensorCOO>,
+        plan: crate::format::incremental::ModeRepair,
+    ) -> Result<()> {
+        use crate::format::incremental::{repair_layout, ModeRepair};
+        let old_layout = self.slot.get();
+        self.governor.unregister(self.slot.key());
+        let price = packed_copy_bytes(&ext.dims, ext.nnz() as u64);
+        let slot = Slot::new(self.slot.key(), price);
+        self.governor.register(&slot);
+        self.slot = slot;
+        let splice = match plan {
+            ModeRepair::Repaired {
+                partitioning,
+                first_changed,
+                ..
+            } => {
+                let old_p = std::mem::replace(&mut self.partitioning, partitioning);
+                Some((old_p, first_changed))
+            }
+            ModeRepair::Rebuilt { partitioning } => {
+                self.partitioning = partitioning;
+                None
+            }
+        };
+        self.original = Arc::clone(ext);
+        let layout = match (old_layout, splice) {
+            (Some(old), Some((old_p, first_changed))) => {
+                self.slot.ensure(&self.governor, || {
+                    repair_layout(&old, &old_p.bounds, ext, &self.partitioning, first_changed)
+                })?
+            }
+            // evicted (or rebuilt): materialize through the pure path
+            _ => self.layout()?,
+        };
+        self.n_segments = layout.n_segments();
+        Ok(())
     }
 
     /// Residency snapshot of this copy's slot.
@@ -270,6 +333,58 @@ impl ModeSpecificFormat {
     /// evictions).
     pub fn residency(&self) -> Vec<SlotResidency> {
         self.copies.iter().map(ModeCopy::residency).collect()
+    }
+
+    /// Absorb an append across every mode copy. `ext` is the extended
+    /// tensor (the first `self.original().nnz()` nonzeros are the current
+    /// tensor, unchanged — the caller validated the new ones). Each mode
+    /// independently repairs in place or falls back to a rebuild
+    /// (`crate::format::incremental::plan_mode_repair`); the returned
+    /// [`RepairReport`] says which. The caller (the engine) must rebuild
+    /// its `ModePlan`s afterwards — bounds, update policies and extents
+    /// may all have changed.
+    pub(crate) fn apply_append(
+        &mut self,
+        ext: Arc<SparseTensorCOO>,
+        assign: VertexAssign,
+        rebuild_threshold: f64,
+    ) -> Result<RepairReport> {
+        let old_nnz = self.original.nnz();
+        debug_assert!(ext.nnz() >= old_nnz, "append cannot shrink the tensor");
+        let hg = Hypergraph::of(&ext);
+        let mut report = RepairReport {
+            appended_nnz: ext.nnz() - old_nnz,
+            ..Default::default()
+        };
+        for copy in &mut self.copies {
+            let plan = crate::format::incremental::plan_mode_repair(
+                &ext,
+                &hg,
+                &copy.partitioning,
+                old_nnz,
+                self.kappa,
+                self.lb,
+                assign,
+                rebuild_threshold,
+            );
+            match &plan {
+                crate::format::incremental::ModeRepair::Repaired {
+                    touched_partitions,
+                    moved_nnz,
+                    ..
+                } => {
+                    report.repaired_modes.push(copy.mode());
+                    report.touched_partitions += touched_partitions;
+                    report.moved_nnz += moved_nnz;
+                }
+                crate::format::incremental::ModeRepair::Rebuilt { .. } => {
+                    report.rebuilt_modes.push(copy.mode());
+                }
+            }
+            copy.apply_append(&ext, plan)?;
+        }
+        self.original = ext;
+        Ok(report)
     }
 }
 

@@ -63,9 +63,9 @@ pub mod tensor;
 pub mod util;
 
 pub use api::{
-    BackendKind, BatchDispatchReport, DecomposeRequest, Error, ExecutorBuilder, ExecutorKind,
-    MttkrpBatch, MttkrpRequest, Result, Service, ServicePolicy, Session, SessionBuilder,
-    TensorHandle, Ticket,
+    AppendRequest, BackendKind, BatchDispatchReport, DecomposeRequest, Error, ExecutorBuilder,
+    ExecutorKind, MttkrpBatch, MttkrpRequest, Result, Service, ServicePolicy, Session,
+    SessionBuilder, TensorHandle, TensorUpdate, Ticket,
 };
 
 /// Most-used types, re-exported for `use spmttkrp::prelude::*`.
@@ -75,18 +75,18 @@ pub use api::{
 /// executor trait, the engine and CPD types, and the tensor substrate.
 pub mod prelude {
     pub use crate::api::{
-        BackendKind, BatchDispatchReport, DecomposeRequest, Error, ExecutorBuilder, ExecutorKind,
-        MttkrpBatch, MttkrpRequest, Result, Service, ServicePolicy, Session, SessionBuilder,
-        TensorHandle, Ticket,
+        AppendRequest, BackendKind, BatchDispatchReport, DecomposeRequest, Error,
+        ExecutorBuilder, ExecutorKind, MttkrpBatch, MttkrpRequest, Result, Service,
+        ServicePolicy, Session, SessionBuilder, TensorHandle, TensorUpdate, Ticket,
     };
     pub use crate::baselines::MttkrpExecutor;
     pub use crate::coordinator::{DenseScratch, Engine, EngineConfig, UpdatePolicy};
-    pub use crate::cpd::{als, CpdConfig, CpdResult};
+    pub use crate::cpd::{als, als_warm, CpdConfig, CpdResult, WarmStart};
     pub use crate::exec::{DeviceCluster, MemoryBudget, MemoryGovernor, ResidencyReport, SmPool};
     pub use crate::format::{memory::MemoryReport, ModeSpecificFormat};
     pub use crate::metrics::{
-        ClusterCounters, ExecReport, LatencyStats, ModeExecReport, ResidencyCounters,
-        ServiceCounters, ServiceReport, TrafficCounters,
+        ClusterCounters, ExecReport, LatencyStats, ModeExecReport, RepairReport,
+        ResidencyCounters, ServiceCounters, ServiceReport, TrafficCounters,
     };
     pub use crate::partition::{LoadBalance, ModePartitioning, VertexAssign};
     pub use crate::runtime::{Backend, NativeBackend, PjrtBackend};

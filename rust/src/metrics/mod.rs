@@ -148,6 +148,80 @@ impl ClusterCounters {
             .max()
             .unwrap_or_default()
     }
+
+    /// Fold another dispatch's counters into this one (per-device bytes
+    /// and makespans add element-wise; device counts may differ when a
+    /// later round sharded across fewer devices). Makespans *sum* because
+    /// successive dispatches are separated by a barrier, like
+    /// [`ExecReport::total_sim`]; the imbalance is recomputed over the
+    /// accumulated staged bytes. Used by the lock-step `decompose_batch`
+    /// driver to surface one [`ClusterCounters`] per ALS iteration.
+    pub fn absorb(&mut self, o: &ClusterCounters) {
+        if self.bytes_staged.len() < o.bytes_staged.len() {
+            self.bytes_staged.resize(o.bytes_staged.len(), 0);
+        }
+        for (a, &b) in self.bytes_staged.iter_mut().zip(&o.bytes_staged) {
+            *a += b;
+        }
+        self.bytes_merged += o.bytes_merged;
+        if self.device_makespans.len() < o.device_makespans.len() {
+            self.device_makespans
+                .resize(o.device_makespans.len(), Duration::ZERO);
+        }
+        for (a, &b) in self.device_makespans.iter_mut().zip(&o.device_makespans) {
+            *a += b;
+        }
+        self.imbalance = Imbalance::of(&self.bytes_staged);
+    }
+}
+
+impl Default for ClusterCounters {
+    /// The zero-dispatch identity for [`ClusterCounters::absorb`]: no
+    /// devices, no bytes, balanced by convention.
+    fn default() -> Self {
+        ClusterCounters {
+            bytes_staged: Vec::new(),
+            bytes_merged: 0,
+            device_makespans: Vec::new(),
+            imbalance: Imbalance::of(&[]),
+        }
+    }
+}
+
+/// What `Session::append` did to one tenant's per-mode layouts: which
+/// modes were repaired in place (appended nonzeros merged into the
+/// existing permutation, only affected partitions' segment tables
+/// rescanned) versus rebuilt from scratch (skew shift, scheme flip, or an
+/// append past the session's rebuild threshold), and how much data the
+/// repairs actually moved. Like [`ResidencyCounters`] and
+/// [`ClusterCounters`], this is a side channel: invariant I1 (DESIGN.md
+/// §6) compares post-append replay bitwise against a from-scratch
+/// rebuild, so repair bookkeeping never lands in [`TrafficCounters`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RepairReport {
+    /// Nonzeros the append added (after none of them were rejected).
+    pub appended_nnz: usize,
+    /// Modes whose partitioning and layout were repaired in place.
+    pub repaired_modes: Vec<usize>,
+    /// Modes rebuilt from scratch, with why: the append crossed the
+    /// rebuild threshold, flipped the adaptive scheme choice, or shifted
+    /// the degree ordering enough to reassign owners.
+    pub rebuilt_modes: Vec<usize>,
+    /// Partitions whose segment tables were rescanned, summed over the
+    /// repaired modes (rebuilt modes rescan everything and count nothing
+    /// here).
+    pub touched_partitions: usize,
+    /// Nonzeros inserted or shifted by in-place repairs, summed over the
+    /// repaired modes.
+    pub moved_nnz: u64,
+}
+
+impl RepairReport {
+    /// True when every mode was repaired in place (also true for an empty
+    /// append, which touches nothing).
+    pub fn fully_repaired(&self) -> bool {
+        self.rebuilt_modes.is_empty()
+    }
 }
 
 /// Result of executing spMTTKRP along one mode.
@@ -172,6 +246,11 @@ pub struct ModeExecReport {
 #[derive(Clone, Debug)]
 pub struct ExecReport {
     pub modes: Vec<ModeExecReport>,
+    /// Modeled inter-device traffic when the execution was sharded across
+    /// a `DeviceCluster` — populated per ALS iteration by the lock-step
+    /// `decompose_batch` driver (all of the iteration's mode dispatches
+    /// absorbed into one set of counters), `None` on single-pool runs.
+    pub cluster: Option<ClusterCounters>,
 }
 
 impl ExecReport {
@@ -421,9 +500,53 @@ mod tests {
         };
         let r = ExecReport {
             modes: vec![m(0), m(1), m(2)],
+            cluster: None,
         };
         assert_eq!(r.total_wall(), Duration::from_millis(30));
         assert_eq!(r.total_sim(), Duration::from_millis(9));
         assert_eq!(r.total_traffic().tensor_bytes_read, 300);
+    }
+
+    #[test]
+    fn cluster_counters_absorb_sums_and_reweighs() {
+        let mut a = ClusterCounters {
+            bytes_staged: vec![100, 60],
+            bytes_merged: 60,
+            device_makespans: vec![Duration::from_micros(9), Duration::from_micros(12)],
+            imbalance: Imbalance::of(&[100, 60]),
+        };
+        let b = ClusterCounters {
+            bytes_staged: vec![40, 20, 10],
+            bytes_merged: 30,
+            device_makespans: vec![
+                Duration::from_micros(1),
+                Duration::from_micros(2),
+                Duration::from_micros(3),
+            ],
+            imbalance: Imbalance::of(&[40, 20, 10]),
+        };
+        a.absorb(&b);
+        assert_eq!(a.bytes_staged, vec![140, 80, 10]);
+        assert_eq!(a.bytes_merged, 90);
+        assert_eq!(
+            a.device_makespans,
+            vec![
+                Duration::from_micros(10),
+                Duration::from_micros(14),
+                Duration::from_micros(3),
+            ]
+        );
+        assert_eq!(a.n_devices(), 3);
+        assert_eq!(a.imbalance, Imbalance::of(&[140, 80, 10]));
+    }
+
+    #[test]
+    fn repair_report_fully_repaired() {
+        let mut r = RepairReport::default();
+        assert!(r.fully_repaired(), "empty append repairs trivially");
+        r.repaired_modes = vec![0, 2];
+        assert!(r.fully_repaired());
+        r.rebuilt_modes = vec![1];
+        assert!(!r.fully_repaired());
     }
 }

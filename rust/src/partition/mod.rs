@@ -87,6 +87,25 @@ impl ModePartitioning {
             .map(|z| self.partition_len(z) as u64)
             .collect()
     }
+
+    /// The total-order key nonzero `t` sorts by in this partitioning's
+    /// permuted layout (`col` is the tensor's index column for this mode).
+    /// Both schemes order by a key with no ties, so `perm` is uniquely
+    /// determined by the (owner, column) data — the property incremental
+    /// repair (`format::incremental`) relies on to merge appended nonzeros
+    /// into an existing `perm` and land bitwise on the from-scratch result.
+    pub fn order_key(&self, col: &[u32], t: u32) -> (u64, u32) {
+        match self.scheme {
+            SchemeUsed::IndexPartitioned => {
+                let i = col[t as usize];
+                let owner = self.owner.as_ref().expect("scheme 1 carries owners");
+                (((owner[i as usize] as u64) << 32) | i as u64, t)
+            }
+            // Scheme 2's primary key already encodes the position, so the
+            // secondary component is constant.
+            SchemeUsed::ElementPartitioned => (((col[t as usize] as u64) << 32) | t as u64, 0),
+        }
+    }
 }
 
 /// Partition mode `d` with the adaptive rule (or a forced scheme).
@@ -119,6 +138,50 @@ pub fn scheme1(
     assign: VertexAssign,
 ) -> ModePartitioning {
     let dim = tensor.dims[mode] as usize;
+    let owner = assign_owners(hg, mode, dim, kappa, assign);
+    // Bucket nonzeros by owning partition, ordering by (partition, output
+    // index, original position): within a partition all hyperedges of one
+    // output index are contiguous — the property the segmented kernel and
+    // the "no intermediate values to global memory" claim rely on. The
+    // original-position tie-break makes the key a total order, so the
+    // permutation is a pure function of (owner, column) — what lets
+    // `format::incremental` merge appends instead of re-sorting.
+    let nnz = tensor.nnz();
+    let col = &tensor.inds[mode];
+    let mut perm: Vec<u32> = (0..nnz as u32).collect();
+    perm.sort_unstable_by_key(|&t| {
+        let i = col[t as usize];
+        (((owner[i as usize] as u64) << 32) | i as u64, t)
+    });
+    let mut bounds = vec![0usize; kappa + 1];
+    for &t in &perm {
+        bounds[owner[col[t as usize] as usize] as usize + 1] += 1;
+    }
+    for z in 0..kappa {
+        bounds[z + 1] += bounds[z];
+    }
+    ModePartitioning {
+        mode,
+        scheme: SchemeUsed::IndexPartitioned,
+        kappa,
+        perm,
+        bounds,
+        owner: Some(owner),
+    }
+}
+
+/// Scheme 1's vertex dealing: output-index → owning partition for mode
+/// `mode` of a tensor with extent `dim`, per the degree-ordered vertex
+/// list of `hg`. Deterministic in `hg` alone, which is what lets
+/// incremental repair detect whether an append shifted the skew: recompute
+/// on the extended hypergraph and compare against the installed owners.
+pub fn assign_owners(
+    hg: &Hypergraph,
+    mode: usize,
+    dim: usize,
+    kappa: usize,
+    assign: VertexAssign,
+) -> Vec<u32> {
     let ordered = hg.ordered_vertices(mode);
     let deg = &hg.degrees[mode];
     let mut owner = vec![0u32; dim];
@@ -141,32 +204,7 @@ pub fn scheme1(
             }
         }
     }
-    // Bucket nonzeros by owning partition, ordering by (partition, output
-    // index, original position): within a partition all hyperedges of one
-    // output index are contiguous — the property the segmented kernel and
-    // the "no intermediate values to global memory" claim rely on.
-    let nnz = tensor.nnz();
-    let col = &tensor.inds[mode];
-    let mut perm: Vec<u32> = (0..nnz as u32).collect();
-    perm.sort_unstable_by_key(|&t| {
-        let i = col[t as usize];
-        ((owner[i as usize] as u64) << 32) | i as u64
-    });
-    let mut bounds = vec![0usize; kappa + 1];
-    for &t in &perm {
-        bounds[owner[col[t as usize] as usize] as usize + 1] += 1;
-    }
-    for z in 0..kappa {
-        bounds[z + 1] += bounds[z];
-    }
-    ModePartitioning {
-        mode,
-        scheme: SchemeUsed::IndexPartitioned,
-        kappa,
-        perm,
-        bounds,
-        owner: Some(owner),
-    }
+    owner
 }
 
 /// Scheme 2: equal distribution of *nonzeros* among partitions.

@@ -40,7 +40,7 @@ impl Summary {
 }
 
 /// Load-imbalance statistics over per-worker loads (nnz or bytes).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Imbalance {
     pub max: u64,
     pub min: u64,

@@ -1,0 +1,493 @@
+//! The property-test harness pinning incremental appends (DESIGN.md §6,
+//! invariant I1) and the online-CPD warm-start path:
+//!
+//!   * **I1** — after ANY seeded schedule of appends (1..20% of nnz,
+//!     empty updates, duplicate coordinates, grown mode extents), a
+//!     session whose layouts were incrementally repaired serves outputs,
+//!     `TrafficCounters`, and CPD fits/factors/weights **bitwise-identical**
+//!     to a control session prepared from the extended tensor from
+//!     scratch — including with governor evictions interleaved (M1 still
+//!     holds) and through `mttkrp_batch`/`decompose_batch` (B1 still
+//!     holds).
+//!   * Online CPD: `decompose` after an append resumes from the tenant's
+//!     prior factors and reports fit drift; a control session given the
+//!     same warm start via `Session::set_warm_start` matches bit for bit.
+//!   * The `decompose_batch` per-iteration report slot carries
+//!     `ClusterCounters` when the session is clustered (the ROADMAP gap).
+//!   * Misuse of the append surface is typed, never a panic, and leaves
+//!     the session and pool reusable.
+//!
+//! Generators are seeded through `util::rng`; every assertion message
+//! carries the case seed for replay.
+
+use spmttkrp::api::{Error, ExecutorBuilder, ExecutorKind, Session, TensorUpdate};
+use spmttkrp::cpd::{CpdConfig, WarmStart};
+use spmttkrp::exec::MemoryBudget;
+use spmttkrp::tensor::{FactorSet, SparseTensorCOO};
+use spmttkrp::util::rng::Rng;
+
+/// Random small tensor: 2–4 modes, dims 1..24, nnz 1..300 — small enough
+/// that κ = 7 regularly forces Scheme 2 while κ = 1 always picks Scheme 1,
+/// and cheap enough that every append can be replayed against a control
+/// session prepared from scratch.
+fn random_tensor(rng: &mut Rng) -> SparseTensorCOO {
+    let n = 2 + rng.next_below(3) as usize;
+    let dims: Vec<u32> = (0..n).map(|_| 1 + rng.next_below(24) as u32).collect();
+    let nnz = 1 + rng.next_below(300) as usize;
+    let mut inds: Vec<Vec<u32>> = vec![Vec::with_capacity(nnz); n];
+    let mut vals = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        for (w, col) in inds.iter_mut().enumerate() {
+            let i = if rng.next_f64() < 0.5 {
+                rng.next_below(dims[w] as u64)
+            } else {
+                rng.next_power_law(dims[w] as u64, 2.0)
+            };
+            col.push(i as u32);
+        }
+        vals.push(rng.next_normal() as f32);
+    }
+    SparseTensorCOO::new(dims, inds, vals)
+        .unwrap()
+        .collapse_duplicates()
+}
+
+/// Random append against `t`: usually 1..20% of nnz new nonzeros (with a
+/// bias toward duplicating existing coordinates — duplicates are legal and
+/// sum on execution), sometimes empty, sometimes growing mode extents so
+/// appended coordinates can land in index space the original never had.
+fn random_update(rng: &mut Rng, t: &SparseTensorCOO) -> TensorUpdate {
+    let n = t.n_modes();
+    let dims = if rng.next_f64() < 0.35 {
+        // grow 1..=all extents by 1..4
+        let mut d = t.dims.clone();
+        let grow = 1 + rng.next_below(n as u64) as usize;
+        for _ in 0..grow {
+            let w = rng.next_below(n as u64) as usize;
+            d[w] += 1 + rng.next_below(4) as u32;
+        }
+        Some(d)
+    } else {
+        None
+    };
+    let bounds = dims.clone().unwrap_or_else(|| t.dims.clone());
+    if rng.next_f64() < 0.15 {
+        // empty append (possibly with grown extents alone)
+        let mut up = TensorUpdate::new(vec![Vec::new(); n], Vec::new());
+        if let Some(d) = dims {
+            up = up.with_dims(d);
+        }
+        return up;
+    }
+    let count = 1 + rng.next_below(((t.nnz() / 5).max(1)) as u64) as usize;
+    let mut inds: Vec<Vec<u32>> = vec![Vec::with_capacity(count); n];
+    let mut vals = Vec::with_capacity(count);
+    for _ in 0..count {
+        if rng.next_f64() < 0.3 {
+            // exact duplicate of an existing nonzero's coordinates
+            let s = rng.next_below(t.nnz() as u64) as usize;
+            for (w, col) in inds.iter_mut().enumerate() {
+                col.push(t.inds[w][s]);
+            }
+        } else {
+            for (w, col) in inds.iter_mut().enumerate() {
+                col.push(rng.next_below(bounds[w] as u64) as u32);
+            }
+        }
+        vals.push(rng.next_normal() as f32);
+    }
+    let mut up = TensorUpdate::new(inds, vals);
+    if let Some(d) = dims {
+        up = up.with_dims(d);
+    }
+    up
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what} [{i}]: repaired {x} vs rebuilt {y}");
+    }
+}
+
+fn unbounded_session() -> Session {
+    Session::builder().budget(MemoryBudget::unbounded()).build().unwrap()
+}
+
+fn warm_of(res: &spmttkrp::cpd::CpdResult) -> WarmStart {
+    WarmStart {
+        factors: res.factors.clone(),
+        weights: res.weights.clone(),
+        prior_fit: res.final_fit(),
+    }
+}
+
+/// I1 core: seeded append schedules, each step checked bitwise against a
+/// session prepared from the extended tensor from scratch — with random
+/// evictions interleaved on the subject (M1 composes with I1), and a final
+/// cold-decompose + warm-resume comparison (fits, factors, weights, and
+/// fit drift all bitwise).
+#[test]
+fn prop_append_repair_matches_rebuild_bitwise() {
+    let mut rng = Rng::new(0x11aa_0001);
+    for case in 0..8u64 {
+        let seed = 0x11aa_0001u64 + case;
+        let kappa = [1usize, 4, 7][rng.next_below(3) as usize];
+        let b = ExecutorBuilder::new().rank(4).sm_count(kappa);
+        let t0 = random_tensor(&mut rng);
+        let mut subject = unbounded_session();
+        let h = subject
+            .prepare(&t0, &b)
+            .unwrap_or_else(|e| panic!("case {seed}: prepare failed: {e}"));
+
+        for step in 0..4u64 {
+            let current = subject.tensor(h).unwrap().clone();
+            let up = random_update(&mut rng, &current);
+            let appended = up.nnz();
+            let report = subject
+                .append(h, &up)
+                .unwrap_or_else(|e| panic!("case {seed} step {step}: append failed: {e}"));
+            // report sanity: every mode accounted for exactly once
+            assert_eq!(report.appended_nnz, appended, "case {seed} step {step}");
+            let mut modes: Vec<usize> = report
+                .repaired_modes
+                .iter()
+                .chain(&report.rebuilt_modes)
+                .copied()
+                .collect();
+            modes.sort_unstable();
+            assert_eq!(
+                modes,
+                (0..current.n_modes()).collect::<Vec<_>>(),
+                "case {seed} step {step}: modes partitioned between repaired and rebuilt"
+            );
+
+            // the extended tensor the subject now serves
+            let ext = subject.tensor(h).unwrap().clone();
+            assert_eq!(ext.nnz(), current.nnz() + appended, "case {seed} step {step}");
+
+            // control: the same tensor prepared from scratch
+            let mut control = unbounded_session();
+            let hc = control.prepare(&ext, &b).unwrap();
+
+            // random evictions on the subject before replay: I1 must hold
+            // through the governor's rebuild path too
+            for d in 0..ext.n_modes() {
+                if rng.next_f64() < 0.4 {
+                    let _ = subject.evict(h, d).unwrap();
+                }
+            }
+            let fs = FactorSet::random(&ext.dims, 4, seed ^ (step << 16));
+            for d in 0..ext.n_modes() {
+                let (got, got_rep) = subject.mttkrp(h, &fs, d).unwrap();
+                let (want, want_rep) = control.mttkrp(hc, &fs, d).unwrap();
+                assert_bits_eq(
+                    &got,
+                    &want,
+                    &format!("case {seed} step {step}: mttkrp mode {d} (kappa {kappa})"),
+                );
+                assert_eq!(
+                    got_rep.traffic, want_rep.traffic,
+                    "case {seed} step {step}: counters mode {d} (kappa {kappa})"
+                );
+            }
+        }
+
+        // CPD over the final tensor: the subject never decomposed before,
+        // so both runs are cold-seeded — bitwise equal.
+        let ext = subject.tensor(h).unwrap().clone();
+        let mut control = unbounded_session();
+        let hc = control.prepare(&ext, &b).unwrap();
+        let cfg = CpdConfig { rank: 4, max_iters: 2, tol: 0.0, damp: 1e-4, seed: seed ^ 0xd };
+        let got = subject.decompose(h, &cfg).unwrap();
+        let want = control.decompose(hc, &cfg).unwrap();
+        assert_eq!(got.fits, want.fits, "case {seed}: cold fits");
+        assert_eq!(got.weights, want.weights, "case {seed}: cold weights");
+        assert_eq!(got.fit_drift, None, "case {seed}: cold run reports no drift");
+        for (m, (gf, wf)) in got.factors.factors.iter().zip(&want.factors.factors).enumerate()
+        {
+            assert_bits_eq(&gf.data, &wf.data, &format!("case {seed}: cold factor {m}"));
+        }
+
+        // One more append, then a warm decompose: the subject resumes from
+        // its stored result; the control mirrors via set_warm_start.
+        let up = random_update(&mut rng, &ext);
+        subject.append(h, &up).unwrap();
+        let ext2 = subject.tensor(h).unwrap().clone();
+        let mut control2 = unbounded_session();
+        let hc2 = control2.prepare(&ext2, &b).unwrap();
+        control2.set_warm_start(hc2, warm_of(&want)).unwrap();
+        let got = subject.decompose(h, &cfg).unwrap();
+        let want = control2.decompose(hc2, &cfg).unwrap();
+        assert_eq!(got.fits, want.fits, "case {seed}: warm fits");
+        assert_eq!(got.weights, want.weights, "case {seed}: warm weights");
+        assert!(got.fit_drift.is_some(), "case {seed}: warm run must report drift");
+        assert_eq!(got.fit_drift, want.fit_drift, "case {seed}: drift mismatch");
+        for (m, (gf, wf)) in got.factors.factors.iter().zip(&want.factors.factors).enumerate()
+        {
+            assert_bits_eq(&gf.data, &wf.data, &format!("case {seed}: warm factor {m}"));
+        }
+    }
+}
+
+/// I1 through the batched entry points (B1 composes with I1): appended
+/// tenants served by `mttkrp_batch` and `decompose_batch` match a
+/// rebuilt-from-scratch control's sequential calls bit for bit.
+#[test]
+fn prop_appended_tenants_batch_like_rebuilt_ones() {
+    let mut rng = Rng::new(0x11aa_b001);
+    for case in 0..5u64 {
+        let seed = 0x11aa_b001u64 + case;
+        let kappa = [1usize, 4, 7][rng.next_below(3) as usize];
+        let b = ExecutorBuilder::new().rank(4).sm_count(kappa);
+        let mut subject = unbounded_session();
+        let mut control = unbounded_session();
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let t = random_tensor(&mut rng);
+            let hs = subject.prepare(&t, &b).unwrap();
+            // append on the subject only; the control prepares the
+            // extended tensor from scratch below
+            let up = random_update(&mut rng, &t);
+            subject.append(hs, &up).unwrap();
+            let ext = subject.tensor(hs).unwrap().clone();
+            let hc = control.prepare(&ext, &b).unwrap();
+            let fs = FactorSet::random(&ext.dims, 4, seed ^ handles.len() as u64);
+            handles.push((hs, hc, ext, fs));
+        }
+
+        // batched MTTKRP on the subject vs sequential control replay
+        let reqs: Vec<_> = handles
+            .iter()
+            .map(|(hs, _, ext, fs)| (*hs, rng.next_below(ext.n_modes() as u64) as usize, fs))
+            .collect();
+        let batch = subject.mttkrp_batch(&reqs).unwrap();
+        for (r, ((_, hc, _, fs), &(_, d, _))) in handles.iter().zip(&reqs).enumerate() {
+            let (want, want_rep) = control.mttkrp(*hc, fs, d).unwrap();
+            assert_bits_eq(
+                &batch.outputs[r],
+                &want,
+                &format!("case {seed}: batch req {r} mode {d}"),
+            );
+            assert_eq!(
+                batch.reports[r].traffic, want_rep.traffic,
+                "case {seed}: batch counters req {r} mode {d}"
+            );
+        }
+
+        // lock-step decompose_batch vs sequential control decomposes
+        let cfg = CpdConfig { rank: 4, max_iters: 2, tol: 0.0, damp: 1e-4, seed: seed ^ 0xb };
+        let reqs: Vec<_> = handles.iter().map(|(hs, ..)| (*hs, &cfg)).collect();
+        let got = subject.decompose_batch(&reqs).unwrap();
+        for (r, (_, hc, ..)) in handles.iter().enumerate() {
+            let want = control.decompose(*hc, &cfg).unwrap();
+            assert_eq!(got[r].fits, want.fits, "case {seed}: batch fits req {r}");
+            assert_eq!(got[r].weights, want.weights, "case {seed}: batch weights req {r}");
+            for (m, (gf, wf)) in
+                got[r].factors.factors.iter().zip(&want.factors.factors).enumerate()
+            {
+                assert_bits_eq(
+                    &gf.data,
+                    &wf.data,
+                    &format!("case {seed}: batch req {r} factor {m}"),
+                );
+            }
+        }
+    }
+}
+
+/// Appends across all four executor kinds: the engine repairs (and stays
+/// bitwise-equal to a rebuild), every baseline rejects with a typed error
+/// and keeps serving MTTKRP afterwards.
+#[test]
+fn append_across_all_executor_kinds() {
+    let mut rng = Rng::new(0x11aa_4444);
+    let t = random_tensor(&mut rng);
+    let up = random_update(&mut rng, &t);
+    for kind in ExecutorKind::all() {
+        let b = ExecutorBuilder::new().kind(kind).rank(4).sm_count(4);
+        let mut s = unbounded_session();
+        let h = s.prepare(&t, &b).unwrap();
+        if kind == ExecutorKind::Ours {
+            let report = s.append(h, &up).unwrap();
+            assert_eq!(report.appended_nnz, up.nnz());
+            let ext = s.tensor(h).unwrap().clone();
+            let mut control = unbounded_session();
+            let hc = control.prepare(&ext, &b).unwrap();
+            let fs = FactorSet::random(&ext.dims, 4, 7);
+            for d in 0..ext.n_modes() {
+                let (got, _) = s.mttkrp(h, &fs, d).unwrap();
+                let (want, _) = control.mttkrp(hc, &fs, d).unwrap();
+                assert_bits_eq(&got, &want, &format!("{kind:?} mode {d}"));
+            }
+        } else {
+            let err = s.append(h, &up).unwrap_err();
+            assert!(matches!(err, Error::InvalidConfig(_)), "{kind:?}: got {err}");
+            // the tenant is untouched and still serves
+            assert_eq!(s.tensor(h).unwrap().nnz(), t.nnz(), "{kind:?}: tensor changed");
+            let fs = FactorSet::random(&t.dims, 4, 7);
+            assert!(s.mttkrp(h, &fs, 0).is_ok(), "{kind:?}: session unusable");
+        }
+    }
+}
+
+/// The ROADMAP-named `decompose_batch` gap: per-iteration reports carry
+/// the dispatch's `ClusterCounters` when the session is clustered, and
+/// stay `None` on a single-pool session.
+#[test]
+fn decompose_batch_populates_per_iteration_cluster_counters() {
+    let mut rng = Rng::new(0x11aa_c1c1);
+    let ta = random_tensor(&mut rng);
+    let tb = random_tensor(&mut rng);
+    let b = ExecutorBuilder::new().rank(4).sm_count(4);
+    let cfg = CpdConfig { rank: 4, max_iters: 2, tol: 0.0, damp: 1e-4, seed: 3 };
+
+    let mut clustered = Session::builder()
+        .budget(MemoryBudget::unbounded())
+        .devices(2)
+        .build()
+        .unwrap();
+    let ha = clustered.prepare(&ta, &b).unwrap();
+    let hb = clustered.prepare(&tb, &b).unwrap();
+    let results = clustered.decompose_batch(&[(ha, &cfg), (hb, &cfg)]).unwrap();
+    for (r, res) in results.iter().enumerate() {
+        assert!(!res.reports.is_empty(), "req {r}: no iteration reports");
+        for (it, rep) in res.reports.iter().enumerate() {
+            let c = rep
+                .cluster
+                .as_ref()
+                .unwrap_or_else(|| panic!("req {r} iter {it}: cluster counters dropped"));
+            assert_eq!(c.n_devices(), 2, "req {r} iter {it}: device count");
+            assert!(
+                c.bytes_staged.iter().sum::<u64>() > 0,
+                "req {r} iter {it}: nothing staged"
+            );
+        }
+    }
+
+    // unclustered: the slot exists but stays empty. (Under
+    // SPMTTKRP_DEVICES>1 every session is env-clustered — then the
+    // counters must instead be present at that width.)
+    let mut plain = unbounded_session();
+    let h = plain.prepare(&ta, &b).unwrap();
+    let env_devices = plain.n_devices();
+    let res = plain.decompose_batch(&[(h, &cfg)]).unwrap();
+    for rep in &res[0].reports {
+        if plain.cluster().is_none() {
+            assert!(rep.cluster.is_none(), "single-pool run must not fabricate counters");
+        } else {
+            assert_eq!(
+                rep.cluster.as_ref().map(|c| c.n_devices()),
+                Some(env_devices),
+                "env-clustered run must carry counters at the env width"
+            );
+        }
+    }
+}
+
+/// Satellite: typed misuse of the append surface. Every adversarial update
+/// is a typed `Error`, the tenant's tensor is untouched, and the session
+/// (and its pool) keep serving.
+#[test]
+fn append_misuse_is_typed_never_a_panic() {
+    let mut rng = Rng::new(0x11aa_eeee);
+    let t = random_tensor(&mut rng);
+    let n = t.n_modes();
+    let b = ExecutorBuilder::new().rank(4).sm_count(4);
+    let mut s = unbounded_session();
+    let h = s.prepare(&t, &b).unwrap();
+
+    // unknown/foreign handle
+    let mut other = unbounded_session();
+    let hf = other.prepare(&t, &b).unwrap();
+    let ok_up = TensorUpdate::new(vec![vec![0]; n], vec![1.0]);
+    assert!(matches!(s.append(hf, &ok_up), Err(Error::UnknownHandle(_))));
+
+    // wrong number of coordinate modes
+    let bad = TensorUpdate::new(vec![vec![0]; n + 1], vec![1.0]);
+    assert!(matches!(s.append(h, &bad), Err(Error::ShapeMismatch(_))));
+
+    // ragged columns: coords vs vals disagree
+    let mut inds = vec![vec![0u32]; n];
+    inds[0].push(0);
+    let bad = TensorUpdate::new(inds, vec![1.0]);
+    assert!(matches!(s.append(h, &bad), Err(Error::InvalidData(_))));
+
+    // out-of-bounds coordinate
+    let mut inds = vec![vec![0u32]; n];
+    inds[n - 1][0] = t.dims[n - 1]; // one past the extent
+    let bad = TensorUpdate::new(inds, vec![1.0]);
+    assert!(matches!(s.append(h, &bad), Err(Error::InvalidData(_))));
+
+    // shrinking an extent (generator dims are always >= 1)
+    let mut dims = t.dims.clone();
+    dims[0] -= 1;
+    let bad = TensorUpdate::new(vec![Vec::new(); n], Vec::new()).with_dims(dims);
+    assert!(matches!(s.append(h, &bad), Err(Error::InvalidData(_))));
+
+    // wrong extent count
+    let bad = TensorUpdate::new(vec![Vec::new(); n], Vec::new()).with_dims(vec![8; n + 1]);
+    assert!(matches!(s.append(h, &bad), Err(Error::ShapeMismatch(_))));
+
+    // baseline tenant
+    let hb = s
+        .prepare(&t, &ExecutorBuilder::new().kind(ExecutorKind::Parti).rank(4).sm_count(4))
+        .unwrap();
+    assert!(matches!(s.append(hb, &ok_up), Err(Error::InvalidConfig(_))));
+
+    // nothing stuck: tensors untouched, session and pool still serve —
+    // sequential, batched, and a real append all succeed
+    assert_eq!(s.tensor(h).unwrap().nnz(), t.nnz(), "tensor mutated by rejected append");
+    let fs = FactorSet::random(&t.dims, 4, 5);
+    assert!(s.mttkrp(h, &fs, 0).is_ok());
+    let batch = s.mttkrp_batch(&[(h, 0, &fs)]).unwrap();
+    assert_eq!(batch.outputs.len(), 1);
+    let report = s.append(h, &ok_up).unwrap();
+    assert_eq!(report.appended_nnz, 1);
+    assert_eq!(s.tensor(h).unwrap().nnz(), t.nnz() + 1);
+}
+
+/// The rebuild-threshold knob: 0 forces every non-empty append to rebuild,
+/// 1 repairs whenever ordering allows — and both ends stay bitwise-equal
+/// to a from-scratch control (I1 is threshold-independent).
+#[test]
+fn rebuild_threshold_trades_repair_for_rebuild_but_not_bits() {
+    let mut rng = Rng::new(0x11aa_7777);
+    let t = random_tensor(&mut rng);
+    let mut up = random_update(&mut rng, &t);
+    while up.nnz() == 0 {
+        up = random_update(&mut rng, &t);
+    }
+    let b = ExecutorBuilder::new().rank(4).sm_count(4);
+    for threshold in [0.0, 1.0] {
+        let mut s = Session::builder()
+            .budget(MemoryBudget::unbounded())
+            .rebuild_threshold(threshold)
+            .build()
+            .unwrap();
+        assert_eq!(s.rebuild_threshold(), threshold);
+        let h = s.prepare(&t, &b).unwrap();
+        let report = s.append(h, &up).unwrap();
+        if threshold == 0.0 {
+            assert!(
+                report.repaired_modes.is_empty(),
+                "threshold 0 must rebuild every mode, repaired {:?}",
+                report.repaired_modes
+            );
+        }
+        let ext = s.tensor(h).unwrap().clone();
+        let mut control = unbounded_session();
+        let hc = control.prepare(&ext, &b).unwrap();
+        let fs = FactorSet::random(&ext.dims, 4, 9);
+        for d in 0..ext.n_modes() {
+            let (got, _) = s.mttkrp(h, &fs, d).unwrap();
+            let (want, _) = control.mttkrp(hc, &fs, d).unwrap();
+            assert_bits_eq(&got, &want, &format!("threshold {threshold} mode {d}"));
+        }
+    }
+    // the knob itself is validated at build
+    let err = Session::builder().rebuild_threshold(1.5).build().unwrap_err();
+    assert!(matches!(err, Error::InvalidConfig(_)), "got {err}");
+    let err = Session::builder().rebuild_threshold(f64::NAN).build().unwrap_err();
+    assert!(matches!(err, Error::InvalidConfig(_)), "got {err}");
+}
