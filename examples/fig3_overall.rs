@@ -56,7 +56,8 @@ fn main() -> spmttkrp::Result<()> {
         &rows,
     );
     println!(
-        "\ngeomean speedup: vs BLCO {:.2}x (paper 2.4x), vs MM-CSF {:.2}x (paper 8.9x), vs ParTI {:.2}x (paper 7.9x)",
+        "\ngeomean speedup: vs BLCO {:.2}x (paper 2.4x), vs MM-CSF {:.2}x \
+         (paper 8.9x), vs ParTI {:.2}x (paper 7.9x)",
         geomean(&speedups[0]),
         geomean(&speedups[1]),
         geomean(&speedups[2])

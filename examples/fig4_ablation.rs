@@ -74,7 +74,8 @@ fn main() -> spmttkrp::Result<()> {
         &rows,
     );
     println!(
-        "\ngeomean: adaptive vs scheme-1-only {:.2}x (paper 2.2x), vs scheme-2-only {:.2}x (paper 1.3x)",
+        "\ngeomean: adaptive vs scheme-1-only {:.2}x (paper 2.2x), vs \
+         scheme-2-only {:.2}x (paper 1.3x)",
         geomean(&sp1),
         geomean(&sp2)
     );

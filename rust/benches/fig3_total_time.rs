@@ -68,7 +68,8 @@ fn main() {
         ]);
     }
     print_table(
-        "Fig. 3 — simulated κ-SM total execution time in ms (median±σ); speedups = baseline/ours",
+        "Fig. 3 — simulated κ-SM total execution time in ms (median±σ); \
+         speedups = baseline/ours",
         &[
             "tensor", "ours", "blco", "mm-csf", "parti", "vs-blco", "vs-mmcsf",
             "vs-parti", "traffic", "atomics-ours", "atomics-parti",
@@ -76,7 +77,8 @@ fn main() {
         &rows,
     );
     println!(
-        "\ngeomean speedups: vs BLCO {:.2}x (paper 2.4x) | vs MM-CSF {:.2}x (paper 8.9x) | vs ParTI {:.2}x (paper 7.9x)",
+        "\ngeomean speedups: vs BLCO {:.2}x (paper 2.4x) | vs MM-CSF {:.2}x \
+         (paper 8.9x) | vs ParTI {:.2}x (paper 7.9x)",
         geomean(&speedups[0]),
         geomean(&speedups[1]),
         geomean(&speedups[2]),

@@ -499,12 +499,14 @@ fn run_cycle(session: &Session, shared: &Shared, cycle: Vec<Job>) {
         match session.run_mttkrp_batch(&views) {
             Ok(batch) => {
                 count_dispatch(shared, round.len());
-                let mut outputs = batch.outputs.into_iter();
-                let mut reports = batch.reports.into_iter();
-                for &i in &round {
+                // One result per request by the batch contract; zip instead
+                // of indexing so a length mismatch can never panic the
+                // dispatcher — an undelivered reply resolves its ticket as
+                // ServiceStopped via mpsc drop semantics.
+                let pairs = batch.outputs.into_iter().zip(batch.reports);
+                for (&i, pair) in round.iter().zip(pairs) {
                     let p = &valid[i];
-                    let res = Ok((outputs.next().unwrap(), reports.next().unwrap()));
-                    deliver(shared, &p.reply, p.enqueued, res);
+                    deliver(shared, &p.reply, p.enqueued, Ok(pair));
                 }
             }
             Err(_) => {
@@ -539,10 +541,9 @@ fn run_cycle(session: &Session, shared: &Shared, cycle: Vec<Job>) {
         match session.run_decompose_batch(&reqs) {
             Ok(results) => {
                 count_dispatch(shared, round.len());
-                let mut results = results.into_iter();
-                for &i in &round {
+                for (&i, res) in round.iter().zip(results) {
                     let p = &valid_d[i];
-                    deliver(shared, &p.reply, p.enqueued, Ok(results.next().unwrap()));
+                    deliver(shared, &p.reply, p.enqueued, Ok(res));
                 }
             }
             Err(_) => {

@@ -37,6 +37,7 @@ use crate::coordinator::Engine;
 use crate::cpd::{als_warm, CpdConfig, CpdResult, WarmStart};
 use crate::exec::batch::{BatchRun, BatchScheduler};
 use crate::exec::cluster::DeviceCluster;
+use crate::exec::lock_unpoisoned;
 use crate::exec::memgr::{MemoryBudget, MemoryGovernor, ResidencyReport, SlotResidency};
 use crate::exec::SmPool;
 use crate::metrics::{
@@ -85,7 +86,7 @@ struct WarmState {
 
 impl Entry {
     fn warm(&self) -> std::sync::MutexGuard<'_, WarmState> {
-        self.warm.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+        lock_unpoisoned(&self.warm)
     }
 
     /// The warm start the next decompose should resume from, if an append
@@ -900,7 +901,13 @@ impl Session {
         let entry = &mut self.entries[h.index];
         let report = match &mut entry.prepared {
             Prepared::Engine(e) => e.append(Arc::clone(&ext), threshold)?,
-            Prepared::Baseline(_) => unreachable!("rejected above"),
+            // Baseline handles were rejected by the ensure_or! above;
+            // re-reject typed rather than trusting that distance.
+            Prepared::Baseline(_) => bail_with!(
+                InvalidConfig,
+                "append requires ExecutorKind::Ours (baseline formats have no \
+                 incremental repair path)"
+            ),
         };
         entry.tensor = ext;
         entry.mark_warm_pending();

@@ -20,7 +20,9 @@ use std::sync::Arc;
 
 use super::MttkrpExecutor;
 use crate::api::Result;
-use crate::exec::{lanes, ModeAccumulator, ModePlan, SmPool, StagePool, UpdatePolicy, WorkspaceArena};
+use crate::exec::{
+    lanes, ModeAccumulator, ModePlan, SmPool, StagePool, UpdatePolicy, WorkspaceArena,
+};
 use crate::format::blco::BlcoTensor;
 use crate::metrics::TrafficCounters;
 use crate::tensor::{FactorSet, SparseTensorCOO};

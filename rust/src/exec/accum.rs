@@ -323,9 +323,7 @@ impl<'a> ModeAccumulator<'a> {
     pub fn sink(&self, z: usize) -> RowSink<'_, 'a> {
         match self.policy {
             UpdatePolicy::Local => RowSink::Local(&self.shared),
-            UpdatePolicy::Global => RowSink::Global(
-                self.stages[z].lock().unwrap_or_else(std::sync::PoisonError::into_inner),
-            ),
+            UpdatePolicy::Global => RowSink::Global(lock_unpoisoned(&self.stages[z])),
         }
     }
 

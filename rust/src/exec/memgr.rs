@@ -30,7 +30,7 @@
 //! the governor mutex, never the reverse.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, PoisonError, Weak};
+use std::sync::{Arc, Condvar, Mutex, Weak};
 
 use crate::api::{Error, Result};
 use crate::metrics::ResidencyCounters;
@@ -419,7 +419,7 @@ impl MemoryGovernor {
             if g.reserved > 0 {
                 // an in-flight rebuild holds the remaining bytes; once it
                 // commits (or rolls back) there is something to evict
-                g = self.committed.wait(g).unwrap_or_else(PoisonError::into_inner);
+                g = wait_unpoisoned(&self.committed, g);
                 continue;
             }
             return Err(Error::BudgetExceeded {

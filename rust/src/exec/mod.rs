@@ -79,6 +79,18 @@ pub(crate) fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGua
     m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
+/// Poison-tolerant condvar wait — the blocking-side twin of
+/// [`lock_unpoisoned`], and like it the one sanctioned acquisition
+/// primitive (static gate rule R3): a waiter must survive a peer's panic
+/// poisoning the mutex mid-wait under the same survive-and-propagate
+/// contract.
+pub(crate) fn wait_unpoisoned<'a, T>(
+    cv: &std::sync::Condvar,
+    guard: std::sync::MutexGuard<'a, T>,
+) -> std::sync::MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Default worker count for a new pool: `SPMTTKRP_THREADS` if set (> 0),
 /// else this machine's available parallelism. Read per call — cheap, and
 /// keeps tests free to vary the variable.

@@ -9,13 +9,13 @@
 //! modes).
 
 use std::any::Any;
-use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::api::Result;
 use crate::exec::batch::BatchScheduler;
-use crate::exec::lock_unpoisoned;
+use crate::exec::{lock_unpoisoned, wait_unpoisoned};
 use crate::metrics::TrafficCounters;
 use crate::util::stats::Imbalance;
 
@@ -71,6 +71,10 @@ impl SmPool {
             work_ready: Condvar::new(),
             done: Condvar::new(),
         });
+        // expect kept (gate-allowlisted): an OS-level thread-spawn failure
+        // at pool construction predates any request and has no caller that
+        // could recover — SmPool::new is deliberately infallible.
+        #[allow(clippy::expect_used)]
         let handles = (0..workers)
             .map(|i| {
                 let shared = Arc::clone(&shared);
@@ -118,14 +122,14 @@ impl SmPool {
         let mut st = lock_unpoisoned(&sh.state);
         // Another dispatcher may be mid-call: wait for the slot.
         while st.active > 0 || st.job.is_some() {
-            st = sh.done.wait(st).unwrap_or_else(PoisonError::into_inner);
+            st = wait_unpoisoned(&sh.done, st);
         }
         st.job = Some(job);
         st.epoch += 1;
         st.active = self.workers;
         sh.work_ready.notify_all();
         while st.active > 0 {
-            st = sh.done.wait(st).unwrap_or_else(PoisonError::into_inner);
+            st = wait_unpoisoned(&sh.done, st);
         }
         st.job = None;
         let panic = st.panic.take();
@@ -168,6 +172,7 @@ impl SmPool {
         // the scheduler always yields exactly one TenantRun. Fail loudly
         // if that invariant ever breaks — fabricating kappa zero-cost
         // partitions here would silently corrupt every report.
+        #[allow(clippy::expect_used)] // fail-loudly guard, gate-allowlisted
         let tenant = run
             .tenants
             .into_iter()
@@ -197,6 +202,11 @@ impl Drop for SmPool {
 fn worker_loop(shared: &PoolShared, me: usize) {
     let mut last_epoch = 0u64;
     loop {
+        // expect kept (gate-allowlisted): protocol invariant — run_partitions
+        // installs the job before bumping the epoch under the same lock, so
+        // an advanced epoch with no job is unreachable; fabricating a no-op
+        // here would silently drop a dispatch.
+        #[allow(clippy::expect_used)]
         let job = {
             let mut st = lock_unpoisoned(&shared.state);
             loop {
@@ -207,7 +217,7 @@ fn worker_loop(shared: &PoolShared, me: usize) {
                     last_epoch = st.epoch;
                     break st.job.expect("job present while epoch advances");
                 }
-                st = shared.work_ready.wait(st).unwrap_or_else(PoisonError::into_inner);
+                st = wait_unpoisoned(&shared.work_ready, st);
             }
         };
         let outcome =

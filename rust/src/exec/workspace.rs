@@ -8,6 +8,8 @@
 
 use std::sync::Mutex;
 
+use super::lock_unpoisoned;
+
 /// `n_workers` independently-owned scratch values of type `T`.
 pub struct WorkspaceArena<T> {
     slots: Vec<Mutex<T>>,
@@ -31,9 +33,7 @@ impl<T> WorkspaceArena<T> {
     /// after a caught panic.
     #[inline]
     pub fn with<R>(&self, w: usize, f: impl FnOnce(&mut T) -> R) -> R {
-        let mut guard = self.slots[w % self.slots.len()]
-            .lock()
-            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        let mut guard = lock_unpoisoned(&self.slots[w % self.slots.len()]);
         f(&mut guard)
     }
 }

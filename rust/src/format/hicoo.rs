@@ -80,7 +80,8 @@ impl HicooTensor {
                     vals: Vec::new(),
                 });
             }
-            let b = blocks.last_mut().unwrap();
+            // Non-empty by construction: `!same` just pushed the block.
+            let Some(b) = blocks.last_mut() else { continue };
             for w in 0..n {
                 b.off[w].push((tensor.inds[w][t as usize] - b.base[w]) as u8);
             }

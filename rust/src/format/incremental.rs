@@ -120,7 +120,12 @@ pub fn plan_mode_repair(
     let owner = match scheme_now {
         SchemeUsed::IndexPartitioned => {
             let owner = assign_owners(hg, mode, ext.dims[mode] as usize, kappa, assign);
-            let installed = old.owner.as_ref().expect("scheme 1 carries owners");
+            // Scheme-1 partitionings carry owners by construction; if this
+            // one somehow doesn't, fall back to the always-correct rebuild
+            // instead of panicking mid-append.
+            let Some(installed) = old.owner.as_ref() else {
+                return rebuild();
+            };
             if owner[..installed.len()] != installed[..] {
                 return rebuild();
             }
@@ -169,7 +174,11 @@ pub fn plan_mode_repair(
         SchemeUsed::IndexPartitioned => {
             // old per-partition counts plus the appended counts — the
             // same totals a from-scratch owner count would produce
-            let owner = merged.owner.as_ref().unwrap();
+            // Set to Some(..) in the scheme-1 arm above; rebuild (never
+            // panic) if that pairing is ever broken.
+            let Some(owner) = merged.owner.as_ref() else {
+                return rebuild();
+            };
             let mut extra = vec![0usize; kappa];
             for &t in &add {
                 extra[owner[col[t as usize] as usize] as usize] += 1;

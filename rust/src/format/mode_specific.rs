@@ -260,6 +260,10 @@ pub struct ModeSpecificFormat {
 impl ModeSpecificFormat {
     /// Ungoverned convenience (tests, single-engine tools): a fresh
     /// unbounded governor, everything stays resident.
+    // expect kept (gate-allowlisted): the only build_governed error path
+    // is BudgetExceeded, which an unbounded governor cannot take; a
+    // Result would ripple through the infallible convenience API.
+    #[allow(clippy::expect_used)]
     pub fn build(
         tensor: &SparseTensorCOO,
         kappa: usize,

@@ -94,6 +94,10 @@ impl ModePartitioning {
     /// determined by the (owner, column) data — the property incremental
     /// repair (`format::incremental`) relies on to merge appended nonzeros
     /// into an existing `perm` and land bitwise on the from-scratch result.
+    // expect kept (gate-allowlisted): this runs O(nnz log nnz) inside the
+    // repair merge's sort comparator — a Result here would tax the hot
+    // path, and scheme-1 constructors install owners unconditionally.
+    #[allow(clippy::expect_used)]
     pub fn order_key(&self, col: &[u32], t: u32) -> (u64, u32) {
         match self.scheme {
             SchemeUsed::IndexPartitioned => {
@@ -198,7 +202,15 @@ pub fn assign_owners(
             // Reverse-ordering noise.
             let mut loads = vec![0u64; kappa];
             for &v in &ordered {
-                let z = (0..kappa).min_by_key(|&z| loads[z]).unwrap();
+                // argmin, first-wins on ties (what min_by_key returns) —
+                // written out so kappa ≥ 1 need not be trusted with an
+                // unwrap.
+                let mut z = 0usize;
+                for cand in 1..kappa {
+                    if loads[cand] < loads[z] {
+                        z = cand;
+                    }
+                }
                 owner[v as usize] = z as u32;
                 loads[z] += deg[v as usize] as u64;
             }

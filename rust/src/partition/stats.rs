@@ -32,7 +32,7 @@ pub fn evaluate(p: &ModePartitioning, max_degree: u32) -> PartitionStats {
     let nnz: u64 = loads.iter().sum();
     let ceil_avg = nnz.div_ceil(p.kappa as u64);
     let lower_bound = ceil_avg.max(max_degree as u64).max(1);
-    let max_load = *loads.iter().max().unwrap();
+    let max_load = loads.iter().copied().max().unwrap_or(0);
     PartitionStats {
         mode: p.mode,
         imbalance: Imbalance::of(&loads),

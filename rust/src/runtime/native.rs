@@ -40,10 +40,13 @@ fn solve_xv_eq_m(rank: usize, v: &[f32], m: &[f32], out: &mut [f32]) -> Result<(
     }
     // LU with partial pivoting, in place.
     for col in 0..r {
+        // total_cmp keeps NaN pivots orderable (they sort above finite
+        // magnitudes and then fail the singularity check below as a typed
+        // Numeric error); the fallback covers the impossible empty range.
         let (piv, piv_val) = (col..r)
             .map(|i| (i, a[i * r + col].abs()))
-            .max_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
-            .unwrap();
+            .max_by(|x, y| x.1.total_cmp(&y.1))
+            .unwrap_or((col, 0.0));
         ensure_or!(piv_val > 1e-30, Numeric, "singular normal-equation matrix");
         if piv != col {
             for j in 0..r {

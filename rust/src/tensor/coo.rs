@@ -110,7 +110,11 @@ impl SparseTensorCOO {
                     .enumerate()
                     .all(|(w, col)| col[t] == inds[w][vals.len() - 1]);
             if same {
-                *vals.last_mut().unwrap() += self.vals[t];
+                // `same` implies vals is non-empty, so the if-let always
+                // hits; written this way so no unwrap is needed.
+                if let Some(last) = vals.last_mut() {
+                    *last += self.vals[t];
+                }
             } else {
                 for (w, col) in self.inds.iter().enumerate() {
                     inds[w].push(col[t]);

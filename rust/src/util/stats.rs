@@ -19,7 +19,7 @@ impl Summary {
         assert!(!samples.is_empty(), "Summary::of on empty sample set");
         let n = samples.len();
         let mut sorted: Vec<f64> = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
             sorted.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
@@ -62,8 +62,8 @@ impl Imbalance {
                 factor: 1.0,
             };
         }
-        let max = *loads.iter().max().unwrap();
-        let min = *loads.iter().min().unwrap();
+        let max = loads.iter().copied().max().unwrap_or(0);
+        let min = loads.iter().copied().min().unwrap_or(0);
         let mean = loads.iter().sum::<u64>() as f64 / loads.len() as f64;
         Imbalance {
             max,

@@ -148,7 +148,11 @@ fn prop_clustered_mttkrp_bitwise_equals_single_pool() {
                         &want,
                         &format!("case {seed} single-call ({kind:?} mode {mode}, N={devices})"),
                     );
-                    assert_eq!(got1_rep.traffic, want_rep.traffic, "case {seed}: single-call counters");
+                    assert_eq!(
+                        got1_rep.traffic,
+                        want_rep.traffic,
+                        "case {seed}: single-call counters"
+                    );
                     r += 1;
                 }
             }

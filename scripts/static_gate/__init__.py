@@ -1,0 +1,7 @@
+"""Toolchain-independent static gate for the spmttkrp repo.
+
+Entry point: `python3 scripts/static_gate/run.py` (or
+`python3 -m scripts.static_gate.run` from the repo root). See the
+"Static gate" section of README.md for the rule catalogue R1-R8, the
+allowlist format, and the STATIC_GATE.json schema.
+"""

@@ -1,0 +1,148 @@
+"""Checked-in suppression file for the static gate.
+
+`allow.toml` is a TOML subset (parsed here with the stdlib only — the
+container's Python predates tomllib): comments, and `[[allow]]` array
+tables whose values are double-quoted strings.
+
+Every entry MUST carry a justification (`why`, ≥ 10 chars) — an
+unexplained suppression is a config error (exit 2), and an entry that no
+longer suppresses anything is a finding (the code got fixed; the
+suppression must be deleted with it).
+
+Entry keys:
+  rule     (required)  rule id, e.g. "R2"
+  path     (required)  repo-relative file the finding lives in
+  contains (optional)  substring that must occur on the flagged source
+                       line; omitted -> the whole file is suppressed for
+                       that rule
+  why      (required)  justification, shown in STATIC_GATE.json
+"""
+
+import re
+
+
+class AllowlistError(Exception):
+    """Malformed allow.toml — a config error, not a finding."""
+
+
+_KV = re.compile(r'^([A-Za-z_][A-Za-z0-9_]*)\s*=\s*"((?:[^"\\]|\\.)*)"\s*$')
+_REQUIRED = ("rule", "path", "why")
+_KNOWN = {"rule", "path", "contains", "why"}
+
+
+class AllowEntry:
+    def __init__(self, rule, path, why, contains=None, line=0):
+        self.rule = rule
+        self.path = path
+        self.why = why
+        self.contains = contains
+        self.line = line
+        self.hits = 0
+
+    def matches(self, finding, source_line):
+        if finding.rule != self.rule or finding.path != self.path:
+            return False
+        if self.contains is not None and self.contains not in source_line:
+            return False
+        return True
+
+    def describe(self):
+        scope = f"contains={self.contains!r}" if self.contains else "whole file"
+        return f"[{self.rule}] {self.path} ({scope})"
+
+
+def _unescape(s):
+    return (
+        s.replace(r"\\", "\x00")
+        .replace(r"\"", '"')
+        .replace(r"\n", "\n")
+        .replace(r"\t", "\t")
+        .replace("\x00", "\\")
+    )
+
+
+def parse(path):
+    """Parse allow.toml -> list[AllowEntry]. Raises AllowlistError."""
+    entries = []
+    current = None
+    current_line = 0
+
+    def finish():
+        if current is None:
+            return
+        missing = [k for k in _REQUIRED if k not in current]
+        if missing:
+            raise AllowlistError(
+                f"{path}:{current_line}: entry missing {missing} "
+                "(rule, path and a justification are mandatory)"
+            )
+        if len(current["why"].strip()) < 10:
+            raise AllowlistError(
+                f"{path}:{current_line}: 'why' must be a real justification "
+                f"(got {current['why']!r})"
+            )
+        entries.append(
+            AllowEntry(
+                current["rule"],
+                current["path"],
+                current["why"],
+                current.get("contains"),
+                current_line,
+            )
+        )
+
+    with open(path, encoding="utf-8") as f:
+        for lineno, raw in enumerate(f, 1):
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            if line == "[[allow]]":
+                finish()
+                current = {}
+                current_line = lineno
+                continue
+            if line.startswith("["):
+                raise AllowlistError(
+                    f"{path}:{lineno}: unknown table {line!r} "
+                    "(only [[allow]] entries are supported)"
+                )
+            m = _KV.match(line)
+            if not m:
+                raise AllowlistError(
+                    f"{path}:{lineno}: cannot parse {line!r} "
+                    '(expected key = "double-quoted string")'
+                )
+            if current is None:
+                raise AllowlistError(
+                    f"{path}:{lineno}: key outside an [[allow]] entry"
+                )
+            key, val = m.group(1), _unescape(m.group(2))
+            if key not in _KNOWN:
+                raise AllowlistError(
+                    f"{path}:{lineno}: unknown key {key!r} "
+                    f"(known: {sorted(_KNOWN)})"
+                )
+            if key in current:
+                raise AllowlistError(f"{path}:{lineno}: duplicate key {key!r}")
+            current[key] = val
+    finish()
+    return entries
+
+
+def apply(entries, findings, line_lookup):
+    """Split findings into (kept, suppressed_pairs).
+
+    `line_lookup(path, lineno)` -> raw source line (or ""). Each
+    suppressed finding records the entry that ate it.
+    """
+    kept = []
+    suppressed = []
+    for f in findings:
+        src = line_lookup(f.path, f.line)
+        hit = next((e for e in entries if e.matches(f, src)), None)
+        if hit is None:
+            kept.append(f)
+        else:
+            hit.hits += 1
+            suppressed.append((f, hit))
+    return kept, suppressed

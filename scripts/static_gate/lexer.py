@@ -1,0 +1,253 @@
+r"""Minimal Rust lexer for the static gate.
+
+Produces, per file, a *masked* view of the source in which comment text and
+string/char-literal contents are replaced by spaces while all structural
+characters (quotes, braces, everything outside comments/literals) keep
+their exact positions. Every rule then scans the masked view, so a brace
+inside a byte literal (`b'{'`), an `unwrap()` mentioned in a doc comment,
+or a knob name inside an error string can never produce a false finding.
+
+Handled Rust surface:
+  * line comments `//`, doc comments `///` and `//!` (text captured
+    separately for the doc-fence rule)
+  * nested block comments `/* /* */ */`
+  * string literals `"…"` and byte strings `b"…"` with escapes
+  * raw strings `r"…"`, `r#"…"#`, … and `br#"…"#`
+  * char literals `'a'`, `'\n'`, `'\u{1F600}'`, byte chars `b'x'` —
+    distinguished from lifetimes (`'a`, `'static`) and loop labels
+
+Known, deliberate limits (documented in README "Static gate"): block doc
+comments (`/** */`) are treated as plain block comments, and macro token
+trees are lexed like ordinary code.
+"""
+
+import re
+
+# One char-literal form, anchored at a position just past the opening `'`.
+_CHAR_BODY = re.compile(
+    r"""(?:
+        [^'\\\n]                      # plain char (incl. `{`/`}`!)
+      | \\(?:
+            [nrt0'"\\]                # simple escapes
+          | x[0-9a-fA-F]{2}           # \x41
+          | u\{[0-9a-fA-F_]{1,6}\}    # \u{1F600}
+        )
+    )'""",
+    re.VERBOSE,
+)
+
+_IDENT_CHAR = re.compile(r"[A-Za-z0-9_]")
+
+
+class LexedFile:
+    """Masked view of one source file."""
+
+    def __init__(self, raw_lines, code_lines, doc_lines):
+        #: raw source lines, no trailing newline
+        self.raw_lines = raw_lines
+        #: same shape, comments/literal-contents blanked to spaces
+        self.code_lines = code_lines
+        #: per line: the text of a `///` / `//!` comment, else None
+        self.doc_lines = doc_lines
+
+
+def lex(text):
+    """Lex full file text into a LexedFile."""
+    n = len(text)
+    masked = list(text)
+    doc_spans = []  # (start, end) of each line-doc comment's text
+    i = 0
+
+    def blank(a, b):
+        for k in range(a, b):
+            if masked[k] not in ("\n",):
+                masked[k] = " "
+
+    while i < n:
+        c = text[i]
+        # ---- comments -------------------------------------------------
+        if c == "/" and i + 1 < n:
+            nxt = text[i + 1]
+            if nxt == "/":
+                end = text.find("\n", i)
+                if end < 0:
+                    end = n
+                head = text[i : i + 3]
+                if head in ("///", "//!") and text[i : i + 4] != "////":
+                    doc_spans.append((i + 3, end))
+                blank(i, end)
+                i = end
+                continue
+            if nxt == "*":
+                depth = 1
+                j = i + 2
+                while j < n and depth > 0:
+                    if text[j] == "/" and j + 1 < n and text[j + 1] == "*":
+                        depth += 1
+                        j += 2
+                    elif text[j] == "*" and j + 1 < n and text[j + 1] == "/":
+                        depth -= 1
+                        j += 2
+                    else:
+                        j += 1
+                blank(i, j)
+                i = j
+                continue
+        # ---- raw / byte strings --------------------------------------
+        if c in ("r", "b") and (i == 0 or not _IDENT_CHAR.match(text[i - 1])):
+            m = re.match(r"(?:br|rb|r|b)(#*)\"", text[i : i + 16])
+            if m and "r" in text[i : i + m.end()][: len(m.group(0))]:
+                hashes = m.group(1)
+                open_len = m.end()
+                close = '"' + hashes
+                j = text.find(close, i + open_len)
+                j = n if j < 0 else j + len(close)
+                blank(i + open_len, j - len(close))
+                i = j
+                continue
+            if m:  # b"…" — plain byte string, falls through via quote logic
+                pass
+        # ---- plain / byte strings ------------------------------------
+        if c == '"' or (
+            c == "b"
+            and i + 1 < n
+            and text[i + 1] == '"'
+            and (i == 0 or not _IDENT_CHAR.match(text[i - 1]))
+        ):
+            start = i + (2 if c == "b" else 1)
+            j = start
+            while j < n:
+                if text[j] == "\\":
+                    j += 2
+                    continue
+                if text[j] == '"':
+                    break
+                j += 1
+            blank(start, min(j, n))
+            i = min(j, n) + 1
+            continue
+        # ---- char literals vs lifetimes ------------------------------
+        if c == "'" or (
+            c == "b"
+            and i + 1 < n
+            and text[i + 1] == "'"
+            and (i == 0 or not _IDENT_CHAR.match(text[i - 1]))
+        ):
+            q = i + (1 if c == "'" else 2)
+            m = _CHAR_BODY.match(text, q)
+            if m:
+                blank(q, m.end() - 1)
+                i = m.end()
+            else:
+                i = q  # lifetime / label: keep the tick, move on
+            continue
+        i += 1
+
+    masked_text = "".join(masked)
+    raw_lines = text.split("\n")
+    code_lines = masked_text.split("\n")
+
+    doc_lines = [None] * len(raw_lines)
+    # Map doc spans back to (line, text) — spans never cross lines.
+    offsets = []
+    pos = 0
+    for ln in raw_lines:
+        offsets.append(pos)
+        pos += len(ln) + 1
+    for a, b in doc_spans:
+        lo, hi = 0, len(offsets) - 1
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if offsets[mid] <= a:
+                lo = mid
+            else:
+                hi = mid - 1
+        doc_lines[lo] = text[a:b]
+
+    return LexedFile(raw_lines, code_lines, doc_lines)
+
+
+def lex_path(path):
+    with open(path, encoding="utf-8") as f:
+        return lex(f.read())
+
+
+def brace_check(lexed):
+    """Verify (), [], {} balance over masked code.
+
+    Returns None when balanced, else (line_no_1based, message).
+    """
+    pairs = {")": "(", "]": "[", "}": "{"}
+    stack = []
+    for lineno, line in enumerate(lexed.code_lines, 1):
+        for ch in line:
+            if ch in "([{":
+                stack.append((ch, lineno))
+            elif ch in ")]}":
+                if not stack or stack[-1][0] != pairs[ch]:
+                    return lineno, f"unmatched '{ch}'"
+                stack.pop()
+    if stack:
+        ch, lineno = stack[-1]
+        return lineno, f"unclosed '{ch}'"
+    return None
+
+
+def match_braces(lexed):
+    """Map every `{` to its matching `}` over masked code.
+
+    Returns dict {open_line: close_line} (1-based; first `{` per line wins
+    is NOT assumed — every brace gets an entry keyed by (line, col)).
+    """
+    stack = []
+    spans = []
+    for lineno, line in enumerate(lexed.code_lines, 1):
+        for col, ch in enumerate(line):
+            if ch == "{":
+                stack.append((lineno, col))
+            elif ch == "}" and stack:
+                open_pos = stack.pop()
+                spans.append((open_pos[0], open_pos[1], lineno, col))
+    return spans
+
+
+def test_spans(lexed):
+    """Line spans (1-based, inclusive) of `#[cfg(test)]` / `#[test]` items.
+
+    After a test attribute, the next `{` opens the item; its matching `}`
+    closes the span. Attribute and signature lines in between are included.
+    """
+    attr_re = re.compile(r"#\[\s*(?:cfg\s*\(\s*(?:test|all\s*\(\s*test)|test\s*\])")
+    spans = []
+    starts = []
+    for lineno, line in enumerate(lexed.code_lines, 1):
+        if attr_re.search(line):
+            starts.append(lineno)
+    if not starts:
+        return spans
+    braces = match_braces(lexed)
+    braces.sort()
+    for s in starts:
+        # first brace opening at/after the attribute line
+        for ol, _oc, cl, _cc in braces:
+            if ol >= s:
+                spans.append((s, cl))
+                break
+    # merge overlaps
+    spans.sort()
+    merged = []
+    for a, b in spans:
+        if merged and a <= merged[-1][1]:
+            merged[-1] = (merged[-1][0], max(merged[-1][1], b))
+        else:
+            merged.append((a, b))
+    return merged
+
+
+def in_spans(lineno, spans):
+    for a, b in spans:
+        if a <= lineno <= b:
+            return True
+        if a > lineno:
+            return False
+    return False

@@ -1,0 +1,265 @@
+"""Crate module tree + item tables for use-resolution (rule R1).
+
+Walks the module tree from `rust/src/lib.rs` exactly the way rustc does
+for this crate's layout (`mod x;` -> `x.rs` or `x/mod.rs`), records every
+importable name a module declares (fn/struct/enum/trait/type/const/
+static/mod/macro_rules! plus `pub use` re-exports), and resolves
+`use crate::…` / `use spmttkrp::…` paths against it.
+
+Deliberately over-approximate in the safe direction: names declared
+inside functions or test modules are still collected (a false *pass* is
+acceptable; a false *fail* is not), and a module containing a glob
+re-export (`pub use x::*`) accepts any leaf name.
+"""
+
+import os
+import re
+
+from . import lexer
+
+_DECL = re.compile(
+    r"""^\s*
+    (?:\#\[[^\]]*\]\s*)*                      # stray same-line attributes
+    (?:pub(?:\s*\([^)]*\))?\s+)?              # pub / pub(crate) / pub(super)
+    (?:default\s+)?(?:unsafe\s+)?(?:async\s+)?(?:const\s+)?
+    (?:extern\s+\S+\s+)?
+    (?P<kw>fn|struct|enum|union|trait|type|const|static|mod)
+    \s+(?P<name>[A-Za-z_][A-Za-z0-9_]*)
+    """,
+    re.VERBOSE,
+)
+_MACRO = re.compile(r"^\s*macro_rules!\s+(?P<name>[A-Za-z_][A-Za-z0-9_]*)")
+_MOD_DECL = re.compile(
+    r"^\s*(?:\#\[[^\]]*\]\s*)*(?:pub(?:\s*\([^)]*\))?\s+)?mod\s+"
+    r"(?P<name>[A-Za-z_][A-Za-z0-9_]*)\s*;"
+)
+
+
+class Module:
+    def __init__(self, name, file):
+        self.name = name
+        self.file = file  # absolute path of the defining .rs file
+        self.submods = {}  # name -> Module
+        self.items = set()  # declared names (over-approximate)
+        self.reexports = set()  # names made visible via `use` in this module
+        self.has_glob = False  # `pub use …::*` present
+
+    def lookup(self, name):
+        return (
+            name in self.items
+            or name in self.reexports
+            or name in self.submods
+            or self.has_glob
+        )
+
+
+def use_statements(lexed):
+    """All `use …;` statements in a lexed file, joined across lines.
+
+    Yields (first_line_no, statement_text) with the trailing `;` removed.
+    """
+    out = []
+    buf = None
+    start = None
+    for lineno, line in enumerate(lexed.code_lines, 1):
+        if buf is None:
+            m = re.match(r"\s*(?:pub(?:\s*\([^)]*\))?\s+)?use\s", line)
+            if not m:
+                continue
+            buf = line.strip()
+            start = lineno
+        else:
+            buf += " " + line.strip()
+        if ";" in buf:
+            out.append((start, buf[: buf.index(";")]))
+            buf = None
+    return out
+
+
+def use_leaves(stmt):
+    """Leaf paths of one use statement.
+
+    `use crate::a::{b, c::D as E, self}` ->
+    [['crate','a','b'], ['crate','a','c','D'], ['crate','a']]
+    Glob leaves end with '*'.
+    """
+    stmt = re.sub(r"^\s*(?:pub(?:\s*\([^)]*\))?\s+)?use\s+", "", stmt).strip()
+
+    def split_tree(s):
+        s = s.strip()
+        if s.startswith("{"):
+            inner = s[1 : s.rindex("}")]
+            parts, depth, cur = [], 0, ""
+            for ch in inner:
+                if ch == "{":
+                    depth += 1
+                elif ch == "}":
+                    depth -= 1
+                if ch == "," and depth == 0:
+                    parts.append(cur)
+                    cur = ""
+                else:
+                    cur += ch
+            if cur.strip():
+                parts.append(cur)
+            return [leaf for p in parts for leaf in split_tree(p)]
+        brace = None
+        depth = 0
+        for idx, ch in enumerate(s):
+            if ch == "{":
+                brace = idx
+                break
+        if brace is not None:
+            prefix = s[:brace].rstrip(": ")
+            segs = [x for x in prefix.split("::") if x]
+            return [segs + leaf for leaf in split_tree(s[brace:])]
+        # plain path, maybe `as` rename (rename is irrelevant to resolution)
+        s = re.sub(r"\s+as\s+[A-Za-z_][A-Za-z0-9_]*\s*$", "", s)
+        segs = [x.strip() for x in s.split("::") if x.strip()]
+        if segs and segs[-1] == "self":
+            segs = segs[:-1]
+        return [segs] if segs else []
+
+    return split_tree(stmt)
+
+
+def _scan_module_file(path):
+    lexed = lexer.lex_path(path)
+    items = set()
+    reexports = set()
+    has_glob = False
+    mods = []
+    for line in lexed.code_lines:
+        md = _MOD_DECL.match(line)
+        if md:
+            mods.append(md.group("name"))
+        m = _DECL.match(line)
+        if m:
+            items.add(m.group("name"))
+        m = _MACRO.match(line)
+        if m:
+            items.add(m.group("name"))
+    for _ln, stmt in use_statements(lexed):
+        is_pub = re.match(r"\s*pub\b", stmt) is not None
+        for leaf in use_leaves(stmt):
+            if not leaf:
+                continue
+            if leaf[-1] == "*":
+                if is_pub:
+                    has_glob = True
+                continue
+            # any `use` makes the name resolvable *within* this module;
+            # `pub use` additionally re-exports it. For lookup purposes the
+            # distinction is visibility, which the gate does not model.
+            reexports.add(leaf[-1])
+    return items, reexports, has_glob, mods, lexed
+
+
+def build_tree(src_root):
+    """Module tree of the crate rooted at `src_root`/lib.rs.
+
+    Returns (root_module, errors) where errors are unresolvable
+    `mod x;` declarations (missing files).
+    """
+    errors = []
+
+    def build(name, file, dir_for_children):
+        mod = Module(name, file)
+        items, reexports, has_glob, mods, _ = _scan_module_file(file)
+        mod.items = items
+        mod.reexports = reexports
+        mod.has_glob = has_glob
+        for child in mods:
+            cand_rs = os.path.join(dir_for_children, child + ".rs")
+            cand_mod = os.path.join(dir_for_children, child, "mod.rs")
+            if os.path.isfile(cand_rs):
+                mod.submods[child] = build(
+                    child, cand_rs, os.path.join(dir_for_children, child)
+                )
+            elif os.path.isfile(cand_mod):
+                mod.submods[child] = build(
+                    child, cand_mod, os.path.join(dir_for_children, child)
+                )
+            else:
+                errors.append((file, child))
+        return mod
+
+    lib = os.path.join(src_root, "lib.rs")
+    if not os.path.isfile(lib):
+        return None, [(src_root, "lib.rs missing")]
+    return build("crate", lib, src_root), errors
+
+
+def resolve(root, segs):
+    """Resolve one leaf path against the tree.
+
+    Returns None when it resolves, else a human message. Lenient where
+    static knowledge runs out: enum-variant / associated paths (a non-final
+    segment that is an item) and glob-containing modules resolve.
+    """
+    if not segs:
+        return None
+    head, rest = segs[0], segs[1:]
+    if head in ("crate", "spmttkrp"):
+        segs = rest
+    elif head in ("std", "core", "alloc", "self", "super"):
+        return None  # out of scope for the gate
+    else:
+        return None  # external crate or relative path — out of scope
+    cur = root
+    for idx, seg in enumerate(segs):
+        final = idx == len(segs) - 1
+        if seg == "*":
+            return None
+        if seg in cur.submods:
+            cur = cur.submods[seg]
+            continue
+        if final:
+            if cur.lookup(seg):
+                return None
+            return (
+                f"'{seg}' not found in module "
+                f"'{os.path.basename(cur.file)}' ({cur.file})"
+            )
+        if cur.lookup(seg):
+            return None  # enum variant / associated item — accept
+        return f"module '{seg}' not found under '{cur.name}'"
+    return None
+
+
+def cargo_targets(cargo_toml_path):
+    """Registered [[bench]] / [[example]] paths from a Cargo.toml.
+
+    Returns {'bench': [(name, path)], 'example': [(name, path)]} with
+    paths as written (relative to the manifest directory).
+    """
+    out = {"bench": [], "example": []}
+    kind = None
+    name = None
+    path = None
+    with open(cargo_toml_path, encoding="utf-8") as f:
+        for raw in f:
+            line = raw.split("#", 1)[0].strip()
+            if not line:
+                continue
+            m = re.match(r"\[\[(bench|example)\]\]", line)
+            if m:
+                if kind and name and path:
+                    out[kind].append((name, path))
+                kind, name, path = m.group(1), None, None
+                continue
+            if line.startswith("["):
+                if kind and name and path:
+                    out[kind].append((name, path))
+                kind = None
+                continue
+            if kind:
+                m = re.match(r'name\s*=\s*"([^"]+)"', line)
+                if m:
+                    name = m.group(1)
+                m = re.match(r'path\s*=\s*"([^"]+)"', line)
+                if m:
+                    path = m.group(1)
+    if kind and name and path:
+        out[kind].append((name, path))
+    return out

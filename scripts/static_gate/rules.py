@@ -1,0 +1,470 @@
+"""Rules R1–R8 of the static gate.
+
+Each rule is a function `(ctx) -> list[Finding]`. All scanning happens on
+the lexer's *masked* code lines, so strings and comments can never
+produce a finding — with two deliberate exceptions that need the raw
+text: the knob registry (R6, knob names live inside string literals) and
+the line-width check (R8, width is a property of the raw line).
+
+Scopes:
+  * "library" = rust/src/**/*.rs minus bin entry points minus
+    `#[cfg(test)]` spans — the code whose panics would take down a
+    caller rather than a test.
+  * "crate" = rust/{src,tests,benches,examples}/**/*.rs — everything
+    the compiler would see.
+"""
+
+import os
+import re
+from dataclasses import dataclass, field
+
+from . import lexer, modtree
+
+RULES = {
+    "R1": "use-resolution & target registration",
+    "R2": "panic discipline (no unwrap/expect/panic in library code)",
+    "R3": "lock discipline (lock_unpoisoned / wait_unpoisoned only)",
+    "R4": "thread containment (spawn/scope/Builder only under exec/)",
+    "R5": "counter-family separation (traffic vs side channels)",
+    "R6": "knob registry (SPMTTKRP_* env reads <-> README table)",
+    "R7": "deprecation hygiene (no deprecated-constructor callers)",
+    "R8": "structure (brace balance, 100-col width, doc fences)",
+}
+
+
+# The crate keeps its manifest in rust/ but registers example targets from
+# the repo-root examples/ directory (`path = "../examples/…"`).
+LIB_DIRS = ("rust/src",)
+CRATE_DIRS = ("rust/src", "rust/tests", "rust/benches", "examples")
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str  # repo-relative
+    line: int
+    message: str
+    severity: str = "error"
+
+
+@dataclass
+class Context:
+    root: str
+    files: dict = field(default_factory=dict)  # rel path -> LexedFile
+    test_spans: dict = field(default_factory=dict)  # rel path -> spans
+
+    def rel(self, path):
+        return os.path.relpath(path, self.root)
+
+    def lexed(self, rel):
+        if rel not in self.files:
+            self.files[rel] = lexer.lex_path(os.path.join(self.root, rel))
+        return self.files[rel]
+
+    def spans(self, rel):
+        if rel not in self.test_spans:
+            self.test_spans[rel] = lexer.test_spans(self.lexed(rel))
+        return self.test_spans[rel]
+
+    def raw_line(self, rel, lineno):
+        try:
+            lines = self.lexed(rel).raw_lines
+        except OSError:
+            return ""
+        if 1 <= lineno <= len(lines):
+            return lines[lineno - 1]
+        return ""
+
+    def rust_files(self, *reldirs):
+        out = []
+        for sub in reldirs:
+            base = os.path.join(self.root, sub)
+            for dirpath, _dirs, names in os.walk(base):
+                for name in sorted(names):
+                    if name.endswith(".rs"):
+                        out.append(self.rel(os.path.join(dirpath, name)))
+        return sorted(out)
+
+    def library_files(self):
+        skip = {"rust/src/main.rs"}
+        return [f for f in self.rust_files(*LIB_DIRS) if f not in skip]
+
+
+def _library_lines(ctx, rel):
+    """Yield (lineno, masked_line) outside #[cfg(test)] spans."""
+    lexed = ctx.lexed(rel)
+    spans = ctx.spans(rel)
+    for lineno, line in enumerate(lexed.code_lines, 1):
+        if not lexer.in_spans(lineno, spans):
+            yield lineno, line
+
+
+# --------------------------------------------------------------------- R1
+def rule_r1(ctx):
+    findings = []
+    src_root = os.path.join(ctx.root, "rust", "src")
+    root_mod, errors = modtree.build_tree(src_root)
+    for file, child in errors:
+        findings.append(
+            Finding("R1", ctx.rel(file), 1, f"`mod {child};` has no matching file")
+        )
+    if root_mod is None:
+        return findings
+    for rel in ctx.rust_files(*CRATE_DIRS):
+        lexed = ctx.lexed(rel)
+        for lineno, stmt in modtree.use_statements(lexed):
+            for leaf in modtree.use_leaves(stmt):
+                msg = modtree.resolve(root_mod, leaf)
+                if msg:
+                    findings.append(
+                        Finding(
+                            "R1",
+                            rel,
+                            lineno,
+                            f"unresolvable use path `{'::'.join(leaf)}`: {msg}",
+                        )
+                    )
+    # Cargo target registration: every benches/examples file registered,
+    # every registered path present.
+    manifest = os.path.join(ctx.root, "rust", "Cargo.toml")
+    targets = modtree.cargo_targets(manifest)
+    registered = set()
+    for kind in ("bench", "example"):
+        for name, path in targets[kind]:
+            registered.add(os.path.normpath(path))
+            full = os.path.normpath(os.path.join(ctx.root, "rust", path))
+            if not os.path.isfile(full):
+                findings.append(
+                    Finding(
+                        "R1",
+                        ctx.rel(manifest),
+                        1,
+                        f"[[{kind}]] `{name}` points at missing file `{path}`",
+                    )
+                )
+    for sub, kind in (("benches", "bench"), ("examples", "example")):
+        base = os.path.join(ctx.root, "rust", sub)
+        if not os.path.isdir(base):
+            continue
+        for name in sorted(os.listdir(base)):
+            if not name.endswith(".rs"):
+                continue
+            rel_to_manifest = os.path.normpath(os.path.join(sub, name))
+            if rel_to_manifest not in registered:
+                findings.append(
+                    Finding(
+                        "R1",
+                        ctx.rel(os.path.join(base, name)),
+                        1,
+                        f"not registered as a [[{kind}]] target in Cargo.toml",
+                    )
+                )
+    return findings
+
+
+# --------------------------------------------------------------------- R2
+_UNWRAP = re.compile(r"\.unwrap\s*\(\s*\)")
+_EXPECT_OPEN = re.compile(r"\.expect\s*\(\s*(?:r#*)?\"")
+_EXPECT_DANGLING = re.compile(r"\.expect\s*\(\s*$")
+_PANIC = re.compile(r"(?:^|[^:\w])(panic|unreachable|todo|unimplemented)!\s*[\(\[{]")
+
+
+def rule_r2(ctx):
+    findings = []
+    for rel in ctx.library_files():
+        lexed = ctx.lexed(rel)
+        lines = list(_library_lines(ctx, rel))
+        for idx, (lineno, line) in enumerate(lines):
+            if _UNWRAP.search(line):
+                findings.append(
+                    Finding("R2", rel, lineno, "`.unwrap()` in library code")
+                )
+            hit_expect = bool(_EXPECT_OPEN.search(line))
+            if not hit_expect and _EXPECT_DANGLING.search(line):
+                # message string on the next code line
+                nxt = lexed.code_lines[lineno] if lineno < len(lexed.code_lines) else ""
+                hit_expect = bool(re.match(r"\s*(?:r#*)?\"", nxt))
+            if hit_expect:
+                findings.append(
+                    Finding("R2", rel, lineno, "`.expect(..)` in library code")
+                )
+            m = _PANIC.search(line)
+            if m:
+                findings.append(
+                    Finding("R2", rel, lineno, f"`{m.group(1)}!` in library code")
+                )
+    return findings
+
+
+# --------------------------------------------------------------------- R3
+_LOCK = re.compile(r"\.lock\s*\(\s*\)")
+_WAIT = re.compile(r"\.wait\s*\(")
+
+
+def rule_r3(ctx):
+    findings = []
+    for rel in ctx.library_files():
+        for lineno, line in _library_lines(ctx, rel):
+            if _LOCK.search(line):
+                findings.append(
+                    Finding(
+                        "R3",
+                        rel,
+                        lineno,
+                        "raw `.lock()` — route through exec::lock_unpoisoned",
+                    )
+                )
+            if _WAIT.search(line):
+                findings.append(
+                    Finding(
+                        "R3",
+                        rel,
+                        lineno,
+                        "raw Condvar `.wait(..)` — route through "
+                        "exec::wait_unpoisoned",
+                    )
+                )
+    return findings
+
+
+# --------------------------------------------------------------------- R4
+_THREAD = re.compile(r"\bthread\s*::\s*(spawn|scope|Builder)\b")
+
+
+def rule_r4(ctx):
+    findings = []
+    for rel in ctx.library_files():
+        if rel.startswith("rust/src/exec/") or rel == "rust/src/exec.rs":
+            continue
+        for lineno, line in _library_lines(ctx, rel):
+            m = _THREAD.search(line)
+            if m:
+                findings.append(
+                    Finding(
+                        "R4",
+                        rel,
+                        lineno,
+                        f"`thread::{m.group(1)}` outside rust/src/exec/ — "
+                        "threading is the executor's job",
+                    )
+                )
+    return findings
+
+
+# --------------------------------------------------------------------- R5
+_TRAFFIC_FIELDS = (
+    "tensor_bytes_read",
+    "factor_bytes_read",
+    "output_bytes_written",
+    "intermediate_bytes",
+    "global_atomics",
+    "local_updates",
+)
+_SIDE_FIELDS = (
+    # ClusterCounters / ResidencyCounters / RepairReport side channels
+    "evictions",
+    "rebuilds",
+    "rebuild_bytes",
+    "bytes_staged",
+    "bytes_merged",
+    "device_makespans",
+    "appended_nnz",
+    "repaired_modes",
+    "rebuilt_modes",
+    "touched_partitions",
+    "moved_nnz",
+)
+_TRAFFIC_RE = re.compile(r"\b(" + "|".join(_TRAFFIC_FIELDS) + r")\b")
+_SIDE_RE = re.compile(r"\b(" + "|".join(_SIDE_FIELDS) + r")\b")
+_ARITH = re.compile(r"[+\-*/%]")
+
+
+def rule_r5(ctx):
+    findings = []
+    for rel in ctx.library_files():
+        for lineno, line in _library_lines(ctx, rel):
+            t = _TRAFFIC_RE.search(line)
+            s = _SIDE_RE.search(line)
+            if not (t and s):
+                continue
+            # `->` and `=>` are not arithmetic
+            stripped = line.replace("->", "  ").replace("=>", "  ")
+            if _ARITH.search(stripped):
+                findings.append(
+                    Finding(
+                        "R5",
+                        rel,
+                        lineno,
+                        f"traffic field `{t.group(1)}` combined with "
+                        f"side-channel field `{s.group(1)}` in one expression",
+                    )
+                )
+    return findings
+
+
+# --------------------------------------------------------------------- R6
+_KNOB = re.compile(r"\bSPMTTKRP_[A-Z0-9_]+\b")
+
+
+def rule_r6(ctx):
+    findings = []
+    src_knobs = {}  # knob -> (rel, lineno) of first sighting
+    for rel in ctx.rust_files(*CRATE_DIRS):
+        lexed = ctx.lexed(rel)
+        for lineno, line in enumerate(lexed.raw_lines, 1):
+            for m in _KNOB.finditer(line):
+                src_knobs.setdefault(m.group(0), (rel, lineno))
+    readme = os.path.join(ctx.root, "README.md")
+    doc_knobs = {}
+    if os.path.isfile(readme):
+        with open(readme, encoding="utf-8") as f:
+            for lineno, line in enumerate(f, 1):
+                for m in _KNOB.finditer(line):
+                    doc_knobs.setdefault(m.group(0), lineno)
+    for knob, (rel, lineno) in sorted(src_knobs.items()):
+        if knob not in doc_knobs:
+            findings.append(
+                Finding(
+                    "R6",
+                    rel,
+                    lineno,
+                    f"env knob `{knob}` is read here but missing from the "
+                    "README knob table",
+                )
+            )
+    for knob, lineno in sorted(doc_knobs.items()):
+        if knob not in src_knobs:
+            findings.append(
+                Finding(
+                    "R6",
+                    "README.md",
+                    lineno,
+                    f"README documents `{knob}` but no rust source reads it",
+                )
+            )
+    return findings
+
+
+# --------------------------------------------------------------------- R7
+_DEPRECATED_ATTR = re.compile(r"#\[\s*deprecated\b")
+_FN_NAME = re.compile(r"\bfn\s+([A-Za-z_][A-Za-z0-9_]*)")
+_IMPL_TYPE = re.compile(r"^\s*impl(?:\s*<[^>]*>)?\s+([A-Za-z_][A-Za-z0-9_]*)")
+
+
+def _deprecated_methods(ctx):
+    """-> list of (type_name, fn_name, defining rel path, def line)."""
+    out = []
+    for rel in ctx.rust_files(*LIB_DIRS):
+        lexed = ctx.lexed(rel)
+        impl_type = None
+        pending_attr = False
+        for lineno, line in enumerate(lexed.code_lines, 1):
+            m = _IMPL_TYPE.match(line)
+            if m:
+                impl_type = m.group(1)
+            if _DEPRECATED_ATTR.search(line):
+                pending_attr = True
+                continue
+            if pending_attr:
+                m = _FN_NAME.search(line)
+                if m:
+                    out.append((impl_type, m.group(1), rel, lineno))
+                    pending_attr = False
+                elif line.strip() and not line.strip().startswith("#["):
+                    pending_attr = False  # deprecated non-fn item: skip
+    return out
+
+
+def rule_r7(ctx):
+    findings = []
+    methods = _deprecated_methods(ctx)
+    pats = []
+    for ty, name, def_rel, def_line in methods:
+        if ty is None:
+            continue
+        pats.append((re.compile(rf"\b{ty}\s*::\s*{name}\b"), ty, name, def_rel, def_line))
+    for rel in ctx.rust_files(*CRATE_DIRS):
+        lexed = ctx.lexed(rel)
+        for lineno, line in enumerate(lexed.code_lines, 1):
+            for pat, ty, name, def_rel, def_line in pats:
+                if rel == def_rel and abs(lineno - def_line) <= 2:
+                    continue  # the definition site itself
+                if pat.search(line):
+                    findings.append(
+                        Finding(
+                            "R7",
+                            rel,
+                            lineno,
+                            f"caller of deprecated `{ty}::{name}` "
+                            f"(declared at {def_rel}:{def_line}) — use the "
+                            "SessionBuilder path",
+                        )
+                    )
+    return findings
+
+
+# --------------------------------------------------------------------- R8
+_MAX_WIDTH = 100
+_FENCE = re.compile(r"^\s*```")
+
+
+def rule_r8(ctx):
+    findings = []
+    for rel in ctx.rust_files(*CRATE_DIRS):
+        lexed = ctx.lexed(rel)
+        bad = lexer.brace_check(lexed)
+        if bad:
+            findings.append(
+                Finding("R8", rel, bad[0], f"delimiter imbalance: {bad[1]}")
+            )
+        for lineno, line in enumerate(lexed.raw_lines, 1):
+            if len(line) > _MAX_WIDTH:
+                findings.append(
+                    Finding(
+                        "R8",
+                        rel,
+                        lineno,
+                        f"line is {len(line)} cols (rustfmt max_width "
+                        f"= {_MAX_WIDTH})",
+                    )
+                )
+        fences = 0
+        last_fence = 0
+        for lineno, doc in enumerate(lexed.doc_lines, 1):
+            if doc is not None and _FENCE.match(doc):
+                fences += 1
+                last_fence = lineno
+        if fences % 2 != 0:
+            findings.append(
+                Finding(
+                    "R8",
+                    rel,
+                    last_fence,
+                    "odd number of ``` fences in doc comments — a rustdoc "
+                    "code block is unterminated",
+                )
+            )
+    return findings
+
+
+ALL_RULES = {
+    "R1": rule_r1,
+    "R2": rule_r2,
+    "R3": rule_r3,
+    "R4": rule_r4,
+    "R5": rule_r5,
+    "R6": rule_r6,
+    "R7": rule_r7,
+    "R8": rule_r8,
+}
+
+
+def run_all(root, only=None):
+    ctx = Context(root=root)
+    findings = []
+    for rule_id in sorted(ALL_RULES):
+        if only and rule_id not in only:
+            continue
+        findings.extend(ALL_RULES[rule_id](ctx))
+    findings.sort(key=lambda f: (f.rule, f.path, f.line))
+    return ctx, findings

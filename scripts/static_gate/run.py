@@ -1,0 +1,213 @@
+#!/usr/bin/env python3
+"""Static gate driver.
+
+The container has no Rust toolchain, so this gate is the repo's
+mechanized stand-in for `cargo clippy` on the invariants the project
+actually cares about (rule catalogue R1-R8, see rules.py / README
+"Static gate"). It is stdlib-only and deterministic.
+
+Exit policy (mirrors scripts/bench_diff.py):
+  0  no findings above warn level (suppressed findings are fine)
+  1  at least one error-severity finding survived the allowlist
+  2  config error: malformed allow.toml, missing roots, bad CLI
+
+Outputs:
+  * human-readable report on stdout
+  * --json-out: machine-readable STATIC_GATE.json (schema 1)
+  * --md-out:   markdown summary for PR bodies / CI artifacts
+"""
+
+import argparse
+import json
+import os
+import sys
+
+if __package__ in (None, ""):
+    # Allow `python3 scripts/static_gate/run.py` from anywhere.
+    sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    from static_gate import allowlist, rules  # type: ignore
+else:
+    from . import allowlist, rules
+
+SCHEMA_VERSION = 1
+TOOL = "static_gate"
+
+
+def build_report(root, entries, findings, suppressed, warn_only):
+    def f_dict(f):
+        return {
+            "rule": f.rule,
+            "path": f.path,
+            "line": f.line,
+            "severity": "warn" if f.rule in warn_only else f.severity,
+            "message": f.message,
+        }
+
+    errors = [f for f in findings if f.rule not in warn_only and f.severity == "error"]
+    warns = [f for f in findings if f not in errors]
+    return {
+        "schema": SCHEMA_VERSION,
+        "tool": TOOL,
+        "root": os.path.abspath(root),
+        "rules": [
+            {"id": rid, "title": title} for rid, title in sorted(rules.RULES.items())
+        ],
+        "findings": [f_dict(f) for f in findings],
+        "suppressed": [
+            {
+                **f_dict(f),
+                "severity": "suppressed",
+                "allow_why": e.why,
+                "allow_line": e.line,
+            }
+            for f, e in suppressed
+        ],
+        "summary": {
+            "errors": len(errors),
+            "warnings": len(warns),
+            "suppressed": len(suppressed),
+            "allowlist_entries": len(entries),
+            "ok": not errors,
+        },
+    }
+
+
+def render_markdown(report):
+    s = report["summary"]
+    lines = [
+        "# Static gate report",
+        "",
+        f"**{'PASS' if s['ok'] else 'FAIL'}** — "
+        f"{s['errors']} error(s), {s['warnings']} warning(s), "
+        f"{s['suppressed']} suppressed by allowlist "
+        f"({s['allowlist_entries']} entries).",
+        "",
+    ]
+    if report["findings"]:
+        lines += [
+            "| rule | severity | location | message |",
+            "|------|----------|----------|---------|",
+        ]
+        for f in report["findings"]:
+            lines.append(
+                f"| {f['rule']} | {f['severity']} | "
+                f"`{f['path']}:{f['line']}` | {f['message']} |"
+            )
+        lines.append("")
+    if report["suppressed"]:
+        lines.append("<details><summary>Suppressed findings</summary>")
+        lines.append("")
+        for f in report["suppressed"]:
+            lines.append(
+                f"- `{f['path']}:{f['line']}` [{f['rule']}] {f['message']} "
+                f"— *{f['allow_why']}*"
+            )
+        lines += ["", "</details>", ""]
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument(
+        "--root",
+        default=None,
+        help="repo root (default: two levels above this script)",
+    )
+    ap.add_argument(
+        "--allowlist",
+        default=None,
+        help="allow.toml path (default: <root>/scripts/static_gate/allow.toml "
+        "when present; pass an empty string to disable)",
+    )
+    ap.add_argument("--json-out", default=None, help="write STATIC_GATE.json here")
+    ap.add_argument("--md-out", default=None, help="write markdown summary here")
+    ap.add_argument(
+        "--warn-only",
+        action="append",
+        default=[],
+        metavar="RULE",
+        help="demote one rule (e.g. R8) to warning severity; repeatable",
+    )
+    ap.add_argument(
+        "--rule",
+        action="append",
+        default=[],
+        metavar="RULE",
+        help="run only the named rule(s); repeatable (default: all)",
+    )
+    args = ap.parse_args(argv)
+
+    root = args.root or os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+    if not os.path.isdir(os.path.join(root, "rust", "src")):
+        print(f"static_gate: {root}/rust/src not found — wrong --root?", file=sys.stderr)
+        return 2
+    bad_rules = [r for r in args.warn_only + args.rule if r not in rules.RULES]
+    if bad_rules:
+        print(
+            f"static_gate: unknown rule id(s) {bad_rules} "
+            f"(known: {sorted(rules.RULES)})",
+            file=sys.stderr,
+        )
+        return 2
+
+    allow_path = args.allowlist
+    if allow_path is None:
+        cand = os.path.join(root, "scripts", "static_gate", "allow.toml")
+        allow_path = cand if os.path.isfile(cand) else ""
+    entries = []
+    if allow_path:
+        try:
+            entries = allowlist.parse(allow_path)
+        except (OSError, allowlist.AllowlistError) as e:
+            print(f"static_gate: allowlist error: {e}", file=sys.stderr)
+            return 2
+
+    ctx, findings = rules.run_all(root, only=set(args.rule) or None)
+    kept, suppressed = allowlist.apply(entries, findings, ctx.raw_line)
+
+    # A suppression that no longer suppresses anything is itself a finding:
+    # the code was fixed, the entry must go.
+    for e in entries:
+        if e.hits == 0:
+            kept.append(
+                rules.Finding(
+                    "ALLOWLIST",
+                    os.path.relpath(allow_path, root),
+                    e.line,
+                    f"stale allowlist entry {e.describe()} suppresses nothing "
+                    "— delete it",
+                )
+            )
+    kept.sort(key=lambda f: (f.rule, f.path, f.line))
+
+    warn_only = set(args.warn_only)
+    report = build_report(root, entries, kept, suppressed, warn_only)
+
+    if args.json_out:
+        with open(args.json_out, "w", encoding="utf-8") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+            f.write("\n")
+    if args.md_out:
+        with open(args.md_out, "w", encoding="utf-8") as f:
+            f.write(render_markdown(report))
+
+    s = report["summary"]
+    for f in report["findings"]:
+        print(f"{f['severity']:5s} {f['rule']:9s} {f['path']}:{f['line']}  {f['message']}")
+    for f in report["suppressed"]:
+        print(
+            f"allow {f['rule']:9s} {f['path']}:{f['line']}  "
+            f"{f['message']}  [{f['allow_why']}]"
+        )
+    print(
+        f"static_gate: {'PASS' if s['ok'] else 'FAIL'} — "
+        f"{s['errors']} error(s), {s['warnings']} warning(s), "
+        f"{s['suppressed']} suppressed"
+    )
+    return 0 if s["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,468 @@
+#!/usr/bin/env python3
+"""Fixture tests for scripts/static_gate/ — run directly
+(`python3 scripts/test_static_gate.py`) or via `python3 -m pytest scripts/`.
+
+Each rule R1-R8 gets at least one PASS fixture (a mini-repo the gate
+accepts) and one FAIL fixture (a mutation the gate must flag), all built
+in temp dirs and exercised through the real CLI as a subprocess, so the
+exit-policy contract (0 clean / 1 findings / 2 config error) is tested
+end to end. The allowlist path is covered in all three modes: a
+suppression that works, a stale entry (itself a finding), and a
+malformed file (config error).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+SCRIPT = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "static_gate", "run.py"
+)
+
+# A minimal repo every rule accepts. Tests copy and mutate it.
+BASE = {
+    "rust/Cargo.toml": '[package]\nname = "mini"\nversion = "0.1.0"\n',
+    "rust/src/lib.rs": "pub mod util;\npub use util::helper;\n",
+    "rust/src/util.rs": "pub fn helper() -> usize {\n    1\n}\n",
+    "README.md": "# mini\n",
+}
+
+
+def make_repo(files):
+    tmp = tempfile.mkdtemp(prefix="static_gate_fixture_")
+    for rel, content in files.items():
+        path = os.path.join(tmp, rel)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w", encoding="utf-8") as f:
+            f.write(content)
+    return tmp
+
+
+def run_gate(files, *extra):
+    root = make_repo(files)
+    json_out = os.path.join(root, "STATIC_GATE.json")
+    argv = [sys.executable, SCRIPT, "--root", root, "--json-out", json_out]
+    if not any(a == "--allowlist" for a in extra):
+        argv += ["--allowlist", ""]
+    argv += list(extra)
+    proc = subprocess.run(argv, capture_output=True, text=True)
+    report = None
+    if os.path.isfile(json_out):
+        with open(json_out, encoding="utf-8") as f:
+            report = json.load(f)
+    return proc.returncode, report, proc.stdout + proc.stderr
+
+
+def rules_hit(report):
+    return sorted({f["rule"] for f in report["findings"]})
+
+
+def variant(**overrides):
+    files = dict(BASE)
+    files.update(overrides)
+    return files
+
+
+# --------------------------------------------------------------- baseline
+def test_baseline_passes():
+    code, report, out = run_gate(BASE)
+    assert code == 0, out
+    assert report["summary"]["ok"] and not report["findings"], out
+
+
+def test_schema_shape():
+    _code, report, out = run_gate(BASE)
+    assert report["schema"] == 1 and report["tool"] == "static_gate", out
+    assert [r["id"] for r in report["rules"]] == [f"R{i}" for i in range(1, 9)]
+    for key in ("errors", "warnings", "suppressed", "allowlist_entries", "ok"):
+        assert key in report["summary"], out
+
+
+# --------------------------------------------------------------------- R1
+def test_r1_fail_unresolved_use():
+    files = variant(
+        **{"rust/src/util.rs": "use crate::nope::Thing;\npub fn helper() -> usize {\n    1\n}\n"}
+    )
+    code, report, out = run_gate(files)
+    assert code == 1 and "R1" in rules_hit(report), out
+    assert any("nope" in f["message"] for f in report["findings"]), out
+
+
+def test_r1_fail_missing_mod_file():
+    files = variant(**{"rust/src/lib.rs": "pub mod util;\npub mod gone;\n"})
+    code, report, out = run_gate(files)
+    assert code == 1 and "R1" in rules_hit(report), out
+
+
+def test_r1_fail_unregistered_bench():
+    files = variant(**{"rust/benches/orphan.rs": "fn main() {}\n"})
+    code, report, out = run_gate(files)
+    assert code == 1 and "R1" in rules_hit(report), out
+    assert any("orphan" in f["path"] for f in report["findings"]), out
+
+
+def test_r1_pass_registered_bench_and_use():
+    files = variant(
+        **{
+            "rust/Cargo.toml": BASE["rust/Cargo.toml"]
+            + '\n[[bench]]\nname = "b"\npath = "benches/b.rs"\nharness = false\n',
+            "rust/benches/b.rs": "use spmttkrp::util::helper;\nfn main() {\n    helper();\n}\n",
+        }
+    )
+    code, _report, out = run_gate(files)
+    assert code == 0, out
+
+
+# --------------------------------------------------------------------- R2
+_R2_BAD = (
+    "pub fn boom() -> usize {\n"
+    "    let x: Option<usize> = None;\n"
+    "    x.unwrap()\n"
+    "}\n"
+)
+
+
+def test_r2_fail_unwrap_in_library():
+    code, report, out = run_gate(variant(**{"rust/src/util.rs": _R2_BAD}))
+    assert code == 1 and rules_hit(report) == ["R2"], out
+
+
+def test_r2_fail_panic_macro():
+    files = variant(
+        **{"rust/src/util.rs": 'pub fn helper() -> usize {\n    panic!("no")\n}\n'}
+    )
+    code, report, out = run_gate(files)
+    assert code == 1 and rules_hit(report) == ["R2"], out
+
+
+def test_r2_pass_unwrap_in_tests_and_strings():
+    files = variant(
+        **{
+            "rust/src/util.rs": "pub fn helper() -> usize {\n"
+            '    let _doc = "call .unwrap() at your peril";\n'
+            "    1\n"
+            "}\n"
+            "\n"
+            "#[cfg(test)]\n"
+            "mod tests {\n"
+            "    #[test]\n"
+            "    fn t() {\n"
+            "        Some(1).unwrap();\n"
+            "    }\n"
+            "}\n"
+        }
+    )
+    code, _report, out = run_gate(files)
+    assert code == 0, out
+
+
+# --------------------------------------------------------------------- R3
+def test_r3_fail_raw_lock():
+    files = variant(
+        **{
+            "rust/src/util.rs": "use std::sync::Mutex;\n"
+            "pub fn helper(m: &Mutex<usize>) -> usize {\n"
+            "    *m.lock().unwrap_or_else(|e| e.into_inner())\n"
+            "}\n"
+        }
+    )
+    code, report, out = run_gate(files)
+    assert code == 1 and rules_hit(report) == ["R3"], out
+
+
+def test_r3_pass_lock_unpoisoned_call():
+    files = variant(
+        **{
+            "rust/src/util.rs": "pub fn helper() -> usize {\n"
+            "    // callers route through exec::lock_unpoisoned(&m)\n"
+            "    1\n"
+            "}\n"
+        }
+    )
+    code, _report, out = run_gate(files)
+    assert code == 0, out
+
+
+# --------------------------------------------------------------------- R4
+_R4_SPAWN = (
+    "pub fn helper() {\n"
+    "    std::thread::spawn(|| {});\n"
+    "}\n"
+)
+
+
+def test_r4_fail_spawn_outside_exec():
+    code, report, out = run_gate(variant(**{"rust/src/util.rs": _R4_SPAWN}))
+    assert code == 1 and rules_hit(report) == ["R4"], out
+
+
+def test_r4_pass_spawn_under_exec():
+    files = variant(
+        **{
+            "rust/src/lib.rs": "pub mod exec;\npub mod util;\npub use util::helper;\n",
+            "rust/src/exec/mod.rs": _R4_SPAWN.replace("helper", "spawn_worker"),
+        }
+    )
+    code, _report, out = run_gate(files)
+    assert code == 0, out
+
+
+# --------------------------------------------------------------------- R5
+def test_r5_fail_cross_family_arithmetic():
+    files = variant(
+        **{
+            "rust/src/util.rs": "pub fn helper(tensor_bytes_read: u64, evictions: u64) -> u64 {\n"
+            "    tensor_bytes_read + evictions\n"
+            "}\n"
+        }
+    )
+    code, report, out = run_gate(files)
+    assert code == 1 and rules_hit(report) == ["R5"], out
+
+
+def test_r5_pass_within_family_arithmetic():
+    files = variant(
+        **{
+            "rust/src/util.rs": "pub fn helper(tensor_bytes_read: u64, factor_bytes_read: u64) -> u64 {\n"
+            "    tensor_bytes_read + factor_bytes_read\n"
+            "}\n"
+        }
+    )
+    code, _report, out = run_gate(files)
+    assert code == 0, out
+
+
+# --------------------------------------------------------------------- R6
+def test_r6_fail_undocumented_knob():
+    files = variant(
+        **{
+            "rust/src/util.rs": "pub fn helper() -> usize {\n"
+            '    std::env::var("SPMTTKRP_TEST_KNOB").map(|_| 2).unwrap_or(1)\n'
+            "}\n"
+        }
+    )
+    code, report, out = run_gate(files)
+    assert code == 1 and rules_hit(report) == ["R6"], out
+
+
+def test_r6_fail_stale_readme_row():
+    files = variant(**{"README.md": "# mini\n| `SPMTTKRP_GHOST` | unused |\n"})
+    code, report, out = run_gate(files)
+    assert code == 1 and rules_hit(report) == ["R6"], out
+    assert report["findings"][0]["path"] == "README.md", out
+
+
+def test_r6_pass_documented_knob():
+    files = variant(
+        **{
+            "rust/src/util.rs": "pub fn helper() -> usize {\n"
+            '    std::env::var("SPMTTKRP_TEST_KNOB").map(|_| 2).unwrap_or(1)\n'
+            "}\n",
+            "README.md": "# mini\n| `SPMTTKRP_TEST_KNOB` | `1` | test knob |\n",
+        }
+    )
+    code, _report, out = run_gate(files)
+    assert code == 0, out
+
+
+# --------------------------------------------------------------------- R7
+_R7_DEF = (
+    "pub struct Widget;\n"
+    "\n"
+    "impl Widget {\n"
+    "    #[deprecated(note = \"use Widget::default\")]\n"
+    "    pub fn make() -> Widget {\n"
+    "        Widget\n"
+    "    }\n"
+    "}\n"
+)
+
+
+def test_r7_fail_deprecated_caller():
+    files = variant(
+        **{
+            "rust/src/lib.rs": "pub mod util;\npub mod widget;\npub use util::helper;\n",
+            "rust/src/widget.rs": _R7_DEF,
+            "rust/src/util.rs": "pub fn helper() -> crate::widget::Widget {\n"
+            "    crate::widget::Widget::make()\n"
+            "}\n",
+        }
+    )
+    code, report, out = run_gate(files)
+    assert code == 1 and rules_hit(report) == ["R7"], out
+    assert any("Widget::make" in f["message"] for f in report["findings"]), out
+
+
+def test_r7_pass_definition_without_callers():
+    files = variant(
+        **{
+            "rust/src/lib.rs": "pub mod util;\npub mod widget;\npub use util::helper;\n",
+            "rust/src/widget.rs": _R7_DEF,
+        }
+    )
+    code, _report, out = run_gate(files)
+    assert code == 0, out
+
+
+# --------------------------------------------------------------------- R8
+def test_r8_fail_overlong_line():
+    files = variant(
+        **{
+            "rust/src/util.rs": "pub fn helper() -> usize {\n"
+            "    1 // " + "x" * 120 + "\n"
+            "}\n"
+        }
+    )
+    code, report, out = run_gate(files)
+    assert code == 1 and rules_hit(report) == ["R8"], out
+
+
+def test_r8_fail_unbalanced_braces():
+    files = variant(
+        **{"rust/src/util.rs": "pub fn helper() -> usize {\n    1\n"}
+    )
+    code, report, out = run_gate(files)
+    assert code == 1 and "R8" in rules_hit(report), out
+
+
+def test_r8_fail_odd_doc_fence():
+    files = variant(
+        **{
+            "rust/src/util.rs": "/// Example:\n"
+            "/// ```\n"
+            "/// let x = 1;\n"
+            "pub fn helper() -> usize {\n"
+            "    1\n"
+            "}\n"
+        }
+    )
+    code, report, out = run_gate(files)
+    assert code == 1 and rules_hit(report) == ["R8"], out
+
+
+def test_r8_pass_byte_literal_braces_and_fences():
+    files = variant(
+        **{
+            "rust/src/util.rs": "/// Example:\n"
+            "/// ```\n"
+            "/// let x = 1;\n"
+            "/// ```\n"
+            "pub fn helper() -> usize {\n"
+            "    let b = b'{';\n"
+            "    b as usize\n"
+            "}\n"
+        }
+    )
+    code, _report, out = run_gate(files)
+    assert code == 0, out
+
+
+# --------------------------------------------------------- allowlist paths
+_ALLOW_OK = (
+    "[[allow]]\n"
+    'rule = "R2"\n'
+    'path = "rust/src/util.rs"\n'
+    'contains = "x.unwrap()"\n'
+    'why = "fixture: demonstrates a justified suppression"\n'
+)
+
+
+def test_allowlist_suppresses_finding():
+    files = variant(
+        **{"rust/src/util.rs": _R2_BAD, "allow.toml": _ALLOW_OK}
+    )
+    root = make_repo(files)
+    json_out = os.path.join(root, "STATIC_GATE.json")
+    proc = subprocess.run(
+        [
+            sys.executable,
+            SCRIPT,
+            "--root",
+            root,
+            "--allowlist",
+            os.path.join(root, "allow.toml"),
+            "--json-out",
+            json_out,
+        ],
+        capture_output=True,
+        text=True,
+    )
+    with open(json_out, encoding="utf-8") as f:
+        report = json.load(f)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert report["summary"]["suppressed"] == 1, proc.stdout
+    assert report["suppressed"][0]["allow_why"].startswith("fixture:"), proc.stdout
+
+
+def test_allowlist_stale_entry_is_a_finding():
+    files = variant(**{"allow.toml": _ALLOW_OK})  # clean repo, nothing to eat
+    root = make_repo(files)
+    proc = subprocess.run(
+        [
+            sys.executable,
+            SCRIPT,
+            "--root",
+            root,
+            "--allowlist",
+            os.path.join(root, "allow.toml"),
+        ],
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "stale allowlist entry" in proc.stdout, proc.stdout
+
+
+def test_allowlist_malformed_is_config_error():
+    bad = '[[allow]]\nrule = "R2"\npath = "rust/src/util.rs"\nwhy = "short"\n'
+    files = variant(**{"allow.toml": bad})
+    root = make_repo(files)
+    proc = subprocess.run(
+        [
+            sys.executable,
+            SCRIPT,
+            "--root",
+            root,
+            "--allowlist",
+            os.path.join(root, "allow.toml"),
+        ],
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode == 2, proc.stdout + proc.stderr
+    assert "justification" in proc.stderr, proc.stderr
+
+
+def test_unknown_rule_flag_is_config_error():
+    root = make_repo(BASE)
+    proc = subprocess.run(
+        [sys.executable, SCRIPT, "--root", root, "--warn-only", "R99"],
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode == 2, proc.stdout + proc.stderr
+
+
+def test_warn_only_demotes_rule():
+    files = variant(**{"rust/src/util.rs": _R2_BAD})
+    code, report, out = run_gate(files, "--warn-only", "R2")
+    assert code == 0, out
+    assert report["summary"]["warnings"] == 1 and report["summary"]["errors"] == 0, out
+
+
+def main():
+    tests = [
+        (name, fn)
+        for name, fn in sorted(globals().items())
+        if name.startswith("test_") and callable(fn)
+    ]
+    for name, fn in tests:
+        fn()
+        print(f"ok: {name}")
+    print(f"static_gate fixtures: {len(tests)} checks passed")
+
+
+if __name__ == "__main__":
+    main()
